@@ -1,0 +1,36 @@
+//! Quickstart: simulate one TrIM slice on a small convolution, check it
+//! against the golden model, and read off the dataflow's headline
+//! properties (everything *measured* by the register-accurate simulator).
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use trim_sa::arch::SliceSim;
+use trim_sa::golden::conv2d_i32;
+
+fn main() {
+    // A 3×3 convolution over a 28×28 ifmap with 'same' padding — one VGG
+    // CL13-class slice task.
+    let (h, w, k, pad) = (28usize, 28usize, 3usize, 1usize);
+    let ifmap: Vec<i32> = (0..h * w).map(|i| (i as i32 * 13 + 1) % 256).collect();
+    let weights: Vec<i32> = vec![1, 0, -1, 2, 0, -2, 1, 0, -1]; // Sobel-x
+
+    // 1. register-accurate slice simulation
+    let mut slice = SliceSim::new(k, w + 2 * pad);
+    let result = slice.run_conv(&ifmap, h, w, &weights, pad, 1);
+
+    // 2. golden check
+    let golden = conv2d_i32(&ifmap, h, w, &weights, k, 1, pad);
+    assert_eq!(result.output, golden, "simulator must be bit-exact");
+    println!("slice output == golden direct convolution ({}x{} ofmap)", result.h_o, result.w_o);
+
+    // 3. the dataflow properties the paper claims, as measured:
+    let s = &result.stats;
+    println!("cycles                    : {}", s.cycles);
+    println!("external input reads      : {} (padded ifmap read exactly once: {})",
+        s.ext_input_reads, s.ext_input_reads == ((h + 2 * pad) * (w + 2 * pad)) as u64);
+    println!("input-read overhead       : {:.2}% (the paper's 'negligible overhead')",
+        s.input_read_overhead((h * w) as u64) * 100.0);
+    println!("peak ext inputs per cycle : {} (eq. 4's '5' for K=3)", s.peak_ext_inputs_per_cycle);
+    println!("max RSRB occupancy        : {} (≤ one padded row = {})", s.max_rsrb_occupancy, w + 2 * pad);
+    println!("MACs performed            : {}", s.macs);
+}

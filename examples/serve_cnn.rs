@@ -1,0 +1,67 @@
+//! End-to-end driver (DESIGN.md §5 "e2e"): serve batched CNN inference
+//! through the full three-layer stack —
+//!
+//!   Pallas kernel (L1) → JAX block (L2) → HLO text artifact →
+//!   Rust PJRT runtime → coordinator (L3) with dynamic batching.
+//!
+//! Requires `make artifacts` first. Reports latency/throughput and
+//! cross-checks the block pipeline against the fused whole-network
+//! artifact (numerical identity of the serving path).
+//!
+//! Run with: `cargo run --release --example serve_cnn [-- <artifact-dir>]`
+
+use std::time::Duration;
+use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, PjrtBackend};
+use trim_sa::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // --- cross-check: block pipeline == fused forward, natively ---------
+    let rt = Runtime::load(&dir)?;
+    println!("PJRT platform: {} | modules: {:?}", rt.platform(), rt.module_names());
+    let input_len = rt.module("trimnet_block0")?.spec.inputs[0].elems();
+    let image: Vec<i32> = (0..input_len).map(|j| ((j * 31 + 7) % 256) as i32).collect();
+    let mut act = image.clone();
+    for b in 0..3 {
+        act = rt.module(&format!("trimnet_block{b}"))?.run_i32(&[&act])?;
+    }
+    let blockwise = rt.module("trimnet_head")?.run_i32(&[&act])?;
+    let fused = rt.module("trimnet_full")?.run_i32(&[&image])?;
+    assert_eq!(blockwise, fused, "serving pipeline must equal the fused artifact");
+    println!("blockwise pipeline == fused forward artifact (logits {blockwise:?})");
+
+    // --- serve a workload through the coordinator -----------------------
+    let n_requests = 96;
+    for max_batch in [1usize, 8] {
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+        };
+        let d = dir.clone();
+        let c = Coordinator::start_with(move || Ok(Box::new(PjrtBackend::load(&d)?) as _), cfg)?;
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = (0..n_requests)
+            .map(|i| {
+                let img: Vec<i32> =
+                    (0..input_len).map(|j| ((i * 7919 + j * 31) % 256) as i32).collect();
+                c.submit(img).unwrap()
+            })
+            .collect();
+        for rx in pending {
+            rx.recv()?;
+        }
+        let wall = t0.elapsed();
+        let m = c.metrics();
+        println!(
+            "max_batch={max_batch:<2} | {n_requests} reqs in {:>6.1} ms | {:>6.1} req/s | p50 {:>7.1?} p95 {:>7.1?} | {} batches (mean {:.1})",
+            wall.as_secs_f64() * 1e3,
+            n_requests as f64 / wall.as_secs_f64(),
+            m.p50_latency,
+            m.p95_latency,
+            m.batches,
+            m.mean_batch
+        );
+    }
+    println!("e2e serving OK — record results in EXPERIMENTS.md");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! VGG-16 analysis: regenerate the paper's evaluation artefacts for the
+//! flagship workload — Fig. 1, Fig. 7, Table I and the §V headlines.
+//!
+//! Run with: `cargo run --release --example vgg16_analysis`
+
+use trim_sa::analytics::design_space::evaluate;
+use trim_sa::analytics::trim_model::analyze_network;
+use trim_sa::arch::ArchConfig;
+use trim_sa::model::vgg16::vgg16;
+use trim_sa::report::{render_fig1, render_fig7, render_table1_or_2, render_table3};
+
+fn main() {
+    let cfg = ArchConfig::paper_engine();
+    let net = vgg16();
+
+    println!("{}", render_fig1(&net, 8));
+    println!("{}", render_table1_or_2(&cfg, &net));
+    println!("{}", render_fig7(&cfg, &net));
+    println!("{}", render_table3(&cfg));
+
+    // §V headlines, side by side with the paper.
+    let m = analyze_network(&cfg, &net);
+    println!("§V headline checks (model vs paper):");
+    println!("  peak throughput  : {:>7.1} GOPs/s   (paper 453.6)", cfg.peak_ops_per_s() / 1e9);
+    println!("  VGG-16 sustained : {:>7.1} GOPs/s   (paper 391)", m.total_gops);
+    println!("  VGG-16 inference : {:>7.1} ms       (paper 78.6)", m.total_time_s * 1e3);
+    println!("  mean utilisation : {:>7.2}          (paper 0.93)", m.mean_utilization);
+    println!(
+        "  accesses vs Eyeriss: {:>5.2}x fewer   (paper ~3x)",
+        (trim_sa::analytics::eyeriss::PUBLISHED_VGG16_TOTAL.on_chip_m
+            + trim_sa::analytics::eyeriss::PUBLISHED_VGG16_TOTAL.off_chip_m)
+            / m.total_m()
+    );
+
+    // §IV: the iso-PE design-point comparison.
+    let a = evaluate(&cfg, &net, 4, 16);
+    let b = evaluate(&cfg, &net, 16, 4);
+    println!("\n§IV iso-PE comparison (both 576 PEs):");
+    println!(
+        "  (P_N=4,  P_M=16): {:>6.1} GOPs/s, psum {:>5.2} Mbit, BW {:>4} bits/cycle",
+        a.gops, a.psum_buffer_mbit, a.io_bandwidth_bits
+    );
+    println!(
+        "  (P_N=16, P_M=4 ): {:>6.1} GOPs/s, psum {:>5.2} Mbit, BW {:>4} bits/cycle",
+        b.gops, b.psum_buffer_mbit, b.io_bandwidth_bits
+    );
+}

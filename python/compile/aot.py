@@ -1,0 +1,113 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+Run once by `make artifacts`; the Rust binary is self-contained afterwards.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all int32 at the boundary):
+
+* ``trimnet_block{0,1,2}.hlo.txt`` — one per TrimNet conv block, weights
+  baked in as constants (the AOT equivalent of TrIM's weight-stationarity:
+  weights are loaded at compile time, activations stream at run time);
+* ``trimnet_head.hlo.txt`` — classifier head;
+* ``trimnet_full.hlo.txt`` — whole forward pass (cross-check artifact);
+* ``conv_unit.hlo.txt`` — small `conv_layer` with *runtime* weights, used
+  by the Rust test suite to validate PJRT numerics against the golden
+  model;
+* ``manifest.txt`` — shape contract parsed by ``rust/src/runtime``.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.ref import pad_hw
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fn(fn, *example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def spec_i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def shape_str(shape):
+    return "x".join(str(d) for d in shape) if shape else "scalar"
+
+
+def build_artifacts(out_dir: str, interpret: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = ["# trim-sa artifact manifest v1"]
+    conv_ws, w_fc = model.trimnet_weights(seed=0)
+
+    def emit(name, fn, arg_shapes, out_shape):
+        text = lower_fn(fn, *[spec_i32(s) for s in arg_shapes])
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        ins = ",".join(f"i32:{shape_str(s)}" for s in arg_shapes)
+        manifest.append(f"artifact {name} file={name}.hlo.txt inputs={ins} outputs=i32:{shape_str(out_shape)}")
+        print(f"  {name}: {len(text)} chars, in={ins} out={shape_str(out_shape)}")
+
+    # --- per-block serving artifacts (weights baked = weight-stationary) ---
+    io_shapes = model.block_io_shapes()
+    for i, spec in enumerate(model.TRIMNET_SPECS):
+        w = conv_ws[i]
+        fn = functools.partial(
+            lambda x, w=w, spec=spec: (model.trimnet_block(x, w, spec, interpret=interpret),)
+        )
+        in_shape, out_shape = io_shapes[i]
+        emit(f"trimnet_block{i}", fn, [in_shape], out_shape)
+
+    head_in, head_out = io_shapes[-1]
+    emit("trimnet_head", lambda x: (model.head(x, w_fc),), [head_in], head_out)
+
+    # --- whole-network cross-check artifact ---
+    emit(
+        "trimnet_full",
+        lambda x: (model.trimnet_forward(x, conv_ws, w_fc, interpret=interpret),),
+        [model.TRIMNET_INPUT],
+        (model.TRIMNET_CLASSES,),
+    )
+
+    # --- runtime-weight conv for Rust-side numeric validation ---
+    def conv_unit(x, w):
+        acc = __import__("compile.kernels.trim_conv", fromlist=["trim_conv3d"]).trim_conv3d(
+            pad_hw(x, 1), w, interpret=interpret
+        )
+        return (acc,)
+
+    emit("conv_unit", conv_unit, [(2, 8, 8), (3, 2, 3, 3)], (3, 8, 8))
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest) - 1} artifacts to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_artifacts(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Blocked TrIM kernels: the MXU-oriented variants.
+
+`trim_conv3d` in trim_conv.py maps one filter per grid step (the engine's
+P_N cores) with the full channel window resident. For large M/N that
+working set exceeds VMEM and the per-tap contraction is a skinny (1, M)
+matvec — poor MXU shaping. The blocked variant restores both:
+
+* the grid carries an explicit **filter-block** dimension (P_N-like) and a
+  **channel-block** loop (P_M-like), so the resident set per step is
+  `(M_B, K, W_P)` inputs + `(N_B, M_B, K, K)` weights — the TrIM engine's
+  step structure, literally;
+* each tap contraction is an `(N_B, M_B) × (M_B, W_O)` matmul — MXU-shaped
+  when the blocks are ≥ 8 (128 on real hardware).
+
+The channel-block accumulation uses the output ref as the psum buffer
+(revisited across grid steps) — the AOT analogue of the engine's temporal
+accumulation (Fig. 6).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blocked_kernel(x_ref, w_ref, o_ref, *, k: int, w_o: int, m_b: int, n_b: int):
+    """Grid = (N/N_B, M/M_B, H_O). One output-row block for one filter
+    block, accumulating one channel block into the psum (output) ref.
+
+    x_ref: (M_B, H_P, W_P) — this channel block's padded ifmaps.
+    w_ref: (N_B, M_B, K, K) — this (filter, channel) weight block.
+    o_ref: (N_B, 1, W_O) — psum rows, revisited across channel blocks.
+    """
+    mi = pl.program_id(1)
+    oy = pl.program_id(2)
+    w_p = x_ref.shape[2]
+    window = pl.load(x_ref, (pl.dslice(0, m_b), pl.dslice(oy, k), pl.dslice(0, w_p)))
+
+    acc = jnp.zeros((n_b, w_o), jnp.int32)
+    for r in range(k):
+        rows = window[:, r, :]  # (M_B, W_P)
+        for c in range(k):
+            win = jax.lax.dynamic_slice(rows, (0, c), (m_b, w_o))  # (M_B, W_O)
+            taps = w_ref[:, :, r, c]  # (N_B, M_B)
+            # MXU-shaped contraction: (N_B, M_B) @ (M_B, W_O)
+            acc = acc + jax.lax.dot(taps, win, preferred_element_type=jnp.int32)
+
+    # temporal accumulation across channel blocks (engine psum buffers)
+    prev = jnp.where(mi == 0, jnp.zeros_like(acc), o_ref[:, 0, :])
+    o_ref[:, 0, :] = prev + acc
+
+
+def trim_conv3d_blocked(x, w, *, m_block: int = 8, n_block: int = 8, interpret: bool = True):
+    """Blocked multi-channel convolution (stride 1, pre-padded).
+
+    Args:
+      x: (M, H_P, W_P) int32 padded ifmaps; M must divide by m_block.
+      w: (N, M, K, K) int32 filters; N must divide by n_block.
+
+    Returns:
+      (N, H_O, W_O) int32 — identical to `trim_conv.trim_conv3d`.
+    """
+    m, h_p, w_p = x.shape
+    n, m2, k, _ = w.shape
+    assert m == m2
+    m_block = min(m_block, m)
+    n_block = min(n_block, n)
+    assert m % m_block == 0, f"M={m} not divisible by m_block={m_block}"
+    assert n % n_block == 0, f"N={n} not divisible by n_block={n_block}"
+    h_o, w_o = h_p - k + 1, w_p - k + 1
+    kernel = functools.partial(_blocked_kernel, k=k, w_o=w_o, m_b=m_block, n_b=n_block)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // n_block, m // m_block, h_o),
+        in_specs=[
+            pl.BlockSpec((m_block, h_p, w_p), lambda f, mi, oy: (mi, 0, 0)),
+            pl.BlockSpec((n_block, m_block, k, k), lambda f, mi, oy: (f, mi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_block, 1, w_o), lambda f, mi, oy: (f, oy, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_o, w_o), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def _maxpool2_kernel(x_ref, o_ref):
+    """2×2 max pool of one channel row-pair. x: (1, 2, W), o: (1, 1, W/2)."""
+    rows = x_ref[0]  # (2, W)
+    w = rows.shape[1]
+    pairs = jnp.maximum(rows[0], rows[1])  # vertical max
+    o_ref[0, 0, :] = jnp.maximum(pairs[0 : w - 1 : 2], pairs[1:w:2])  # horizontal
+
+
+def maxpool2_pallas(x, *, interpret: bool = True):
+    """2×2 max pooling on (C, H, W) with the same row-walking grid shape
+    as the conv kernels (C × H/2 steps)."""
+    c, h, w = x.shape
+    assert h % 2 == 0 and w % 2 == 0, "pool needs even spatial dims"
+    return pl.pallas_call(
+        _maxpool2_kernel,
+        grid=(c, h // 2),
+        in_specs=[pl.BlockSpec((1, 2, w), lambda ci, oy: (ci, oy, 0))],
+        out_specs=pl.BlockSpec((1, 1, w // 2), lambda ci, oy: (ci, oy, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h // 2, w // 2), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.int32))

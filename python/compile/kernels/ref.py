@@ -1,0 +1,80 @@
+"""Pure-jnp oracle for the TrIM convolution kernels.
+
+This is the correctness reference (the analogue of the Rust golden model):
+direct integer convolution with int32 accumulation, matching the paper's
+datapath — B-bit unsigned inputs, B-bit signed weights, `2B+K+log`-bit
+signed psums (all carried in int32, which is wide enough for B = 8, K = 3,
+M ≤ 512; see DESIGN.md §2).
+"""
+
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, stride: int = 1):
+    """Direct 2-D convolution, 'valid' (pad outside if needed).
+
+    Args:
+      x: (H, W) integer ifmap (already padded).
+      w: (K, K) integer kernel.
+      stride: output stride.
+
+    Returns:
+      (H_O, W_O) int32 ofmap.
+    """
+    h, ww = x.shape
+    k = w.shape[0]
+    h_o = (h - k) // stride + 1
+    w_o = (ww - k) // stride + 1
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    out = jnp.zeros((h_o, w_o), jnp.int32)
+    for r in range(k):
+        for c in range(k):
+            patch = x[r : r + (h_o - 1) * stride + 1 : stride, c : c + (w_o - 1) * stride + 1 : stride]
+            out = out + patch * w[r, c]
+    return out
+
+
+def conv3d_ref(x, w, stride: int = 1):
+    """Multi-channel multi-filter direct convolution.
+
+    Args:
+      x: (M, H, W) integer ifmaps (already padded).
+      w: (N, M, K, K) integer filters.
+      stride: output stride.
+
+    Returns:
+      (N, H_O, W_O) int32 ofmaps.
+    """
+    m, h, ww = x.shape
+    n, m2, k, _ = w.shape
+    assert m == m2, f"channel mismatch {m} vs {m2}"
+    h_o = (h - k) // stride + 1
+    w_o = (ww - k) // stride + 1
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    out = jnp.zeros((n, h_o, w_o), jnp.int32)
+    for r in range(k):
+        for c in range(k):
+            patch = x[:, r : r + (h_o - 1) * stride + 1 : stride, c : c + (w_o - 1) * stride + 1 : stride]
+            # (N, M) · (M, H_O, W_O) contraction over channels
+            out = out + jnp.einsum("nm,mhw->nhw", w[:, :, r, c], patch).astype(jnp.int32)
+    return out
+
+
+def pad_hw(x, pad: int):
+    """Zero-pad the trailing two (spatial) dims by `pad` on each border."""
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * (x.ndim - 2) + [(pad, pad), (pad, pad)]
+    return jnp.pad(x, cfg)
+
+
+def requant_ref(acc, shift: int, bits: int = 8):
+    """Power-of-two re-quantisation: clamp(round_half_up(acc / 2^shift)).
+
+    Bit-exact twin of `rust/src/model/quant.rs::Requant`.
+    """
+    half = 0 if shift == 0 else (1 << (shift - 1))
+    y = jnp.right_shift(acc + half, shift)
+    return jnp.clip(y, 0, (1 << bits) - 1).astype(jnp.int32)

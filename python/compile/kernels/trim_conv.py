@@ -1,0 +1,142 @@
+"""Layer-1 Pallas kernels: the TrIM dataflow re-thought for a TPU-style
+memory hierarchy.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the FPGA slice keeps
+K ifmap rows alive in shift registers (RSRBs) and streams one window per
+cycle. On TPU the analogous schedule is:
+
+* the **grid walks output rows** — the diagonal movement. Each grid step
+  `oy` consumes a `(K, W_P)` row window of the padded ifmap (the RSRB
+  working set), taken with a dynamic slice so consecutive steps overlap by
+  K−1 rows exactly like the RSRB replay;
+* **weight stationarity** — the `(K, K)` (or `(N, M, K, K)`) weight block
+  is mapped whole to every grid step, so it stays VMEM-resident for the
+  entire convolution, like the PE weight registers;
+* the **horizontal movement** becomes lane-parallel shifted-slice MACs
+  along the row (the vector unit consumes the window overlap that the FPGA
+  consumed via right-to-left pass registers);
+* the K×K tap accumulation happens in registers — the vertical psum chain.
+
+Kernels run with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and numerics are identical (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv2d_row_kernel(x_ref, w_ref, o_ref, *, k: int, w_o: int):
+    """One output row of a K×K convolution.
+
+    x_ref: (H_P, W_P) padded ifmap (whole); the kernel reads only the
+           K-row window starting at `oy` — the RSRB working set.
+    w_ref: (K, K) stationary weights.
+    o_ref: (1, W_O) the produced output row.
+    """
+    oy = pl.program_id(0)
+    w_p = x_ref.shape[1]
+    window = pl.load(x_ref, (pl.dslice(oy, k), pl.dslice(0, w_p)))  # (K, W_P)
+    acc = jnp.zeros((w_o,), jnp.int32)
+    for r in range(k):
+        row = window[r, :]
+        for c in range(k):
+            # shifted-slice MAC: the lane dimension carries the
+            # horizontal (right-to-left) reuse of the FPGA slice
+            acc = acc + jax.lax.dynamic_slice(row, (c,), (w_o,)) * w_ref[r, c]
+    o_ref[0, :] = acc
+
+
+def trim_conv2d(x, w, *, interpret: bool = True):
+    """2-D K×K convolution over an already-padded ifmap (stride 1).
+
+    Args:
+      x: (H_P, W_P) int32 padded ifmap.
+      w: (K, K) int32 kernel.
+
+    Returns:
+      (H_O, W_O) int32 ofmap, H_O = H_P-K+1, W_O = W_P-K+1.
+    """
+    h_p, w_p = x.shape
+    k = w.shape[0]
+    h_o, w_o = h_p - k + 1, w_p - k + 1
+    kernel = functools.partial(_conv2d_row_kernel, k=k, w_o=w_o)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_o,),
+        in_specs=[
+            pl.BlockSpec((h_p, w_p), lambda oy: (0, 0)),  # resident ifmap
+            pl.BlockSpec((k, k), lambda oy: (0, 0)),  # stationary weights
+        ],
+        out_specs=pl.BlockSpec((1, w_o), lambda oy: (oy, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_o, w_o), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def _conv3d_row_kernel(x_ref, w_ref, o_ref, *, k: int, w_o: int, m: int):
+    """One output row for one filter, contracted over all M channels.
+
+    x_ref: (M, H_P, W_P) padded ifmaps (whole); reads the (M, K, W_P)
+           window at `oy` — the P_M slices' RSRB working sets side by side.
+    w_ref: (1, M, K, K) — the filter owned by this "core".
+    o_ref: (1, 1, W_O)
+    """
+    oy = pl.program_id(1)
+    w_p = x_ref.shape[2]
+    window = pl.load(x_ref, (pl.dslice(0, m), pl.dslice(oy, k), pl.dslice(0, w_p)))
+    acc = jnp.zeros((w_o,), jnp.int32)
+    for r in range(k):
+        rows = window[:, r, :]  # (M, W_P)
+        for c in range(k):
+            win = jax.lax.dynamic_slice(rows, (0, c), (m, w_o))  # (M, W_O)
+            taps = w_ref[0, :, r, c]  # (M,)
+            # channel contraction = the core adder tree (MXU-shaped when
+            # M is large: a (1,M)x(M,W_O) matmul per tap)
+            acc = acc + jnp.sum(win * taps[:, None], axis=0, dtype=jnp.int32)
+    o_ref[0, 0, :] = acc
+
+
+def trim_conv3d(x, w, *, interpret: bool = True):
+    """Multi-channel, multi-filter convolution (stride 1, pre-padded).
+
+    Grid = (N, H_O): filters map to the engine's P_N cores, output rows to
+    the temporal schedule of each slice.
+
+    Args:
+      x: (M, H_P, W_P) int32 padded ifmaps.
+      w: (N, M, K, K) int32 filters.
+
+    Returns:
+      (N, H_O, W_O) int32 ofmaps.
+    """
+    m, h_p, w_p = x.shape
+    n, m2, k, _ = w.shape
+    assert m == m2
+    h_o, w_o = h_p - k + 1, w_p - k + 1
+    kernel = functools.partial(_conv3d_row_kernel, k=k, w_o=w_o, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, h_o),
+        in_specs=[
+            pl.BlockSpec((m, h_p, w_p), lambda f, oy: (0, 0, 0)),  # broadcast ifmaps
+            pl.BlockSpec((1, m, k, k), lambda f, oy: (f, 0, 0, 0)),  # core f's filter
+        ],
+        out_specs=pl.BlockSpec((1, 1, w_o), lambda f, oy: (f, oy, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_o, w_o), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def vmem_footprint_bytes(m: int, w_p: int, n: int, k: int) -> int:
+    """Estimated VMEM working set per grid step of `trim_conv3d`:
+    the (M, K, W_P) input window + one (M, K, K) filter + the (W_O,)
+    accumulator, in int32. Used by the DESIGN.md §Perf roofline estimate
+    (interpret-mode wall clock is NOT a TPU proxy).
+    """
+    del n  # one filter resident per step
+    w_o = w_p - k + 1
+    words = m * k * w_p + m * k * k + w_o
+    return 4 * words

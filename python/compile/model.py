@@ -1,0 +1,121 @@
+"""Layer-2: quantised CNN layers built on the TrIM Pallas kernels.
+
+Build-time only — this module is lowered once by `aot.py` to HLO text and
+never imported at runtime. The Rust coordinator executes the lowered
+artifacts through PJRT.
+
+The data representation matches the paper (§III-A) and the Rust engine:
+uint8 activations and int8 weights carried as int32 at the XLA boundary,
+int32 accumulation, power-of-two re-quantisation between layers
+(bit-exact with `rust/src/model/quant.rs::Requant`).
+"""
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import trim_conv
+from compile.kernels.ref import pad_hw, requant_ref
+
+
+def conv_layer(x, w, *, pad: int = 1, shift: int = 7, bits: int = 8, interpret: bool = True):
+    """One quantised convolutional layer: pad → TrIM conv → requantise.
+
+    Args:
+      x: (M, H, W) int32 activations in [0, 2^bits).
+      w: (N, M, K, K) int32 signed weights.
+      pad: zero padding per border.
+      shift: power-of-two re-quantisation shift.
+
+    Returns:
+      (N, H_O, W_O) int32 activations in [0, 2^bits).
+    """
+    xp = pad_hw(x, pad)
+    acc = trim_conv.trim_conv3d(xp, w, interpret=interpret)
+    return requant_ref(acc, shift, bits)
+
+
+def maxpool2(x):
+    """2×2 max pooling on (C, H, W) (AlexNet/VGG-style downsampling)."""
+    c, h, w = x.shape
+    x = x[:, : h // 2 * 2, : w // 2 * 2]
+    x = x.reshape(c, h // 2, 2, w // 2, 2)
+    return jnp.max(x, axis=(2, 4))
+
+
+def head(x, w_fc):
+    """Classifier head: global average pool + integer matmul.
+
+    Args:
+      x: (C, H, W) int32 activations.
+      w_fc: (C, n_classes) int32 weights.
+
+    Returns:
+      (n_classes,) int32 logits.
+    """
+    c = x.shape[0]
+    pooled = jnp.sum(x.reshape(c, -1), axis=1, dtype=jnp.int32)  # sum-pool (integer)
+    return pooled @ w_fc
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Static description of one TrimNet conv layer."""
+
+    m: int
+    n: int
+    k: int = 3
+    pad: int = 1
+    shift: int = 7
+    pool: bool = True
+
+
+# The e2e workload: a small integer CNN on 3×32×32 inputs (CIFAR-sized),
+# structurally a miniature VGG — three 3×3 conv blocks with 2× pooling.
+TRIMNET_SPECS: Sequence[ConvSpec] = (
+    ConvSpec(m=3, n=16, shift=6),
+    ConvSpec(m=16, n=32, shift=8),
+    ConvSpec(m=32, n=64, shift=9),
+)
+TRIMNET_INPUT = (3, 32, 32)
+TRIMNET_CLASSES = 10
+
+
+def trimnet_block(x, w, spec: ConvSpec, *, interpret: bool = True):
+    """One TrimNet block: conv → requant → optional 2×2 maxpool."""
+    y = conv_layer(x, w, pad=spec.pad, shift=spec.shift, interpret=interpret)
+    return maxpool2(y) if spec.pool else y
+
+
+def trimnet_forward(x, conv_ws, w_fc, *, interpret: bool = True):
+    """Full TrimNet forward pass: 3 conv blocks + classifier head."""
+    for w, spec in zip(conv_ws, TRIMNET_SPECS):
+        x = trimnet_block(x, w, spec, interpret=interpret)
+    return head(x, w_fc)
+
+
+def trimnet_weights(seed: int = 0):
+    """Deterministic synthetic int8 weights for TrimNet."""
+    key = jax.random.PRNGKey(seed)
+    ws = []
+    for spec in TRIMNET_SPECS:
+        key, sub = jax.random.split(key)
+        ws.append(jax.random.randint(sub, (spec.n, spec.m, spec.k, spec.k), -8, 8, dtype=jnp.int32))
+    key, sub = jax.random.split(key)
+    w_fc = jax.random.randint(sub, (TRIMNET_SPECS[-1].n, TRIMNET_CLASSES), -8, 8, dtype=jnp.int32)
+    return ws, w_fc
+
+
+def block_io_shapes():
+    """(input_shape, output_shape) per TrimNet block plus the head —
+    the shape contract consumed by the Rust runtime's artifact manifest."""
+    shapes = []
+    c, h, w = TRIMNET_INPUT
+    for spec in TRIMNET_SPECS:
+        out = (spec.n, h // 2, w // 2)
+        shapes.append(((spec.m, h, w), out))
+        c, h, w = out
+    shapes.append(((c, h, w), (TRIMNET_CLASSES,)))
+    return shapes

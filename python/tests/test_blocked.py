@@ -1,0 +1,67 @@
+"""Blocked-kernel variants vs the plain kernel and the ref oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import blocked, trim_conv
+from compile.kernels.ref import conv3d_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, lo, hi, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, size=shape), jnp.int32)
+
+
+@pytest.mark.parametrize("m,n,mb,nb", [(8, 8, 4, 4), (16, 8, 8, 8), (4, 4, 2, 4), (8, 16, 8, 2)])
+def test_blocked_equals_plain(m, n, mb, nb):
+    x = rand((m, 10, 10), 0, 256, m * 100 + n)
+    w = rand((n, m, 3, 3), -8, 8, n * 10 + m)
+    plain = trim_conv.trim_conv3d(x, w)
+    blk = blocked.trim_conv3d_blocked(x, w, m_block=mb, n_block=nb)
+    np.testing.assert_array_equal(np.asarray(blk), np.asarray(plain))
+
+
+def test_blocked_matches_ref_directly():
+    x = rand((8, 9, 9), 0, 256, 1)
+    w = rand((8, 8, 3, 3), -16, 16, 2)
+    got = blocked.trim_conv3d_blocked(x, w, m_block=4, n_block=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(conv3d_ref(x, w)))
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    m=st.sampled_from([2, 4, 8]),
+    n=st.sampled_from([2, 4, 8]),
+    h=st.integers(5, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_blocked_hypothesis_sweep(m, n, h, seed):
+    x = rand((m, h, h), 0, 256, seed)
+    w = rand((n, m, 3, 3), -8, 8, seed ^ 0xFF)
+    got = blocked.trim_conv3d_blocked(x, w, m_block=min(2, m), n_block=min(2, n))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(conv3d_ref(x, w)))
+
+
+def test_blocked_rejects_nondivisible():
+    x = rand((6, 8, 8), 0, 256, 3)
+    w = rand((4, 6, 3, 3), -8, 8, 4)
+    with pytest.raises(AssertionError):
+        blocked.trim_conv3d_blocked(x, w, m_block=4, n_block=4)
+
+
+def test_maxpool2_pallas_matches_model():
+    x = rand((3, 8, 10), 0, 256, 5)
+    got = blocked.maxpool2_pallas(x)
+    ref = model.maxpool2(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_maxpool2_pallas_requires_even_dims():
+    with pytest.raises(AssertionError):
+        blocked.maxpool2_pallas(jnp.ones((1, 5, 6), jnp.int32))

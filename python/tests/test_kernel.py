@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas TrIM kernels vs the pure-jnp oracle.
+
+Fixed cases pin known geometries (VGG-like, AlexNet-tile-like); hypothesis
+sweeps shapes, channel counts and value ranges. This is the CORE
+correctness signal for the compile path — the same kernels are lowered
+into every artifact the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import trim_conv
+from compile.kernels.ref import conv2d_ref, conv3d_ref, pad_hw, requant_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_ifmap(rng, shape, bits=8):
+    return jnp.asarray(rng.integers(0, 1 << bits, size=shape), jnp.int32)
+
+
+def rand_weights(rng, shape, bits=8):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1))
+    return jnp.asarray(rng.integers(lo, hi, size=shape), jnp.int32)
+
+
+# ---------------------------------------------------------------- conv2d --
+@pytest.mark.parametrize("h,w,k", [(8, 8, 3), (12, 9, 3), (10, 10, 5), (6, 14, 2), (31, 31, 3)])
+def test_conv2d_matches_ref(h, w, k):
+    rng = np.random.default_rng(h * 100 + w * 10 + k)
+    x = rand_ifmap(rng, (h, w))
+    wgt = rand_weights(rng, (k, k))
+    got = trim_conv2d = trim_conv.trim_conv2d(x, wgt)
+    ref = conv2d_ref(x, wgt)
+    np.testing.assert_array_equal(np.asarray(trim_conv2d), np.asarray(ref))
+    assert got.dtype == jnp.int32
+
+
+def test_conv2d_identity_kernel():
+    rng = np.random.default_rng(0)
+    x = rand_ifmap(rng, (7, 7))
+    k = jnp.zeros((3, 3), jnp.int32).at[1, 1].set(1)
+    got = trim_conv.trim_conv2d(pad_hw(x, 1), k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    h=st.integers(5, 16),
+    w=st.integers(5, 16),
+    k=st.sampled_from([2, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_hypothesis_sweep(h, w, k, seed):
+    if h < k or w < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand_ifmap(rng, (h, w))
+    wgt = rand_weights(rng, (k, k))
+    np.testing.assert_array_equal(
+        np.asarray(trim_conv.trim_conv2d(x, wgt)), np.asarray(conv2d_ref(x, wgt))
+    )
+
+
+# ---------------------------------------------------------------- conv3d --
+@pytest.mark.parametrize(
+    "m,n,h,w,k",
+    [(1, 1, 8, 8, 3), (3, 4, 10, 10, 3), (4, 2, 8, 12, 3), (2, 3, 9, 9, 5), (8, 8, 6, 6, 3)],
+)
+def test_conv3d_matches_ref(m, n, h, w, k):
+    rng = np.random.default_rng(m * 1000 + n * 100 + h)
+    x = rand_ifmap(rng, (m, h, w))
+    wgt = rand_weights(rng, (n, m, k, k))
+    np.testing.assert_array_equal(
+        np.asarray(trim_conv.trim_conv3d(x, wgt)), np.asarray(conv3d_ref(x, wgt))
+    )
+
+
+def test_conv3d_channel_sum_semantics():
+    # Two channels of ones with centre-1 kernels → output = 2 everywhere.
+    x = jnp.ones((2, 6, 6), jnp.int32)
+    w = jnp.zeros((1, 2, 3, 3), jnp.int32).at[:, :, 1, 1].set(1)
+    got = trim_conv.trim_conv3d(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.full((1, 4, 4), 2))
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    m=st.integers(1, 5),
+    n=st.integers(1, 5),
+    h=st.integers(4, 10),
+    w=st.integers(4, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv3d_hypothesis_sweep(m, n, h, w, seed):
+    k = 3
+    if h < k or w < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand_ifmap(rng, (m, h, w))
+    wgt = rand_weights(rng, (n, m, k, k))
+    np.testing.assert_array_equal(
+        np.asarray(trim_conv.trim_conv3d(x, wgt)), np.asarray(conv3d_ref(x, wgt))
+    )
+
+
+@settings(deadline=None, max_examples=10)
+@given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_conv3d_dtype_ranges(bits, seed):
+    """Sweep operand precision B (the paper's datapath is parametric in B)."""
+    rng = np.random.default_rng(seed)
+    x = rand_ifmap(rng, (2, 6, 6), bits)
+    wgt = rand_weights(rng, (2, 2, 3, 3), bits)
+    np.testing.assert_array_equal(
+        np.asarray(trim_conv.trim_conv3d(x, wgt)), np.asarray(conv3d_ref(x, wgt))
+    )
+
+
+# --------------------------------------------------------------- requant --
+def test_requant_matches_rust_semantics():
+    acc = jnp.asarray([0, 16, 23, 24, -100, 1 << 30], jnp.int32)
+    got = requant_ref(acc, shift=4, bits=8)
+    np.testing.assert_array_equal(np.asarray(got), [0, 1, 1, 2, 0, 255])
+
+
+def test_requant_zero_shift():
+    acc = jnp.asarray([17, 300, -5], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(requant_ref(acc, 0)), [17, 255, 0])
+
+
+# ------------------------------------------------------------ ref oracle --
+def test_ref_strided_conv():
+    x = jnp.ones((1, 8, 8), jnp.int32)
+    w = jnp.ones((1, 1, 2, 2), jnp.int32)
+    out = conv3d_ref(x, w, stride=2)
+    assert out.shape == (1, 4, 4)
+    np.testing.assert_array_equal(np.asarray(out), np.full((1, 4, 4), 4))
+
+
+def test_vmem_footprint_estimate_is_positive_and_small():
+    # VGG CL2-like window: M=64, W_P=226 → must fit VMEM (16 MiB class).
+    b = trim_conv.vmem_footprint_bytes(m=64, w_p=226, n=64, k=3)
+    assert 0 < b < 16 * 2**20

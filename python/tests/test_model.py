@@ -1,0 +1,87 @@
+"""L2 correctness: quantised layers, TrimNet blocks and the forward pass."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import conv3d_ref, pad_hw, requant_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_x(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 256, size=shape), jnp.int32)
+
+
+def test_conv_layer_matches_ref_pipeline():
+    x = rand_x((3, 12, 12), 1)
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.integers(-8, 8, size=(5, 3, 3, 3)), jnp.int32)
+    got = model.conv_layer(x, w, pad=1, shift=7)
+    ref = requant_ref(conv3d_ref(pad_hw(x, 1), w), 7)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert int(jnp.min(got)) >= 0 and int(jnp.max(got)) <= 255
+
+
+def test_maxpool2():
+    x = jnp.arange(2 * 4 * 4, dtype=jnp.int32).reshape(2, 4, 4)
+    y = model.maxpool2(x)
+    assert y.shape == (2, 2, 2)
+    np.testing.assert_array_equal(np.asarray(y[0]), [[5, 7], [13, 15]])
+
+
+def test_maxpool2_odd_sizes_truncate():
+    x = jnp.ones((1, 5, 7), jnp.int32)
+    assert model.maxpool2(x).shape == (1, 2, 3)
+
+
+def test_head_is_integer_linear():
+    x = jnp.ones((4, 2, 2), jnp.int32)
+    w = jnp.eye(4, 3, dtype=jnp.int32)
+    logits = model.head(x, w)
+    # sum-pool of ones over 2×2 = 4 per channel; identity-ish weights
+    np.testing.assert_array_equal(np.asarray(logits), [4, 4, 4])
+
+
+def test_block_io_shapes_consistent():
+    shapes = model.block_io_shapes()
+    assert shapes[0][0] == model.TRIMNET_INPUT
+    for (_, out), (nxt, _) in zip(shapes[:-2], shapes[1:-1]):
+        assert out == nxt, "block outputs must chain"
+    assert shapes[-1][1] == (model.TRIMNET_CLASSES,)
+
+
+def test_trimnet_forward_shapes_and_determinism():
+    ws, w_fc = model.trimnet_weights(seed=0)
+    ws2, w_fc2 = model.trimnet_weights(seed=0)
+    for a, b in zip(ws, ws2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(w_fc), np.asarray(w_fc2))
+
+    x = rand_x(model.TRIMNET_INPUT, 7)
+    logits = model.trimnet_forward(x, ws, w_fc)
+    assert logits.shape == (model.TRIMNET_CLASSES,)
+
+
+def test_trimnet_blockwise_equals_full_forward():
+    """The serving path (per-block artifacts chained by the Rust
+    coordinator) must be numerically identical to the fused forward."""
+    ws, w_fc = model.trimnet_weights(seed=0)
+    x = rand_x(model.TRIMNET_INPUT, 11)
+    full = model.trimnet_forward(x, ws, w_fc)
+    y = x
+    for w, spec in zip(ws, model.TRIMNET_SPECS):
+        y = model.trimnet_block(y, w, spec)
+    blockwise = model.head(y, w_fc)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(blockwise))
+
+
+def test_trimnet_activations_stay_in_range():
+    ws, w_fc = model.trimnet_weights(seed=0)
+    x = rand_x(model.TRIMNET_INPUT, 13)
+    y = x
+    for w, spec in zip(ws, model.TRIMNET_SPECS):
+        y = model.trimnet_block(y, w, spec)
+        assert int(jnp.min(y)) >= 0 and int(jnp.max(y)) <= 255, spec

@@ -1,0 +1,48 @@
+//! Ablation bench: the design choices DESIGN.md calls out, quantified —
+//! (a) §VI extensions (RSRB sharing / ifmap tiling / global buffer),
+//! (b) the iso-PE P_N-vs-P_M trade (§IV), (c) batching policy.
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::header;
+use trim_sa::analytics::design_space::evaluate;
+use trim_sa::analytics::extensions::{analyze_network_ext, extended_cost, rsrb_registers, Extensions};
+use trim_sa::arch::ArchConfig;
+use trim_sa::model::vgg16::vgg16;
+
+fn main() {
+    let cfg = ArchConfig::paper_engine();
+    let net = vgg16();
+
+    header("Ablation A — §VI extensions on VGG-16 (accesses in M, energy-equivalent)");
+    let variants: [(&str, Extensions); 5] = [
+        ("baseline (paper engine)", Extensions::none()),
+        ("+ RSRB sharing", Extensions { rsrb_sharing: true, ifmap_tile_width: None, global_buffer_bits: None }),
+        ("+ ifmap tiling W_T=64", Extensions { rsrb_sharing: false, ifmap_tile_width: Some(64), global_buffer_bits: None }),
+        ("+ global buffer 18 Mb", Extensions { rsrb_sharing: false, ifmap_tile_width: None, global_buffer_bits: Some(18_000_000) }),
+        ("all (§VI)", Extensions::all()),
+    ];
+    println!("{:<26} {:>10} {:>9} {:>9} {:>10} {:>9} {:>9}", "variant", "RSRB regs", "off-chip", "on-chip", "total", "LUTs", "BRAM Mb");
+    for (name, ext) in &variants {
+        let (off, on) = analyze_network_ext(&cfg, &net, ext);
+        let cost = extended_cost(&cfg, ext);
+        println!(
+            "{:<26} {:>10} {:>9.1} {:>9.2} {:>10.1} {:>8.1}K {:>9.2}",
+            name, rsrb_registers(&cfg, ext), off, on, off + on, cost.luts / 1e3, cost.bram_mbit
+        );
+    }
+
+    header("Ablation B — iso-PE parallelism split (§IV, 576 PEs)");
+    for (p_n, p_m) in [(4usize, 16usize), (8, 8), (16, 4)] {
+        let p = evaluate(&cfg, &net, p_n, p_m);
+        println!(
+            "P_N={p_n:<2} P_M={p_m:<2}: {:>7.1} GOPs/s  psum {:>6.2} Mbit  BW {:>5} bits/cycle",
+            p.gops, p.psum_buffer_mbit, p.io_bandwidth_bits
+        );
+    }
+
+    header("Ablation C — native vs tiled kernel efficiency (PE-slot fill)");
+    for k in [3usize, 5, 7, 11] {
+        let t = trim_sa::model::KernelTiling::new(k, 3);
+        println!("K={k:<2}: {:>2} tiles, fill {:>5.1}%", t.num_tiles(), t.fill_ratio() * 100.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal benchmark harness shared by all bench targets (the crate
+//! builds offline, so no criterion; this reproduces its essentials:
+//! warmup, repeated timed runs, mean/min/max/stddev reporting).
+//!
+//! Each bench target regenerates one of the paper's tables/figures and
+//! reports how long the regeneration takes, so `cargo bench` both
+//! reproduces the evaluation section and tracks the performance of the
+//! models/simulators themselves.
+
+#![allow(dead_code)]
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12?} mean  {:>12?} min  {:>12?} max  ±{:>10?}  ({} iters)",
+            self.name, self.mean, self.min, self.max, self.stddev, self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs; a `black_box`-style sink keeps
+/// results alive.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    let sum: Duration = times.iter().sum();
+    let mean = sum / iters as u32;
+    let min = *times.iter().min().unwrap();
+    let max = *times.iter().max().unwrap();
+    let var = times
+        .iter()
+        .map(|t| {
+            let d = t.as_secs_f64() - mean.as_secs_f64();
+            d * d
+        })
+        .sum::<f64>()
+        / iters as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        min,
+        max,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+/// Print a bench header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

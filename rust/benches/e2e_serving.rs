@@ -1,0 +1,43 @@
+//! Bench: end-to-end serving over the PJRT artifacts (latency/throughput
+//! vs batch size). Skips gracefully when artifacts/ is missing.
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::header;
+use std::time::{Duration, Instant};
+use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, PjrtBackend};
+
+fn main() -> anyhow::Result<()> {
+    header("e2e serving — TrimNet over PJRT artifacts");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("SKIP: artifacts/ missing — run `make artifacts`");
+        return Ok(());
+    }
+    let n_req = 64;
+    for max_batch in [1usize, 4, 16] {
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+        };
+        let d = dir.clone();
+        let c = Coordinator::start_with(move || Ok(Box::new(PjrtBackend::load(&d)?) as _), cfg)?;
+        let len = c.input_len();
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| c.submit((0..len).map(|j| ((i * 31 + j) % 256) as i32).collect()).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv()?;
+        }
+        let wall = t0.elapsed();
+        let m = c.metrics();
+        println!(
+            "max_batch={max_batch:<3} {:>7.1} req/s   p50 {:>9.3?}   p95 {:>9.3?}   {} batches (mean {:.1})",
+            n_req as f64 / wall.as_secs_f64(),
+            m.p50_latency,
+            m.p95_latency,
+            m.batches,
+            m.mean_batch
+        );
+    }
+    Ok(())
+}

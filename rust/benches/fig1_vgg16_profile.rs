@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig. 1 (VGG-16 per-CL memory + ops profile).
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::{bench, header};
+use trim_sa::model::vgg16::vgg16;
+use trim_sa::report::render_fig1;
+
+fn main() {
+    header("Fig. 1 — VGG-16 memory/ops profile");
+    let net = vgg16();
+    print!("{}", render_fig1(&net, 8));
+    println!("{}", bench("fig1_render", 3, 50, || render_fig1(&net, 8).len()));
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 7 (design-space sweep over P_N, P_M).
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::{bench, header};
+use trim_sa::analytics::design_space::sweep;
+use trim_sa::arch::ArchConfig;
+use trim_sa::model::vgg16::vgg16;
+use trim_sa::report::render_fig7;
+
+fn main() {
+    header("Fig. 7 — design-space exploration");
+    let cfg = ArchConfig::paper_engine();
+    let net = vgg16();
+    print!("{}", render_fig7(&cfg, &net));
+    println!("{}", bench("fig7_sweep_25_points", 3, 50, || sweep(&cfg, &net).len()));
+}

@@ -1,0 +1,31 @@
+//! Bench: the cycle-accurate simulator hot path (the §Perf L3 target) —
+//! PE-array cycle updates per second across slice geometries and a small
+//! engine layer.
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::{bench, header};
+use trim_sa::arch::{ArchConfig, EngineSim, SliceSim};
+use trim_sa::golden::Tensor3;
+use trim_sa::model::ConvLayer;
+use trim_sa::util::SplitMix64;
+
+fn main() {
+    header("Simulator hot path");
+    let mut rng = SplitMix64::new(1);
+    for (hw, k) in [(56usize, 3usize), (112, 3), (224, 3), (64, 5)] {
+        let ifmap = rng.vec_i32(hw * hw, 0, 256);
+        let weights = rng.vec_i32(k * k, -8, 8);
+        let r = bench(&format!("slice_{hw}x{hw}_k{k}"), 1, 5, || {
+            SliceSim::new(k, hw + 2).run_conv(&ifmap, hw, hw, &weights, 1, 1).stats.cycles
+        });
+        let cycles = SliceSim::new(k, hw + 2).run_conv(&ifmap, hw, hw, &weights, 1, 1).stats.cycles;
+        let rate = cycles as f64 / r.mean.as_secs_f64() / 1e6;
+        println!("{r}");
+        println!("{:<44} {:>10.1} Mcycles/s  ({:.0} M PE-updates/s)", " ", rate, rate * (k * k) as f64);
+    }
+    let layer = ConvLayer::new("e", 28, 3, 8, 8, 1, 1);
+    let input = Tensor3::from_fn(8, 28, 28, |c, y, x| ((c + y + x) % 251) as i32);
+    let weights = rng.vec_i32(8 * 8 * 9, -8, 8);
+    let sim = EngineSim::new(ArchConfig::small(3, 4, 4));
+    println!("{}", bench("engine_28x28_m8_n8", 1, 3, || sim.run_layer(&layer, &input, &weights).stats.cycles));
+}

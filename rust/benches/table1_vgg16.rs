@@ -1,0 +1,16 @@
+//! Bench: regenerate Table I (TrIM vs Eyeriss on VGG-16).
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::{bench, header};
+use trim_sa::analytics::trim_model::analyze_network;
+use trim_sa::arch::ArchConfig;
+use trim_sa::model::vgg16::vgg16;
+use trim_sa::report::render_table1_or_2;
+
+fn main() {
+    header("Table I — TrIM vs Eyeriss, VGG-16");
+    let cfg = ArchConfig::paper_engine();
+    let net = vgg16();
+    print!("{}", render_table1_or_2(&cfg, &net));
+    println!("{}", bench("table1_analyze", 3, 100, || analyze_network(&cfg, &net).total_gops));
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Table II (TrIM vs Eyeriss on AlexNet, kernel tiling).
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::{bench, header};
+use trim_sa::analytics::trim_model::analyze_network;
+use trim_sa::arch::ArchConfig;
+use trim_sa::model::alexnet::alexnet;
+use trim_sa::report::render_table1_or_2;
+
+fn main() {
+    header("Table II — TrIM vs Eyeriss, AlexNet");
+    let cfg = ArchConfig::paper_engine();
+    let net = alexnet();
+    print!("{}", render_table1_or_2(&cfg, &net));
+    println!("{}", bench("table2_analyze", 3, 100, || analyze_network(&cfg, &net).total_gops));
+}

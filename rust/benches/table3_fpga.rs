@@ -1,0 +1,14 @@
+//! Bench: regenerate Table III (FPGA comparison + cost model).
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::{bench, header};
+use trim_sa::analytics::fpga::{estimate, CostCoefficients};
+use trim_sa::arch::ArchConfig;
+use trim_sa::report::render_table3;
+
+fn main() {
+    header("Table III — FPGA comparison");
+    let cfg = ArchConfig::paper_engine();
+    print!("{}", render_table3(&cfg));
+    println!("{}", bench("table3_cost_model", 3, 200, || estimate(&cfg, &CostCoefficients::default()).luts));
+}

@@ -1,0 +1,103 @@
+//! Design-space exploration (Fig. 7): throughput, psum-buffer size and
+//! I/O bandwidth as functions of the parallelism parameters (P_N, P_M).
+
+use crate::arch::control::plan_layer;
+use crate::arch::ArchConfig;
+use crate::model::Network;
+
+/// One (P_N, P_M) sample of Fig. 7.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignPoint {
+    pub p_n: usize,
+    pub p_m: usize,
+    /// Sustained network throughput, GOPs/s (Fig. 7a bars).
+    pub gops: f64,
+    /// Psum buffer size, Mbit — eq. (3) (Fig. 7a points).
+    pub psum_buffer_mbit: f64,
+    /// I/O bandwidth, bits/cycle — eq. (4) (Fig. 7b bars).
+    pub io_bandwidth_bits: u64,
+    /// Total PEs (for iso-PE comparisons in §IV).
+    pub pes: usize,
+}
+
+/// Evaluate one configuration on a network.
+pub fn evaluate(base: &ArchConfig, net: &Network, p_n: usize, p_m: usize) -> DesignPoint {
+    let cfg = ArchConfig { p_n, p_m, ..*base };
+    let total_time: f64 = net.layers.iter().map(|l| plan_layer(&cfg, l).time_s(&cfg)).sum();
+    let gops = net.total_ops() as f64 / total_time / 1e9;
+    DesignPoint {
+        p_n,
+        p_m,
+        gops,
+        psum_buffer_mbit: cfg.psum_buffer_bits() as f64 / 1e6,
+        io_bandwidth_bits: cfg.io_bandwidth_bits(),
+        pes: cfg.total_pes(),
+    }
+}
+
+/// The paper's sweep grid: P_N, P_M ∈ {1, 4, 8, 16, 24}.
+pub const PAPER_GRID: [usize; 5] = [1, 4, 8, 16, 24];
+
+/// Full Fig. 7 sweep.
+pub fn sweep(base: &ArchConfig, net: &Network) -> Vec<DesignPoint> {
+    let mut out = vec![];
+    for &p_n in &PAPER_GRID {
+        for &p_m in &PAPER_GRID {
+            out.push(evaluate(base, net, p_n, p_m));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vgg16::vgg16;
+
+    fn base() -> ArchConfig {
+        ArchConfig::paper_engine()
+    }
+
+    /// §IV: "The best-case with P_N = P_M = 24 leads to a performance of
+    /// 1243 GOPs/s".
+    #[test]
+    fn best_case_hits_1243_gops() {
+        let p = evaluate(&base(), &vgg16(), 24, 24);
+        assert!((p.gops - 1243.0).abs() / 1243.0 < 0.03, "best case = {:.0} GOPs/s", p.gops);
+    }
+
+    /// §IV: 4 cores × 16 slices and 16 cores × 4 slices use 576 PEs each
+    /// and reach the same throughput, but the former needs 4× less psum
+    /// buffer and ~2.3× more bandwidth.
+    #[test]
+    fn iso_pe_tradeoff() {
+        let a = evaluate(&base(), &vgg16(), 4, 16);
+        let b = evaluate(&base(), &vgg16(), 16, 4);
+        assert_eq!(a.pes, 576);
+        assert_eq!(b.pes, 576);
+        assert!((a.gops - b.gops).abs() / b.gops < 0.10, "{} vs {}", a.gops, b.gops);
+        assert!((b.psum_buffer_mbit / a.psum_buffer_mbit - 4.0).abs() < 1e-9);
+        let bw_ratio = a.io_bandwidth_bits as f64 / b.io_bandwidth_bits as f64;
+        assert!((bw_ratio - 2.3).abs() < 0.2, "bw ratio = {bw_ratio:.2}");
+    }
+
+    #[test]
+    fn throughput_monotone_in_parallelism() {
+        let net = vgg16();
+        let g1 = evaluate(&base(), &net, 1, 1).gops;
+        let g2 = evaluate(&base(), &net, 8, 8).gops;
+        let g3 = evaluate(&base(), &net, 24, 24).gops;
+        assert!(g1 < g2 && g2 < g3, "{g1} {g2} {g3}");
+    }
+
+    #[test]
+    fn sweep_covers_grid() {
+        let pts = sweep(&base(), &vgg16());
+        assert_eq!(pts.len(), 25);
+        // psum buffer size depends only on P_N (the Fig. 7a points)
+        for w in pts.chunks(5) {
+            let first = w[0].psum_buffer_mbit;
+            assert!(w.iter().all(|p| (p.psum_buffer_mbit - first).abs() < 1e-12));
+        }
+    }
+}

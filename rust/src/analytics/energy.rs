@@ -1,0 +1,78 @@
+//! Access-energy constants and the on-chip normalisation of Tables I–II.
+//!
+//! Tables I–II report on-chip accesses "normalized to off-chip memory
+//! accesses" (footnote b): raw on-chip access counts are scaled by the
+//! relative energy of an on-chip vs an off-chip access so they can be
+//! summed into a single energy-meaningful total. Reverse-engineering the
+//! published columns fixes the ratio:
+//!
+//! * TrIM VGG-16 CL11: raw psum traffic 3·512·196·43 = 12.94 M, published
+//!   0.17 M → ratio ≈ 76;
+//! * Eyeriss VGG-16 total: 4 spad accesses/MAC × 46.05 G MACs = 184 G raw,
+//!   published 2427.63 M → ratio ≈ 75.9.
+//!
+//! A ratio of 76 is exactly what Horowitz-style numbers give for a ~100 kB
+//! SRAM vs DRAM (≈ 8.4 pJ vs 640 pJ per 32-bit access), so we adopt
+//! `E_DRAM = 640 pJ`, `E_ONCHIP = 8.42 pJ`.
+
+/// Energy per access (pJ, 32-bit word), 45 nm-class estimates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    /// Off-chip DRAM access.
+    pub e_dram_pj: f64,
+    /// On-chip buffer access (global buffer / psum buffer class).
+    pub e_onchip_pj: f64,
+    /// MAC operation (8-bit operands, 45 nm-class).
+    pub e_mac_pj: f64,
+}
+
+impl EnergyModel {
+    /// The calibration that reproduces the paper's normalised columns.
+    pub fn paper() -> Self {
+        Self { e_dram_pj: 640.0, e_onchip_pj: 640.0 / 76.0, e_mac_pj: 0.2 }
+    }
+
+    /// Tables I–II footnote b: on-chip accesses expressed in off-chip
+    /// equivalents.
+    pub fn normalize_onchip(&self, raw_accesses: f64) -> f64 {
+        raw_accesses * self.e_onchip_pj / self.e_dram_pj
+    }
+
+    /// Total memory energy (J) for raw access counts.
+    pub fn memory_energy_j(&self, off_chip: f64, on_chip_raw: f64) -> f64 {
+        (off_chip * self.e_dram_pj + on_chip_raw * self.e_onchip_pj) * 1e-12
+    }
+
+    /// Compute energy (J) for a MAC count.
+    pub fn compute_energy_j(&self, macs: f64) -> f64 {
+        macs * self.e_mac_pj * 1e-12
+    }
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalisation_ratio_is_76() {
+        let e = EnergyModel::paper();
+        let r = e.e_dram_pj / e.e_onchip_pj;
+        assert!((r - 76.0).abs() < 1e-9);
+        assert!((e.normalize_onchip(76.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dram_dominates_memory_energy() {
+        let e = EnergyModel::paper();
+        // §I: a DRAM read is ~200× a 32-bit multiply; our constants keep
+        // DRAM ≫ on-chip ≫ MAC.
+        assert!(e.e_dram_pj / e.e_onchip_pj > 10.0);
+        assert!(e.e_onchip_pj / e.e_mac_pj > 10.0);
+    }
+}

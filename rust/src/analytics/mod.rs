@@ -1,0 +1,32 @@
+//! Analytical models of the paper's evaluation section.
+//!
+//! * [`energy`] — access-energy constants and the on-chip/off-chip
+//!   normalisation used by Tables I–II (footnote b).
+//! * [`trim_model`] — TrIM per-layer metrics: eq. (1)–(2) timing via the
+//!   control plan, plus the memory-access model (off-chip ifmap/weight/
+//!   ofmap streams, on-chip psum-buffer traffic).
+//! * [`eyeriss`] — the Eyeriss row-stationary baseline: published JSSC'17
+//!   measurement columns (what the paper compares against) plus our
+//!   structural access model with documented calibration.
+//! * [`ws_gemm`] — weight-stationary GeMM (TPU-style im2col) baseline for
+//!   the dataflow ablation (the predecessor paper's 10× claim).
+//! * [`design_space`] — the Fig. 7 sweep (throughput, psum-buffer size,
+//!   I/O bandwidth over the (P_N, P_M) grid).
+//! * [`extensions`] — the paper's §VI future-work features (RSRB
+//!   sharing, ifmap tiling, ifmap/weight global buffer) as quantifiable
+//!   extensions with an ablation bench.
+//! * [`fpga`] — the Table III FPGA cost model (LUT/FF/BRAM/power) and the
+//!   published comparison rows.
+//! * [`ops`] — Fig. 1 (per-layer memory and operation profile).
+
+pub mod design_space;
+pub mod extensions;
+pub mod energy;
+pub mod eyeriss;
+pub mod fpga;
+pub mod ops;
+pub mod trim_model;
+pub mod ws_gemm;
+
+pub use energy::EnergyModel;
+pub use trim_model::{LayerMetrics, NetworkMetrics};

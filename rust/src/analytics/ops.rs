@@ -1,0 +1,68 @@
+//! Fig. 1: per-layer memory requirements and operation counts for VGG-16.
+
+use crate::model::{ConvLayer, Network};
+
+/// One Fig. 1 bar/point.
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    pub name: String,
+    pub ifmap_mb: f64,
+    pub weight_mb: f64,
+    pub gops: f64,
+}
+
+impl LayerProfile {
+    pub fn total_mb(&self) -> f64 {
+        self.ifmap_mb + self.weight_mb
+    }
+}
+
+/// Profile one layer at `bits` precision.
+pub fn profile_layer(layer: &ConvLayer, bits: usize) -> LayerProfile {
+    LayerProfile {
+        name: layer.name.clone(),
+        ifmap_mb: layer.ifmap_bytes(bits) as f64 / 1e6,
+        weight_mb: layer.weight_bytes(bits) as f64 / 1e6,
+        gops: layer.ops() as f64 / 1e9,
+    }
+}
+
+/// Fig. 1 data for a whole network (8-bit, as in the paper).
+pub fn profile_network(net: &Network, bits: usize) -> Vec<LayerProfile> {
+    net.layers.iter().map(|l| profile_layer(l, bits)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vgg16::vgg16;
+
+    #[test]
+    fn early_layers_are_ifmap_bound_late_layers_weight_bound() {
+        // The Fig. 1 narrative: "former CLs ... require massive memory for
+        // inputs ... deeper CLs extract features requiring a dominant
+        // contribution of weights."
+        let p = profile_network(&vgg16(), 8);
+        assert!(p[1].ifmap_mb > 10.0 * p[1].weight_mb, "CL2 is ifmap-bound");
+        assert!(p[12].weight_mb > 20.0 * p[12].ifmap_mb, "CL13 is weight-bound");
+    }
+
+    #[test]
+    fn totals_match_intro_numbers() {
+        let p = profile_network(&vgg16(), 8);
+        let gops: f64 = p.iter().map(|l| l.gops).sum();
+        assert!((gops - 30.7).abs() < 0.3, "total = {gops:.1} GOPs");
+        let mb: f64 = p.iter().map(|l| l.total_mb()).sum();
+        assert!(mb > 20.0 && mb < 26.0, "total = {mb:.1} MB");
+    }
+
+    #[test]
+    fn cl2_is_among_the_compute_peaks() {
+        // Several VGG-16 layers tie at the 3.7 GOPs peak (CL2/CL4/CL6...);
+        // Fig. 1's dashed line is flat-topped across them.
+        let p = profile_network(&vgg16(), 8);
+        let max = p.iter().map(|l| l.gops).fold(0.0, f64::max);
+        assert!((max - 3.7).abs() < 0.05, "peak = {max:.2} GOPs");
+        assert!((p[1].gops - max).abs() < 1e-9, "CL2 at the peak");
+    }
+}

@@ -1,0 +1,91 @@
+//! Architecture configuration (the free parameters of Figs. 3–6).
+
+
+
+/// Parameters of a TrIM engine instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArchConfig {
+    /// Native kernel size of a slice (K). The paper's engine: 3.
+    pub k: usize,
+    /// Slices per core (P_M — parallel ifmaps).
+    pub p_m: usize,
+    /// Cores per engine (P_N — parallel filters/ofmaps).
+    pub p_n: usize,
+    /// Operand precision B in bits (8 in the paper).
+    pub bits: usize,
+    /// Clock frequency in Hz (150 MHz in the paper).
+    pub f_clk: f64,
+    /// RSRB capacity: width of the largest (padded) ifmap, `W_IM`.
+    /// 226 for VGG-16 (224 + 2·pad).
+    pub w_im: usize,
+    /// Psum buffer capacity per core, in activations (`H_OM × W_OM`);
+    /// 224·224 in the paper (worst case = first two VGG-16 layers).
+    pub psum_buf_depth: usize,
+}
+
+impl ArchConfig {
+    /// The paper's FPGA implementation: P_N = 7 cores × P_M = 24 slices of
+    /// 3×3 PEs = 1512 PEs @ 150 MHz, 8-bit operands.
+    pub fn paper_engine() -> Self {
+        Self { k: 3, p_m: 24, p_n: 7, bits: 8, f_clk: 150.0e6, w_im: 226, psum_buf_depth: 224 * 224 }
+    }
+
+    /// A reduced engine for fast cycle-accurate engine tests.
+    pub fn small(k: usize, p_m: usize, p_n: usize) -> Self {
+        Self { k, p_m, p_n, bits: 8, f_clk: 150.0e6, w_im: 64, psum_buf_depth: 64 * 64 }
+    }
+
+    /// Total PE count: `P_N · P_M · K²`.
+    pub fn total_pes(&self) -> usize {
+        self.p_n * self.p_m * self.k * self.k
+    }
+
+    /// Peak throughput in ops/s: every PE does one MAC (2 ops) per cycle.
+    /// Paper: 1512 PEs · 2 · 150 MHz = 453.6 GOPs/s.
+    pub fn peak_ops_per_s(&self) -> f64 {
+        self.total_pes() as f64 * 2.0 * self.f_clk
+    }
+
+    /// Engine pipeline latency L_I in cycles. Paper §V: 9 stages
+    /// (5 slice + 3 core adder tree + 1 engine accumulator).
+    pub fn pipeline_latency(&self) -> u64 {
+        let slice = (self.k as u64 - 1) + 1 + (self.k as f64).log2().ceil() as u64; // skew+MAC+tree
+        let core = 3; // paper's pipelined core tree depth for P_M = 24
+        slice + core + 1
+    }
+
+    /// I/O bandwidth requirement, eq. (4): `(P_M·(2K−1) + P_N)·B` bits per
+    /// cycle. For K = 3 this is the paper's `(P_M·5 + P_N)·B`.
+    pub fn io_bandwidth_bits(&self) -> u64 {
+        ((self.p_m * (2 * self.k - 1) + self.p_n) * self.bits) as u64
+    }
+
+    /// Psum-buffer size in bits, eq. (3): `P_N · H_OM·W_OM · 32`.
+    pub fn psum_buffer_bits(&self) -> u64 {
+        (self.p_n * self.psum_buf_depth) as u64 * 32
+    }
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self::paper_engine()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_engine_headlines() {
+        let c = ArchConfig::paper_engine();
+        assert_eq!(c.total_pes(), 1512);
+        assert!((c.peak_ops_per_s() / 1e9 - 453.6).abs() < 1e-9);
+        assert_eq!(c.pipeline_latency(), 9); // 3+1+2 slice, 3 core, 1 engine
+        // eq. (4): (24·5 + 7)·8 = 1016 bits/cycle, "rounded to 1024" in §V.
+        assert_eq!(c.io_bandwidth_bits(), 1016);
+        // eq. (3): 7 · 224² · 32 = 11.24 Mb — just above the XCZU7EV's 11 Mb,
+        // the paper's stated BRAM constraint (10.21 Mb used after synthesis).
+        assert!((c.psum_buffer_bits() as f64 / 1e6 - 11.24) < 0.3);
+    }
+}

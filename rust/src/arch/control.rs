@@ -1,0 +1,241 @@
+//! Control logic: the computational-step scheduler (Fig. 6's "Control
+//! Logic"), including the large-kernel tiling policy of §V.
+//!
+//! The schedule determines eq. (2)'s cycle count and the PE-utilisation
+//! column of Tables I–II:
+//!
+//! * **native layers** (`K ≤ K_nat`): `⌈N/P_N⌉·⌈M/P_M⌉` steps of
+//!   `P_N·K + H_O·W_O` cycles (weight-load + compute phases);
+//! * **tiled layers, few tiles** (`T ≤ P_N`, e.g. AlexNet's 5×5 → T = 4):
+//!   the T tile-groups of one filter occupy T cooperating cores and their
+//!   psums are combined at the engine level, so only `⌊P_N/T⌋` filters run
+//!   concurrently (AlexNet CL2: 4 of 7 cores busy → the paper's 0.57
+//!   utilisation);
+//! * **tiled layers, many tiles** (`T > P_N`, e.g. 11×11 → T = 16): the
+//!   `M·T` (channel, tile) tasks of one filter are packed across slices of
+//!   `⌈M·T/P_M⌉` cooperating cores ("different slices may cooperate with
+//!   each other to manage large kernel sizes", §I).
+//!
+//! Strided layers sweep every stride-1 window position and decimate
+//! (§V's AlexNet CL1 behaviour), so their compute phase costs
+//! `(H_P−K+1)·(W_P−K+1)` cycles per step instead of `H_O·W_O`.
+//!
+//! **Known deviation** (documented in EXPERIMENTS.md): for AlexNet CL1 the
+//! paper reports 2.13 GOPs/s, implying an almost fully serialised tile
+//! schedule; our packing is more aggressive (~19 GOPs/s). The qualitative
+//! result is unchanged — CL1 is the only layer where Eyeriss beats TrIM.
+
+use super::config::ArchConfig;
+use crate::model::{ConvLayer, KernelTiling};
+
+
+/// The per-layer execution plan (schedule + eq. (2) timing).
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    /// Tiles per kernel (1 for native layers).
+    pub tiles: usize,
+    /// Filters processed concurrently.
+    pub filters_parallel: usize,
+    /// Cores cooperating on one filter (1 for native layers).
+    pub cores_per_filter: usize,
+    /// Filter-group steps: `⌈N / filters_parallel⌉`.
+    pub filter_steps: u64,
+    /// Channel-group steps: `⌈M / P_M⌉` (1 when channels are packed with
+    /// tiles inside the filter's cooperating cores).
+    pub m_steps: u64,
+    /// Total computational steps.
+    pub steps: u64,
+    /// Weight-load cycles per step (`P_N · K`).
+    pub weight_load_cycles: u64,
+    /// Compute-phase cycles per step (stride-1 sweep positions).
+    pub sweep_cycles: u64,
+    /// eq. (2): `L_I + steps · (weight_load + sweep)`.
+    pub total_cycles: u64,
+    /// Steady-state slice occupancy (the tables' "PE Util." column).
+    pub utilization: f64,
+}
+
+impl StepPlan {
+    /// Execution time at the configured clock.
+    pub fn time_s(&self, cfg: &ArchConfig) -> f64 {
+        self.total_cycles as f64 / cfg.f_clk
+    }
+
+    /// Achieved throughput for `layer` (eq. (1) ops over eq. (2) time).
+    pub fn gops(&self, cfg: &ArchConfig, layer: &ConvLayer) -> f64 {
+        layer.ops() as f64 / self.time_s(cfg) / 1e9
+    }
+}
+
+/// Build the execution plan for `layer` on `cfg`.
+pub fn plan_layer(cfg: &ArchConfig, layer: &ConvLayer) -> StepPlan {
+    let k_nat = cfg.k;
+    let (p_n, p_m) = (cfg.p_n, cfg.p_m);
+    let hp = layer.h_i + 2 * layer.pad;
+    let wp = layer.w_i + 2 * layer.pad;
+
+    let tiling = KernelTiling::new(layer.k, k_nat);
+    let t = tiling.num_tiles();
+
+    // Stride-1 sweep positions (== H_O·W_O for stride-1 layers).
+    let sweep = ((hp - layer.k + 1) * (wp - layer.k + 1)) as u64;
+    let weight_load = (p_n * k_nat) as u64;
+
+    let (filters_parallel, cores_per_filter, m_steps, util);
+    if t == 1 {
+        // Native: one slice per (filter, channel) pair.
+        filters_parallel = p_n.min(layer.n);
+        cores_per_filter = 1;
+        m_steps = layer.m.div_ceil(p_m) as u64;
+        util = (layer.m.min(p_m) as f64 / p_m as f64) * (layer.n.min(p_n) as f64 / p_n as f64);
+    } else if t <= p_n {
+        // Few tiles: T cores cooperate per filter (paper's 5×5 policy).
+        filters_parallel = (p_n / t).max(1);
+        cores_per_filter = t;
+        m_steps = layer.m.div_ceil(p_m) as u64;
+        let cores_used = (filters_parallel * t).min(p_n);
+        util = (cores_used as f64 / p_n as f64) * (layer.m.min(p_m) as f64 / p_m as f64);
+    } else {
+        // Many tiles: (channel, tile) tasks packed across slices.
+        let tasks_per_filter = layer.m * t;
+        let cpf = tasks_per_filter.div_ceil(p_m);
+        if cpf <= p_n {
+            filters_parallel = (p_n / cpf).max(1);
+            cores_per_filter = cpf;
+            m_steps = 1;
+            let slices_used = filters_parallel * tasks_per_filter;
+            util = slices_used as f64 / (p_n * p_m) as f64;
+        } else {
+            filters_parallel = 1;
+            cores_per_filter = cpf;
+            m_steps = cpf.div_ceil(p_n) as u64; // sequential rounds
+            util = 1.0;
+        }
+    }
+
+    let filter_steps = layer.n.div_ceil(filters_parallel) as u64;
+    let steps = filter_steps * m_steps;
+    let total_cycles = cfg.pipeline_latency() + steps * (weight_load + sweep);
+
+    StepPlan {
+        tiles: t,
+        filters_parallel,
+        cores_per_filter,
+        filter_steps,
+        m_steps,
+        steps,
+        weight_load_cycles: weight_load,
+        sweep_cycles: sweep,
+        total_cycles,
+        utilization: util,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{alexnet::alexnet, vgg16::vgg16};
+
+    fn paper_cfg() -> ArchConfig {
+        ArchConfig::paper_engine()
+    }
+
+    /// Table I: per-layer GOPs/s of the paper's engine on VGG-16.
+    #[test]
+    fn vgg16_gops_match_table1() {
+        let cfg = paper_cfg();
+        let expect = [51.8, 368.0, 387.0, 387.0, 396.0, 432.0, 432.0, 422.0, 422.0, 422.0, 389.0, 389.0, 389.0];
+        for (l, &e) in vgg16().layers.iter().zip(&expect) {
+            let plan = plan_layer(&cfg, l);
+            let g = plan.gops(&cfg, l);
+            assert!((g - e).abs() / e < 0.01, "{}: got {g:.1}, paper {e}", l.name);
+        }
+    }
+
+    /// Table I: PE utilisation column.
+    #[test]
+    fn vgg16_utilization_matches_table1() {
+        let cfg = paper_cfg();
+        let net = vgg16();
+        let u1 = plan_layer(&cfg, &net.layers[0]).utilization;
+        assert!((u1 - 0.125).abs() < 0.01, "CL1 util = {u1}"); // paper: 0.13
+        for l in &net.layers[1..] {
+            let u = plan_layer(&cfg, l).utilization;
+            assert!((u - 1.0).abs() < 1e-9, "{} util = {u}", l.name);
+        }
+    }
+
+    /// §V: VGG-16 sustained throughput 391 GOPs/s, 78.6 ms/inference,
+    /// mean utilisation 93 %.
+    #[test]
+    fn vgg16_totals_match_section5() {
+        let cfg = paper_cfg();
+        let net = vgg16();
+        let total_time: f64 = net.layers.iter().map(|l| plan_layer(&cfg, l).time_s(&cfg)).sum();
+        let gops = net.total_ops() as f64 / total_time / 1e9;
+        assert!((total_time * 1e3 - 78.6).abs() < 1.0, "time = {:.1} ms", total_time * 1e3);
+        assert!((gops - 391.0).abs() < 5.0, "throughput = {gops:.0} GOPs/s");
+        let mean_util: f64 =
+            net.layers.iter().map(|l| plan_layer(&cfg, l).utilization).sum::<f64>() / 13.0;
+        assert!((mean_util - 0.93).abs() < 0.01, "mean util = {mean_util:.3}");
+    }
+
+    /// Table II: AlexNet CL2 (5×5 → 4 tile-groups on 4 of 7 cores).
+    #[test]
+    fn alexnet_cl2_matches_table2() {
+        let cfg = paper_cfg();
+        let net = alexnet();
+        let cl2 = &net.layers[1];
+        let plan = plan_layer(&cfg, cl2);
+        assert_eq!(plan.tiles, 4);
+        assert_eq!(plan.cores_per_filter, 4);
+        assert_eq!(plan.filters_parallel, 1);
+        assert!((plan.utilization - 4.0 / 7.0).abs() < 1e-9); // paper: 0.57
+        let g = plan.gops(&cfg, cl2);
+        assert!((g - 179.0).abs() / 179.0 < 0.03, "CL2 = {g:.0} GOPs/s (paper 179)");
+    }
+
+    /// Table II: AlexNet CL3-5 (native 3×3 layers) match exactly.
+    #[test]
+    fn alexnet_native_layers_match_table2() {
+        let cfg = paper_cfg();
+        let net = alexnet();
+        let expect = [390.0, 402.0, 399.0];
+        for (l, &e) in net.layers[2..].iter().zip(&expect) {
+            let g = plan_layer(&cfg, l).gops(&cfg, l);
+            assert!((g - e).abs() / e < 0.01, "{}: {g:.0} vs paper {e}", l.name);
+        }
+    }
+
+    /// AlexNet CL1: 16 tiles > P_N — our packing spreads (channel, tile)
+    /// tasks across slices; the paper's (underspecified) schedule is far
+    /// more serial. Documented deviation: we check the qualitative shape —
+    /// CL1 is TrIM's worst layer and loses to Eyeriss (51.1 GOPs/s).
+    #[test]
+    fn alexnet_cl1_is_the_weak_spot() {
+        let cfg = paper_cfg();
+        let net = alexnet();
+        let cl1 = &net.layers[0];
+        let plan = plan_layer(&cfg, cl1);
+        assert_eq!(plan.tiles, 16);
+        let g = plan.gops(&cfg, cl1);
+        assert!(g < 51.1, "CL1 {g:.1} GOPs/s must lose to Eyeriss's 51.1");
+        let others: f64 = net.layers[1..]
+            .iter()
+            .map(|l| plan_layer(&cfg, l).gops(&cfg, l))
+            .fold(f64::INFINITY, f64::min);
+        assert!(g < others, "CL1 must be the slowest layer");
+    }
+
+    #[test]
+    fn eq2_structure_native() {
+        // eq. (2): NC = L_I + ⌈N/P_N⌉·⌈M/P_M⌉·(P_N·K + H_O·W_O)
+        let cfg = paper_cfg();
+        let l = ConvLayer::new("x", 56, 3, 128, 256, 1, 1);
+        let p = plan_layer(&cfg, &l);
+        assert_eq!(p.steps, 37 * 6);
+        assert_eq!(p.weight_load_cycles, 21);
+        assert_eq!(p.sweep_cycles, 56 * 56);
+        assert_eq!(p.total_cycles, 9 + 222 * (21 + 3136));
+    }
+}

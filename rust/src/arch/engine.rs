@@ -1,0 +1,299 @@
+//! The TrIM Engine (Fig. 6): `P_N` cores on broadcast inputs, per-core
+//! psum buffers + accumulators for temporal accumulation over the
+//! `⌈M/P_M⌉` channel groups, and the shared control logic.
+//!
+//! The engine executes real convolutional layers: its numeric output is
+//! validated bit-exactly against [`crate::golden::conv3d_i32`] (including
+//! the tiled large-kernel path of §V), while its cycle accounting follows
+//! the control plan of [`super::control`] (eq. (2)) and its psum-buffer
+//! access counters feed the memory-access model of Tables I–II.
+
+use super::config::ArchConfig;
+use super::control::{plan_layer, StepPlan};
+use super::core::CoreSim;
+use super::stats::SimStats;
+use crate::golden::Tensor3;
+use crate::model::{ConvLayer, KernelTiling};
+
+/// Result of running one layer on the engine.
+#[derive(Debug, Clone)]
+pub struct EngineRunResult {
+    /// Accumulated ofmaps, `[N][H_O][W_O]` (engine accumulator precision).
+    pub ofmaps: Tensor3,
+    pub stats: SimStats,
+    pub plan: StepPlan,
+}
+
+/// Engine-level simulator.
+pub struct EngineSim {
+    cfg: ArchConfig,
+}
+
+impl EngineSim {
+    pub fn new(cfg: ArchConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn cfg(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    /// Run a full convolutional layer: `input` is `[M][H][W]`, `weights`
+    /// is flat `[N][M][K][K]`. Dispatches to the native or tiled path.
+    pub fn run_layer(&self, layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> EngineRunResult {
+        assert_eq!(input.c, layer.m);
+        assert_eq!(input.h, layer.h_i);
+        assert_eq!(input.w, layer.w_i);
+        assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
+        if layer.k <= self.cfg.k {
+            self.run_native(layer, input, weights)
+        } else {
+            self.run_tiled(layer, input, weights)
+        }
+    }
+
+    /// Native path: K ≤ K_nat. Steps iterate ⌈N/P_N⌉ filter groups ×
+    /// ⌈M/P_M⌉ channel groups; each core owns one filter; psum buffers
+    /// accumulate across channel groups.
+    fn run_native(&self, layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> EngineRunResult {
+        let cfg = &self.cfg;
+        let plan = plan_layer(cfg, layer);
+        let k = layer.k;
+        let kk = k * k;
+        let (h_o, w_o) = (layer.h_o(), layer.w_o());
+        let mut stats = SimStats::default();
+        let mut ofmaps = Tensor3::zeros(layer.n, h_o, w_o);
+        // One psum buffer per core (Fig. 6).
+        let mut psum_buf: Vec<Vec<i64>> = vec![vec![0i64; h_o * w_o]; cfg.p_n];
+        let w_im = (layer.w_i + 2 * layer.pad).max(cfg.k + 1);
+
+        let filters: Vec<usize> = (0..layer.n).collect();
+        let channels: Vec<usize> = (0..layer.m).collect();
+        let m_groups: Vec<&[usize]> = channels.chunks(cfg.p_m).collect();
+
+        for n_grp in filters.chunks(cfg.p_n) {
+            for (mi, m_grp) in m_groups.iter().enumerate() {
+                // --- weight-load phase: P_N · K cycles (eq. (2)) ---
+                stats.cycles += plan.weight_load_cycles;
+                // --- compute phase (cores in parallel on broadcast inputs)
+                let mut step_cycles = 0u64;
+                for (ci, &f) in n_grp.iter().enumerate() {
+                    let mut core = CoreSim::new(cfg.k, m_grp.len(), w_im);
+                    let chans: Vec<&[i32]> = m_grp.iter().map(|&c| input.channel(c)).collect();
+                    let kerns: Vec<&[i32]> =
+                        m_grp.iter().map(|&c| &weights[(f * layer.m + c) * kk..(f * layer.m + c + 1) * kk]).collect();
+                    let r = core.run_step(&chans, layer.h_i, layer.w_i, &kerns, layer.pad, layer.stride, ci == 0);
+                    // cores run concurrently: take one core's cycles
+                    step_cycles = step_cycles.max(r.stats.cycles);
+                    let mut s = r.stats;
+                    s.cycles = 0;
+                    stats.merge(&s);
+                    // --- temporal accumulation into the psum buffer ---
+                    let buf = &mut psum_buf[ci];
+                    if mi == 0 {
+                        buf.copy_from_slice(&r.partial);
+                        stats.psum_buf_writes += if m_groups.len() > 1 { buf.len() as u64 } else { 0 };
+                    } else {
+                        for (b, &p) in buf.iter_mut().zip(r.partial.iter()) {
+                            *b += p;
+                        }
+                        stats.psum_buf_reads += buf.len() as u64;
+                        stats.psum_buf_writes += buf.len() as u64;
+                    }
+                    if mi == m_groups.len() - 1 {
+                        // final: quantised activations leave the engine
+                        // (drained with the last accumulation — counted as
+                        // output writes, not extra buffer reads; matches
+                        // the (2·m_steps − 1) accounting of Tables I–II)
+                        for (i, &v) in buf.iter().enumerate() {
+                            ofmaps.data[f * h_o * w_o + i] = v as i32;
+                        }
+                        stats.output_writes += buf.len() as u64;
+                    }
+                }
+                stats.cycles += step_cycles;
+            }
+        }
+        stats.cycles += cfg.pipeline_latency();
+        EngineRunResult { ofmaps, stats, plan }
+    }
+
+    /// Tiled path (§V): kernels with K > K_nat are split into 3×3 tiles;
+    /// each (channel, tile) pair is a slice task convolving a shifted view
+    /// of the padded ifmap at stride 1, decimated by the layer stride; the
+    /// engine accumulates tile psums on top of the channel accumulation.
+    fn run_tiled(&self, layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> EngineRunResult {
+        let cfg = &self.cfg;
+        let plan = plan_layer(cfg, layer);
+        let k = layer.k;
+        let kk = k * k;
+        let k_nat = cfg.k;
+        let tiling = KernelTiling::new(k, k_nat);
+        let (h_o, w_o) = (layer.h_o(), layer.w_o());
+        let hp = layer.h_i + 2 * layer.pad;
+        let wp = layer.w_i + 2 * layer.pad;
+        // Shifted sub-view height/width so every tile sweeps the same
+        // stride-1 grid as the full kernel.
+        let hs = hp - k + k_nat;
+        let ws = wp - k + k_nat;
+        let mut stats = SimStats::default();
+        let mut ofmaps = Tensor3::zeros(layer.n, h_o, w_o);
+        let w_im = ws.max(cfg.k + 1);
+
+        // Materialise the padded input once (the broadcast buffer).
+        let mut padded = Tensor3::zeros(layer.m, hp, wp);
+        for c in 0..layer.m {
+            for y in 0..layer.h_i {
+                for x in 0..layer.w_i {
+                    padded.set(c, y + layer.pad, x + layer.pad, input.get(c, y, x));
+                }
+            }
+        }
+
+        for f in 0..layer.n {
+            let mut acc = vec![0i64; h_o * w_o];
+            let mut first_task = true;
+            for c in 0..layer.m {
+                let kern = &weights[(f * layer.m + c) * kk..(f * layer.m + c + 1) * kk];
+                for tile in &tiling.tiles {
+                    let tw = tiling.extract_tile_weights(kern, tile);
+                    // shifted view of the padded channel
+                    let mut sub = vec![0i32; hs * ws];
+                    for y in 0..hs {
+                        for x in 0..ws {
+                            let (py, px) = (y + tile.row0, x + tile.col0);
+                            if py < hp && px < wp {
+                                sub[y * ws + x] = padded.get(c, py, px);
+                            }
+                        }
+                    }
+                    let mut slice = super::slice::SliceSim::new(k_nat, w_im);
+                    let r = slice.run_conv(&sub, hs, ws, &tw, 0, layer.stride);
+                    debug_assert_eq!((r.h_o, r.w_o), (h_o, w_o));
+                    let mut s = r.stats;
+                    // Broadcast: the padded ifmap is read once per filter
+                    // pass, not once per tile — count reads for the first
+                    // (channel, tile) task only; cycles are per the plan.
+                    if !first_task {
+                        s.ext_input_reads = 0;
+                    }
+                    s.cycles = 0;
+                    s.output_writes = 0;
+                    stats.merge(&s);
+                    first_task = false;
+                    for (i, &v) in r.output.iter().enumerate() {
+                        acc[i] += v as i64;
+                    }
+                }
+                // tile psums accumulate spatially/at the top level each
+                // step; channel groups beyond P_M go through psum buffers
+                if (c + 1) % cfg.p_m == 0 && c + 1 < layer.m {
+                    stats.psum_buf_reads += acc.len() as u64;
+                    stats.psum_buf_writes += acc.len() as u64;
+                }
+            }
+            for (i, &v) in acc.iter().enumerate() {
+                ofmaps.data[f * h_o * w_o + i] = v as i32;
+            }
+            stats.output_writes += acc.len() as u64;
+        }
+        // Timing comes from the control plan (the per-task sims above run
+        // logically in parallel across slices/cores).
+        stats.cycles = plan.total_cycles;
+        EngineRunResult { ofmaps, stats, plan }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden::conv3d_i32;
+
+    fn rand_tensor(c: usize, h: usize, w: usize, seed: i32) -> Tensor3 {
+        Tensor3::from_fn(c, h, w, |ci, y, x| ((ci as i32 * 131 + y as i32 * 31 + x as i32 * 7 + seed) % 251) - 125)
+    }
+
+    fn rand_weights(n: usize, m: usize, k: usize, seed: i32) -> Vec<i32> {
+        (0..n * m * k * k).map(|i| ((i as i32 * 37 + seed) % 15) - 7).collect()
+    }
+
+    #[test]
+    fn native_layer_matches_golden_multi_group() {
+        // M=5 > P_M=2 forces 3 channel groups; N=5 > P_N=2 forces 3 filter
+        // groups — exercises the psum buffers and the control loops.
+        let layer = ConvLayer::new("t", 10, 3, 5, 5, 1, 1);
+        let input = rand_tensor(5, 10, 10, 3);
+        let weights = rand_weights(5, 5, 3, 11);
+        let cfg = ArchConfig::small(3, 2, 2);
+        let r = EngineSim::new(cfg).run_layer(&layer, &input, &weights);
+        let golden = conv3d_i32(&input, &weights, 5, 3, 1, 1);
+        assert_eq!(r.ofmaps, golden);
+        assert!(r.stats.psum_buf_reads > 0 && r.stats.psum_buf_writes > 0);
+    }
+
+    #[test]
+    fn native_single_group_skips_psum_buffer() {
+        let layer = ConvLayer::new("t", 8, 3, 2, 2, 1, 1);
+        let input = rand_tensor(2, 8, 8, 5);
+        let weights = rand_weights(2, 2, 3, 7);
+        let cfg = ArchConfig::small(3, 4, 4);
+        let r = EngineSim::new(cfg).run_layer(&layer, &input, &weights);
+        // M ≤ P_M and N ≤ P_N: pure spatial accumulation, no buffer traffic
+        // (Fig. 6: "the accumulation logic is required only when P_N < N").
+        assert_eq!(r.stats.psum_buf_reads, 0);
+        assert_eq!(r.stats.psum_buf_writes, 0);
+        assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 2, 3, 1, 1));
+    }
+
+    #[test]
+    fn tiled_5x5_matches_golden() {
+        let layer = ConvLayer::new("t5", 12, 5, 3, 4, 1, 2);
+        let input = rand_tensor(3, 12, 12, 9);
+        let weights = rand_weights(4, 3, 5, 13);
+        let cfg = ArchConfig::small(3, 2, 2);
+        let r = EngineSim::new(cfg).run_layer(&layer, &input, &weights);
+        assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 4, 5, 1, 2));
+        assert_eq!(r.plan.tiles, 4);
+    }
+
+    #[test]
+    fn tiled_strided_11x11_matches_golden() {
+        // AlexNet-CL1-like (scaled down): 11×11 kernel, stride 4, no pad.
+        let layer = ConvLayer::new("t11", 31, 11, 2, 3, 4, 0);
+        let input = rand_tensor(2, 31, 31, 17);
+        let weights = rand_weights(3, 2, 11, 19);
+        let cfg = ArchConfig::small(3, 4, 2);
+        let r = EngineSim::new(cfg).run_layer(&layer, &input, &weights);
+        assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 3, 11, 4, 0));
+        assert_eq!(r.plan.tiles, 16);
+    }
+
+    #[test]
+    fn engine_cycles_follow_eq2() {
+        let layer = ConvLayer::new("t", 10, 3, 5, 5, 1, 1);
+        let input = rand_tensor(5, 10, 10, 3);
+        let weights = rand_weights(5, 5, 3, 11);
+        let cfg = ArchConfig::small(3, 2, 2);
+        let r = EngineSim::new(cfg).run_layer(&layer, &input, &weights);
+        let plan = plan_layer(&cfg, &layer);
+        // Engine-measured cycles = eq. (2) + the slice/core pipeline
+        // overheads the analytical model folds into L_I. Allow the
+        // per-step pipeline fill as slack.
+        let per_step_overhead = 3 + cfg.k as u64 + 5; // tree + skew + core tree
+        assert!(r.stats.cycles >= plan.total_cycles);
+        assert!(r.stats.cycles <= plan.total_cycles + plan.steps * per_step_overhead + 16,
+            "engine {} vs plan {}", r.stats.cycles, plan.total_cycles);
+    }
+
+    #[test]
+    fn broadcast_counts_inputs_once_per_filter_group() {
+        // N=4 filters on P_N=2 cores → 2 filter groups; M=2 ≤ P_M.
+        let layer = ConvLayer::new("t", 8, 3, 2, 4, 1, 1);
+        let input = rand_tensor(2, 8, 8, 23);
+        let weights = rand_weights(4, 2, 3, 29);
+        let cfg = ArchConfig::small(3, 2, 2);
+        let r = EngineSim::new(cfg).run_layer(&layer, &input, &weights);
+        // padded reads = M × 10 × 10 per filter group × 2 groups
+        assert_eq!(r.stats.ext_input_reads, 2 * 10 * 10 * 2);
+    }
+}

@@ -1,0 +1,36 @@
+//! Cycle-accurate structural model of the TrIM hardware hierarchy.
+//!
+//! Fidelity contract:
+//!
+//! * **Slice level** ([`slice::SliceSim`]) is register-accurate: every PE
+//!   input/weight/psum/pass register, every RSRB stage and the adder-tree
+//!   pipeline are stepped cycle by cycle; data reaches the multiplier only
+//!   through the structural paths of Fig. 3 (external port, right-neighbour
+//!   pass register, or RSRB dispatch bus). The slice's numerics, cycle
+//!   counts, external-read counts and per-cycle peak input bandwidth are
+//!   all *measured*, not computed from formulas.
+//! * **Core/Engine level** ([`core`], [`engine`]) compose slice simulations
+//!   per computational step and model the core adder tree, the engine psum
+//!   buffers and the control FSM with per-step cycle accounting identical
+//!   to eq. (2) (weight-load phase `P_N·K`, compute phase `H_O·W_O`,
+//!   pipeline latency `L_I`). Psum-buffer reads/writes are counted exactly.
+//!
+//! The [`control`] module holds the step scheduler shared with the
+//! analytical models (including the large-kernel tiling policy of §V).
+
+pub mod adder_tree;
+pub mod config;
+pub mod control;
+pub mod engine;
+pub mod pe;
+pub mod rsrb;
+pub mod slice;
+pub mod stats;
+
+#[allow(clippy::module_inception)]
+pub mod core;
+
+pub use config::ArchConfig;
+pub use engine::EngineSim;
+pub use slice::SliceSim;
+pub use stats::SimStats;

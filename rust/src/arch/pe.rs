@@ -1,0 +1,79 @@
+//! The TrIM Processing Element (detail box of Fig. 3).
+//!
+//! A PE holds four registers — input, weight, psum-out and the pass
+//! register forwarding its current input to the left neighbour — plus two
+//! cascaded multiplexers selecting the multiplier operand among the
+//! external input `I_ext`, the diagonal dispatch `I_D` (from an RSRB) and
+//! the right-neighbour input `I_R`.
+
+
+
+/// Multiplexer selection for the PE input operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputSel {
+    /// External input from the periphery (`I_ext`).
+    Ext,
+    /// Diagonal dispatch from the RSRB below (`I_D`).
+    Diag,
+    /// Right neighbour's pass register (`I_R`).
+    Right,
+}
+
+/// One processing element. All registers are `i32`, wide enough for the
+/// paper's maximum datapath width (30 bits at B = 8, K = 3, M ≤ 512).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Pe {
+    /// Weight register (stationary during the whole convolution).
+    pub weight: i32,
+    /// Input register = pass register: the operand used this cycle,
+    /// visible to the left neighbour next cycle.
+    pub input: i32,
+    /// Psum output register (result of this cycle's MAC).
+    pub psum: i32,
+}
+
+impl Pe {
+    /// Weight-load phase: shift the weight register down the column
+    /// (returns the previous weight, which moves to the row below).
+    #[inline]
+    pub fn shift_weight(&mut self, from_above: i32) -> i32 {
+        std::mem::replace(&mut self.weight, from_above)
+    }
+
+    /// Compute phase: latch `operand` (already mux-selected by the control
+    /// logic) and perform the MAC against the psum arriving from the row
+    /// above. Returns the new psum value (also latched in `self.psum`).
+    #[inline]
+    pub fn mac(&mut self, operand: i32, psum_from_above: i32) -> i32 {
+        self.input = operand;
+        self.psum = operand.wrapping_mul(self.weight).wrapping_add(psum_from_above);
+        self.psum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_shift_chain() {
+        let mut top = Pe::default();
+        let mut bottom = Pe::default();
+        // cycle 1: kernel row 1 enters the top
+        let spill = top.shift_weight(10);
+        bottom.shift_weight(spill);
+        // cycle 2: kernel row 0 enters the top, row 1 moves down
+        let spill = top.shift_weight(20);
+        bottom.shift_weight(spill);
+        assert_eq!(top.weight, 20);
+        assert_eq!(bottom.weight, 10);
+    }
+
+    #[test]
+    fn mac_accumulates_from_above() {
+        let mut pe = Pe { weight: 3, ..Default::default() };
+        assert_eq!(pe.mac(5, 100), 115);
+        assert_eq!(pe.input, 5); // pass register visible to left neighbour
+        assert_eq!(pe.psum, 115);
+    }
+}

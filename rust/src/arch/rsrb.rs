@@ -1,0 +1,159 @@
+//! Reconfigurable Shift Register Buffer (Fig. 4).
+//!
+//! An RSRB carries the row-wise overlap between vertically adjacent sliding
+//! windows: elements retired by the left edge of PE row *i+1* re-emerge one
+//! output row later at PE row *i* (the diagonal movement). Physically it is
+//! `W_IM` shift registers split into sub-buffers (SBs) of lengths `L_sb`; a
+//! multiplexer taps the K-register group matching the *current* ifmap width,
+//! which is what makes the slice agnostic to ifmap size at run time.
+//!
+//! The simulator models the RSRB as a tapped delay line: `push` is the
+//! shift-in from the row above's retiring pass register; `pop`/`pop_group`
+//! read the mux output. Occupancy is tracked so the test suite can assert
+//! the structural capacity bound (`≤ W_IM`) and measure the tap position a
+//! given layer requires.
+
+use std::collections::VecDeque;
+
+/// Sub-buffer segmentation of an RSRB. The paper leaves `L_sb` "generic or
+/// customized"; the default segmentation uses power-of-two SBs so any tap
+/// in `[K, W_IM]` is reachable with ⌈log2(W_IM)⌉ mux inputs.
+#[derive(Debug, Clone)]
+pub struct SubBufferPlan {
+    /// Lengths of the sub-buffers, outermost (shift-in side) first.
+    pub lengths: Vec<usize>,
+}
+
+impl SubBufferPlan {
+    /// Power-of-two plan covering total capacity `w_im`: SB lengths
+    /// 1, 1, 2, 4, 8, ... — every prefix sum in `[1, w_im]` is reachable
+    /// within one SB granule of the target.
+    pub fn pow2(w_im: usize) -> Self {
+        let mut lengths = vec![];
+        let mut total = 0usize;
+        let mut next = 1usize;
+        while total < w_im {
+            let l = next.min(w_im - total);
+            lengths.push(l);
+            total += l;
+            next = (next * 2).max(1);
+        }
+        Self { lengths }
+    }
+
+    /// Number of mux inputs (= number of SB boundaries that can be tapped).
+    pub fn mux_ways(&self) -> usize {
+        self.lengths.len()
+    }
+
+    /// The smallest reachable tap ≥ `want` (prefix-sum granularity).
+    pub fn tap_for(&self, want: usize) -> Option<usize> {
+        let mut sum = 0;
+        for &l in &self.lengths {
+            sum += l;
+            if sum >= want {
+                return Some(sum);
+            }
+        }
+        None
+    }
+}
+
+/// One RSRB instance (delay-line model with occupancy accounting).
+#[derive(Debug, Clone)]
+pub struct Rsrb {
+    fifo: VecDeque<i32>,
+    capacity: usize,
+    max_occupancy: usize,
+    pushes: u64,
+    pops: u64,
+}
+
+impl Rsrb {
+    pub fn new(capacity: usize) -> Self {
+        Self { fifo: VecDeque::with_capacity(capacity), capacity, max_occupancy: 0, pushes: 0, pops: 0 }
+    }
+
+    /// Shift one element in from the PE row above's retiring pass register.
+    #[inline]
+    pub fn push(&mut self, v: i32) {
+        self.fifo.push_back(v);
+        self.pushes += 1;
+        if self.fifo.len() > self.max_occupancy {
+            self.max_occupancy = self.fifo.len();
+        }
+        debug_assert!(
+            self.fifo.len() <= self.capacity,
+            "RSRB overflow: occupancy {} > W_IM {}",
+            self.fifo.len(),
+            self.capacity
+        );
+    }
+
+    /// Mux output: one element for the steady-state rightmost-PE dispatch.
+    #[inline]
+    pub fn pop(&mut self) -> i32 {
+        self.pops += 1;
+        self.fifo.pop_front().expect("RSRB underflow: diagonal dispatch with empty buffer")
+    }
+
+    /// Mux output: the K-wide group dispatched at an output-row boundary
+    /// ("the leftmost K inputs" of the tapped SB, Fig. 4).
+    pub fn pop_group(&mut self, k: usize) -> Vec<i32> {
+        (0..k).map(|_| self.pop()).collect()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.fifo.len()
+    }
+
+    pub fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    pub fn pops(&self) -> u64 {
+        self.pops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_occupancy() {
+        let mut b = Rsrb::new(8);
+        for v in 0..5 {
+            b.push(v);
+        }
+        assert_eq!(b.occupancy(), 5);
+        assert_eq!(b.pop(), 0);
+        assert_eq!(b.pop_group(3), vec![1, 2, 3]);
+        assert_eq!(b.max_occupancy(), 5);
+        assert_eq!(b.pushes(), 5);
+        assert_eq!(b.pops(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn underflow_panics() {
+        Rsrb::new(4).pop();
+    }
+
+    #[test]
+    fn pow2_plan_covers_all_taps() {
+        let plan = SubBufferPlan::pow2(226);
+        assert_eq!(plan.lengths.iter().sum::<usize>(), 226);
+        // A 14-wide VGG layer (padded 16) must have a nearby tap.
+        let tap = plan.tap_for(16).unwrap();
+        assert!(tap >= 16 && tap <= 32, "tap = {tap}");
+        // Full-width tap exists.
+        assert_eq!(plan.tap_for(226), Some(226));
+        // Mux stays small.
+        assert!(plan.mux_ways() <= 10);
+    }
+}

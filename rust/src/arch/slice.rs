@@ -1,0 +1,382 @@
+//! Register-accurate simulation of one TrIM Slice (Fig. 3).
+//!
+//! ## Reconstructed schedule
+//!
+//! The slice computes a 2-D `K×K` convolution at one output per cycle.
+//! PE rows are skewed by one cycle by the vertical psum register chain:
+//! row `i` processes output index `s` at compute cycle `s + i`. Inputs
+//! reach the multiplier of `PE[i][j]` only through the structural paths of
+//! Fig. 3:
+//!
+//! * **vertical / external** (`I_ext`, blue): the bottom row's new element
+//!   each cycle, the K-wide window load of every row at an output-row
+//!   start, and the warm-up feeds of the upper rows during the first
+//!   output row;
+//! * **horizontal** (`I_R`, red): the right neighbour's pass register —
+//!   the column-overlap reuse between horizontally adjacent windows;
+//! * **diagonal** (`I_D`, brown): the RSRB dispatch — elements retired by
+//!   the left edge of row `i+1` re-emerge one output row later at row `i`
+//!   (the row-overlap reuse between vertically adjacent windows).
+//!
+//! Consequences, all *measured* by this model and asserted in tests:
+//!
+//! * every element of the **padded** ifmap is read from outside exactly
+//!   once → the read overhead for a 3×3 convolution over 224×224 with
+//!   pad 1 is 226²/224² − 1 = **1.79 %**, the paper's "negligible 1.8 %
+//!   overhead" (§II);
+//! * the peak external-input bandwidth of one slice is **2K−1 = 5**
+//!   elements in one cycle (warm-up skew), the `P_M·5·B` term of eq. (4);
+//! * each RSRB buffers at most one padded ifmap row (≤ `W_IM`), matching
+//!   the paper's RSRB sizing;
+//! * compute cycles are `H_O·W_O` plus the pipeline fill of
+//!   `(K−1) + ⌈log2 K⌉ + 1`, matching eq. (2)'s per-step term.
+
+use super::adder_tree::AdderTree;
+use super::pe::InputSel;
+use super::rsrb::Rsrb;
+use super::stats::SimStats;
+
+/// Result of one slice pass.
+#[derive(Debug, Clone)]
+pub struct SliceRunResult {
+    /// Row-major `h_o × w_o` ofmap (stride applied).
+    pub output: Vec<i32>,
+    pub h_o: usize,
+    pub w_o: usize,
+    pub stats: SimStats,
+}
+
+/// Register-accurate slice simulator.
+///
+/// PE registers are stored struct-of-arrays (one flat `K×K` vector per
+/// register class) so the per-cycle MAC loop vectorises — the [`super::pe::Pe`]
+/// struct documents the per-PE view; the simulation state is the same
+/// registers laid out for the simulator's hot loop (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct SliceSim {
+    k: usize,
+    w_im: usize,
+    /// Weight registers, row-major `K×K`.
+    pe_weight: Vec<i32>,
+    /// Input/pass registers.
+    pe_input: Vec<i32>,
+    /// Psum output registers.
+    pe_psum: Vec<i32>,
+    rsrbs: Vec<Rsrb>, // K−1 buffers; rsrbs[i] feeds row i, fed by row i+1
+}
+
+/// Zero-padded read-only view of an ifmap.
+struct PaddedView<'a> {
+    data: &'a [i32],
+    h: usize,
+    w: usize,
+    pad: usize,
+}
+
+impl PaddedView<'_> {
+    /// Padded dimensions.
+    fn hp(&self) -> usize {
+        self.h + 2 * self.pad
+    }
+    fn wp(&self) -> usize {
+        self.w + 2 * self.pad
+    }
+    /// Read padded coordinate (y, x) — zero outside the real region.
+    #[inline]
+    fn get(&self, y: usize, x: usize) -> i32 {
+        let yy = y as isize - self.pad as isize;
+        let xx = x as isize - self.pad as isize;
+        if yy < 0 || xx < 0 || yy >= self.h as isize || xx >= self.w as isize {
+            0
+        } else {
+            self.data[yy as usize * self.w + xx as usize]
+        }
+    }
+}
+
+impl SliceSim {
+    /// A slice with native kernel size `k` and RSRB capacity `w_im`
+    /// (the largest padded ifmap width it must handle).
+    pub fn new(k: usize, w_im: usize) -> Self {
+        assert!(k >= 2, "a 1×1 'array' has no triangular movement");
+        Self {
+            k,
+            w_im,
+            pe_weight: vec![0; k * k],
+            pe_input: vec![0; k * k],
+            pe_psum: vec![0; k * k],
+            rsrbs: (0..k - 1).map(|_| Rsrb::new(w_im)).collect(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Weight-load phase (§III-A): kernel rows enter the top row as groups
+    /// of K per cycle — last kernel row first — and shift down; after K
+    /// cycles PE row `i` holds kernel row `i`. Counts K cycles and K
+    /// weight reads per cycle.
+    fn load_weights(&mut self, weights: &[i32], stats: &mut SimStats) {
+        let k = self.k;
+        assert_eq!(weights.len(), k * k);
+        for cycle in 0..k {
+            let incoming_row = k - 1 - cycle; // kernel row entering the top
+            for j in 0..k {
+                let mut carry = weights[incoming_row * k + j];
+                for i in 0..k {
+                    carry = std::mem::replace(&mut self.pe_weight[i * k + j], carry);
+                }
+            }
+            stats.weight_reads += k as u64;
+            stats.cycles += 1;
+        }
+    }
+
+    /// Run one `K×K` convolution over an `h×w` ifmap with the given zero
+    /// padding and stride. Stride > 1 is executed the way §V describes for
+    /// AlexNet: the array streams every stride-1 position and the control
+    /// logic decimates the outputs (the cycle count reflects the full
+    /// stride-1 sweep — TrIM's known inefficiency on strided layers).
+    pub fn run_conv(
+        &mut self,
+        ifmap: &[i32],
+        h: usize,
+        w: usize,
+        weights: &[i32],
+        pad: usize,
+        stride: usize,
+    ) -> SliceRunResult {
+        let k = self.k;
+        let view = PaddedView { data: ifmap, h, w, pad };
+        let (hp, wp) = (view.hp(), view.wp());
+        assert!(hp >= k && wp >= k, "ifmap smaller than kernel");
+        let h_o1 = hp - k + 1; // stride-1 output grid
+        let w_o1 = wp - k + 1;
+        assert!(w_o1 >= k, "output width below K breaks the RSRB schedule");
+        assert!(wp <= self.w_im, "padded ifmap wider than W_IM: reconfigure the slice");
+
+        let mut stats = SimStats::default();
+        // fresh state per pass
+        self.pe_weight.iter_mut().for_each(|v| *v = 0);
+        self.pe_input.iter_mut().for_each(|v| *v = 0);
+        self.pe_psum.iter_mut().for_each(|v| *v = 0);
+        self.rsrbs = (0..k - 1).map(|_| Rsrb::new(self.w_im)).collect();
+
+        self.load_weights(weights, &mut stats);
+
+        let mut tree = AdderTree::new(k);
+        let mut outputs1 = Vec::with_capacity(h_o1 * w_o1);
+        let total_steps = h_o1 * w_o1;
+        let compute_cycles = total_steps + (k - 1); // last row's skew
+        // scratch buffers reused across cycles (perf: the compute loop is
+        // allocation-free — see EXPERIMENTS.md §Perf)
+        let mut row_vals = vec![0i32; k];
+        let mut tree_buf = vec![0i32; k];
+        // per-row (oy, ox) counters: incrementally tracked instead of
+        // div/mod per row per cycle (§Perf: −30 % on the hot loop)
+        let mut row_oy = vec![0usize; k];
+        let mut row_ox = vec![0usize; k];
+
+        for c in 0..compute_cycles {
+            let mut ext_this_cycle = 0u64;
+            // rows updated bottom-up so psum/pass registers read pre-update
+            for i in (0..k).rev() {
+                if c < i || c - i >= total_steps {
+                    continue; // row idle (fill/drain of the skew)
+                }
+                let oy = row_oy[i];
+                let ox = row_ox[i];
+                row_ox[i] += 1;
+                if row_ox[i] == w_o1 {
+                    row_ox[i] = 0;
+                    row_oy[i] += 1;
+                }
+                let y = oy + i; // padded ifmap row this PE row consumes
+
+                // --- input mux selection (control logic of Fig. 6);
+                // I_ext when the bottom row or warm-up, I_D (RSRB) for the
+                // upper rows, I_R (right neighbour) for the pass chain ---
+                let ext_row = i == k - 1 || oy == 0;
+                if ox == 0 {
+                    // output-row start: K-wide window load
+                    if ext_row {
+                        for j in 0..k {
+                            row_vals[j] = view.get(y, j); // I_ext
+                        }
+                        ext_this_cycle += k as u64;
+                    } else {
+                        let popped = self.rsrbs[i].pop_group(k); // I_D bus
+                        debug_assert!(
+                            (0..k).all(|j| popped[j] == view.get(y, j)),
+                            "RSRB replay mismatch at row {i} oy {oy}"
+                        );
+                        row_vals.copy_from_slice(&popped);
+                    }
+                } else {
+                    // steady state: one new element at the right edge,
+                    // everything else shifts from the right neighbour.
+                    row_vals[..k - 1].copy_from_slice(&self.pe_input[i * k + 1..i * k + k]); // I_R
+                    if ext_row {
+                        row_vals[k - 1] = view.get(y, ox + k - 1); // I_ext
+                        ext_this_cycle += 1;
+                    } else {
+                        let popped = self.rsrbs[i].pop(); // I_D
+                        debug_assert_eq!(popped, view.get(y, ox + k - 1), "RSRB replay row {i} ({oy},{ox})");
+                        row_vals[k - 1] = popped;
+                    }
+                }
+                let _ = InputSel::Right; // selections are implied by the schedule
+
+                // --- MAC + pass-register update (vectorised: one MAC per
+                // PE of the row against the row-above psum registers) ---
+                let base = i * k;
+                self.pe_input[base..base + k].copy_from_slice(&row_vals[..k]);
+                if i == 0 {
+                    for j in 0..k {
+                        self.pe_psum[j] = row_vals[j].wrapping_mul(self.pe_weight[j]);
+                    }
+                } else {
+                    for j in 0..k {
+                        self.pe_psum[base + j] = row_vals[j]
+                            .wrapping_mul(self.pe_weight[base + j])
+                            .wrapping_add(self.pe_psum[base - k + j]);
+                    }
+                }
+                stats.macs += k as u64;
+
+                // --- diagonal forwarding: retire to the RSRB below ---
+                if i > 0 {
+                    self.rsrbs[i - 1].push(row_vals[0]);
+                    if ox == w_o1 - 1 {
+                        // end-of-row flush: the last K−1 columns drain out
+                        for v in &row_vals[1..] {
+                            self.rsrbs[i - 1].push(*v);
+                        }
+                    }
+                }
+            }
+
+            // --- adder tree fed by the bottom row's registered psums ---
+            let tree_in = if c >= k - 1 && c - (k - 1) < total_steps {
+                tree_buf.copy_from_slice(&self.pe_psum[(k - 1) * k..]);
+                Some(tree_buf.as_slice())
+            } else {
+                None
+            };
+            if let Some(v) = tree.step(tree_in) {
+                outputs1.push(v as i32);
+            }
+
+            stats.cycles += 1;
+            if ext_this_cycle > stats.peak_ext_inputs_per_cycle {
+                stats.peak_ext_inputs_per_cycle = ext_this_cycle;
+            }
+            stats.ext_input_reads += ext_this_cycle;
+        }
+        for v in tree.drain() {
+            outputs1.push(v as i32);
+        }
+        stats.cycles += tree.latency() as u64; // output-register drain
+        stats.max_rsrb_occupancy =
+            self.rsrbs.iter().map(|b| b.max_occupancy() as u64).max().unwrap_or(0);
+        assert_eq!(outputs1.len(), total_steps);
+
+        // stride decimation (control logic; no extra cycles — the sweep
+        // above already paid the full stride-1 cost)
+        let h_o = (hp - k) / stride + 1;
+        let w_o = (wp - k) / stride + 1;
+        let mut output = Vec::with_capacity(h_o * w_o);
+        for oy in 0..h_o {
+            for ox in 0..w_o {
+                output.push(outputs1[(oy * stride) * w_o1 + ox * stride]);
+            }
+        }
+        stats.output_writes += output.len() as u64;
+        SliceRunResult { output, h_o, w_o, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden::conv2d_i32;
+
+    fn check(h: usize, w: usize, k: usize, pad: usize, stride: usize) -> SimStats {
+        let ifmap: Vec<i32> = (0..h * w).map(|i| (i as i32 * 31 + 7) % 251).collect();
+        let weights: Vec<i32> = (0..k * k).map(|i| (i as i32 % 7) - 3).collect();
+        let golden = conv2d_i32(&ifmap, h, w, &weights, k, stride, pad);
+        let mut slice = SliceSim::new(k, w + 2 * pad);
+        let r = slice.run_conv(&ifmap, h, w, &weights, pad, stride);
+        assert_eq!(r.output, golden, "slice != golden for {h}x{w} k{k} p{pad} s{stride}");
+        r.stats
+    }
+
+    #[test]
+    fn matches_golden_3x3_same() {
+        check(16, 16, 3, 1, 1);
+    }
+
+    #[test]
+    fn matches_golden_3x3_valid() {
+        check(12, 9, 3, 0, 1);
+    }
+
+    #[test]
+    fn matches_golden_5x5() {
+        check(14, 14, 5, 2, 1);
+    }
+
+    #[test]
+    fn matches_golden_2x2() {
+        check(8, 10, 2, 0, 1);
+    }
+
+    #[test]
+    fn matches_golden_stride2() {
+        check(13, 13, 3, 1, 2);
+    }
+
+    #[test]
+    fn matches_golden_stride4_k11_like_alexnet_tile() {
+        check(31, 31, 3, 0, 4);
+    }
+
+    #[test]
+    fn reads_each_padded_element_once() {
+        let s = check(20, 20, 3, 1, 1);
+        assert_eq!(s.ext_input_reads, 22 * 22);
+        // paper's §II claim at full scale is exercised in rust/tests/.
+    }
+
+    #[test]
+    fn peak_bandwidth_is_2k_minus_1() {
+        let s = check(10, 10, 3, 1, 1);
+        assert_eq!(s.peak_ext_inputs_per_cycle, 5); // eq. (4)'s "5" for K=3
+        let s = check(16, 16, 5, 2, 1);
+        assert_eq!(s.peak_ext_inputs_per_cycle, 9); // 2K−1 generalisation
+    }
+
+    #[test]
+    fn cycle_count_matches_eq2_per_step_term() {
+        let (h, k, pad) = (18usize, 3usize, 1usize);
+        let s = check(h, h, k, pad, 1);
+        let h_o = h; // same conv
+        let fill = (k - 1) as u64; // row skew
+        let tree = AdderTree::new(k).latency() as u64;
+        assert_eq!(s.cycles, k as u64 + (h_o * h_o) as u64 + fill + tree);
+    }
+
+    #[test]
+    fn rsrb_occupancy_bounded_by_one_padded_row() {
+        let s = check(24, 24, 3, 1, 1);
+        assert!(s.max_rsrb_occupancy <= 26, "occ = {}", s.max_rsrb_occupancy);
+    }
+
+    #[test]
+    #[should_panic(expected = "W_IM")]
+    fn too_wide_ifmap_panics() {
+        let ifmap = vec![0i32; 40 * 40];
+        SliceSim::new(3, 32).run_conv(&ifmap, 40, 40, &[0; 9], 1, 1);
+    }
+}

@@ -1,0 +1,105 @@
+//! Cycle and memory-access counters collected by the simulators.
+
+
+
+/// Counters accumulated during a simulation run.
+///
+/// "External" counters are DRAM-side (off-chip) in the paper's accounting;
+/// `psum_buf_*` are the engine's on-chip global buffer (the only on-chip
+/// *memory* TrIM uses — RSRBs and PE registers are registers, which the
+/// paper does not count as memory accesses).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimStats {
+    /// Total clock cycles simulated.
+    pub cycles: u64,
+    /// External (off-chip) ifmap element reads, padding included — the
+    /// padded border is exactly the paper's "1.8 % overhead" for 3×3/224².
+    pub ext_input_reads: u64,
+    /// External weight element reads.
+    pub weight_reads: u64,
+    /// Output activations written off-chip.
+    pub output_writes: u64,
+    /// Engine psum-buffer element reads (temporal accumulation).
+    pub psum_buf_reads: u64,
+    /// Engine psum-buffer element writes.
+    pub psum_buf_writes: u64,
+    /// MACs actually performed by PEs (incl. zero-padded tile positions).
+    pub macs: u64,
+    /// Maximum external input elements consumed in any single cycle by one
+    /// slice (the eq. (4) peak: 2K−1, i.e. 5 for K = 3).
+    pub peak_ext_inputs_per_cycle: u64,
+    /// Maximum RSRB occupancy observed (must stay ≤ W_IM).
+    pub max_rsrb_occupancy: u64,
+}
+
+impl SimStats {
+    /// Merge counters from a sub-simulation (peak fields take max).
+    pub fn merge(&mut self, other: &SimStats) {
+        self.cycles = self.cycles.max(other.cycles);
+        self.ext_input_reads += other.ext_input_reads;
+        self.weight_reads += other.weight_reads;
+        self.output_writes += other.output_writes;
+        self.psum_buf_reads += other.psum_buf_reads;
+        self.psum_buf_writes += other.psum_buf_writes;
+        self.macs += other.macs;
+        self.peak_ext_inputs_per_cycle = self.peak_ext_inputs_per_cycle.max(other.peak_ext_inputs_per_cycle);
+        self.max_rsrb_occupancy = self.max_rsrb_occupancy.max(other.max_rsrb_occupancy);
+    }
+
+    /// Merge counters from a sub-simulation that runs *sequentially* after
+    /// the current one (cycles add instead of max).
+    pub fn merge_sequential(&mut self, other: &SimStats) {
+        let cycles = self.cycles + other.cycles;
+        self.merge(other);
+        self.cycles = cycles;
+    }
+
+    /// Total off-chip accesses (reads + writes).
+    pub fn off_chip_accesses(&self) -> u64 {
+        self.ext_input_reads + self.weight_reads + self.output_writes
+    }
+
+    /// Total on-chip memory accesses.
+    pub fn on_chip_accesses(&self) -> u64 {
+        self.psum_buf_reads + self.psum_buf_writes
+    }
+
+    /// Achieved throughput in ops/s at clock `f_clk`.
+    pub fn ops_per_s(&self, f_clk: f64) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        2.0 * self.macs as f64 * f_clk / self.cycles as f64
+    }
+
+    /// Input-read overhead relative to the theoretical minimum of reading
+    /// each (unpadded) ifmap element exactly once.
+    pub fn input_read_overhead(&self, min_reads: u64) -> f64 {
+        self.ext_input_reads as f64 / min_reads as f64 - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_semantics() {
+        let mut a = SimStats { cycles: 10, ext_input_reads: 5, peak_ext_inputs_per_cycle: 3, ..Default::default() };
+        let b = SimStats { cycles: 7, ext_input_reads: 2, peak_ext_inputs_per_cycle: 5, ..Default::default() };
+        let mut seq = a;
+        a.merge(&b);
+        assert_eq!(a.cycles, 10); // parallel: max
+        assert_eq!(a.ext_input_reads, 7);
+        assert_eq!(a.peak_ext_inputs_per_cycle, 5);
+        seq.merge_sequential(&b);
+        assert_eq!(seq.cycles, 17); // sequential: sum
+    }
+
+    #[test]
+    fn overhead_math() {
+        let s = SimStats { ext_input_reads: 51076, ..Default::default() };
+        let ovh = s.input_read_overhead(224 * 224);
+        assert!((ovh - 0.01794).abs() < 1e-4, "padding overhead = {ovh}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Inference backends: the PJRT-artifact pipeline and a mock for testing
+//! the coordination logic in isolation.
+
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// Something that can turn a batch of images into logits.
+///
+/// Not `Send`: PJRT clients are `Rc`-based, so the backend is constructed
+/// *on* the engine thread via the factory passed to
+/// [`super::Coordinator::start_with`].
+pub trait InferenceBackend {
+    /// Flat image length this backend expects.
+    fn input_len(&self) -> usize;
+    /// Run a batch; returns one logits vector per image.
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<Vec<Vec<i32>>>;
+    /// Human-readable identification.
+    fn describe(&self) -> String;
+}
+
+/// The real backend: TrimNet as per-block AOT artifacts, executed
+/// layer-serially across the batch — the same order the TrIM engine
+/// processes a layer for all images of a batch while its weights are
+/// resident (weight-stationary at the artifact level: weights are baked
+/// into each block's HLO).
+pub struct PjrtBackend {
+    rt: Runtime,
+    blocks: Vec<String>,
+    head: String,
+    input_len: usize,
+}
+
+impl PjrtBackend {
+    /// Load from an artifact directory produced by `make artifacts`.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let rt = Runtime::load(dir)?;
+        let blocks: Vec<String> = (0..3).map(|i| format!("trimnet_block{i}")).collect();
+        for b in &blocks {
+            rt.module(b)?;
+        }
+        let input_len = rt.module(&blocks[0])?.spec.inputs[0].elems();
+        rt.module("trimnet_head")?;
+        Ok(Self { rt, blocks, head: "trimnet_head".into(), input_len })
+    }
+
+    /// Access the underlying runtime (for cross-checks).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+        // Layer-serial over the batch: block b for every image, then b+1 —
+        // one weight-resident pass per layer, like the engine's steps.
+        let mut acts: Vec<Vec<i32>> = images.iter().map(|v| v.to_vec()).collect();
+        for b in &self.blocks {
+            let module = self.rt.module(b)?;
+            for a in acts.iter_mut() {
+                *a = module.run_i32(&[a])?;
+            }
+        }
+        let head = self.rt.module(&self.head)?;
+        acts.iter().map(|a| head.run_i32(&[a])).collect()
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt[{}] blocks={}+head", self.rt.platform(), self.blocks.len())
+    }
+}
+
+/// Deterministic mock backend (no PJRT): logits[k] = Σ image · (k+1) mod
+/// prime — enough structure to verify routing, ordering and batching.
+pub struct MockBackend {
+    pub input_len: usize,
+    pub classes: usize,
+    /// Artificial per-image latency, for batching experiments.
+    pub delay: std::time::Duration,
+    /// Number of infer_batch calls observed.
+    pub calls: u64,
+}
+
+impl MockBackend {
+    pub fn new(input_len: usize, classes: usize) -> Self {
+        Self { input_len, classes, delay: std::time::Duration::ZERO, calls: 0 }
+    }
+
+    /// The logits the mock produces for `image` (exposed for assertions).
+    pub fn expected_logits(&self, image: &[i32]) -> Vec<i32> {
+        let s: i64 = image.iter().map(|&v| v as i64).sum();
+        (0..self.classes).map(|k| ((s * (k as i64 + 1)) % 9973) as i32).collect()
+    }
+}
+
+impl InferenceBackend for MockBackend {
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+        self.calls += 1;
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay * images.len() as u32);
+        }
+        Ok(images.iter().map(|img| self.expected_logits(img)).collect())
+    }
+
+    fn describe(&self) -> String {
+        format!("mock[{} classes]", self.classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic_and_order_preserving() {
+        let mut b = MockBackend::new(4, 3);
+        let i1 = vec![1, 2, 3, 4];
+        let i2 = vec![5, 5, 5, 5];
+        let out = b.infer_batch(&[&i1, &i2]).unwrap();
+        assert_eq!(out[0], b.expected_logits(&i1));
+        assert_eq!(out[1], b.expected_logits(&i2));
+        assert_eq!(b.calls, 1);
+    }
+}

@@ -1,0 +1,110 @@
+//! Dynamic batcher: time-or-size batching over the ingress queue.
+//!
+//! Policy (the standard serving trade-off): a batch closes when it reaches
+//! `max_batch` requests OR `max_wait` has elapsed since its first request
+//! arrived — small batches under low load (latency), full batches under
+//! high load (throughput). The TrIM engine analogy: a batch is the set of
+//! ifmaps sharing one weight-resident pass, like the paper's batch-3/4
+//! normalisation reuses loaded weights across images.
+
+use super::request::InferenceRequest;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Pulls requests off the ingress channel and forms batches.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    rx: Receiver<InferenceRequest>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig, rx: Receiver<InferenceRequest>) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Self { cfg, rx }
+    }
+
+    /// Block for the next batch. Returns `None` when the ingress channel
+    /// is closed and drained (shutdown).
+    pub fn next_batch(&self) -> Option<Vec<InferenceRequest>> {
+        // Block indefinitely for the first request of the batch.
+        let first = self.rx.recv().ok()?;
+        let deadline = Instant::now() + self.cfg.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64) -> (InferenceRequest, mpsc::Receiver<super::super::request::InferenceResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (InferenceRequest { id, image: vec![], enqueued_at: Instant::now(), reply: tx }, rx)
+    }
+
+    #[test]
+    fn size_bound_closes_batch() {
+        let (tx, rx) = mpsc::channel();
+        let b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(5) }, rx);
+        let keep: Vec<_> = (0..5)
+            .map(|i| {
+                let (r, rv) = req(i);
+                tx.send(r).unwrap();
+                rv
+            })
+            .collect();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3, "size bound");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.len(), 2, "drained remainder");
+        drop(keep);
+    }
+
+    #[test]
+    fn time_bound_closes_batch() {
+        let (tx, rx) = mpsc::channel();
+        let b = Batcher::new(BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(10) }, rx);
+        let (r, _rv) = req(7);
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not block on max_batch");
+    }
+
+    #[test]
+    fn shutdown_returns_none() {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        let b = Batcher::new(BatcherConfig::default(), rx);
+        drop(tx);
+        assert!(b.next_batch().is_none());
+    }
+}

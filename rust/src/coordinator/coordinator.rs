@@ -1,0 +1,226 @@
+//! The coordinator proper: ingress queue → batcher → engine thread →
+//! responses, with shared metrics.
+
+use super::backend::InferenceBackend;
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::{MetricsSnapshot, ServeMetrics};
+use super::request::{InferenceRequest, InferenceResponse};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+}
+
+/// Handle to a running coordinator. Cloned handles share the ingress
+/// queue; dropping the last handle shuts the engine thread down.
+pub struct Coordinator {
+    tx: mpsc::Sender<InferenceRequest>,
+    metrics: Arc<ServeMetrics>,
+    next_id: Arc<AtomicU64>,
+    input_len: usize,
+    engine: Option<JoinHandle<()>>,
+    backend_desc: String,
+}
+
+impl Coordinator {
+    /// Start the engine thread. The `factory` runs *on* the engine thread
+    /// because PJRT handles are `Rc`-based (not `Send`); startup errors
+    /// (missing artifacts, compile failures) are propagated back here.
+    pub fn start_with<F>(factory: F, cfg: CoordinatorConfig) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        let metrics = Arc::new(ServeMetrics::new());
+        let engine_metrics = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, String)>>();
+        let engine = std::thread::Builder::new()
+            .name("trim-engine".into())
+            .spawn(move || {
+                let backend = match factory() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok((b.input_len(), b.describe())));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                Self::engine_loop(backend, cfg, rx, engine_metrics)
+            })
+            .expect("spawning engine thread");
+        match ready_rx.recv() {
+            Ok(Ok((input_len, backend_desc))) => Ok(Self {
+                tx,
+                metrics,
+                next_id: Arc::new(AtomicU64::new(0)),
+                input_len,
+                engine: Some(engine),
+                backend_desc,
+            }),
+            Ok(Err(e)) => {
+                let _ = engine.join();
+                Err(e)
+            }
+            Err(_) => bail!("engine thread died during startup"),
+        }
+    }
+
+    fn engine_loop(
+        mut backend: Box<dyn InferenceBackend>,
+        cfg: CoordinatorConfig,
+        rx: mpsc::Receiver<InferenceRequest>,
+        metrics: Arc<ServeMetrics>,
+    ) {
+        let batcher = Batcher::new(cfg.batcher, rx);
+        while let Some(batch) = batcher.next_batch() {
+            let images: Vec<&[i32]> = batch.iter().map(|r| r.image.as_slice()).collect();
+            match backend.infer_batch(&images) {
+                Ok(outs) => {
+                    let n = batch.len();
+                    let resps: Vec<(InferenceRequest, InferenceResponse)> = batch
+                        .into_iter()
+                        .zip(outs)
+                        .map(|(req, logits)| {
+                            let resp = InferenceResponse::from_logits(req.id, logits, req.enqueued_at, n);
+                            (req, resp)
+                        })
+                        .collect();
+                    // record before replying so observers see consistent
+                    // counters as soon as their response arrives
+                    let lats: Vec<_> = resps.iter().map(|(_, r)| r.latency).collect();
+                    metrics.record_batch(&lats);
+                    for (req, resp) in resps {
+                        let _ = req.reply.send(resp); // receiver may be gone
+                    }
+                }
+                Err(e) => {
+                    // Report failure as empty logits; a real deployment
+                    // would attach an error enum — the tests only need the
+                    // requests to resolve.
+                    eprintln!("engine batch failed: {e:#}");
+                    let n = batch.len();
+                    for req in batch {
+                        let _ = req.reply.send(InferenceResponse::from_logits(req.id, vec![], req.enqueued_at, n));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Submit one image; returns the channel the response arrives on.
+    pub fn submit(&self, image: Vec<i32>) -> Result<mpsc::Receiver<InferenceResponse>> {
+        if image.len() != self.input_len {
+            bail!("image length {} != expected {}", image.len(), self.input_len);
+        }
+        let (reply, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(InferenceRequest { id, image, enqueued_at: Instant::now(), reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn infer(&self, image: Vec<i32>) -> Result<InferenceResponse> {
+        Ok(self.submit(image)?.recv()?)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    pub fn backend_description(&self) -> &str {
+        &self.backend_desc
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Close the ingress channel, then join the engine thread.
+        let (dead_tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, dead_tx));
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+    use std::time::Duration;
+
+    fn mock_coordinator(max_batch: usize, max_wait_ms: u64) -> (Coordinator, MockBackend) {
+        let probe = MockBackend::new(4, 3);
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(max_wait_ms) },
+        };
+        let c = Coordinator::start_with(|| Ok(Box::new(MockBackend::new(4, 3)) as _), cfg).unwrap();
+        (c, probe)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let (c, probe) = mock_coordinator(4, 1);
+        let img = vec![1, 2, 3, 4];
+        let resp = c.infer(img.clone()).unwrap();
+        assert_eq!(resp.logits, probe.expected_logits(&img));
+        assert_eq!(c.metrics().requests, 1);
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let (c, _) = mock_coordinator(4, 1);
+        assert!(c.submit(vec![1, 2]).is_err());
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_resolve_correctly() {
+        let (c, probe) = mock_coordinator(8, 5);
+        let pending: Vec<_> = (0..50)
+            .map(|i| {
+                let img = vec![i, i + 1, i + 2, i + 3];
+                (img.clone(), c.submit(img).unwrap())
+            })
+            .collect();
+        for (img, rx) in pending {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.logits, probe.expected_logits(&img));
+        }
+        let m = c.metrics();
+        assert_eq!(m.requests, 50);
+        assert!(m.batches <= 50);
+        assert!(m.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn batching_actually_batches_under_load() {
+        let (c, _) = mock_coordinator(16, 50);
+        let pending: Vec<_> = (0..32).map(|i| c.submit(vec![i, 0, 0, 0]).unwrap()).collect();
+        let mut max_batch = 0;
+        for rx in pending {
+            max_batch = max_batch.max(rx.recv().unwrap().batch_size);
+        }
+        assert!(max_batch > 1, "expected batched execution, got singletons");
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let (c, _) = mock_coordinator(4, 1);
+        let _ = c.infer(vec![0, 0, 0, 0]).unwrap();
+        drop(c); // must not hang
+    }
+}

@@ -1,0 +1,95 @@
+//! Serving metrics: counters + latency distribution.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Point-in-time snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_latency: Duration,
+    pub p95_latency: Duration,
+    pub max_latency: Duration,
+    pub throughput_rps: f64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    latencies_us: Vec<u64>,
+    started: Option<std::time::Instant>,
+}
+
+/// Thread-safe metrics accumulator shared between the engine thread and
+/// observers.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    inner: Mutex<Inner>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served batch.
+    pub fn record_batch(&self, latencies: &[Duration]) {
+        let mut g = self.inner.lock().unwrap();
+        g.started.get_or_insert_with(std::time::Instant::now);
+        g.batches += 1;
+        g.requests += latencies.len() as u64;
+        g.latencies_us.extend(latencies.iter().map(|d| d.as_micros() as u64));
+    }
+
+    fn pct(sorted: &[u64], p: f64) -> Duration {
+        if sorted.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+        Duration::from_micros(sorted[idx])
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let mut lats = g.latencies_us.clone();
+        lats.sort_unstable();
+        let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            mean_batch: if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 },
+            p50_latency: Self::pct(&lats, 0.50),
+            p95_latency: Self::pct(&lats, 0.95),
+            max_latency: lats.last().copied().map(Duration::from_micros).unwrap_or_default(),
+            throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_counts() {
+        let m = ServeMetrics::new();
+        m.record_batch(&[Duration::from_micros(100), Duration::from_micros(200)]);
+        m.record_batch(&[Duration::from_micros(300)]);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 1.5).abs() < 1e-9);
+        assert_eq!(s.p50_latency, Duration::from_micros(200));
+        assert_eq!(s.max_latency, Duration::from_micros(300));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = ServeMetrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p95_latency, Duration::ZERO);
+    }
+}

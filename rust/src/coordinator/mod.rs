@@ -1,0 +1,25 @@
+//! Layer-3 coordinator: the runtime system that serves CNN inference over
+//! the compiled TrIM artifacts.
+//!
+//! The paper's contribution is the accelerator; the coordinator plays the
+//! role of its host-side runtime, shaped like a miniature serving router
+//! (vllm-project/router style): an ingress queue, a dynamic batcher, a
+//! single engine thread that owns the PJRT client (executables are not
+//! `Sync`), per-layer dispatch mirroring the engine's layer-serial
+//! schedule, and metrics.
+//!
+//! Threads + channels only — this crate builds offline with no async
+//! runtime; the blocking batcher with a deadline performs the same
+//! time-or-size batching policy a tokio select-loop would.
+
+pub mod backend;
+pub mod batcher;
+pub mod coordinator;
+pub mod metrics;
+pub mod request;
+
+pub use backend::{InferenceBackend, MockBackend, PjrtBackend};
+pub use batcher::{Batcher, BatcherConfig};
+pub use coordinator::{Coordinator, CoordinatorConfig};
+pub use metrics::{MetricsSnapshot, ServeMetrics};
+pub use request::{InferenceRequest, InferenceResponse};

@@ -1,0 +1,61 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A single inference request (one image).
+#[derive(Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Flat `C×H×W` int32 image (uint8 values carried as int32).
+    pub image: Vec<i32>,
+    /// Enqueue timestamp (for latency accounting).
+    pub enqueued_at: Instant,
+    /// Where the response goes.
+    pub reply: mpsc::Sender<InferenceResponse>,
+}
+
+/// The completed inference.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// Classifier logits.
+    pub logits: Vec<i32>,
+    /// argmax of the logits.
+    pub class: usize,
+    /// Queue + execution latency.
+    pub latency: std::time::Duration,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+impl InferenceResponse {
+    pub fn from_logits(id: u64, logits: Vec<i32>, enqueued_at: Instant, batch_size: usize) -> Self {
+        // first maximum wins (deterministic tie-break)
+        let mut class = 0;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[class] {
+                class = i;
+            }
+        }
+        Self { id, logits, class, latency: enqueued_at.elapsed(), batch_size }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_class() {
+        let r = InferenceResponse::from_logits(1, vec![3, 9, -2, 9], Instant::now(), 4);
+        assert_eq!(r.class, 1); // first max wins
+        assert_eq!(r.batch_size, 4);
+    }
+
+    #[test]
+    fn empty_logits_class_zero() {
+        let r = InferenceResponse::from_logits(1, vec![], Instant::now(), 1);
+        assert_eq!(r.class, 0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Direct integer convolutions (the correctness oracle).
+//!
+//! All math is `i32` (the paper's datapath never exceeds 30 bits for
+//! B = 8, K = 3, M ≤ 512 — see `model::quant::DatapathBits`).
+
+/// Minimal row-major `[C][H][W]` tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tensor3 {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<i32>,
+}
+
+impl Tensor3 {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w, data: vec![0; c * h * w] }
+    }
+
+    pub fn from_fn(c: usize, h: usize, w: usize, mut f: impl FnMut(usize, usize, usize) -> i32) -> Self {
+        let mut data = Vec::with_capacity(c * h * w);
+        for ci in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    data.push(f(ci, y, x));
+                }
+            }
+        }
+        Self { c, h, w, data }
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> i32 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: i32) {
+        self.data[(c * self.h + y) * self.w + x] = v;
+    }
+
+    /// Channel slice as a row-major `[H][W]` view.
+    pub fn channel(&self, c: usize) -> &[i32] {
+        &self.data[c * self.h * self.w..(c + 1) * self.h * self.w]
+    }
+}
+
+/// 2-D direct convolution of a single `h×w` channel with a single `k×k`
+/// kernel (row-major slices), zero padding `pad`, stride `stride`.
+/// Returns the row-major `h_o × w_o` output.
+pub fn conv2d_i32(input: &[i32], h: usize, w: usize, weights: &[i32], k: usize, stride: usize, pad: usize) -> Vec<i32> {
+    assert_eq!(input.len(), h * w);
+    assert_eq!(weights.len(), k * k);
+    let h_o = (h + 2 * pad - k) / stride + 1;
+    let w_o = (w + 2 * pad - k) / stride + 1;
+    let mut out = vec![0i32; h_o * w_o];
+    for oy in 0..h_o {
+        for ox in 0..w_o {
+            let mut acc = 0i32;
+            for r in 0..k {
+                let iy = (oy * stride + r) as isize - pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                let row = &input[iy as usize * w..(iy as usize + 1) * w];
+                for c in 0..k {
+                    let ix = (ox * stride + c) as isize - pad as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    acc += row[ix as usize] * weights[r * k + c];
+                }
+            }
+            out[oy * w_o + ox] = acc;
+        }
+    }
+    out
+}
+
+/// 3-D (multi-channel, multi-filter) direct convolution:
+/// `input` is `[M][H][W]`, `weights` is `[N][M][K][K]` (flat, row-major),
+/// output is `[N][H_O][W_O]`.
+pub fn conv3d_i32(
+    input: &Tensor3,
+    weights: &[i32],
+    n: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor3 {
+    let m = input.c;
+    assert_eq!(weights.len(), n * m * k * k);
+    let h_o = (input.h + 2 * pad - k) / stride + 1;
+    let w_o = (input.w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor3::zeros(n, h_o, w_o);
+    for fi in 0..n {
+        for ci in 0..m {
+            let kern = &weights[(fi * m + ci) * k * k..(fi * m + ci + 1) * k * k];
+            let partial = conv2d_i32(input.channel(ci), input.h, input.w, kern, k, stride, pad);
+            for (i, v) in partial.iter().enumerate() {
+                out.data[fi * h_o * w_o + i] += v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel() {
+        // 3×3 kernel with centre 1 and pad 1 reproduces the input.
+        let h = 5;
+        let w = 4;
+        let input: Vec<i32> = (0..h * w).map(|i| i as i32).collect();
+        let mut k = vec![0i32; 9];
+        k[4] = 1;
+        let out = conv2d_i32(&input, h, w, &k, 3, 1, 1);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn hand_computed_2x2() {
+        // input 3×3 = [[1,2,3],[4,5,6],[7,8,9]], kernel 2×2 = [[1,0],[0,1]]
+        let input = vec![1, 2, 3, 4, 5, 6, 7, 8, 9];
+        let k = vec![1, 0, 0, 1];
+        let out = conv2d_i32(&input, 3, 3, &k, 2, 1, 0);
+        assert_eq!(out, vec![1 + 5, 2 + 6, 4 + 8, 5 + 9]);
+    }
+
+    #[test]
+    fn stride_2_downsamples() {
+        let input: Vec<i32> = vec![1; 16];
+        let k = vec![1; 4];
+        let out = conv2d_i32(&input, 4, 4, &k, 2, 2, 0);
+        assert_eq!(out, vec![4; 4]);
+    }
+
+    #[test]
+    fn multichannel_sums_channels() {
+        let input = Tensor3::from_fn(2, 3, 3, |c, y, x| (c as i32 + 1) * (y * 3 + x) as i32);
+        // One filter, both kernels are centre-1 3×3.
+        let mut w = vec![0i32; 2 * 9];
+        w[4] = 1;
+        w[13] = 1;
+        let out = conv3d_i32(&input, &w, 1, 3, 1, 1);
+        // out = ch0 + ch1 = 3 × (y·3+x)
+        for y in 0..3 {
+            for x in 0..3 {
+                assert_eq!(out.get(0, y, x), 3 * (y * 3 + x) as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn padding_zeroes_outside() {
+        let input = vec![1i32; 4];
+        let k = vec![1i32; 9];
+        let out = conv2d_i32(&input, 2, 2, &k, 3, 1, 1);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out, vec![4, 4, 4, 4]); // each window sees all four ones
+    }
+}

@@ -1,0 +1,6 @@
+//! Golden (oracle) models: plain direct convolutions used to validate the
+//! cycle-accurate simulator and the PJRT-executed artifacts bit-exactly.
+
+mod conv;
+
+pub use conv::{conv2d_i32, conv3d_i32, Tensor3};

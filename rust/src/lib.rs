@@ -1,0 +1,37 @@
+//! # TrIM — Triangular Input Movement Systolic Array for CNNs
+//!
+//! Reproduction of *Sestito, Agwa, Prodromakis, "TrIM, Triangular Input
+//! Movement Systolic Array for Convolutional Neural Networks: Architecture
+//! and Hardware Implementation"*, IEEE TCSI 2024.
+//!
+//! The crate is organised as a software twin of the paper's FPGA design:
+//!
+//! * [`arch`] — cycle-accurate structural simulator of the TrIM hardware
+//!   hierarchy (PE → Slice → Core → Engine), faithful to Figs. 3–6 of the
+//!   paper: registers, muxes, shift-register buffers, adder trees and the
+//!   control FSM are stepped cycle by cycle.
+//! * [`golden`] — integer direct-convolution oracle used to validate the
+//!   simulator's numerics.
+//! * [`model`] — CNN workload descriptions (VGG-16, AlexNet), kernel tiling
+//!   for K > 3, and quantisation helpers.
+//! * [`analytics`] — the paper's analytical models: eqs. (1)–(4), the
+//!   memory-access models for TrIM / Eyeriss-RS / WS-GeMM, the energy
+//!   model, the Fig. 7 design-space sweep and the Table III FPGA cost model.
+//! * [`coordinator`] — the L3 runtime contribution: an async inference
+//!   coordinator that batches requests and drives compiled XLA artifacts.
+//! * [`runtime`] — PJRT wrapper (load HLO text → compile → execute); the
+//!   numeric path produced by the Python build layer (`python/compile/`).
+//! * [`report`] — renderers that regenerate every table and figure of the
+//!   paper's evaluation section in the paper's own row format.
+
+pub mod analytics;
+pub mod arch;
+pub mod coordinator;
+pub mod golden;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,203 @@
+//! `trim` — CLI for the TrIM reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artefacts:
+//!
+//! ```text
+//! trim fig1                      Fig. 1  (VGG-16 memory/ops profile)
+//! trim sweep                     Fig. 7  (design-space exploration)
+//! trim table --net vgg16        Table I  (TrIM vs Eyeriss, VGG-16)
+//! trim table --net alexnet      Table II (TrIM vs Eyeriss, AlexNet)
+//! trim table3                   Table III (FPGA comparison + cost model)
+//! trim analyze [--net ...]      §V headline numbers
+//! trim sim [--hw N] [--k K]     cycle-accurate slice run + measured stats
+//! trim validate                 simulator vs golden + paper invariants
+//! trim serve [--artifacts DIR] [--requests N] [--max-batch B]
+//!                               e2e batched inference over PJRT artifacts
+//! ```
+
+use std::collections::HashMap;
+
+use trim_sa::arch::control::plan_layer;
+use trim_sa::arch::{ArchConfig, EngineSim, SliceSim};
+use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, PjrtBackend};
+use trim_sa::golden::{conv3d_i32, Tensor3};
+use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer, Network};
+use trim_sa::report::{render_fig1, render_fig7, render_table1_or_2, render_table3};
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = it.next().cloned().unwrap_or_else(|| "true".into());
+            map.insert(key.to_string(), val);
+        }
+    }
+    map
+}
+
+fn net_by_name(name: &str) -> Network {
+    match name {
+        "alexnet" => alexnet(),
+        _ => vgg16(),
+    }
+}
+
+fn cmd_analyze(net: &Network) {
+    let cfg = ArchConfig::paper_engine();
+    let m = trim_sa::analytics::trim_model::analyze_network(&cfg, net);
+    println!(
+        "TrIM engine: P_N={} cores x P_M={} slices of {}x{} PEs = {} PEs @ {:.0} MHz",
+        cfg.p_n,
+        cfg.p_m,
+        cfg.k,
+        cfg.k,
+        cfg.total_pes(),
+        cfg.f_clk / 1e6
+    );
+    println!("peak throughput      : {:>8.1} GOPs/s", cfg.peak_ops_per_s() / 1e9);
+    println!("{:<10} throughput: {:>8.1} GOPs/s", net.name, m.total_gops);
+    println!("{:<10} inference : {:>8.1} ms", net.name, m.total_time_s * 1e3);
+    println!("mean PE utilisation  : {:>8.2}", m.mean_utilization);
+    println!("off-chip accesses    : {:>8.1} M (batch {})", m.total_off_chip_m, net.batch);
+    println!("on-chip  accesses    : {:>8.2} M (off-chip equivalents)", m.total_on_chip_m);
+    println!("I/O bandwidth (eq.4) : {:>8} bits/cycle", cfg.io_bandwidth_bits());
+    println!("psum buffers (eq.3)  : {:>8.2} Mbit", cfg.psum_buffer_bits() as f64 / 1e6);
+}
+
+fn cmd_sim(flags: &HashMap<String, String>) {
+    let hw: usize = flags.get("hw").and_then(|v| v.parse().ok()).unwrap_or(224);
+    let k: usize = flags.get("k").and_then(|v| v.parse().ok()).unwrap_or(3);
+    let pad: usize = flags.get("pad").and_then(|v| v.parse().ok()).unwrap_or(1);
+    println!("cycle-accurate slice: {hw}x{hw} ifmap, {k}x{k} kernel, pad {pad}");
+    let ifmap: Vec<i32> = (0..hw * hw).map(|i| (i as i32 * 31 + 7) % 251).collect();
+    let weights: Vec<i32> = (0..k * k).map(|i| (i as i32 % 7) - 3).collect();
+    let mut slice = SliceSim::new(k, hw + 2 * pad);
+    let t0 = std::time::Instant::now();
+    let r = slice.run_conv(&ifmap, hw, hw, &weights, pad, 1);
+    let dt = t0.elapsed();
+    let min_reads = (hw * hw) as u64;
+    println!("cycles                : {}", r.stats.cycles);
+    println!(
+        "external input reads  : {} (overhead {:+.2}% vs minimum)",
+        r.stats.ext_input_reads,
+        r.stats.input_read_overhead(min_reads) * 100.0
+    );
+    println!(
+        "peak inputs per cycle : {} (eq. 4 predicts {})",
+        r.stats.peak_ext_inputs_per_cycle,
+        2 * k - 1
+    );
+    println!("max RSRB occupancy    : {}", r.stats.max_rsrb_occupancy);
+    println!("MACs                  : {}", r.stats.macs);
+    println!(
+        "sim wall time         : {:.1} ms ({:.1} Mcycles/s)",
+        dt.as_secs_f64() * 1e3,
+        r.stats.cycles as f64 / dt.as_secs_f64() / 1e6
+    );
+}
+
+fn cmd_validate() {
+    println!("[1/3] slice simulator vs golden convolution");
+    let mut checked = 0;
+    for (h, w, k, pad, stride) in
+        [(16, 16, 3, 1, 1), (12, 9, 3, 0, 1), (14, 14, 5, 2, 1), (13, 13, 3, 1, 2), (31, 31, 3, 0, 4)]
+    {
+        let ifmap: Vec<i32> = (0..h * w).map(|i| (i as i32 * 17 + 5) % 251).collect();
+        let weights: Vec<i32> = (0..k * k).map(|i| (i as i32 % 9) - 4).collect();
+        let golden = trim_sa::golden::conv2d_i32(&ifmap, h, w, &weights, k, stride, pad);
+        let r = SliceSim::new(k, w + 2 * pad).run_conv(&ifmap, h, w, &weights, pad, stride);
+        assert_eq!(r.output, golden, "{h}x{w} k{k}");
+        checked += 1;
+    }
+    println!("      {checked} geometries bit-exact");
+
+    println!("[2/3] engine simulator vs golden (native + tiled kernels)");
+    for (hw, k, m, n, stride, pad) in
+        [(10usize, 3usize, 5usize, 5usize, 1usize, 1usize), (12, 5, 3, 4, 1, 2), (31, 11, 2, 3, 4, 0)]
+    {
+        let layer = ConvLayer::new("v", hw, k, m, n, stride, pad);
+        let input = Tensor3::from_fn(m, hw, hw, |c, y, x| ((c * 31 + y * 7 + x) % 23) as i32 - 11);
+        let weights: Vec<i32> = (0..n * m * k * k).map(|i| ((i as i32 * 37) % 15) - 7).collect();
+        let r = EngineSim::new(ArchConfig::small(3, 2, 2)).run_layer(&layer, &input, &weights);
+        assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, n, k, stride, pad), "k={k}");
+    }
+    println!("      native 3x3, tiled 5x5, strided tiled 11x11 bit-exact");
+
+    println!("[3/3] paper invariants (measured, not assumed)");
+    let hw = 224;
+    let ifmap: Vec<i32> = (0..hw * hw).map(|i| i as i32 % 255).collect();
+    let w9 = [1i32, -2, 3, -4, 5, -6, 7, -8, 9];
+    let r = SliceSim::new(3, 226).run_conv(&ifmap, hw, hw, &w9, 1, 1);
+    let ovh = r.stats.input_read_overhead((hw * hw) as u64) * 100.0;
+    println!("      3x3 over 224x224: input-read overhead {ovh:.2}% (paper: ~1.8%)");
+    println!("      peak inputs/cycle {} (paper eq. 4: 5)", r.stats.peak_ext_inputs_per_cycle);
+    let plan = plan_layer(&ArchConfig::paper_engine(), &vgg16().layers[1]);
+    println!(
+        "      VGG-16 CL2 via eq. 2: {} cycles/step x {} steps",
+        plan.weight_load_cycles + plan.sweep_cycles,
+        plan.steps
+    );
+    println!("validation OK");
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+    let n_req: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let max_batch: usize = flags.get("max-batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch, max_wait: std::time::Duration::from_millis(2) },
+    };
+    let dir2 = dir.clone();
+    let c = Coordinator::start_with(move || Ok(Box::new(PjrtBackend::load(&dir2)?) as _), cfg)?;
+    println!("serving with {} ({} int32 inputs per request)", c.backend_description(), c.input_len());
+
+    let len = c.input_len();
+    let pending: Vec<_> = (0..n_req)
+        .map(|i| {
+            let img: Vec<i32> = (0..len).map(|j| ((i * 7919 + j * 31) % 256) as i32).collect();
+            c.submit(img).unwrap()
+        })
+        .collect();
+    let mut classes = vec![0usize; 10];
+    for rx in pending {
+        let resp = rx.recv()?;
+        if resp.class < classes.len() {
+            classes[resp.class] += 1;
+        }
+    }
+    let m = c.metrics();
+    println!("requests  : {}", m.requests);
+    println!("batches   : {} (mean batch {:.1})", m.batches, m.mean_batch);
+    println!("latency   : p50 {:?}  p95 {:?}  max {:?}", m.p50_latency, m.p95_latency, m.max_latency);
+    println!("throughput: {:.1} req/s", m.throughput_rps);
+    println!("class histogram: {classes:?}");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let cfg = ArchConfig::paper_engine();
+
+    match cmd {
+        "fig1" => print!("{}", render_fig1(&vgg16(), 8)),
+        "sweep" => print!("{}", render_fig7(&cfg, &vgg16())),
+        "table" => {
+            let net = net_by_name(flags.get("net").map(|s| s.as_str()).unwrap_or("vgg16"));
+            print!("{}", render_table1_or_2(&cfg, &net));
+        }
+        "table3" => print!("{}", render_table3(&cfg)),
+        "analyze" => cmd_analyze(&net_by_name(flags.get("net").map(|s| s.as_str()).unwrap_or("vgg16"))),
+        "sim" => cmd_sim(&flags),
+        "validate" => cmd_validate(),
+        "serve" => cmd_serve(&flags)?,
+        _ => {
+            println!("usage: trim <fig1|sweep|table|table3|analyze|sim|validate|serve> [--flags]");
+            println!("see rust/src/main.rs docs for details");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! AlexNet convolutional layers, exactly as listed in Table II of the paper.
+
+use super::{ConvLayer, Network};
+
+/// The 5 convolutional layers of AlexNet (Krizhevsky et al., 2012).
+///
+/// Channel counts follow Table II, which lists the *per-group* input
+/// channels for the grouped layers (CL2: M = 48, CL4/CL5: M = 192), so
+/// eq. (1) with these values yields the true grouped-conv op counts.
+/// Strides/pads are the canonical AlexNet ones (CL1: stride 4 pad 0 →
+/// 55×55; CL2: pad 2 → 27×27; CL3-5: pad 1 → 13×13).
+///
+/// Batch = 4 matches Table II footnote a (the Eyeriss JSSC'17 AlexNet
+/// measurement batch).
+pub fn alexnet() -> Network {
+    let layers = vec![
+        ConvLayer::new("CL1", 227, 11, 3, 96, 4, 0),
+        ConvLayer::new("CL2", 27, 5, 48, 256, 1, 2),
+        ConvLayer::new("CL3", 13, 3, 256, 384, 1, 1),
+        ConvLayer::new("CL4", 13, 3, 192, 384, 1, 1),
+        ConvLayer::new("CL5", 13, 3, 192, 256, 1, 1),
+    ];
+    Network::new("AlexNet", 4, layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_row_parameters() {
+        let net = alexnet();
+        assert_eq!(net.layers[0].k, 11);
+        assert_eq!(net.layers[1].k, 5);
+        assert_eq!(net.layers[0].h_o(), 55);
+        assert_eq!(net.layers[1].h_o(), 27);
+        for l in &net.layers[2..] {
+            assert_eq!(l.h_o(), 13);
+        }
+    }
+
+    #[test]
+    fn total_ops_about_1_33_gops() {
+        // Grouped AlexNet conv ops ≈ 1.33 G (2 ops per MAC); the paper's
+        // 12.9 GOPs/s × 103.1 ms ≈ 1.33 G confirms this accounting.
+        let g = alexnet().total_ops() as f64 / 1e9;
+        assert!((g - 1.33).abs() < 0.05, "AlexNet GOPs = {g}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Convolutional-layer description and derived quantities.
+
+
+
+/// One convolutional layer, in the nomenclature of the paper:
+///
+/// * ifmaps: `M` channels of `H_I × W_I` activations,
+/// * filters: `N` 3-D filters of `M` kernels, each `K × K`,
+/// * ofmaps: `N` channels of `H_O × W_O` activations.
+///
+/// `stride`/`pad` extend the paper's tables (VGG-16 is stride 1 / pad 1
+/// throughout; AlexNet CL1 is stride 4 / pad 0, CL2 pad 2, CL3-5 pad 1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Human-readable name, e.g. `"CL3"`.
+    pub name: String,
+    /// Ifmap height (pre-padding).
+    pub h_i: usize,
+    /// Ifmap width (pre-padding).
+    pub w_i: usize,
+    /// Kernel size (square kernels, as in the paper).
+    pub k: usize,
+    /// Convolution stride.
+    pub stride: usize,
+    /// Zero-padding on each border.
+    pub pad: usize,
+    /// Number of input channels (ifmaps). For grouped convolutions this is
+    /// the *per-group* channel count, which is exactly how Table II lists
+    /// AlexNet (e.g. CL2 has M = 48 because of its two groups).
+    pub m: usize,
+    /// Number of filters (= ofmaps).
+    pub n: usize,
+}
+
+impl ConvLayer {
+    /// Convenience constructor for the common stride-1 / square case.
+    pub fn new(name: &str, h_w: usize, k: usize, m: usize, n: usize, stride: usize, pad: usize) -> Self {
+        Self { name: name.to_string(), h_i: h_w, w_i: h_w, k, stride, pad, m, n }
+    }
+
+    /// Ofmap height: `⌊(H_I + 2·pad − K)/stride⌋ + 1`.
+    pub fn h_o(&self) -> usize {
+        (self.h_i + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Ofmap width.
+    pub fn w_o(&self) -> usize {
+        (self.w_i + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Total operations, paper eq. (1): `2·K²·H_O·W_O·M·N`
+    /// (a MAC counts as two operations).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Multiply-accumulate count: `K²·H_O·W_O·M·N`.
+    pub fn macs(&self) -> u64 {
+        (self.k as u64)
+            * (self.k as u64)
+            * (self.h_o() as u64)
+            * (self.w_o() as u64)
+            * (self.m as u64)
+            * (self.n as u64)
+    }
+
+    /// Ifmap element count (`M·H_I·W_I`, unpadded — what is resident in DRAM).
+    pub fn ifmap_elems(&self) -> u64 {
+        (self.m * self.h_i * self.w_i) as u64
+    }
+
+    /// Weight element count (`N·M·K²`).
+    pub fn weight_elems(&self) -> u64 {
+        (self.n * self.m * self.k * self.k) as u64
+    }
+
+    /// Ofmap element count (`N·H_O·W_O`).
+    pub fn ofmap_elems(&self) -> u64 {
+        (self.n * self.h_o() * self.w_o()) as u64
+    }
+
+    /// Ifmap memory in bytes at `bits`-bit precision.
+    pub fn ifmap_bytes(&self, bits: usize) -> u64 {
+        self.ifmap_elems() * bits as u64 / 8
+    }
+
+    /// Weight memory in bytes at `bits`-bit precision.
+    pub fn weight_bytes(&self, bits: usize) -> u64 {
+        self.weight_elems() * bits as u64 / 8
+    }
+
+    /// Ofmap memory in bytes at `bits`-bit precision.
+    pub fn ofmap_bytes(&self, bits: usize) -> u64 {
+        self.ofmap_elems() * bits as u64 / 8
+    }
+
+    /// Whether the layer's kernel exceeds the native slice size and must be
+    /// decomposed into `K_T × K_T` tiles (Section V of the paper: AlexNet's
+    /// 11×11 and 5×5 kernels are split into 3×3 tiles).
+    pub fn needs_tiling(&self, native_k: usize) -> bool {
+        self.k > native_k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg_cl1_derived_quantities() {
+        // VGG-16 CL1: 224×224, K=3, M=3, N=64, stride 1, pad 1.
+        let l = ConvLayer::new("CL1", 224, 3, 3, 64, 1, 1);
+        assert_eq!(l.h_o(), 224);
+        assert_eq!(l.w_o(), 224);
+        // 2·9·224²·3·64 = 173.4 Mops
+        assert_eq!(l.ops(), 2 * 9 * 224 * 224 * 3 * 64);
+    }
+
+    #[test]
+    fn alexnet_cl1_stride4() {
+        let l = ConvLayer::new("CL1", 227, 11, 3, 96, 4, 0);
+        assert_eq!(l.h_o(), 55);
+        assert_eq!(l.w_o(), 55);
+    }
+
+    #[test]
+    fn alexnet_cl2_padded() {
+        let l = ConvLayer::new("CL2", 27, 5, 48, 256, 1, 2);
+        assert_eq!(l.h_o(), 27);
+    }
+
+    #[test]
+    fn byte_accounting_8bit() {
+        let l = ConvLayer::new("x", 10, 3, 4, 8, 1, 1);
+        assert_eq!(l.ifmap_bytes(8), 4 * 100);
+        assert_eq!(l.weight_bytes(8), 8 * 4 * 9);
+        assert_eq!(l.ofmap_bytes(8), 8 * 100);
+        assert_eq!(l.ifmap_bytes(16), 2 * 4 * 100);
+    }
+
+    #[test]
+    fn tiling_predicate() {
+        assert!(ConvLayer::new("a", 27, 5, 48, 256, 1, 2).needs_tiling(3));
+        assert!(!ConvLayer::new("b", 14, 3, 512, 512, 1, 1).needs_tiling(3));
+    }
+}

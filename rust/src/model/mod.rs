@@ -1,0 +1,18 @@
+//! CNN workload descriptions.
+//!
+//! A [`ConvLayer`] captures everything the TrIM engine (and the analytical
+//! models) need to know about one convolutional layer; a [`Network`] is an
+//! ordered list of layers plus bookkeeping. The two networks the paper
+//! evaluates — VGG-16 (Table I) and AlexNet (Table II) — are provided as
+//! constructors, matching the per-layer parameters printed in the tables.
+
+pub mod alexnet;
+pub mod layer;
+pub mod network;
+pub mod quant;
+pub mod tiling;
+pub mod vgg16;
+
+pub use layer::ConvLayer;
+pub use network::Network;
+pub use tiling::{KernelTiling, TileTask};

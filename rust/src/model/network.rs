@@ -1,0 +1,98 @@
+//! A network = an ordered list of convolutional layers plus metadata.
+
+use super::layer::ConvLayer;
+
+
+/// An ordered CNN workload (convolutional layers only — the paper
+/// accelerates CLs; FC layers are out of scope, as in Section IV).
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// e.g. `"VGG-16"`.
+    pub name: String,
+    /// The batch size the paper normalises this network's numbers to
+    /// (3 for VGG-16, 4 for AlexNet — the batches used by the Eyeriss
+    /// JSSC'17 measurements the paper compares against).
+    pub batch: usize,
+    /// Convolutional layers in execution order.
+    pub layers: Vec<ConvLayer>,
+}
+
+impl Network {
+    pub fn new(name: &str, batch: usize, layers: Vec<ConvLayer>) -> Self {
+        Self { name: name.to_string(), batch, layers }
+    }
+
+    /// Total operations over all layers for ONE inference (paper eq. (1)).
+    pub fn total_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.ops()).sum()
+    }
+
+    /// Total MACs over all layers for one inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total ifmap bytes at `bits` precision (sum over layers; this is the
+    /// "ifmaps memory" series of Fig. 1).
+    pub fn total_ifmap_bytes(&self, bits: usize) -> u64 {
+        self.layers.iter().map(|l| l.ifmap_bytes(bits)).sum()
+    }
+
+    /// Total weight bytes at `bits` precision (the "weights memory" series
+    /// of Fig. 1).
+    pub fn total_weight_bytes(&self, bits: usize) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes(bits)).sum()
+    }
+
+    /// Largest ofmap (elements) across layers — sizes the psum buffers
+    /// (`H_OM × W_OM` in the paper).
+    pub fn max_ofmap_hw(&self) -> (usize, usize) {
+        self.layers
+            .iter()
+            .map(|l| (l.h_o(), l.w_o()))
+            .max_by_key(|(h, w)| h * w)
+            .unwrap_or((0, 0))
+    }
+
+    /// Largest ifmap width across layers — sizes the RSRBs (`W_IM`).
+    pub fn max_ifmap_width(&self) -> usize {
+        self.layers.iter().map(|l| l.w_i + 2 * l.pad).max().unwrap_or(0)
+    }
+
+    /// Look a layer up by name.
+    pub fn layer(&self, name: &str) -> Option<&ConvLayer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::model::{alexnet, vgg16};
+
+    #[test]
+    fn vgg16_totals_match_paper_intro() {
+        let net = vgg16::vgg16();
+        // §I: "~30.7 billion operations" (conv layers, 224×224 RGB).
+        let gops = net.total_ops() as f64 / 1e9;
+        assert!((gops - 30.7).abs() < 0.3, "VGG-16 total GOPs = {gops}");
+        // §I: "~22.7 MB of memory ... 8-bit ifmaps and weights".
+        // Fig. 1 counts ifmaps + weights across CLs (+ FC weights are
+        // excluded here; conv-only memory is ~ 9.4 MB ifmaps + 14.7 MB
+        // weights ≈ 24 MB; the paper's 22.7 MB counts ifmaps once).
+        let mb = (net.total_ifmap_bytes(8) + net.total_weight_bytes(8)) as f64 / 1e6;
+        assert!(mb > 20.0 && mb < 26.0, "VGG-16 conv memory = {mb} MB");
+    }
+
+    #[test]
+    fn vgg16_has_13_cls_alexnet_5() {
+        assert_eq!(vgg16::vgg16().layers.len(), 13);
+        assert_eq!(alexnet::alexnet().layers.len(), 5);
+    }
+
+    #[test]
+    fn max_sizes_for_buffers() {
+        let net = vgg16::vgg16();
+        assert_eq!(net.max_ofmap_hw(), (224, 224));
+        assert_eq!(net.max_ifmap_width(), 226); // padded first layer
+    }
+}

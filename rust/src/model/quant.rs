@@ -1,0 +1,112 @@
+//! Quantisation helpers matching the paper's data representation.
+//!
+//! Section III-A: *"the PEs support B-bit unsigned integer inputs and B-bit
+//! signed integer weights"*; psums leaving the bottom PE row are
+//! `2B + K`-bit signed, the slice output is `2B + K + ⌈log2 K⌉`-bit, and
+//! ofmaps are re-quantised to B-bit before going off-chip (eq. (4) counts
+//! B-bit output activations).
+
+
+
+/// Bit-width bookkeeping for the datapath of a slice/core/engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DatapathBits {
+    /// Operand precision B (8 in the paper's implementation).
+    pub b: usize,
+    /// Kernel size K.
+    pub k: usize,
+}
+
+impl DatapathBits {
+    pub fn new(b: usize, k: usize) -> Self {
+        Self { b, k }
+    }
+
+    /// Psum width at the bottom of the PE array: `2B + K`.
+    pub fn psum_bits(&self) -> usize {
+        2 * self.b + self.k
+    }
+
+    /// Slice output width: `2B + K + ⌈log2 K⌉`.
+    pub fn slice_out_bits(&self) -> usize {
+        self.psum_bits() + (self.k as f64).log2().ceil() as usize
+    }
+
+    /// Core output width for `p_m` parallel slices:
+    /// `2B + K + ⌈log2 K⌉ + ⌈log2 P_M⌉`.
+    pub fn core_out_bits(&self, p_m: usize) -> usize {
+        self.slice_out_bits() + (p_m as f64).log2().ceil() as usize
+    }
+
+    /// Engine accumulator width for `m` total input channels:
+    /// `2B + K + ⌈log2 K⌉ + ⌈log2 M⌉` (the psum-buffer activation width).
+    pub fn engine_acc_bits(&self, m: usize) -> usize {
+        self.slice_out_bits() + (m as f64).log2().ceil() as usize
+    }
+}
+
+/// Power-of-two output re-quantiser: `y = clamp(round(x / 2^shift), 0, 2^B-1)`.
+///
+/// The paper does not specify its re-quantisation scheme (outputs are
+/// "B-bit quantized output activations"); a power-of-two scale with
+/// round-half-up and unsigned clamping is the standard FPGA choice (a
+/// barrel shift, no DSP) and is what the Python model layer replicates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Requant {
+    pub shift: u32,
+    pub bits: usize,
+}
+
+impl Requant {
+    pub fn new(shift: u32, bits: usize) -> Self {
+        assert!(bits <= 16);
+        Self { shift, bits }
+    }
+
+    /// Re-quantise one accumulator value.
+    pub fn apply(&self, x: i64) -> u32 {
+        let half = if self.shift == 0 { 0 } else { 1i64 << (self.shift - 1) };
+        let y = (x + half) >> self.shift;
+        let max = (1i64 << self.bits) - 1;
+        y.clamp(0, max) as u32
+    }
+
+    /// Re-quantise a slice of accumulators.
+    pub fn apply_all(&self, xs: &[i64]) -> Vec<u32> {
+        xs.iter().map(|&x| self.apply(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_bitwidths_k3_b8() {
+        let d = DatapathBits::new(8, 3);
+        assert_eq!(d.psum_bits(), 19); // 2·8 + 3
+        assert_eq!(d.slice_out_bits(), 21); // + ⌈log2 3⌉ = 2
+        assert_eq!(d.core_out_bits(24), 26); // + ⌈log2 24⌉ = 5
+        // engine accumulator for M = 512: + ⌈log2 512⌉ = 9 → 30 ≤ 32-bit
+        assert_eq!(d.engine_acc_bits(512), 30);
+        assert!(d.engine_acc_bits(512) <= 32, "32-bit psum buffers suffice");
+    }
+
+    #[test]
+    fn requant_rounds_and_clamps() {
+        let q = Requant::new(4, 8);
+        assert_eq!(q.apply(0), 0);
+        assert_eq!(q.apply(16), 1);
+        assert_eq!(q.apply(24), 2); // round half up: 24/16 = 1.5 → 2
+        assert_eq!(q.apply(23), 1);
+        assert_eq!(q.apply(-100), 0); // unsigned clamp
+        assert_eq!(q.apply(1 << 30), 255);
+    }
+
+    #[test]
+    fn requant_zero_shift_is_identity_with_clamp() {
+        let q = Requant::new(0, 8);
+        assert_eq!(q.apply(17), 17);
+        assert_eq!(q.apply(300), 255);
+    }
+}

@@ -1,0 +1,158 @@
+//! Large-kernel decomposition into native-size tiles.
+//!
+//! Section V of the paper: *"To cope with the different kernel sizes
+//! required by AlexNet, the TrIM architecture splits large kernels in 3×3
+//! tiles. For example, P_M 5×5 kernels are split in 4 groups of P_M tiles
+//! each. Each group is processed by a TrIM Core and the psums are
+//! accumulated at the top level."*
+//!
+//! A `K×K` kernel with `K > K_nat` is split into `⌈K/K_nat⌉²` tiles of
+//! `K_nat × K_nat` (zero-padded at the right/bottom edges). Each tile is an
+//! ordinary `K_nat×K_nat` convolution applied to the ifmap *shifted* by the
+//! tile's origin; summing all tile outputs reproduces the full convolution
+//! exactly (verified by property tests against the golden model).
+
+use super::ConvLayer;
+
+
+/// One tile of a decomposed kernel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileTask {
+    /// Tile grid coordinates (`0 ≤ tr,tc < grid`).
+    pub tr: usize,
+    pub tc: usize,
+    /// Offset of the tile's (0,0) weight inside the full kernel.
+    pub row0: usize,
+    pub col0: usize,
+    /// Number of *real* (non-padding) weight rows/cols in this tile.
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Decomposition of a `K×K` kernel into `grid×grid` tiles of `k_nat×k_nat`.
+#[derive(Debug, Clone)]
+pub struct KernelTiling {
+    /// Full kernel size.
+    pub k: usize,
+    /// Native slice kernel size (3 for the paper's engine).
+    pub k_nat: usize,
+    /// Tiles per side: `⌈K / K_nat⌉`.
+    pub grid: usize,
+    /// All tiles in row-major order.
+    pub tiles: Vec<TileTask>,
+}
+
+impl KernelTiling {
+    /// Build the tiling for kernel size `k` on a native `k_nat` slice.
+    /// For `k ≤ k_nat` the result is a single identity tile.
+    pub fn new(k: usize, k_nat: usize) -> Self {
+        assert!(k >= 1 && k_nat >= 1);
+        let grid = k.div_ceil(k_nat);
+        let mut tiles = Vec::with_capacity(grid * grid);
+        for tr in 0..grid {
+            for tc in 0..grid {
+                let row0 = tr * k_nat;
+                let col0 = tc * k_nat;
+                tiles.push(TileTask {
+                    tr,
+                    tc,
+                    row0,
+                    col0,
+                    rows: k_nat.min(k - row0),
+                    cols: k_nat.min(k - col0),
+                });
+            }
+        }
+        Self { k, k_nat, grid, tiles }
+    }
+
+    /// Number of tiles (`T` in the scheduling model).
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Fraction of PE slots in the tiled schedule that hold real weights
+    /// (e.g. 5×5 → 25/36 ≈ 0.694; 11×11 → 121/144 ≈ 0.84). The remainder
+    /// compute on zero-padded weights.
+    pub fn fill_ratio(&self) -> f64 {
+        (self.k * self.k) as f64 / (self.num_tiles() * self.k_nat * self.k_nat) as f64
+    }
+
+    /// Extract the zero-padded `k_nat × k_nat` sub-kernel for `tile` from a
+    /// row-major `k×k` weight slice.
+    pub fn extract_tile_weights(&self, full: &[i32], tile: &TileTask) -> Vec<i32> {
+        assert_eq!(full.len(), self.k * self.k);
+        let mut out = vec![0i32; self.k_nat * self.k_nat];
+        for r in 0..tile.rows {
+            for c in 0..tile.cols {
+                out[r * self.k_nat + c] = full[(tile.row0 + r) * self.k + (tile.col0 + c)];
+            }
+        }
+        out
+    }
+}
+
+/// Tiling for a whole layer on a native-`k_nat` engine: identity when the
+/// kernel already fits.
+pub fn layer_tiling(layer: &ConvLayer, k_nat: usize) -> KernelTiling {
+    KernelTiling::new(layer.k, k_nat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden::conv2d_i32;
+
+    #[test]
+    fn grid_counts_match_paper() {
+        assert_eq!(KernelTiling::new(5, 3).num_tiles(), 4); // "4 groups"
+        assert_eq!(KernelTiling::new(11, 3).num_tiles(), 16);
+        assert_eq!(KernelTiling::new(3, 3).num_tiles(), 1);
+        assert_eq!(KernelTiling::new(7, 3).num_tiles(), 9);
+    }
+
+    #[test]
+    fn fill_ratios() {
+        assert!((KernelTiling::new(5, 3).fill_ratio() - 25.0 / 36.0).abs() < 1e-12);
+        assert!((KernelTiling::new(11, 3).fill_ratio() - 121.0 / 144.0).abs() < 1e-12);
+    }
+
+    /// Sum of shifted tile convolutions == full convolution (stride 1).
+    #[test]
+    fn tile_decomposition_is_exact() {
+        let (h, w, k, k_nat) = (12usize, 13usize, 5usize, 3usize);
+        let input: Vec<i32> = (0..h * w).map(|i| (i as i32 * 7 + 3) % 17).collect();
+        let weights: Vec<i32> = (0..k * k).map(|i| (i as i32 % 5) - 2).collect();
+
+        let full = conv2d_i32(&input, h, w, &weights, k, 1, 0);
+        let h_o = h - k + 1;
+        let w_o = w - k + 1;
+
+        let tiling = KernelTiling::new(k, k_nat);
+        let mut acc = vec![0i32; h_o * w_o];
+        for tile in &tiling.tiles {
+            let tw = tiling.extract_tile_weights(&weights, tile);
+            // The tile convolves the ifmap shifted by (row0, col0); output
+            // positions that exist for the full kernel always exist for the
+            // shifted tile because row0 + k_nat ≤ grid·k_nat and the input
+            // window of the full kernel covers them — pad the input
+            // logically by reading within the valid region.
+            for oy in 0..h_o {
+                for ox in 0..w_o {
+                    let mut s = 0i32;
+                    for r in 0..k_nat {
+                        for c in 0..k_nat {
+                            let iy = oy + tile.row0 + r;
+                            let ix = ox + tile.col0 + c;
+                            if iy < h && ix < w {
+                                s += input[iy * w + ix] * tw[r * k_nat + c];
+                            }
+                        }
+                    }
+                    acc[oy * w_o + ox] += s;
+                }
+            }
+        }
+        assert_eq!(acc, full);
+    }
+}

@@ -1,0 +1,55 @@
+//! VGG-16 convolutional layers, exactly as listed in Table I of the paper.
+
+use super::{ConvLayer, Network};
+
+/// The 13 convolutional layers of VGG-16 (Simonyan & Zisserman, 2014) on
+/// 224×224 RGB inputs: all 3×3 kernels, stride 1, pad 1 (ofmap-preserving),
+/// with the channel progression 3→64→128→256→512.
+///
+/// Batch = 3 matches the normalisation of Table I (footnote a), inherited
+/// from the Eyeriss JSSC'17 VGG-16 measurement batch.
+pub fn vgg16() -> Network {
+    let spec: &[(usize, usize, usize)] = &[
+        // (H_I = W_I, M, N) — K = 3, stride 1, pad 1 throughout.
+        (224, 3, 64),    // CL1
+        (224, 64, 64),   // CL2
+        (112, 64, 128),  // CL3
+        (112, 128, 128), // CL4
+        (56, 128, 256),  // CL5
+        (56, 256, 256),  // CL6
+        (56, 256, 256),  // CL7
+        (28, 256, 512),  // CL8
+        (28, 512, 512),  // CL9
+        (28, 512, 512),  // CL10
+        (14, 512, 512),  // CL11
+        (14, 512, 512),  // CL12
+        (14, 512, 512),  // CL13
+    ];
+    let layers = spec
+        .iter()
+        .enumerate()
+        .map(|(i, &(hw, m, n))| ConvLayer::new(&format!("CL{}", i + 1), hw, 3, m, n, 1, 1))
+        .collect();
+    Network::new("VGG-16", 3, layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_row_parameters() {
+        let net = vgg16();
+        let l5 = net.layer("CL5").unwrap();
+        assert_eq!((l5.h_i, l5.m, l5.n), (56, 128, 256));
+        let l13 = net.layer("CL13").unwrap();
+        assert_eq!((l13.h_i, l13.m, l13.n), (14, 512, 512));
+    }
+
+    #[test]
+    fn all_layers_preserve_spatial_size() {
+        for l in &vgg16().layers {
+            assert_eq!(l.h_o(), l.h_i, "{}", l.name);
+        }
+    }
+}

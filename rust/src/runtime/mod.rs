@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`), compile them on the CPU PJRT client and
+//! execute them from the coordinator's hot path. Python is never involved
+//! at run time.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::{LoadedModule, Runtime};

@@ -1,0 +1,98 @@
+//! Integration: the coordinator under concurrent load (mock backend —
+//! PJRT-backed serving is covered by tests/runtime_artifacts.rs and the
+//! serve_cnn example).
+
+use std::sync::Arc;
+use std::time::Duration;
+use trim_sa::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend, MockBackend,
+};
+
+fn start(max_batch: usize, wait_ms: u64, delay_us: u64) -> Coordinator {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(wait_ms) },
+    };
+    Coordinator::start_with(
+        move || {
+            let mut b = MockBackend::new(16, 10);
+            b.delay = Duration::from_micros(delay_us);
+            Ok(Box::new(b) as Box<dyn InferenceBackend>)
+        },
+        cfg,
+    )
+    .unwrap()
+}
+
+#[test]
+fn concurrent_submitters_get_their_own_answers() {
+    let c = Arc::new(start(8, 2, 0));
+    let probe = MockBackend::new(16, 10);
+    let mut handles = vec![];
+    for t in 0..8u64 {
+        let c = c.clone();
+        let expected = probe.expected_logits(&vec![t as i32; 16]);
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..25 {
+                let resp = c.infer(vec![t as i32; 16]).unwrap();
+                assert_eq!(resp.logits, expected, "thread {t} got someone else's logits");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(c.metrics().requests, 200);
+}
+
+#[test]
+fn throughput_improves_with_batching_when_backend_amortises() {
+    // The mock charges per-image latency, so batching can't help latency —
+    // but batch formation must not *hurt* throughput by more than the
+    // wait bound, and batches must actually form under load.
+    let c = start(16, 20, 100);
+    let pending: Vec<_> = (0..64).map(|i| c.submit(vec![i; 16]).unwrap()).collect();
+    let mut seen_batched = false;
+    for rx in pending {
+        if rx.recv().unwrap().batch_size > 1 {
+            seen_batched = true;
+        }
+    }
+    assert!(seen_batched);
+    let m = c.metrics();
+    assert!(m.batches < 64, "batches = {}", m.batches);
+    assert!(m.mean_batch > 1.0);
+}
+
+#[test]
+fn latency_percentiles_are_ordered() {
+    let c = start(4, 1, 50);
+    let pending: Vec<_> = (0..40).map(|i| c.submit(vec![i; 16]).unwrap()).collect();
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    let m = c.metrics();
+    assert!(m.p50_latency <= m.p95_latency);
+    assert!(m.p95_latency <= m.max_latency);
+    assert!(m.p50_latency > Duration::ZERO);
+}
+
+#[test]
+fn startup_failure_is_propagated() {
+    let r = Coordinator::start_with(
+        || Err(anyhow::anyhow!("no artifacts here")),
+        CoordinatorConfig::default(),
+    );
+    assert!(r.is_err());
+    assert!(format!("{:#}", r.err().unwrap()).contains("no artifacts"));
+}
+
+#[test]
+fn responses_preserve_request_identity() {
+    let c = start(8, 5, 0);
+    let rxs: Vec<_> = (0..30).map(|i| c.submit(vec![i; 16]).unwrap()).collect();
+    let probe = MockBackend::new(16, 10);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits, probe.expected_logits(&vec![i as i32; 16]));
+    }
+}

@@ -1,0 +1,104 @@
+//! Integration over the real PJRT runtime + AOT artifacts.
+//!
+//! These tests need `make artifacts` to have run (the artifacts directory
+//! is a build product, not checked in). They SKIP with a notice when it is
+//! absent so `cargo test` stays green on a fresh clone; CI/`make test`
+//! always builds artifacts first.
+
+use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, PjrtBackend};
+use trim_sa::golden::{conv3d_i32, Tensor3};
+use trim_sa::runtime::{Manifest, Runtime};
+use trim_sa::util::SplitMix64;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_covers_serving_set() {
+    let Some(dir) = artifact_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for name in ["trimnet_block0", "trimnet_block1", "trimnet_block2", "trimnet_head", "trimnet_full", "conv_unit"] {
+        let a = m.get(name).unwrap();
+        assert!(a.file.exists(), "{name} file missing");
+    }
+}
+
+/// The PJRT-executed conv artifact is bit-exact against the Rust golden
+/// model — the cross-language, cross-stack numeric contract: Pallas
+/// kernel (python) == HLO artifact (XLA) == golden conv (rust).
+#[test]
+fn conv_unit_matches_golden_across_the_stack() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let conv = rt.module("conv_unit").unwrap();
+    let mut rng = SplitMix64::new(2024);
+    for round in 0..5 {
+        let x = rng.vec_i32(2 * 8 * 8, 0, 256);
+        let w = rng.vec_i32(3 * 2 * 3 * 3, -8, 8);
+        let got = conv.run_i32(&[&x, &w]).unwrap();
+
+        let input = Tensor3 { c: 2, h: 8, w: 8, data: x };
+        let golden = conv3d_i32(&input, &w, 3, 3, 1, 1);
+        assert_eq!(got, golden.data, "round {round}");
+    }
+}
+
+/// Blockwise pipeline == fused forward (the serving-path identity).
+#[test]
+fn blockwise_equals_fused_artifact() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let mut rng = SplitMix64::new(7);
+    let image = rng.vec_i32(3 * 32 * 32, 0, 256);
+    let mut act = image.clone();
+    for b in 0..3 {
+        act = rt.module(&format!("trimnet_block{b}")).unwrap().run_i32(&[&act]).unwrap();
+    }
+    let blockwise = rt.module("trimnet_head").unwrap().run_i32(&[&act]).unwrap();
+    let fused = rt.module("trimnet_full").unwrap().run_i32(&[&image]).unwrap();
+    assert_eq!(blockwise, fused);
+    assert_eq!(fused.len(), 10);
+}
+
+/// Full e2e: coordinator + PJRT backend serves a batch correctly.
+#[test]
+fn coordinator_serves_pjrt_backend() {
+    let Some(dir) = artifact_dir() else { return };
+    // expected logits via the raw runtime
+    let rt = Runtime::load(&dir).unwrap();
+    let mut rng = SplitMix64::new(99);
+    let images: Vec<Vec<i32>> = (0..6).map(|_| rng.vec_i32(3 * 32 * 32, 0, 256)).collect();
+    let expected: Vec<Vec<i32>> =
+        images.iter().map(|img| rt.module("trimnet_full").unwrap().run_i32(&[img]).unwrap()).collect();
+
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(5) },
+    };
+    let d = dir.clone();
+    let c = Coordinator::start_with(move || Ok(Box::new(PjrtBackend::load(&d)?) as _), cfg).unwrap();
+    let rxs: Vec<_> = images.iter().map(|img| c.submit(img.clone()).unwrap()).collect();
+    for (rx, exp) in rxs.into_iter().zip(&expected) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(&resp.logits, exp);
+    }
+    assert_eq!(c.metrics().requests, 6);
+}
+
+/// Bad inputs are rejected with errors, not UB or silent wrong answers.
+#[test]
+fn runtime_validates_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let conv = rt.module("conv_unit").unwrap();
+    assert!(conv.run_i32(&[&[0i32; 3]]).is_err(), "wrong arity");
+    let x = vec![0i32; 2 * 8 * 8];
+    assert!(conv.run_i32(&[&x, &[0i32; 5]]).is_err(), "wrong shape");
+    assert!(rt.module("nonexistent").is_err());
+}
