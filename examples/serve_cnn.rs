@@ -4,32 +4,44 @@
 //!   Pallas kernel (L1) → JAX block (L2) → HLO text artifact →
 //!   Rust PJRT runtime → coordinator (L3) with dynamic batching.
 //!
-//! Requires `make artifacts` first. Reports latency/throughput and
-//! cross-checks the block pipeline against the fused whole-network
-//! artifact (numerical identity of the serving path).
+//! With `make artifacts` + the `pjrt` cargo feature this exercises the
+//! compiled-artifact path and cross-checks the block pipeline against the
+//! fused whole-network artifact. Without them (the offline default) it
+//! prints a notice and serves the same workload from the simulated TrIM
+//! engine farm instead — the example always runs.
 //!
 //! Run with: `cargo run --release --example serve_cnn [-- <artifact-dir>]`
 
 use std::time::Duration;
-use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, PjrtBackend};
+use trim_sa::coordinator::{make_backend, BackendKind, BatcherConfig, Coordinator, CoordinatorConfig};
 use trim_sa::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let sim_engines = 4;
 
     // --- cross-check: block pipeline == fused forward, natively ---------
-    let rt = Runtime::load(&dir)?;
-    println!("PJRT platform: {} | modules: {:?}", rt.platform(), rt.module_names());
-    let input_len = rt.module("trimnet_block0")?.spec.inputs[0].elems();
-    let image: Vec<i32> = (0..input_len).map(|j| ((j * 31 + 7) % 256) as i32).collect();
-    let mut act = image.clone();
-    for b in 0..3 {
-        act = rt.module(&format!("trimnet_block{b}"))?.run_i32(&[&act])?;
+    // Only possible when the PJRT runtime and artifacts are present; the
+    // serving section below works either way.
+    match Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {} | modules: {:?}", rt.platform(), rt.module_names());
+            let input_len = rt.module("trimnet_block0")?.spec.inputs[0].elems();
+            let image: Vec<i32> = (0..input_len).map(|j| ((j * 31 + 7) % 256) as i32).collect();
+            let mut act = image.clone();
+            for b in 0..3 {
+                act = rt.module(&format!("trimnet_block{b}"))?.run_i32(&[&act])?;
+            }
+            let blockwise = rt.module("trimnet_head")?.run_i32(&[&act])?;
+            let fused = rt.module("trimnet_full")?.run_i32(&[&image])?;
+            assert_eq!(blockwise, fused, "serving pipeline must equal the fused artifact");
+            println!("blockwise pipeline == fused forward artifact (logits {blockwise:?})");
+        }
+        Err(e) => {
+            println!("notice: PJRT artifacts unavailable ({e:#})");
+            println!("notice: skipping the artifact cross-check; serving falls back to the sim engine farm");
+        }
     }
-    let blockwise = rt.module("trimnet_head")?.run_i32(&[&act])?;
-    let fused = rt.module("trimnet_full")?.run_i32(&[&image])?;
-    assert_eq!(blockwise, fused, "serving pipeline must equal the fused artifact");
-    println!("blockwise pipeline == fused forward artifact (logits {blockwise:?})");
 
     // --- serve a workload through the coordinator -----------------------
     let n_requests = 96;
@@ -38,7 +50,11 @@ fn main() -> anyhow::Result<()> {
             batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
         };
         let d = dir.clone();
-        let c = Coordinator::start_with(move || Ok(Box::new(PjrtBackend::load(&d)?) as _), cfg)?;
+        let c = Coordinator::start_with(move || make_backend(BackendKind::Auto, &d, sim_engines), cfg)?;
+        if max_batch == 1 {
+            println!("backend: {}", c.backend_description());
+        }
+        let input_len = c.input_len();
         let t0 = std::time::Instant::now();
         let pending: Vec<_> = (0..n_requests)
             .map(|i| {

@@ -19,7 +19,15 @@ fn main() -> anyhow::Result<()> {
             batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
         };
         let d = dir.clone();
-        let c = Coordinator::start_with(move || Ok(Box::new(PjrtBackend::load(&d)?) as _), cfg)?;
+        // Graceful skip when artifacts exist but PJRT support is compiled
+        // out (the offline default — see Cargo.toml's `pjrt` feature).
+        let c = match Coordinator::start_with(move || Ok(Box::new(PjrtBackend::load(&d)?) as _), cfg) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("SKIP: PJRT backend unavailable ({e:#}) — build with --features pjrt");
+                return Ok(());
+            }
+        };
         let len = c.input_len();
         let t0 = Instant::now();
         let rxs: Vec<_> = (0..n_req)

@@ -38,6 +38,43 @@ impl EngineSim {
         &self.cfg
     }
 
+    /// Per-group entry point for the farm scheduler ([`crate::scheduler`]):
+    /// run only the filters `[filters.start, filters.end)` of `layer`.
+    ///
+    /// `weights` is still the FULL `[N][M][K][K]` tensor of the layer; the
+    /// engine slices out the range itself. The returned ofmaps hold
+    /// `filters.end − filters.start` channels, in filter order — because
+    /// every filter is computed independently (one core per filter, private
+    /// psum buffer), the result is bit-identical to the corresponding
+    /// channel range of a whole-layer [`EngineSim::run_layer`] run, and the
+    /// per-range stats partition the whole-layer access counts exactly.
+    ///
+    /// Shard boundaries should be aligned to multiples of `P_N` (the
+    /// paper's filter-group size — the outer loop of eq. (2)) so that
+    /// splitting never adds partially-filled filter groups; the planner in
+    /// [`crate::scheduler::plan_filter_shards`] guarantees this.
+    pub fn run_filter_range(
+        &self,
+        layer: &ConvLayer,
+        input: &Tensor3,
+        weights: &[i32],
+        filters: std::ops::Range<usize>,
+    ) -> EngineRunResult {
+        assert!(filters.start < filters.end && filters.end <= layer.n, "bad filter range {filters:?}");
+        assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
+        if filters.start == 0 && filters.end == layer.n {
+            return self.run_layer(layer, input, weights);
+        }
+        let kk = layer.k * layer.k;
+        let sub = ConvLayer {
+            name: format!("{}[f{}..{}]", layer.name, filters.start, filters.end),
+            n: filters.end - filters.start,
+            ..layer.clone()
+        };
+        let wslice = &weights[filters.start * layer.m * kk..filters.end * layer.m * kk];
+        self.run_layer(&sub, input, wslice)
+    }
+
     /// Run a full convolutional layer: `input` is `[M][H][W]`, `weights`
     /// is flat `[N][M][K][K]`. Dispatches to the native or tiled path.
     pub fn run_layer(&self, layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> EngineRunResult {
@@ -266,6 +303,42 @@ mod tests {
         let r = EngineSim::new(cfg).run_layer(&layer, &input, &weights);
         assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 3, 11, 4, 0));
         assert_eq!(r.plan.tiles, 16);
+    }
+
+    #[test]
+    fn filter_range_partitions_whole_layer_run() {
+        // N=5 on P_N=2 → groups {0,1},{2,3},{4}; split ranges on the group
+        // boundary and check both numerics and stats partition exactly.
+        let layer = ConvLayer::new("t", 10, 3, 5, 5, 1, 1);
+        let input = rand_tensor(5, 10, 10, 3);
+        let weights = rand_weights(5, 5, 3, 11);
+        let cfg = ArchConfig::small(3, 2, 2);
+        let sim = EngineSim::new(cfg);
+        let whole = sim.run_layer(&layer, &input, &weights);
+        let lo = sim.run_filter_range(&layer, &input, &weights, 0..2);
+        let hi = sim.run_filter_range(&layer, &input, &weights, 2..5);
+        let (h_o, w_o) = (layer.h_o(), layer.w_o());
+        assert_eq!(lo.ofmaps.data[..], whole.ofmaps.data[..2 * h_o * w_o]);
+        assert_eq!(hi.ofmaps.data[..], whole.ofmaps.data[2 * h_o * w_o..]);
+        // Access counters partition (the farm's sum-merge conserves them).
+        assert_eq!(lo.stats.ext_input_reads + hi.stats.ext_input_reads, whole.stats.ext_input_reads);
+        assert_eq!(lo.stats.macs + hi.stats.macs, whole.stats.macs);
+        assert_eq!(lo.stats.output_writes + hi.stats.output_writes, whole.stats.output_writes);
+        assert_eq!(lo.stats.psum_buf_reads + hi.stats.psum_buf_reads, whole.stats.psum_buf_reads);
+        // Parallel time: the larger shard is strictly faster than the whole.
+        assert!(lo.stats.cycles.max(hi.stats.cycles) < whole.stats.cycles);
+    }
+
+    #[test]
+    fn filter_range_tiled_path_matches_golden_slice() {
+        let layer = ConvLayer::new("t5", 12, 5, 3, 4, 1, 2);
+        let input = rand_tensor(3, 12, 12, 9);
+        let weights = rand_weights(4, 3, 5, 13);
+        let sim = EngineSim::new(ArchConfig::small(3, 2, 2));
+        let golden = conv3d_i32(&input, &weights, 4, 5, 1, 2);
+        let r = sim.run_filter_range(&layer, &input, &weights, 1..3);
+        let (h_o, w_o) = (layer.h_o(), layer.w_o());
+        assert_eq!(r.ofmaps.data[..], golden.data[h_o * w_o..3 * h_o * w_o]);
     }
 
     #[test]

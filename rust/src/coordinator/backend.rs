@@ -1,5 +1,7 @@
-//! Inference backends: the PJRT-artifact pipeline and a mock for testing
-//! the coordination logic in isolation.
+//! Inference backends: the PJRT-artifact pipeline, the simulated engine
+//! farm (re-exported from [`crate::scheduler`]), and a mock for testing
+//! the coordination logic in isolation. [`make_backend`] is the single
+//! construction point the CLI and examples plumb `--backend` through.
 
 use crate::runtime::Runtime;
 use anyhow::Result;
@@ -73,6 +75,61 @@ impl InferenceBackend for PjrtBackend {
     }
 }
 
+/// Which backend the serving layer should construct — the CLI plumbing
+/// behind `trim serve --backend auto|pjrt|sim`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Try PJRT artifacts first; fall back to the sim farm with a notice.
+    #[default]
+    Auto,
+    /// Compiled XLA artifacts via PJRT (needs `make artifacts` and the
+    /// `pjrt` cargo feature).
+    Pjrt,
+    /// The simulated TrIM engine farm ([`crate::scheduler::SimBackend`]) —
+    /// zero build products required.
+    Sim,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "pjrt" => Ok(Self::Pjrt),
+            "sim" => Ok(Self::Sim),
+            other => Err(anyhow::anyhow!("unknown backend {other:?} (expected auto|pjrt|sim)")),
+        }
+    }
+}
+
+/// Construct the requested backend. `Auto` prefers the PJRT artifacts in
+/// `artifact_dir` and falls back to a `sim_engines`-engine farm (with a
+/// printed notice) when they are missing or PJRT support is compiled out —
+/// serving always comes up.
+pub fn make_backend(
+    kind: BackendKind,
+    artifact_dir: impl AsRef<std::path::Path>,
+    sim_engines: usize,
+) -> Result<Box<dyn InferenceBackend>> {
+    use crate::scheduler::SimBackend;
+    let dir = artifact_dir.as_ref();
+    match kind {
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::load(dir)?)),
+        BackendKind::Sim => Ok(Box::new(SimBackend::new(sim_engines))),
+        BackendKind::Auto => match PjrtBackend::load(dir) {
+            Ok(b) => Ok(Box::new(b)),
+            Err(e) => {
+                eprintln!(
+                    "notice: PJRT backend unavailable ({e:#}); \
+                     falling back to the simulated engine farm ({sim_engines} engines)"
+                );
+                Ok(Box::new(SimBackend::new(sim_engines)))
+            }
+        },
+    }
+}
+
 /// Deterministic mock backend (no PJRT): logits[k] = Σ image · (k+1) mod
 /// prime — enough structure to verify routing, ordering and batching.
 pub struct MockBackend {
@@ -117,6 +174,35 @@ impl InferenceBackend for MockBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("auto".parse::<BackendKind>().unwrap(), BackendKind::Auto);
+        assert_eq!("pjrt".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert_eq!("sim".parse::<BackendKind>().unwrap(), BackendKind::Sim);
+        assert!("tpu".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+    }
+
+    #[test]
+    fn sim_backend_needs_no_artifacts() {
+        let mut b = make_backend(BackendKind::Sim, "definitely/not/a/dir", 2).unwrap();
+        let img = vec![7i32; b.input_len()];
+        let out = b.infer_batch(&[&img]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(b.describe().starts_with("sim["));
+    }
+
+    #[test]
+    fn auto_falls_back_to_sim_without_artifacts() {
+        let b = make_backend(BackendKind::Auto, "definitely/not/a/dir", 2).unwrap();
+        assert!(b.describe().starts_with("sim["), "got {}", b.describe());
+    }
+
+    #[test]
+    fn explicit_pjrt_still_errors_without_artifacts() {
+        assert!(make_backend(BackendKind::Pjrt, "definitely/not/a/dir", 2).is_err());
+    }
 
     #[test]
     fn mock_is_deterministic_and_order_preserving() {

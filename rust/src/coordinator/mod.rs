@@ -1,5 +1,6 @@
 //! Layer-3 coordinator: the runtime system that serves CNN inference over
-//! the compiled TrIM artifacts.
+//! a pluggable backend — compiled TrIM artifacts (PJRT), the simulated
+//! engine farm ([`crate::scheduler::SimBackend`]), or a mock.
 //!
 //! The paper's contribution is the accelerator; the coordinator plays the
 //! role of its host-side runtime, shaped like a miniature serving router
@@ -18,7 +19,8 @@ pub mod coordinator;
 pub mod metrics;
 pub mod request;
 
-pub use backend::{InferenceBackend, MockBackend, PjrtBackend};
+pub use backend::{make_backend, BackendKind, InferenceBackend, MockBackend, PjrtBackend};
+pub use crate::scheduler::SimBackend;
 pub use batcher::{Batcher, BatcherConfig};
 pub use coordinator::{Coordinator, CoordinatorConfig};
 pub use metrics::{MetricsSnapshot, ServeMetrics};

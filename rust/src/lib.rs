@@ -18,9 +18,19 @@
 //!   memory-access models for TrIM / Eyeriss-RS / WS-GeMM, the energy
 //!   model, the Fig. 7 design-space sweep and the Table III FPGA cost model.
 //! * [`coordinator`] — the L3 runtime contribution: an async inference
-//!   coordinator that batches requests and drives compiled XLA artifacts.
+//!   coordinator that batches requests and drives a pluggable backend
+//!   (compiled XLA artifacts, the simulated engine farm, or a mock).
+//! * [`scheduler`] — the engine-farm layer: a pool of worker threads each
+//!   wrapping an [`arch::EngineSim`], a sharding planner that splits
+//!   layers on the paper's `P_N`-filter group boundaries (plus a
+//!   layer-pipeline mode for whole networks, in the spirit of the
+//!   multi-fabric 3D-TrIM follow-up), bit-exact shard merging with
+//!   farm-level stats aggregation, and the artifact-free sim serving
+//!   backend (`trim serve --backend sim`, `trim farm`).
 //! * [`runtime`] — PJRT wrapper (load HLO text → compile → execute); the
 //!   numeric path produced by the Python build layer (`python/compile/`).
+//!   Gated behind the `pjrt` cargo feature (needs the `xla` crate); the
+//!   offline default compiles a stub and serving falls back to the farm.
 //! * [`report`] — renderers that regenerate every table and figure of the
 //!   paper's evaluation section in the paper's own row format.
 
@@ -31,6 +41,7 @@ pub mod golden;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod scheduler;
 pub mod util;
 
 /// Crate-wide result alias.

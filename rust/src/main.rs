@@ -11,18 +11,36 @@
 //! trim analyze [--net ...]      §V headline numbers
 //! trim sim [--hw N] [--k K]     cycle-accurate slice run + measured stats
 //! trim validate                 simulator vs golden + paper invariants
-//! trim serve [--artifacts DIR] [--requests N] [--max-batch B]
-//!                               e2e batched inference over PJRT artifacts
+//! trim serve [--backend auto|pjrt|sim] [--engines N] [--artifacts DIR]
+//!            [--requests N] [--max-batch B]
+//!                               e2e batched inference. Backends:
+//!                                 pjrt — compiled XLA artifacts (needs
+//!                                        `make artifacts` + the `pjrt`
+//!                                        cargo feature)
+//!                                 sim  — the simulated TrIM engine farm,
+//!                                        zero build products required
+//!                                 auto — pjrt if available, else sim
+//!                                        with a printed notice (default)
+//! trim farm [--engines N] [--net vgg16|alexnet] [--mode filter|pipeline]
+//!           [--batch B]
+//!                               shard real network layers across a farm
+//!                               of cycle-accurate engines: per-layer
+//!                               speedup table + bit-exactness check.
+//!                               pipeline mode streams a batch of B images
+//!                               through the serving chain instead of
+//!                               --net (real CNNs pool between CLs)
 //! ```
 
 use std::collections::HashMap;
 
 use trim_sa::arch::control::plan_layer;
 use trim_sa::arch::{ArchConfig, EngineSim, SliceSim};
-use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, PjrtBackend};
+use trim_sa::coordinator::{make_backend, BackendKind, BatcherConfig, Coordinator, CoordinatorConfig};
 use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer, Network};
 use trim_sa::report::{render_fig1, render_fig7, render_table1_or_2, render_table3};
+use trim_sa::scheduler::{EngineFarm, FarmConfig, PipelineStage, ShardMode};
+use trim_sa::util::SplitMix64;
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -144,13 +162,17 @@ fn cmd_validate() {
 
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
-    let n_req: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let n_req: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(96);
     let max_batch: usize = flags.get("max-batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let engines: usize = flags.get("engines").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let kind: BackendKind = match flags.get("backend") {
+        Some(s) => s.parse()?,
+        None => BackendKind::Auto,
+    };
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: std::time::Duration::from_millis(2) },
     };
-    let dir2 = dir.clone();
-    let c = Coordinator::start_with(move || Ok(Box::new(PjrtBackend::load(&dir2)?) as _), cfg)?;
+    let c = Coordinator::start_with(move || make_backend(kind, &dir, engines), cfg)?;
     println!("serving with {} ({} int32 inputs per request)", c.backend_description(), c.input_len());
 
     let len = c.input_len();
@@ -176,6 +198,121 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Scale a real network layer down so the cycle-accurate farm demo runs in
+/// seconds, while keeping the kernel/stride/pad geometry (and therefore
+/// the layer's native-vs-tiled schedule and shard structure).
+fn scale_layer(l: &ConvLayer, max_hw: usize, max_m: usize, max_n: usize) -> ConvLayer {
+    let hw = l.h_i.min(max_hw).max(l.k);
+    ConvLayer {
+        name: l.name.clone(),
+        h_i: hw,
+        w_i: hw,
+        k: l.k,
+        stride: l.stride,
+        pad: l.pad,
+        m: l.m.min(max_m),
+        n: l.n.min(max_n),
+    }
+}
+
+fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let engines: usize = flags.get("engines").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let mode: ShardMode = match flags.get("mode") {
+        Some(s) => s.parse()?,
+        None => ShardMode::FilterShards,
+    };
+    let arch = ArchConfig::small(3, 2, 2);
+    match mode {
+        ShardMode::FilterShards => {
+            let net = net_by_name(flags.get("net").map(|s| s.as_str()).unwrap_or("vgg16"));
+            println!(
+                "engine farm: {engines} engines of P_N={} x P_M={} (scaled-down {} layers, filter-shard mode)",
+                arch.p_n, arch.p_m, net.name
+            );
+            let farm = EngineFarm::new(FarmConfig::new(engines, arch));
+            let single = EngineSim::new(arch);
+            let mut rng = SplitMix64::new(2024);
+            let (mut tot_single, mut tot_farm) = (0u64, 0u64);
+            println!(
+                "{:<6} {:>3} {:>6} {:>13} {:>13} {:>8}  exact",
+                "layer", "K", "shards", "1-engine cyc", "farm cyc", "speedup"
+            );
+            for l in &net.layers {
+                let l = scale_layer(l, 32, 8, 16);
+                let input =
+                    Tensor3 { c: l.m, h: l.h_i, w: l.w_i, data: rng.vec_i32(l.m * l.h_i * l.w_i, 0, 256) };
+                let weights = rng.vec_i32(l.weight_elems() as usize, -8, 8);
+                let s = single.run_layer(&l, &input, &weights);
+                let f = farm.run_layer(&l, &input, &weights);
+                let golden = conv3d_i32(&input, &weights, l.n, l.k, l.stride, l.pad);
+                let ok = f.ofmaps == golden && f.ofmaps == s.ofmaps;
+                tot_single += s.stats.cycles;
+                tot_farm += f.stats.cycles;
+                println!(
+                    "{:<6} {:>3} {:>6} {:>13} {:>13} {:>7.2}x  {}",
+                    l.name,
+                    l.k,
+                    f.plan.shards.len(),
+                    s.stats.cycles,
+                    f.stats.cycles,
+                    s.stats.cycles as f64 / f.stats.cycles as f64,
+                    if ok { "yes" } else { "NO — MISMATCH" }
+                );
+                anyhow::ensure!(ok, "{}: farm output diverged from single engine / golden", l.name);
+            }
+            println!(
+                "total: {tot_single} -> {tot_farm} cycles ({:.2}x with {engines} engines); \
+                 all layers bit-exact vs single engine and golden conv",
+                tot_single as f64 / tot_farm as f64
+            );
+        }
+        ShardMode::LayerPipeline => {
+            // Real CNNs interleave pooling between CLs (out of scope, §IV),
+            // so the pipeline demo streams a batch through the serving
+            // chain (the same network `trim serve --backend sim` runs).
+            use trim_sa::model::quant::Requant;
+            use trim_sa::scheduler::SimNetSpec;
+            if flags.contains_key("net") {
+                println!("note: --net is ignored in pipeline mode; streaming the serving chain instead");
+            }
+            let batch: usize = flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let spec = SimNetSpec::tiny();
+            let q = Requant::new(spec.requant_shift, 8);
+            let stages: Vec<PipelineStage> = spec
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| PipelineStage {
+                    layer: l.clone(),
+                    weights: std::sync::Arc::new(spec.layer_weights(i)),
+                    requant: Some(q),
+                })
+                .collect();
+            let (c0, h0, w0) = spec.input;
+            let mut rng = SplitMix64::new(7);
+            let images: Vec<Tensor3> = (0..batch)
+                .map(|_| Tensor3 { c: c0, h: h0, w: w0, data: rng.vec_i32(c0 * h0 * w0, 0, 256) })
+                .collect();
+            let serial = EngineFarm::new(FarmConfig::new(1, arch));
+            let farm = EngineFarm::new(FarmConfig::new(engines, arch));
+            let r1 = serial.run_pipeline(&stages, images.clone());
+            let rn = farm.run_pipeline(&stages, images);
+            anyhow::ensure!(r1.outputs == rn.outputs, "pipeline outputs diverged across engine counts");
+            println!(
+                "layer pipeline: {} stages, batch {batch}: {} -> {} cycles ({:.2}x with {engines} engines), bit-exact",
+                stages.len(),
+                r1.stats.cycles,
+                rn.stats.cycles,
+                r1.stats.cycles as f64 / rn.stats.cycles as f64
+            );
+            for (i, s) in rn.per_engine.iter().enumerate() {
+                println!("  engine {i}: {:>10} cycles  {:>10} MACs", s.cycles, s.macs);
+            }
+        }
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
@@ -194,8 +331,9 @@ fn main() -> anyhow::Result<()> {
         "sim" => cmd_sim(&flags),
         "validate" => cmd_validate(),
         "serve" => cmd_serve(&flags)?,
+        "farm" => cmd_farm(&flags)?,
         _ => {
-            println!("usage: trim <fig1|sweep|table|table3|analyze|sim|validate|serve> [--flags]");
+            println!("usage: trim <fig1|sweep|table|table3|analyze|sim|validate|serve|farm> [--flags]");
             println!("see rust/src/main.rs docs for details");
         }
     }

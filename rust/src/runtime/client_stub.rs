@@ -1,0 +1,62 @@
+//! Offline stub of the PJRT client (compiled when the `pjrt` feature is
+//! disabled — see runtime/mod.rs and Cargo.toml).
+//!
+//! Keeps the whole `runtime` API surface compiling without the `xla`
+//! crate: manifest parsing is untouched, but actually constructing a
+//! [`Runtime`] fails with an error explaining how to get PJRT execution
+//! (enable the feature) or how to serve without it (`--backend sim`).
+
+use super::artifact::{ArtifactSpec, Manifest};
+use anyhow::{bail, Result};
+
+/// Stub of one compiled artifact. Never constructed (a stub [`Runtime`]
+/// cannot be built), but the type keeps call-site signatures identical to
+/// the real client.
+pub struct LoadedModule {
+    pub spec: ArtifactSpec,
+}
+
+impl LoadedModule {
+    /// Always fails: there is no executable behind the stub.
+    pub fn run_i32(&self, _inputs: &[&[i32]]) -> Result<Vec<i32>> {
+        bail!(
+            "{}: PJRT execution not compiled in (enable the `pjrt` cargo feature)",
+            self.spec.name
+        )
+    }
+}
+
+/// Stub runtime: construction always fails with a descriptive error.
+pub struct Runtime {}
+
+impl Runtime {
+    /// Parse the manifest, then report that PJRT execution is unavailable.
+    /// Parsing first preserves the real client's error for a missing
+    /// artifacts directory (the more actionable message).
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(manifest)
+    }
+
+    pub fn from_manifest(manifest: Manifest) -> Result<Self> {
+        bail!(
+            "cannot compile artifacts from {:?}: PJRT execution not compiled in \
+             (the `xla` crate is gated behind the `pjrt` cargo feature; \
+             serve through the simulator instead: `trim serve --backend sim`)",
+            manifest.dir
+        )
+    }
+
+    /// Backend identification (mirrors the real client's API).
+    pub fn platform(&self) -> String {
+        "pjrt-unavailable".to_string()
+    }
+
+    pub fn module(&self, name: &str) -> Result<&LoadedModule> {
+        bail!("module {name:?} unavailable: PJRT execution not compiled in")
+    }
+
+    pub fn module_names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+}

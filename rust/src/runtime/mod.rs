@@ -2,8 +2,22 @@
 //! `python/compile/aot.py`), compile them on the CPU PJRT client and
 //! execute them from the coordinator's hot path. Python is never involved
 //! at run time.
+//!
+//! The PJRT client needs the `xla` crate, which is not available in the
+//! offline build environment, so the real client lives behind the `pjrt`
+//! cargo feature (see Cargo.toml). Without the feature an API-compatible
+//! stub is compiled instead: artifact/manifest parsing still works, but
+//! `Runtime` construction returns a descriptive error, which the serving
+//! layer turns into a fallback onto the simulated engine farm
+//! ([`crate::scheduler`]).
 
 pub mod artifact;
+
+#[cfg(feature = "pjrt")]
+pub mod client;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
 pub mod client;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,250 @@
+//! [`SimBackend`]: serve CNN inference straight from the simulated engine
+//! farm — no PJRT, no artifacts, no Python. `trim serve --backend sim`.
+//!
+//! The backend owns an [`EngineFarm`] and a small quantised CNN
+//! ([`SimNetSpec`]) whose weights are generated deterministically, so any
+//! two processes (and the golden reference path) agree bit-exactly on
+//! every logit. Batches are executed in one of the farm's two modes:
+//!
+//! * [`ShardMode::FilterShards`] — layer-serial over the batch (the same
+//!   weight-resident order as [`crate::coordinator::PjrtBackend`]), each
+//!   layer sharded across engines;
+//! * [`ShardMode::LayerPipeline`] — the batch streams through the layer
+//!   chain with one engine per stage.
+//!
+//! Both produce identical logits (property-tested); they differ only in
+//! how the work is spread over the farm.
+
+use super::farm::{EngineFarm, FarmConfig, PipelineStage};
+use super::shard::ShardMode;
+use crate::arch::ArchConfig;
+use crate::coordinator::InferenceBackend;
+use crate::golden::{conv3d_i32, Tensor3};
+use crate::model::quant::Requant;
+use crate::model::ConvLayer;
+use crate::util::SplitMix64;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// The workload a [`SimBackend`] serves: a chain of conv layers plus the
+/// head that turns the last activations into logits (per-class global sum
+/// pooling — class `k` pools ofmap channel `k`).
+#[derive(Debug, Clone)]
+pub struct SimNetSpec {
+    /// Input shape `(C, H, W)`; requests carry `C·H·W` flat int32 values.
+    pub input: (usize, usize, usize),
+    /// Layer chain; layer `i+1`'s ifmap shape must equal layer `i`'s
+    /// ofmap shape, and the last layer's `N` must equal `classes`.
+    pub layers: Vec<ConvLayer>,
+    /// Power-of-two re-quantisation shift applied after every layer
+    /// (activations stay 8-bit between layers, like the paper's datapath).
+    pub requant_shift: u32,
+    /// Number of classes (= channels of the last layer).
+    pub classes: usize,
+    /// Seed for the deterministic weight generator.
+    pub weight_seed: u64,
+}
+
+impl SimNetSpec {
+    /// The default serving workload: a 3-layer, 10-class quantised CNN on
+    /// 3×16×16 images — small enough that a cycle-accurate farm serves
+    /// ~100-request workloads in seconds, big enough to exercise filter
+    /// grouping, striding and the psum buffers.
+    pub fn tiny() -> Self {
+        let layers = vec![
+            ConvLayer::new("SL1", 16, 3, 3, 8, 1, 1),  // 3×16×16 → 8×16×16
+            ConvLayer::new("SL2", 16, 3, 8, 8, 2, 1),  // 8×16×16 → 8×8×8
+            ConvLayer::new("SL3", 8, 3, 8, 10, 1, 1),  // 8×8×8  → 10×8×8
+        ];
+        Self { input: (3, 16, 16), layers, requant_shift: 6, classes: 10, weight_seed: 0x7215 }
+    }
+
+    /// Deterministic weights for layer `idx` of this spec.
+    pub fn layer_weights(&self, idx: usize) -> Vec<i32> {
+        let l = &self.layers[idx];
+        let mut rng = SplitMix64::new(self.weight_seed.wrapping_add(idx as u64).wrapping_mul(0x9E37));
+        rng.vec_i32(l.weight_elems() as usize, -4, 8)
+    }
+
+    fn validate(&self) {
+        assert!(!self.layers.is_empty(), "SimNetSpec needs at least one layer");
+        let (c, h, w) = self.input;
+        assert_eq!((self.layers[0].m, self.layers[0].h_i, self.layers[0].w_i), (c, h, w));
+        for (a, b) in self.layers.iter().zip(self.layers.iter().skip(1)) {
+            assert_eq!(a.n, b.m, "{} → {}: channel mismatch", a.name, b.name);
+            assert_eq!((a.h_o(), a.w_o()), (b.h_i, b.w_i), "{} → {}: shape mismatch", a.name, b.name);
+        }
+        assert_eq!(self.layers.last().unwrap().n, self.classes, "last layer must have `classes` filters");
+    }
+}
+
+/// Inference backend that runs entirely on the simulated engine farm.
+pub struct SimBackend {
+    farm: EngineFarm,
+    spec: SimNetSpec,
+    weights: Vec<Arc<Vec<i32>>>,
+    mode: ShardMode,
+    requant: Requant,
+    /// infer_batch calls observed (exposed for batching assertions).
+    pub calls: u64,
+}
+
+impl SimBackend {
+    /// Default backend: the [`SimNetSpec::tiny`] workload on `engines`
+    /// narrow engines (`P_N = 1`, so every engine count up to ~8 gets its
+    /// own filter groups to shard).
+    pub fn new(engines: usize) -> Self {
+        Self::with_spec(engines, ArchConfig::small(3, 2, 1), SimNetSpec::tiny(), ShardMode::FilterShards)
+    }
+
+    /// Full control over the farm and workload.
+    pub fn with_spec(engines: usize, arch: ArchConfig, spec: SimNetSpec, mode: ShardMode) -> Self {
+        spec.validate();
+        let farm = EngineFarm::new(FarmConfig::new(engines, arch));
+        let weights = (0..spec.layers.len()).map(|i| Arc::new(spec.layer_weights(i))).collect();
+        let requant = Requant::new(spec.requant_shift, 8);
+        Self { farm, spec, weights, mode, requant, calls: 0 }
+    }
+
+    pub fn mode(&self) -> ShardMode {
+        self.mode
+    }
+
+    pub fn engines(&self) -> usize {
+        self.farm.engines()
+    }
+
+    fn image_tensor(&self, image: &[i32]) -> Tensor3 {
+        let (c, h, w) = self.spec.input;
+        Tensor3 { c, h, w, data: image.to_vec() }
+    }
+
+    /// Per-class global sum pooling over the last activations.
+    fn head(&self, act: &Tensor3) -> Vec<i32> {
+        (0..self.spec.classes)
+            .map(|k| act.channel(k).iter().map(|&v| v as i64).sum::<i64>() as i32)
+            .collect()
+    }
+
+    fn requant_inplace(&self, t: &mut Tensor3) {
+        for v in t.data.iter_mut() {
+            *v = self.requant.apply(*v as i64) as i32;
+        }
+    }
+
+    /// Layer-serial forward of one image, every layer sharded across the
+    /// farm (the weight-resident order of the PJRT backend). Weights stay
+    /// behind their cached `Arc`s — nothing is copied per request except
+    /// the incoming image.
+    fn forward_sharded(&self, image: &[i32]) -> Vec<i32> {
+        let mut act = Arc::new(self.image_tensor(image));
+        for (layer, weights) in self.spec.layers.iter().zip(&self.weights) {
+            let mut r = self.farm.run_layer_shared(layer, act, Arc::clone(weights));
+            self.requant_inplace(&mut r.ofmaps);
+            act = Arc::new(r.ofmaps);
+        }
+        self.head(&act)
+    }
+
+    fn pipeline_stages(&self) -> Vec<PipelineStage> {
+        self.spec
+            .layers
+            .iter()
+            .zip(&self.weights)
+            .map(|(layer, weights)| PipelineStage {
+                layer: layer.clone(),
+                weights: Arc::clone(weights),
+                requant: Some(self.requant),
+            })
+            .collect()
+    }
+
+    /// Golden-model reference (no farm, no simulator): the logits this
+    /// backend must produce for `image`. Used by the tests to pin the
+    /// serving path to the golden convolution oracle.
+    pub fn reference_logits(&self, image: &[i32]) -> Vec<i32> {
+        let mut act = self.image_tensor(image);
+        for (layer, weights) in self.spec.layers.iter().zip(&self.weights) {
+            let mut out = conv3d_i32(&act, weights, layer.n, layer.k, layer.stride, layer.pad);
+            self.requant_inplace(&mut out);
+            act = out;
+        }
+        self.head(&act)
+    }
+}
+
+impl InferenceBackend for SimBackend {
+    fn input_len(&self) -> usize {
+        let (c, h, w) = self.spec.input;
+        c * h * w
+    }
+
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+        self.calls += 1;
+        let expect = self.input_len();
+        for img in images {
+            if img.len() != expect {
+                bail!("sim backend: image length {} != expected {}", img.len(), expect);
+            }
+        }
+        match self.mode {
+            ShardMode::FilterShards => Ok(images.iter().map(|img| self.forward_sharded(img)).collect()),
+            ShardMode::LayerPipeline => {
+                let stages = self.pipeline_stages();
+                let inputs: Vec<Tensor3> = images.iter().map(|img| self.image_tensor(img)).collect();
+                let r = self.farm.run_pipeline(&stages, inputs);
+                Ok(r.outputs.iter().map(|t| self.head(t)).collect())
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "sim[{} engines, {:?}, {} layers, {} classes]",
+            self.farm.engines(),
+            self.mode,
+            self.spec.layers.len(),
+            self.spec.classes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn image(seed: u64, len: usize) -> Vec<i32> {
+        SplitMix64::new(seed).vec_i32(len, 0, 256)
+    }
+
+    #[test]
+    fn both_modes_match_the_golden_reference() {
+        let mut sharded = SimBackend::new(2);
+        let mut piped = SimBackend::with_spec(
+            2,
+            ArchConfig::small(3, 2, 1),
+            SimNetSpec::tiny(),
+            ShardMode::LayerPipeline,
+        );
+        let len = sharded.input_len();
+        let imgs: Vec<Vec<i32>> = (0..3).map(|i| image(100 + i, len)).collect();
+        let refs: Vec<&[i32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let expect: Vec<Vec<i32>> = imgs.iter().map(|v| sharded.reference_logits(v)).collect();
+        assert_eq!(sharded.infer_batch(&refs).unwrap(), expect);
+        assert_eq!(piped.infer_batch(&refs).unwrap(), expect);
+    }
+
+    #[test]
+    fn rejects_wrong_image_length() {
+        let mut b = SimBackend::new(1);
+        let img = vec![0i32; 5];
+        assert!(b.infer_batch(&[&img]).is_err());
+    }
+
+    #[test]
+    fn describe_names_the_farm() {
+        let b = SimBackend::new(3);
+        assert!(b.describe().contains("3 engines"));
+        assert_eq!(b.engines(), 3);
+    }
+}

@@ -1,0 +1,357 @@
+//! The engine farm: a pool of worker threads, each wrapping one
+//! cycle-accurate [`EngineSim`], plus the dispatch/merge logic that makes
+//! the pool behave like one big accelerator.
+//!
+//! Two distribution strategies (see [`super::shard::ShardMode`]):
+//!
+//! * **filter shards** — [`EngineFarm::run_layer`] splits a layer's
+//!   filters across engines on `P_N`-group boundaries (the planner of
+//!   [`super::shard`]) and reassembles the ofmaps bit-exactly. This is the
+//!   multi-fabric scaling of the 3D-TrIM follow-up: every fabric sees the
+//!   same broadcast inputs and owns a disjoint set of filters.
+//! * **layer pipeline** — [`EngineFarm::run_pipeline`] pins each layer of
+//!   a chain to an engine (`layer i → engine i mod E`) and streams images
+//!   through, so engine 0 convolves image 1's first layer while engine 1
+//!   works on image 0's second layer (contrast with Chain-NN's serial
+//!   chain, where one fabric owns the whole network).
+//!
+//! Stats follow the Tables I–II accounting: counters of parallel shards
+//! **sum** (every access really happens) while cycles take the **max**
+//! (shards run concurrently); within one engine, sequential jobs add their
+//! cycles. Both reductions reuse [`SimStats::merge`] /
+//! [`SimStats::merge_sequential`].
+
+use super::shard::{plan_filter_shards, ShardPlan};
+use crate::arch::engine::EngineRunResult;
+use crate::arch::{ArchConfig, EngineSim, SimStats};
+use crate::golden::Tensor3;
+use crate::model::quant::Requant;
+use crate::model::ConvLayer;
+use std::ops::Range;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Farm-level configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FarmConfig {
+    /// Number of simulated TrIM engines (worker threads).
+    pub engines: usize,
+    /// Architecture of every engine in the pool (homogeneous farm).
+    pub arch: ArchConfig,
+}
+
+impl FarmConfig {
+    pub fn new(engines: usize, arch: ArchConfig) -> Self {
+        Self { engines, arch }
+    }
+}
+
+impl Default for FarmConfig {
+    fn default() -> Self {
+        Self { engines: 4, arch: ArchConfig::paper_engine() }
+    }
+}
+
+/// One unit of work for a worker: a filter range of one layer, plus an
+/// optional output re-quantisation (used between pipeline stages).
+struct Job {
+    layer: ConvLayer,
+    input: Arc<Tensor3>,
+    weights: Arc<Vec<i32>>,
+    filters: Range<usize>,
+    requant: Option<Requant>,
+    tag: u64,
+    reply: Sender<JobDone>,
+}
+
+struct JobDone {
+    tag: u64,
+    filters: Range<usize>,
+    result: EngineRunResult,
+}
+
+fn worker_loop(engine: EngineSim, rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let mut result = engine.run_filter_range(&job.layer, &job.input, &job.weights, job.filters.clone());
+        if let Some(q) = job.requant {
+            for v in result.ofmaps.data.iter_mut() {
+                *v = q.apply(*v as i64) as i32;
+            }
+        }
+        // Receiver may have given up (farm dropped mid-run) — ignore.
+        let _ = job.reply.send(JobDone { tag: job.tag, filters: job.filters, result });
+    }
+}
+
+/// Result of one farmed layer run (filter-shard mode).
+#[derive(Debug, Clone)]
+pub struct FarmRunResult {
+    /// Reassembled ofmaps `[N][H_O][W_O]` — bit-identical to a
+    /// single-engine [`EngineSim::run_layer`] of the same layer.
+    pub ofmaps: Tensor3,
+    /// Aggregate stats: cycles = max over shards, accesses/MACs = sum
+    /// (they partition the single-engine counters exactly).
+    pub stats: SimStats,
+    /// Per-shard stats, indexed like `plan.shards`.
+    pub per_shard: Vec<SimStats>,
+    /// The shard assignment that produced this result.
+    pub plan: ShardPlan,
+}
+
+/// One stage of a layer pipeline: a layer, its weights, and the
+/// re-quantisation applied to its ofmaps before they feed the next stage.
+#[derive(Clone)]
+pub struct PipelineStage {
+    pub layer: ConvLayer,
+    pub weights: Arc<Vec<i32>>,
+    pub requant: Option<Requant>,
+}
+
+/// Result of streaming a batch of images through a layer pipeline.
+#[derive(Debug, Clone)]
+pub struct PipelineRunResult {
+    /// Final activations, one per input image, in input order.
+    pub outputs: Vec<Tensor3>,
+    /// Aggregate stats: cycles = max over engines of that engine's total
+    /// (sequential) cycles; accesses/MACs = sum over all jobs.
+    pub stats: SimStats,
+    /// Per-engine sequential stats.
+    pub per_engine: Vec<SimStats>,
+}
+
+/// A pool of simulated TrIM engines behind per-worker job queues.
+pub struct EngineFarm {
+    cfg: FarmConfig,
+    senders: Vec<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl EngineFarm {
+    /// Spawn `cfg.engines` worker threads, each owning one [`EngineSim`].
+    pub fn new(cfg: FarmConfig) -> Self {
+        assert!(cfg.engines >= 1, "farm needs at least one engine");
+        let mut senders = Vec::with_capacity(cfg.engines);
+        let mut workers = Vec::with_capacity(cfg.engines);
+        for i in 0..cfg.engines {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let engine = EngineSim::new(cfg.arch);
+            let handle = std::thread::Builder::new()
+                .name(format!("trim-farm-{i}"))
+                .spawn(move || worker_loop(engine, rx))
+                .expect("spawning farm worker");
+            senders.push(tx);
+            workers.push(handle);
+        }
+        Self { cfg, senders, workers }
+    }
+
+    pub fn engines(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn arch(&self) -> &ArchConfig {
+        &self.cfg.arch
+    }
+
+    /// Run one layer sharded across the farm (filter-shard mode) and merge
+    /// the results. Blocks until every shard has completed. Copies `input`
+    /// and `weights` into shared buffers — callers that already hold
+    /// `Arc`s (the serving hot path) should use
+    /// [`EngineFarm::run_layer_shared`] to avoid the copies.
+    pub fn run_layer(&self, layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> FarmRunResult {
+        self.run_layer_shared(layer, Arc::new(input.clone()), Arc::new(weights.to_vec()))
+    }
+
+    /// Zero-copy variant of [`EngineFarm::run_layer`]: shards reference
+    /// the caller's buffers through `Arc` clones.
+    pub fn run_layer_shared(
+        &self,
+        layer: &ConvLayer,
+        input: Arc<Tensor3>,
+        weights: Arc<Vec<i32>>,
+    ) -> FarmRunResult {
+        let plan = plan_filter_shards(&self.cfg.arch, layer, self.engines());
+        let (reply, done_rx) = mpsc::channel::<JobDone>();
+        for shard in &plan.shards {
+            let job = Job {
+                layer: layer.clone(),
+                input: Arc::clone(&input),
+                weights: Arc::clone(&weights),
+                filters: shard.filters.clone(),
+                requant: None,
+                tag: shard.index as u64,
+                reply: reply.clone(),
+            };
+            self.senders[shard.index].send(job).expect("farm worker gone");
+        }
+        drop(reply);
+
+        let (h_o, w_o) = (layer.h_o(), layer.w_o());
+        let mut ofmaps = Tensor3::zeros(layer.n, h_o, w_o);
+        let mut stats = SimStats::default();
+        let mut per_shard = vec![SimStats::default(); plan.shards.len()];
+        let mut received = 0usize;
+        while let Ok(done) = done_rx.recv() {
+            let at = done.filters.start * h_o * w_o;
+            let data = &done.result.ofmaps.data;
+            ofmaps.data[at..at + data.len()].copy_from_slice(data);
+            stats.merge(&done.result.stats); // parallel: cycles max, counters sum
+            per_shard[done.tag as usize] = done.result.stats;
+            received += 1;
+        }
+        assert_eq!(received, plan.shards.len(), "a farm worker died mid-layer");
+        FarmRunResult { ofmaps, stats, per_shard, plan }
+    }
+
+    /// Stream `inputs` through a chain of layers, one engine per stage
+    /// (`stage i → engine i mod E`). An image's stages run in order; across
+    /// images the stages overlap, which is where the speedup comes from.
+    /// Outputs are returned in input order. Blocks until the last image
+    /// leaves the last stage.
+    pub fn run_pipeline(&self, stages: &[PipelineStage], inputs: Vec<Tensor3>) -> PipelineRunResult {
+        assert!(!stages.is_empty(), "pipeline needs at least one stage");
+        for (a, b) in stages.iter().zip(stages.iter().skip(1)) {
+            assert_eq!(a.layer.n, b.layer.m, "stage channel mismatch: {} → {}", a.layer.name, b.layer.name);
+            assert_eq!((a.layer.h_o(), a.layer.w_o()), (b.layer.h_i, b.layer.w_i),
+                "stage shape mismatch: {} → {}", a.layer.name, b.layer.name);
+        }
+        let n_img = inputs.len();
+        let n_stage = stages.len();
+        let (reply, done_rx) = mpsc::channel::<JobDone>();
+        let submit = |img: usize, stage: usize, input: Arc<Tensor3>| {
+            let s = &stages[stage];
+            let job = Job {
+                layer: s.layer.clone(),
+                input,
+                weights: Arc::clone(&s.weights),
+                filters: 0..s.layer.n,
+                requant: s.requant,
+                tag: (img * n_stage + stage) as u64,
+                reply: reply.clone(),
+            };
+            self.senders[stage % self.senders.len()].send(job).expect("farm worker gone");
+        };
+
+        for (img, t) in inputs.into_iter().enumerate() {
+            submit(img, 0, Arc::new(t));
+        }
+        let mut outputs: Vec<Option<Tensor3>> = (0..n_img).map(|_| None).collect();
+        let mut per_engine = vec![SimStats::default(); self.senders.len()];
+        let mut finished = 0usize;
+        while finished < n_img {
+            let done = done_rx.recv().expect("farm workers gone mid-pipeline");
+            let tag = done.tag as usize;
+            let (img, stage) = (tag / n_stage, tag % n_stage);
+            per_engine[stage % self.senders.len()].merge_sequential(&done.result.stats);
+            if stage + 1 < n_stage {
+                submit(img, stage + 1, Arc::new(done.result.ofmaps));
+            } else {
+                outputs[img] = Some(done.result.ofmaps);
+                finished += 1;
+            }
+        }
+        let mut stats = SimStats::default();
+        for e in &per_engine {
+            stats.merge(e); // engines run in parallel: cycles max, counters sum
+        }
+        let outputs = outputs.into_iter().map(|o| o.expect("image lost in pipeline")).collect();
+        PipelineRunResult { outputs, stats, per_engine }
+    }
+}
+
+impl Drop for EngineFarm {
+    fn drop(&mut self) {
+        // Closing every job queue ends the worker loops; then join.
+        self.senders.clear();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden::conv3d_i32;
+    use crate::util::SplitMix64;
+
+    fn rand_tensor(rng: &mut SplitMix64, c: usize, h: usize, w: usize) -> Tensor3 {
+        Tensor3 { c, h, w, data: rng.vec_i32(c * h * w, -64, 64) }
+    }
+
+    #[test]
+    fn farm_matches_golden_and_aggregates_stats() {
+        let mut rng = SplitMix64::new(11);
+        let layer = ConvLayer::new("f", 10, 3, 5, 9, 1, 1);
+        let input = rand_tensor(&mut rng, 5, 10, 10);
+        let weights = rng.vec_i32(9 * 5 * 9, -8, 8);
+        let arch = ArchConfig::small(3, 2, 2);
+        let farm = EngineFarm::new(FarmConfig::new(3, arch));
+        let r = farm.run_layer(&layer, &input, &weights);
+        assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 9, 3, 1, 1));
+        assert_eq!(r.plan.shards.len(), 3);
+        // cycles = max over shards, counters = sum over shards
+        assert_eq!(r.stats.cycles, r.per_shard.iter().map(|s| s.cycles).max().unwrap());
+        assert_eq!(r.stats.macs, r.per_shard.iter().map(|s| s.macs).sum::<u64>());
+        // … and the counters partition a single-engine run exactly.
+        let single = EngineSim::new(arch).run_layer(&layer, &input, &weights);
+        assert_eq!(r.ofmaps, single.ofmaps);
+        assert_eq!(r.stats.ext_input_reads, single.stats.ext_input_reads);
+        assert_eq!(r.stats.macs, single.stats.macs);
+        assert_eq!(r.stats.output_writes, single.stats.output_writes);
+        assert!(r.stats.cycles < single.stats.cycles, "sharding must cut parallel cycles");
+    }
+
+    #[test]
+    fn pipeline_matches_serial_golden_chain() {
+        let mut rng = SplitMix64::new(23);
+        // 2-stage chain: 3→4 then 4→2, both 3×3 pad 1 on 8×8.
+        let l1 = ConvLayer::new("p1", 8, 3, 3, 4, 1, 1);
+        let l2 = ConvLayer::new("p2", 8, 3, 4, 2, 1, 1);
+        let w1 = Arc::new(rng.vec_i32(4 * 3 * 9, -6, 6));
+        let w2 = Arc::new(rng.vec_i32(2 * 4 * 9, -6, 6));
+        let q = Requant::new(4, 8);
+        let stages = vec![
+            PipelineStage { layer: l1.clone(), weights: Arc::clone(&w1), requant: Some(q) },
+            PipelineStage { layer: l2.clone(), weights: Arc::clone(&w2), requant: Some(q) },
+        ];
+        let images: Vec<Tensor3> = (0..5).map(|_| rand_tensor(&mut rng, 3, 8, 8)).collect();
+        let farm = EngineFarm::new(FarmConfig::new(2, ArchConfig::small(3, 2, 2)));
+        let r = farm.run_pipeline(&stages, images.clone());
+        assert_eq!(r.outputs.len(), 5);
+        for (img, out) in images.iter().zip(&r.outputs) {
+            let mut a1 = conv3d_i32(img, &w1, 4, 3, 1, 1);
+            for v in a1.data.iter_mut() {
+                *v = q.apply(*v as i64) as i32;
+            }
+            let mut a2 = conv3d_i32(&a1, &w2, 2, 3, 1, 1);
+            for v in a2.data.iter_mut() {
+                *v = q.apply(*v as i64) as i32;
+            }
+            assert_eq!(out, &a2);
+        }
+        // Both engines must have done work, and parallel cycles = max.
+        assert!(r.per_engine.iter().all(|s| s.cycles > 0));
+        assert_eq!(r.stats.cycles, r.per_engine.iter().map(|s| s.cycles).max().unwrap());
+    }
+
+    #[test]
+    fn single_engine_farm_is_degenerate_but_exact() {
+        let mut rng = SplitMix64::new(31);
+        let layer = ConvLayer::new("d", 7, 3, 2, 3, 1, 0);
+        let input = rand_tensor(&mut rng, 2, 7, 7);
+        let weights = rng.vec_i32(3 * 2 * 9, -8, 8);
+        let farm = EngineFarm::new(FarmConfig::new(1, ArchConfig::small(3, 2, 2)));
+        let r = farm.run_layer(&layer, &input, &weights);
+        let single = EngineSim::new(ArchConfig::small(3, 2, 2)).run_layer(&layer, &input, &weights);
+        assert_eq!(r.ofmaps, single.ofmaps);
+        assert_eq!(r.stats, single.stats);
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let farm = EngineFarm::new(FarmConfig::new(3, ArchConfig::small(3, 2, 2)));
+        drop(farm); // must not hang or panic
+    }
+}

@@ -1,0 +1,28 @@
+//! Engine-farm scheduler: shard CNN work across a pool of simulated TrIM
+//! engines and serve inference from it.
+//!
+//! The paper scales throughput by replicating compute *inside* one engine
+//! (`P_N` cores, Fig. 6); its 3D-TrIM follow-up scales further by stacking
+//! whole TrIM fabrics. This module is that next level of the hierarchy in
+//! software:
+//!
+//! * [`shard`] — the planner: split a [`crate::model::ConvLayer`] into
+//!   independent filter shards on the paper's own `P_N`-filter group
+//!   boundaries (the `⌈N/P_N⌉` outer loop of eq. (2)), or assign whole
+//!   layers of a network to engines ([`ShardMode`]).
+//! * [`farm`] — [`EngineFarm`]: worker threads, each wrapping one
+//!   cycle-accurate [`crate::arch::EngineSim`]; dispatch, bit-exact ofmap
+//!   reassembly, and [`crate::arch::SimStats`] aggregation (cycles = max
+//!   over parallel shards, accesses = sum) so the Tables I–II accounting
+//!   stays meaningful at farm scale.
+//! * [`backend`] — [`SimBackend`]: a [`crate::coordinator::InferenceBackend`]
+//!   that serves batched requests straight from the farm, with zero PJRT
+//!   artifacts (`trim serve --backend sim`).
+
+pub mod backend;
+pub mod farm;
+pub mod shard;
+
+pub use backend::{SimBackend, SimNetSpec};
+pub use farm::{EngineFarm, FarmConfig, FarmRunResult, PipelineRunResult, PipelineStage};
+pub use shard::{plan_filter_shards, Shard, ShardMode, ShardPlan};

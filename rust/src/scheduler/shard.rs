@@ -1,0 +1,173 @@
+//! Sharding planner: split one [`ConvLayer`] into independent pieces of
+//! work along the paper's own step structure.
+//!
+//! The TrIM engine executes a layer as `⌈N/P_N⌉ × ⌈M/P_M⌉` computational
+//! steps (eq. (2)): the outer loop walks *filter groups* of `P_N` filters,
+//! and filters never share state — each core owns one filter and one psum
+//! buffer (Fig. 6). Filter groups are therefore the natural shard unit for
+//! a farm of engines (the multi-fabric scaling of the 3D-TrIM follow-up):
+//! give each engine a contiguous run of whole filter groups and the union
+//! of the shard ofmaps is bit-identical to a single-engine run, while the
+//! shard access counters partition the single-engine counters exactly.
+//!
+//! Tiled layers (K > K_nat, §V) keep a different *intra*-engine schedule,
+//! but filters remain independent there too, so the same filter-aligned
+//! split stays exact.
+
+use crate::arch::ArchConfig;
+use crate::model::ConvLayer;
+use std::ops::Range;
+
+/// How the farm distributes work (see [`crate::scheduler::EngineFarm`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardMode {
+    /// Split each layer's filters across engines (data-parallel within a
+    /// layer); every engine sees every input activation.
+    FilterShards,
+    /// Pin each layer of a network to an engine and stream images through
+    /// (pipeline-parallel across layers); engine `i` runs layers
+    /// `i, i+E, …` of the chain.
+    LayerPipeline,
+}
+
+impl std::str::FromStr for ShardMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "filter" | "filters" | "shards" => Ok(Self::FilterShards),
+            "pipeline" | "layers" => Ok(Self::LayerPipeline),
+            other => Err(anyhow::anyhow!("unknown shard mode {other:?} (expected filter|pipeline)")),
+        }
+    }
+}
+
+/// One engine's piece of a layer: a contiguous filter range, aligned to
+/// `P_N`-filter group boundaries (except for the tail of the layer).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    /// Shard index (== the engine it is dispatched to).
+    pub index: usize,
+    /// Filters `[start, end)` of the layer this shard computes.
+    pub filters: Range<usize>,
+    /// Whole filter groups of `P_N` covered by this shard.
+    pub groups: usize,
+}
+
+/// The per-layer shard assignment.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// One entry per engine that received work (`len() ≤ engines`).
+    pub shards: Vec<Shard>,
+    /// Total filter groups in the layer: `⌈N/P_N⌉`.
+    pub filter_groups: usize,
+    /// The group size the split is aligned to (`P_N` of the engine).
+    pub p_n: usize,
+}
+
+impl ShardPlan {
+    /// Upper bound on the parallel speedup this split can deliver
+    /// (whole-layer groups over the largest shard's groups).
+    pub fn speedup_bound(&self) -> f64 {
+        let largest = self.shards.iter().map(|s| s.groups).max().unwrap_or(1);
+        self.filter_groups as f64 / largest as f64
+    }
+}
+
+/// Split `layer` into at most `engines` filter shards on `P_N`-group
+/// boundaries, balancing whole groups as evenly as possible.
+///
+/// Guarantees (property-tested in tests/scheduler_farm.rs):
+/// * shards are non-empty, disjoint, contiguous and cover `0..N`;
+/// * every shard boundary except the layer end is a multiple of `P_N`;
+/// * shard group counts differ by at most one;
+/// * `shards.len() == min(engines, ⌈N/P_N⌉)`.
+pub fn plan_filter_shards(arch: &ArchConfig, layer: &ConvLayer, engines: usize) -> ShardPlan {
+    assert!(engines >= 1, "need at least one engine");
+    assert!(layer.n >= 1, "layer has no filters");
+    let p_n = arch.p_n;
+    let filter_groups = layer.n.div_ceil(p_n);
+    let n_shards = engines.min(filter_groups);
+    let base = filter_groups / n_shards;
+    let extra = filter_groups % n_shards;
+    let mut shards = Vec::with_capacity(n_shards);
+    let mut group0 = 0usize;
+    for index in 0..n_shards {
+        let groups = base + usize::from(index < extra);
+        let start = group0 * p_n;
+        let end = ((group0 + groups) * p_n).min(layer.n);
+        shards.push(Shard { index, filters: start..end, groups });
+        group0 += groups;
+    }
+    ShardPlan { shards, filter_groups, p_n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(n: usize) -> ConvLayer {
+        ConvLayer::new("s", 8, 3, 2, n, 1, 1)
+    }
+
+    fn check_invariants(plan: &ShardPlan, n: usize, engines: usize) {
+        assert_eq!(plan.shards.len(), engines.min(plan.filter_groups));
+        let mut next = 0usize;
+        for (i, s) in plan.shards.iter().enumerate() {
+            assert_eq!(s.index, i);
+            assert_eq!(s.filters.start, next, "contiguous");
+            assert!(s.filters.start < s.filters.end, "non-empty");
+            if s.filters.end != n {
+                assert_eq!(s.filters.end % plan.p_n, 0, "group-aligned");
+            }
+            next = s.filters.end;
+        }
+        assert_eq!(next, n, "covers all filters");
+        let gmin = plan.shards.iter().map(|s| s.groups).min().unwrap();
+        let gmax = plan.shards.iter().map(|s| s.groups).max().unwrap();
+        assert!(gmax - gmin <= 1, "balanced");
+    }
+
+    #[test]
+    fn splits_on_group_boundaries() {
+        let cfg = ArchConfig::small(3, 2, 2); // P_N = 2
+        for n in [1, 2, 3, 5, 7, 8, 64] {
+            for engines in [1, 2, 3, 4, 9] {
+                let plan = plan_filter_shards(&cfg, &layer(n), engines);
+                check_invariants(&plan, n, engines);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_engine_vgg_cl2_split() {
+        // VGG-16 CL2: N = 64 on P_N = 7 → 10 filter groups; 4 engines get
+        // 3+3+2+2 groups.
+        let cfg = ArchConfig::paper_engine();
+        let l = ConvLayer::new("CL2", 224, 3, 64, 64, 1, 1);
+        let plan = plan_filter_shards(&cfg, &l, 4);
+        assert_eq!(plan.filter_groups, 10);
+        let groups: Vec<usize> = plan.shards.iter().map(|s| s.groups).collect();
+        assert_eq!(groups, vec![3, 3, 2, 2]);
+        assert_eq!(plan.shards[0].filters, 0..21);
+        assert_eq!(plan.shards[3].filters, 56..64);
+        assert!((plan.speedup_bound() - 10.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_engines_than_groups_caps_shards() {
+        let cfg = ArchConfig::small(3, 2, 4); // P_N = 4
+        let plan = plan_filter_shards(&cfg, &layer(6), 8);
+        assert_eq!(plan.filter_groups, 2);
+        assert_eq!(plan.shards.len(), 2);
+        assert_eq!(plan.shards[0].filters, 0..4);
+        assert_eq!(plan.shards[1].filters, 4..6);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!("filter".parse::<ShardMode>().unwrap(), ShardMode::FilterShards);
+        assert_eq!("pipeline".parse::<ShardMode>().unwrap(), ShardMode::LayerPipeline);
+        assert!("bogus".parse::<ShardMode>().is_err());
+    }
+}

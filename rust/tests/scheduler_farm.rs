@@ -1,0 +1,259 @@
+//! Scheduler/engine-farm integration: property tests (randomised with the
+//! in-tree SplitMix64 driver, like tests/proptest_invariants.rs) plus the
+//! acceptance workloads — farm output must be bit-exact against both the
+//! golden convolution oracle and a single-engine `EngineSim` run, for any
+//! engine count, in both sharding modes, including the tiled K > 3 path
+//! and full-size VGG-16 / AlexNet layers; and the coordinator must serve a
+//! ≥ 96-request batched workload from the sim backend with no artifacts.
+
+use std::sync::Arc;
+use trim_sa::arch::{ArchConfig, EngineSim};
+use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend};
+use trim_sa::golden::{conv3d_i32, Tensor3};
+use trim_sa::model::quant::Requant;
+use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer};
+use trim_sa::scheduler::{
+    plan_filter_shards, EngineFarm, FarmConfig, PipelineStage, ShardMode, SimBackend, SimNetSpec,
+};
+use trim_sa::util::SplitMix64;
+
+fn rand_tensor(rng: &mut SplitMix64, c: usize, h: usize, w: usize) -> Tensor3 {
+    Tensor3 { c, h, w, data: rng.vec_i32(c * h * w, -96, 96) }
+}
+
+/// Property: for random layer shapes (native 3×3 and tiled 5×5/7×7 paths,
+/// strided and padded) and any engine count, the farm's reassembled ofmaps
+/// are bit-exact against the golden conv AND a single-engine run, and its
+/// summed access counters partition the single-engine counters exactly
+/// (cycles take the max, so they may only shrink).
+#[test]
+fn prop_farm_bit_exact_any_engine_count() {
+    let mut rng = SplitMix64::new(0xFA51);
+    for seed in 0..14u64 {
+        let k = [3usize, 3, 5, 7][rng.range(0, 4)];
+        let hw = rng.range(k + 3, k + 12);
+        let m = rng.range(1, 5);
+        let n = rng.range(1, 10);
+        let stride = rng.range(1, 3);
+        let pad = rng.range(0, 2);
+        let layer = ConvLayer::new("prop", hw, k, m, n, stride, pad);
+        let input = rand_tensor(&mut rng, m, hw, hw);
+        let weights = rng.vec_i32(n * m * k * k, -9, 9);
+        let engines = rng.range(1, 6);
+        let arch = ArchConfig::small(3, 2, rng.range(1, 4));
+
+        let golden = conv3d_i32(&input, &weights, n, k, stride, pad);
+        let single = EngineSim::new(arch).run_layer(&layer, &input, &weights);
+        let farm = EngineFarm::new(FarmConfig::new(engines, arch));
+        let r = farm.run_layer(&layer, &input, &weights);
+
+        let ctx = format!("seed {seed}: k={k} hw={hw} m={m} n={n} s={stride} p={pad} e={engines}");
+        assert_eq!(r.ofmaps, golden, "{ctx}: farm vs golden");
+        assert_eq!(r.ofmaps, single.ofmaps, "{ctx}: farm vs single engine");
+        assert_eq!(r.stats.macs, single.stats.macs, "{ctx}: MACs conserved");
+        assert_eq!(r.stats.ext_input_reads, single.stats.ext_input_reads, "{ctx}: reads conserved");
+        assert_eq!(r.stats.output_writes, single.stats.output_writes, "{ctx}: writes conserved");
+        assert_eq!(
+            r.stats.psum_buf_reads + r.stats.psum_buf_writes,
+            single.stats.psum_buf_reads + single.stats.psum_buf_writes,
+            "{ctx}: on-chip accesses conserved"
+        );
+        assert!(r.stats.cycles <= single.stats.cycles, "{ctx}: parallel cycles must not grow");
+        assert_eq!(
+            r.stats.cycles,
+            r.per_shard.iter().map(|s| s.cycles).max().unwrap(),
+            "{ctx}: cycles = max over shards"
+        );
+    }
+}
+
+/// Property: the layer-pipeline mode produces bit-identical activations to
+/// a serial golden chain (conv + requant per stage) for any engine count
+/// and batch size, with outputs in input order.
+#[test]
+fn prop_pipeline_bit_exact_any_engine_count() {
+    let mut rng = SplitMix64::new(0xBEEF);
+    for seed in 0..8u64 {
+        let depth = rng.range(2, 4);
+        let hw0 = rng.range(10, 15);
+        let mut chans = vec![rng.range(1, 4)];
+        for _ in 0..depth {
+            chans.push(rng.range(1, 5));
+        }
+        // Build a chain of pad-1 layers (3×3 keeps H, 5×5 shrinks by 2).
+        let mut layers = Vec::new();
+        let mut hw = hw0;
+        for d in 0..depth {
+            let k = if rng.range(0, 3) == 0 { 5 } else { 3 };
+            let l = ConvLayer::new("pl", hw, k, chans[d], chans[d + 1], 1, 1);
+            hw = l.h_o();
+            layers.push(l);
+        }
+        let q = Requant::new(5, 8);
+        let stages: Vec<PipelineStage> = layers
+            .iter()
+            .map(|l| PipelineStage {
+                layer: l.clone(),
+                weights: Arc::new(rng.vec_i32(l.n * l.m * l.k * l.k, -7, 7)),
+                requant: Some(q),
+            })
+            .collect();
+        let batch = rng.range(1, 5);
+        let images: Vec<Tensor3> =
+            (0..batch).map(|_| rand_tensor(&mut rng, chans[0], hw0, hw0)).collect();
+        let engines = rng.range(1, 4);
+        let farm = EngineFarm::new(FarmConfig::new(engines, ArchConfig::small(3, 2, 2)));
+        let r = farm.run_pipeline(&stages, images.clone());
+
+        for (img_idx, (img, out)) in images.iter().zip(&r.outputs).enumerate() {
+            let mut act = img.clone();
+            for s in &stages {
+                let mut next = conv3d_i32(&act, &s.weights, s.layer.n, s.layer.k, s.layer.stride, s.layer.pad);
+                for v in next.data.iter_mut() {
+                    *v = q.apply(*v as i64) as i32;
+                }
+                act = next;
+            }
+            assert_eq!(out, &act, "seed {seed} image {img_idx}: depth={depth} e={engines}");
+        }
+    }
+}
+
+/// Property: the shard planner's structural invariants hold for arbitrary
+/// (P_N, N, engines) — full cover, disjoint contiguous ranges, group
+/// alignment, balance within one group, shard count = min(engines, groups).
+#[test]
+fn prop_shard_planner_invariants() {
+    let mut rng = SplitMix64::new(0x51AD);
+    for _ in 0..200 {
+        let p_n = rng.range(1, 9);
+        let n = rng.range(1, 120);
+        let engines = rng.range(1, 10);
+        let arch = ArchConfig { p_n, ..ArchConfig::paper_engine() };
+        let layer = ConvLayer::new("p", 8, 3, 2, n, 1, 1);
+        let plan = plan_filter_shards(&arch, &layer, engines);
+        assert_eq!(plan.filter_groups, n.div_ceil(p_n));
+        assert_eq!(plan.shards.len(), engines.min(plan.filter_groups));
+        let mut next = 0usize;
+        for s in &plan.shards {
+            assert_eq!(s.filters.start, next);
+            assert!(s.filters.start < s.filters.end);
+            if s.filters.end != n {
+                assert_eq!(s.filters.end % p_n, 0, "p_n={p_n} n={n} e={engines}");
+            }
+            next = s.filters.end;
+        }
+        assert_eq!(next, n);
+        let gmin = plan.shards.iter().map(|s| s.groups).min().unwrap();
+        let gmax = plan.shards.iter().map(|s| s.groups).max().unwrap();
+        assert!(gmax - gmin <= 1);
+        assert!(plan.speedup_bound() >= 1.0);
+    }
+}
+
+/// Acceptance: a farm with N ≥ 2 engines is byte-identical to the
+/// single-engine `EngineSim` and to the golden conv on a full-size VGG-16
+/// layer (CL1: 3→64 filters over 224×224).
+#[test]
+fn vgg16_cl1_full_size_farm_bit_exact() {
+    let net = vgg16();
+    let layer = net.layers[0].clone();
+    assert_eq!((layer.h_i, layer.m, layer.n), (224, 3, 64));
+    let mut rng = SplitMix64::new(16);
+    let input = Tensor3 { c: 3, h: 224, w: 224, data: rng.vec_i32(3 * 224 * 224, 0, 256) };
+    let weights = rng.vec_i32(64 * 3 * 9, -8, 8);
+    let arch = ArchConfig::small(3, 2, 4);
+    let arch = ArchConfig { w_im: 226, psum_buf_depth: 224 * 224, ..arch };
+    let golden = conv3d_i32(&input, &weights, 64, 3, 1, 1);
+    let single = EngineSim::new(arch).run_layer(&layer, &input, &weights);
+    let farm = EngineFarm::new(FarmConfig::new(4, arch));
+    let r = farm.run_layer(&layer, &input, &weights);
+    assert_eq!(r.plan.shards.len(), 4);
+    assert_eq!(r.ofmaps, golden, "farm vs golden on VGG-16 CL1");
+    assert_eq!(r.ofmaps, single.ofmaps, "farm vs single engine on VGG-16 CL1");
+    assert_eq!(r.stats.ext_input_reads, single.stats.ext_input_reads);
+    assert!(r.stats.cycles < single.stats.cycles, "4-way sharding must cut wall-clock cycles");
+}
+
+/// Acceptance: same bit-exactness on a full-size AlexNet layer (CL5:
+/// 192→256 filters over 13×13).
+#[test]
+fn alexnet_cl5_full_size_farm_bit_exact() {
+    let net = alexnet();
+    let layer = net.layers[4].clone();
+    assert_eq!((layer.h_i, layer.m, layer.n, layer.k), (13, 192, 256, 3));
+    let mut rng = SplitMix64::new(5);
+    let input = Tensor3 { c: 192, h: 13, w: 13, data: rng.vec_i32(192 * 13 * 13, 0, 256) };
+    let weights = rng.vec_i32(256 * 192 * 9, -6, 6);
+    let arch = ArchConfig::small(3, 8, 4);
+    let golden = conv3d_i32(&input, &weights, 256, 3, 1, 1);
+    let single = EngineSim::new(arch).run_layer(&layer, &input, &weights);
+    let farm = EngineFarm::new(FarmConfig::new(3, arch));
+    let r = farm.run_layer(&layer, &input, &weights);
+    assert_eq!(r.ofmaps, golden, "farm vs golden on AlexNet CL5");
+    assert_eq!(r.ofmaps, single.ofmaps, "farm vs single engine on AlexNet CL5");
+    assert!(r.stats.cycles < single.stats.cycles);
+}
+
+/// Acceptance: the tiled K > 3 path shards bit-exactly too — AlexNet CL2
+/// geometry (5×5 kernels, pad 2) at reduced channel counts.
+#[test]
+fn alexnet_cl2_geometry_tiled_farm_bit_exact() {
+    let layer = ConvLayer::new("CL2s", 27, 5, 6, 10, 1, 2);
+    let mut rng = SplitMix64::new(52);
+    let input = Tensor3 { c: 6, h: 27, w: 27, data: rng.vec_i32(6 * 27 * 27, 0, 256) };
+    let weights = rng.vec_i32(10 * 6 * 25, -6, 6);
+    let arch = ArchConfig::small(3, 2, 2);
+    let golden = conv3d_i32(&input, &weights, 10, 5, 1, 2);
+    let single = EngineSim::new(arch).run_layer(&layer, &input, &weights);
+    let farm = EngineFarm::new(FarmConfig::new(3, arch));
+    let r = farm.run_layer(&layer, &input, &weights);
+    assert_eq!(r.ofmaps, golden, "tiled farm vs golden");
+    assert_eq!(r.ofmaps, single.ofmaps, "tiled farm vs single engine");
+}
+
+fn serve_workload(mode: ShardMode) {
+    let n_req = 96usize;
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(20) },
+    };
+    let probe = SimBackend::with_spec(1, ArchConfig::small(3, 2, 1), SimNetSpec::tiny(), mode);
+    let c = Coordinator::start_with(
+        move || {
+            Ok(Box::new(SimBackend::with_spec(3, ArchConfig::small(3, 2, 1), SimNetSpec::tiny(), mode))
+                as Box<dyn InferenceBackend>)
+        },
+        cfg,
+    )
+    .unwrap();
+    assert!(c.backend_description().starts_with("sim["));
+    let len = c.input_len();
+    let images: Vec<Vec<i32>> = (0..n_req)
+        .map(|i| SplitMix64::new(1000 + i as u64).vec_i32(len, 0, 256))
+        .collect();
+    let pending: Vec<_> = images.iter().map(|img| c.submit(img.clone()).unwrap()).collect();
+    let mut max_batch_seen = 0usize;
+    for (img, rx) in images.iter().zip(pending) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits, probe.reference_logits(img), "{mode:?}: wrong logits");
+        max_batch_seen = max_batch_seen.max(resp.batch_size);
+    }
+    let m = c.metrics();
+    assert_eq!(m.requests, n_req as u64);
+    assert!(max_batch_seen > 1, "{mode:?}: expected batched execution under load");
+    assert!(m.batches < n_req as u64, "{mode:?}: batches = {}", m.batches);
+}
+
+/// Acceptance: `trim serve --backend sim` semantics — the coordinator
+/// completes a 96-request workload with real batching, zero artifacts, and
+/// every logit pinned to the golden reference (filter-shard mode).
+#[test]
+fn coordinator_serves_96_requests_sim_filter_shards() {
+    serve_workload(ShardMode::FilterShards);
+}
+
+/// Same workload through the layer-pipeline mode.
+#[test]
+fn coordinator_serves_96_requests_sim_layer_pipeline() {
+    serve_workload(ShardMode::LayerPipeline);
+}
