@@ -50,7 +50,10 @@ fn main() -> anyhow::Result<()> {
             batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
         };
         let d = dir.clone();
-        let c = Coordinator::start_with(move || make_backend(BackendKind::Auto, &d, sim_engines), cfg)?;
+        let c = Coordinator::start_with(
+            move || make_backend(BackendKind::Auto, &d, sim_engines, trim_sa::arch::ExecFidelity::Fast),
+            cfg,
+        )?;
         if max_batch == 1 {
             println!("backend: {}", c.backend_description());
         }

@@ -1,19 +1,26 @@
 //! Bench: serving throughput vs engine-farm size — requests/sec at 1, 2,
-//! 4, 8 simulated TrIM engines, in both sharding modes, through the full
-//! coordinator (ingress → batcher → sim backend). Needs no artifacts.
+//! 4, 8 simulated TrIM engines, in both sharding modes and both execution
+//! fidelities, through the full coordinator (ingress → batcher → sim
+//! backend). Needs no artifacts.
+//!
+//! The fidelity axis is the PR-over-PR trajectory hook: `register` is the
+//! farm's pre-fast-tier behaviour (every engine cycle-accurate), `fast` is
+//! the current default — same logits, closed-form counters. The rps ratio
+//! between the two at equal engine count is the serving-level speedup of
+//! the fast tier.
 //!
 //! Emits one JSON line per configuration (prefixed `JSON `) so the bench
 //! trajectory can be scraped into EXPERIMENTS.md / dashboards:
 //!
 //! ```text
-//! JSON {"bench":"farm_scaling","mode":"FilterShards","engines":4,...}
+//! JSON {"bench":"farm_scaling","mode":"FilterShards","fidelity":"fast",...}
 //! ```
 
 #[path = "bench_harness.rs"]
 mod harness;
 use harness::header;
 use std::time::{Duration, Instant};
-use trim_sa::arch::ArchConfig;
+use trim_sa::arch::{ArchConfig, ExecFidelity};
 use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend};
 use trim_sa::scheduler::{ShardMode, SimBackend, SimNetSpec};
 
@@ -22,58 +29,61 @@ fn main() -> anyhow::Result<()> {
     let n_req = 96usize; // the acceptance-sized workload
     let max_batch = 8usize;
     let mut json_lines = Vec::new();
-    for mode in [ShardMode::FilterShards, ShardMode::LayerPipeline] {
-        let mut base_rps = 0.0f64;
-        for engines in [1usize, 2, 4, 8] {
-            let cfg = CoordinatorConfig {
-                batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
-            };
-            let c = Coordinator::start_with(
-                move || {
-                    Ok(Box::new(SimBackend::with_spec(
-                        engines,
-                        ArchConfig::small(3, 2, 1),
-                        SimNetSpec::tiny(),
-                        mode,
-                    )) as Box<dyn InferenceBackend>)
-                },
-                cfg,
-            )?;
-            let len = c.input_len();
-            let t0 = Instant::now();
-            let pending: Vec<_> = (0..n_req)
-                .map(|i| {
-                    let img: Vec<i32> =
-                        (0..len).map(|j| ((i * 131 + j * 31) % 256) as i32).collect();
-                    c.submit(img).unwrap()
-                })
-                .collect();
-            for rx in pending {
-                rx.recv()?;
+    for fidelity in [ExecFidelity::Register, ExecFidelity::Fast] {
+        for mode in [ShardMode::FilterShards, ShardMode::LayerPipeline] {
+            let mut base_rps = 0.0f64;
+            for engines in [1usize, 2, 4, 8] {
+                let cfg = CoordinatorConfig {
+                    batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+                };
+                let c = Coordinator::start_with(
+                    move || {
+                        Ok(Box::new(SimBackend::with_fidelity(
+                            engines,
+                            ArchConfig::small(3, 2, 1),
+                            SimNetSpec::tiny(),
+                            mode,
+                            fidelity,
+                        )) as Box<dyn InferenceBackend>)
+                    },
+                    cfg,
+                )?;
+                let len = c.input_len();
+                let t0 = Instant::now();
+                let pending: Vec<_> = (0..n_req)
+                    .map(|i| {
+                        let img: Vec<i32> =
+                            (0..len).map(|j| ((i * 131 + j * 31) % 256) as i32).collect();
+                        c.submit(img).unwrap()
+                    })
+                    .collect();
+                for rx in pending {
+                    rx.recv()?;
+                }
+                let wall = t0.elapsed();
+                let m = c.metrics();
+                let rps = n_req as f64 / wall.as_secs_f64();
+                if engines == 1 {
+                    base_rps = rps;
+                }
+                println!(
+                    "{fidelity:<8} {mode:?} engines={engines:<2} {rps:>9.1} req/s ({:>5.2}x vs 1 engine)  p50 {:>9.3?}  p95 {:>9.3?}  {} batches (mean {:.1})",
+                    rps / base_rps,
+                    m.p50_latency,
+                    m.p95_latency,
+                    m.batches,
+                    m.mean_batch
+                );
+                json_lines.push(format!(
+                    "JSON {{\"bench\":\"farm_scaling\",\"mode\":\"{mode:?}\",\"fidelity\":\"{fidelity}\",\
+                     \"engines\":{engines},\"requests\":{n_req},\"max_batch\":{max_batch},\"rps\":{rps:.2},\
+                     \"speedup_vs_1\":{:.3},\"p50_us\":{},\"p95_us\":{},\"mean_batch\":{:.2}}}",
+                    rps / base_rps,
+                    m.p50_latency.as_micros(),
+                    m.p95_latency.as_micros(),
+                    m.mean_batch
+                ));
             }
-            let wall = t0.elapsed();
-            let m = c.metrics();
-            let rps = n_req as f64 / wall.as_secs_f64();
-            if engines == 1 {
-                base_rps = rps;
-            }
-            println!(
-                "{mode:?} engines={engines:<2} {rps:>8.1} req/s ({:>5.2}x vs 1 engine)  p50 {:>9.3?}  p95 {:>9.3?}  {} batches (mean {:.1})",
-                rps / base_rps,
-                m.p50_latency,
-                m.p95_latency,
-                m.batches,
-                m.mean_batch
-            );
-            json_lines.push(format!(
-                "JSON {{\"bench\":\"farm_scaling\",\"mode\":\"{mode:?}\",\"engines\":{engines},\
-                 \"requests\":{n_req},\"max_batch\":{max_batch},\"rps\":{rps:.2},\
-                 \"speedup_vs_1\":{:.3},\"p50_us\":{},\"p95_us\":{},\"mean_batch\":{:.2}}}",
-                rps / base_rps,
-                m.p50_latency.as_micros(),
-                m.p95_latency.as_micros(),
-                m.mean_batch
-            ));
         }
     }
     for line in &json_lines {

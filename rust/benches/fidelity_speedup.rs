@@ -1,0 +1,76 @@
+//! Bench: fast vs register execution tier ([`trim_sa::arch::ExecFidelity`])
+//! on FULL-SIZE layers — VGG-16 CL1 (224×224, 3→64), VGG-16 CL13 (14×14,
+//! 512→512, the channel-heavy worst case: ~262k slice sweeps on the
+//! register tier) and AlexNet CL1 (227×227, 11×11 stride 4 — the §V tiled
+//! path). Both tiers are run on identical inputs; the bench asserts they
+//! agree bit-for-bit (ofmaps) and counter-for-counter (stats) before
+//! timing, so the speedup it reports is for *identical results*.
+//!
+//! Emits one JSON line per layer (prefixed `JSON `) for the bench
+//! trajectory in EXPERIMENTS.md:
+//!
+//! ```text
+//! JSON {"bench":"fidelity_speedup","layer":"VGG16-CL13","fast_ms":...,
+//!       "register_ms":...,"speedup":...,"exact":true}
+//! ```
+
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::{bench, header};
+use std::time::Instant;
+use trim_sa::arch::{ArchConfig, EngineSim};
+use trim_sa::golden::Tensor3;
+use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer};
+use trim_sa::util::SplitMix64;
+
+fn main() {
+    header("fidelity speedup — fast vs register tier on full-size layers");
+    let cfg = ArchConfig::paper_engine();
+    let register = EngineSim::new(cfg);
+    let fast = EngineSim::fast(cfg);
+    let cases: Vec<(&str, ConvLayer)> = vec![
+        ("VGG16-CL1", vgg16().layers[0].clone()),
+        ("VGG16-CL13", vgg16().layers[12].clone()),
+        ("AlexNet-CL1", alexnet().layers[0].clone()),
+    ];
+    let mut json = Vec::new();
+    for (name, layer) in &cases {
+        let mut rng = SplitMix64::new(0xF1DE);
+        let input = Tensor3 {
+            c: layer.m,
+            h: layer.h_i,
+            w: layer.w_i,
+            data: rng.vec_i32(layer.m * layer.h_i * layer.w_i, 0, 256),
+        };
+        let weights = rng.vec_i32(layer.weight_elems() as usize, -8, 8);
+
+        // One register run serves as both the timed measurement (it is
+        // deterministic and seconds-long at full size — don't pay for it
+        // twice) and the exactness oracle for the fast tier.
+        let t0 = Instant::now();
+        let rr = register.run_layer(layer, &input, &weights);
+        let register_s = t0.elapsed().as_secs_f64();
+        let rf = fast.run_layer(layer, &input, &weights);
+        let exact = rf.ofmaps == rr.ofmaps && rf.stats == rr.stats;
+        assert!(exact, "{name}: fast tier diverged from the register oracle");
+
+        let fast_r = bench(&format!("{name} fast"), 1, 5, || fast.run_layer(layer, &input, &weights));
+        println!("{fast_r}");
+        let speedup = register_s / fast_r.mean.as_secs_f64();
+        println!(
+            "{name}: register {:.1} ms -> fast {:.3} ms = {speedup:.1}x (bit- and counter-exact)\n",
+            register_s * 1e3,
+            fast_r.mean.as_secs_f64() * 1e3,
+        );
+        json.push(format!(
+            "JSON {{\"bench\":\"fidelity_speedup\",\"layer\":\"{name}\",\"fast_ms\":{:.3},\
+             \"register_ms\":{:.3},\"speedup\":{:.1},\"exact\":{exact}}}",
+            fast_r.mean.as_secs_f64() * 1e3,
+            register_s * 1e3,
+            speedup,
+        ));
+    }
+    for l in &json {
+        println!("{l}");
+    }
+}

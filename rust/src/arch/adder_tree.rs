@@ -28,9 +28,27 @@ impl AdderTree {
         (fan_in as f64).log2().ceil() as usize
     }
 
+    /// Pipeline latency of a `fan_in`-input tree without constructing one:
+    /// reduction stages plus the output register. Used by the core's
+    /// per-step cycle accounting and the fast tier's closed-form cycle
+    /// model ([`super::fastsim`]) — `AdderTree::new(n).latency()` for any
+    /// `n`, as a pure function.
+    pub fn latency_for(fan_in: usize) -> usize {
+        Self::stages_for(fan_in) + 1
+    }
+
     /// Stages + output register.
     pub fn latency(&self) -> usize {
         self.pipeline.len()
+    }
+
+    /// Flush all in-flight state (fresh pass) without reallocating the
+    /// stage queue.
+    pub fn reset(&mut self) {
+        for slot in self.pipeline.iter_mut() {
+            *slot = None;
+        }
+        self.adds = 0;
     }
 
     /// Clock the tree: feed `inputs` (or None for a bubble), get the value
@@ -71,6 +89,25 @@ mod tests {
         // ⌈log2 3⌉ = 2 stages + output register = 3-cycle latency.
         let t = AdderTree::new(3);
         assert_eq!(t.latency(), 3);
+    }
+
+    #[test]
+    fn latency_for_matches_constructed_tree() {
+        for n in 1..=32 {
+            assert_eq!(AdderTree::latency_for(n), AdderTree::new(n).latency(), "fan-in {n}");
+        }
+    }
+
+    #[test]
+    fn reset_flushes_in_flight_values() {
+        let mut t = AdderTree::new(3);
+        t.step(Some(&[1, 2, 3]));
+        t.reset();
+        assert_eq!(t.drain(), Vec::<i64>::new());
+        assert_eq!(t.adds(), 0);
+        // still usable after a reset
+        t.step(Some(&[4, 5, 6]));
+        assert_eq!(t.drain(), vec![15]);
     }
 
     #[test]

@@ -1,6 +1,55 @@
-//! Architecture configuration (the free parameters of Figs. 3–6).
+//! Architecture configuration (the free parameters of Figs. 3–6) and the
+//! execution-fidelity tier selection.
 
+/// Which execution tier an [`crate::arch::EngineSim`] runs.
+///
+/// Both tiers produce **identical** results — same ofmaps bit-for-bit,
+/// same [`crate::arch::SimStats`] counter-for-counter (property-tested in
+/// `tests/proptest_invariants.rs`); they differ only in how those results
+/// are obtained, and therefore in wall-clock cost:
+///
+/// * [`ExecFidelity::Register`] steps every PE register, RSRB stage and
+///   adder-tree pipeline cycle by cycle — the measurement oracle.
+/// * [`ExecFidelity::Fast`] computes ofmaps with a blocked direct
+///   convolution and synthesizes the counters from the closed-form model
+///   of [`crate::arch::fastsim`] (eq. (2) + the Tables I–II access
+///   formulas) — the serving tier, orders of magnitude faster per layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecFidelity {
+    /// Functional fast path + analytical counters (the farm default).
+    #[default]
+    Fast,
+    /// Cycle-accurate register simulation (the validation oracle).
+    Register,
+}
 
+impl ExecFidelity {
+    /// CLI-facing name (`--fidelity fast|register`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Fast => "fast",
+            Self::Register => "register",
+        }
+    }
+}
+
+impl std::fmt::Display for ExecFidelity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+impl std::str::FromStr for ExecFidelity {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "fast" | "functional" => Ok(Self::Fast),
+            "register" | "cycle" | "rtl" => Ok(Self::Register),
+            other => Err(anyhow::anyhow!("unknown fidelity {other:?} (expected fast|register)")),
+        }
+    }
+}
 
 /// Parameters of a TrIM engine instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -87,5 +136,14 @@ mod tests {
         // eq. (3): 7 · 224² · 32 = 11.24 Mb — just above the XCZU7EV's 11 Mb,
         // the paper's stated BRAM constraint (10.21 Mb used after synthesis).
         assert!((c.psum_buffer_bits() as f64 / 1e6 - 11.24) < 0.3);
+    }
+
+    #[test]
+    fn fidelity_parses_and_defaults_fast() {
+        assert_eq!("fast".parse::<ExecFidelity>().unwrap(), ExecFidelity::Fast);
+        assert_eq!("register".parse::<ExecFidelity>().unwrap(), ExecFidelity::Register);
+        assert!("quick".parse::<ExecFidelity>().is_err());
+        assert_eq!(ExecFidelity::default(), ExecFidelity::Fast);
+        assert_eq!(ExecFidelity::Register.to_string(), "register");
     }
 }

@@ -24,6 +24,12 @@
 //! paper reports 2.13 GOPs/s, implying an almost fully serialised tile
 //! schedule; our packing is more aggressive (~19 GOPs/s). The qualitative
 //! result is unchanged — CL1 is the only layer where Eyeriss beats TrIM.
+//!
+//! [`StepPlan`] carries eq. (2)'s *analytical* cycle count (`total_cycles`
+//! folds the per-step pipeline overheads into `L_I`, as the paper does);
+//! the fast tier's [`super::fastsim::analytic_stats`] extends this plan to
+//! the register-measured counters — same step grid, plus the explicit
+//! slice-skew and adder-tree latencies each measured step pays.
 
 use super::config::ArchConfig;
 use crate::model::{ConvLayer, KernelTiling};

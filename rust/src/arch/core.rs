@@ -81,17 +81,15 @@ impl CoreSim {
         }
 
         // Spatial reduction. Numerically this is an exact sum; timing-wise
-        // it adds the pipelined tree latency once per step.
-        let mut tree = AdderTree::new(slice_outputs.len().max(2));
+        // it adds the pipelined tree latency once per step — taken from
+        // [`AdderTree::latency_for`] rather than a throwaway tree instance.
         let mut partial = vec![0i64; h_o * w_o];
-        for (ci, out) in slice_outputs.iter().enumerate() {
+        for out in &slice_outputs {
             for (i, &v) in out.iter().enumerate() {
                 partial[i] += v as i64;
             }
-            let _ = ci;
         }
-        stats.cycles += tree.latency() as u64;
-        let _ = tree.step(None);
+        stats.cycles += AdderTree::latency_for(slice_outputs.len().max(2)) as u64;
 
         CoreRunResult { partial, h_o, w_o, stats }
     }

@@ -7,10 +7,20 @@
 //! the tiled large-kernel path of §V), while its cycle accounting follows
 //! the control plan of [`super::control`] (eq. (2)) and its psum-buffer
 //! access counters feed the memory-access model of Tables I–II.
+//!
+//! An engine runs at one of two [`ExecFidelity`] tiers. The **register**
+//! tier below is the measurement oracle: it steps every PE register. The
+//! **fast** tier ([`super::fastsim`]) produces the identical
+//! [`EngineRunResult`] — ofmaps bit-for-bit, stats counter-for-counter —
+//! from a blocked direct convolution plus the closed-form counter model,
+//! at a small fraction of the wall-clock cost. New code should default to
+//! fast and reach for [`EngineSim::new`] (register) only to validate.
 
-use super::config::ArchConfig;
+use super::config::{ArchConfig, ExecFidelity};
 use super::control::{plan_layer, StepPlan};
 use super::core::CoreSim;
+use super::fastsim;
+use super::slice::{InputView, SliceSim};
 use super::stats::SimStats;
 use crate::golden::Tensor3;
 use crate::model::{ConvLayer, KernelTiling};
@@ -27,15 +37,30 @@ pub struct EngineRunResult {
 /// Engine-level simulator.
 pub struct EngineSim {
     cfg: ArchConfig,
+    fidelity: ExecFidelity,
 }
 
 impl EngineSim {
+    /// A register-tier (cycle-accurate) engine — the validation oracle.
     pub fn new(cfg: ArchConfig) -> Self {
-        Self { cfg }
+        Self::with_fidelity(cfg, ExecFidelity::Register)
+    }
+
+    /// A fast-tier engine: identical results, closed-form counters.
+    pub fn fast(cfg: ArchConfig) -> Self {
+        Self::with_fidelity(cfg, ExecFidelity::Fast)
+    }
+
+    pub fn with_fidelity(cfg: ArchConfig, fidelity: ExecFidelity) -> Self {
+        Self { cfg, fidelity }
     }
 
     pub fn cfg(&self) -> &ArchConfig {
         &self.cfg
+    }
+
+    pub fn fidelity(&self) -> ExecFidelity {
+        self.fidelity
     }
 
     /// Per-group entry point for the farm scheduler ([`crate::scheduler`]):
@@ -76,17 +101,33 @@ impl EngineSim {
     }
 
     /// Run a full convolutional layer: `input` is `[M][H][W]`, `weights`
-    /// is flat `[N][M][K][K]`. Dispatches to the native or tiled path.
+    /// is flat `[N][M][K][K]`. Dispatches on the engine's fidelity tier,
+    /// then (register tier) on the native vs tiled kernel path.
     pub fn run_layer(&self, layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> EngineRunResult {
         assert_eq!(input.c, layer.m);
         assert_eq!(input.h, layer.h_i);
         assert_eq!(input.w, layer.w_i);
         assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
-        if layer.k <= self.cfg.k {
-            self.run_native(layer, input, weights)
-        } else {
-            self.run_tiled(layer, input, weights)
+        match self.fidelity {
+            ExecFidelity::Fast => self.run_fast(layer, input, weights),
+            ExecFidelity::Register => {
+                if layer.k <= self.cfg.k {
+                    self.run_native(layer, input, weights)
+                } else {
+                    self.run_tiled(layer, input, weights)
+                }
+            }
         }
+    }
+
+    /// Fast tier: blocked functional convolution + closed-form stats
+    /// ([`super::fastsim`]). Identical [`EngineRunResult`] to the register
+    /// paths below, enforced by property tests.
+    fn run_fast(&self, layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> EngineRunResult {
+        let plan = plan_layer(&self.cfg, layer);
+        let ofmaps = fastsim::conv_blocked(layer, input, weights);
+        let stats = fastsim::analytic_stats(&self.cfg, layer, &plan);
+        EngineRunResult { ofmaps, stats, plan }
     }
 
     /// Native path: K ≤ K_nat. Steps iterate ⌈N/P_N⌉ filter groups ×
@@ -107,6 +148,10 @@ impl EngineSim {
         let filters: Vec<usize> = (0..layer.n).collect();
         let channels: Vec<usize> = (0..layer.m).collect();
         let m_groups: Vec<&[usize]> = channels.chunks(cfg.p_m).collect();
+        // Long-lived cores: each slice resets its registers/RSRBs/scratch
+        // in place per step instead of being reallocated (§Perf).
+        let mut cores: Vec<CoreSim> =
+            (0..cfg.p_n.min(layer.n)).map(|_| CoreSim::new(cfg.k, cfg.p_m, w_im)).collect();
 
         for n_grp in filters.chunks(cfg.p_n) {
             for (mi, m_grp) in m_groups.iter().enumerate() {
@@ -115,7 +160,7 @@ impl EngineSim {
                 // --- compute phase (cores in parallel on broadcast inputs)
                 let mut step_cycles = 0u64;
                 for (ci, &f) in n_grp.iter().enumerate() {
-                    let mut core = CoreSim::new(cfg.k, m_grp.len(), w_im);
+                    let core = &mut cores[ci];
                     let chans: Vec<&[i32]> = m_grp.iter().map(|&c| input.channel(c)).collect();
                     let kerns: Vec<&[i32]> =
                         m_grp.iter().map(|&c| &weights[(f * layer.m + c) * kk..(f * layer.m + c + 1) * kk]).collect();
@@ -187,6 +232,10 @@ impl EngineSim {
             }
         }
 
+        // One long-lived slice simulator serves every (channel, tile) task
+        // (reset in place per pass), fed through shifted zero-tailed window
+        // views of the padded ifmap instead of per-task copies (§Perf).
+        let mut slice = SliceSim::new(k_nat, w_im);
         for f in 0..layer.n {
             let mut acc = vec![0i64; h_o * w_o];
             let mut first_task = true;
@@ -194,18 +243,10 @@ impl EngineSim {
                 let kern = &weights[(f * layer.m + c) * kk..(f * layer.m + c + 1) * kk];
                 for tile in &tiling.tiles {
                     let tw = tiling.extract_tile_weights(kern, tile);
-                    // shifted view of the padded channel
-                    let mut sub = vec![0i32; hs * ws];
-                    for y in 0..hs {
-                        for x in 0..ws {
-                            let (py, px) = (y + tile.row0, x + tile.col0);
-                            if py < hp && px < wp {
-                                sub[y * ws + x] = padded.get(c, py, px);
-                            }
-                        }
-                    }
-                    let mut slice = super::slice::SliceSim::new(k_nat, w_im);
-                    let r = slice.run_conv(&sub, hs, ws, &tw, 0, layer.stride);
+                    // shifted strided view of the padded channel
+                    let view =
+                        InputView::window(padded.channel(c), hp, wp, tile.row0, tile.col0, hs, ws);
+                    let r = slice.run_conv_view(&view, &tw, layer.stride);
                     debug_assert_eq!((r.h_o, r.w_o), (h_o, w_o));
                     let mut s = r.stats;
                     // Broadcast: the padded ifmap is read once per filter
@@ -368,5 +409,42 @@ mod tests {
         let r = EngineSim::new(cfg).run_layer(&layer, &input, &weights);
         // padded reads = M × 10 × 10 per filter group × 2 groups
         assert_eq!(r.stats.ext_input_reads, 2 * 10 * 10 * 2);
+    }
+
+    #[test]
+    fn fast_tier_equals_register_tier_native_and_tiled() {
+        // The two tiers must agree on ofmaps AND every stats counter —
+        // the broad randomized sweep lives in tests/proptest_invariants.rs;
+        // this pins the three canonical geometries.
+        for (hw, k, m, n, stride, pad) in
+            [(10usize, 3usize, 5usize, 5usize, 1usize, 1usize), (12, 5, 3, 4, 1, 2), (31, 11, 2, 3, 4, 0)]
+        {
+            let layer = ConvLayer::new("ft", hw, k, m, n, stride, pad);
+            let input = rand_tensor(m, hw, hw, 41);
+            let weights = rand_weights(n, m, k, 43);
+            let cfg = ArchConfig::small(3, 2, 2);
+            let reg = EngineSim::new(cfg).run_layer(&layer, &input, &weights);
+            let fast = EngineSim::fast(cfg).run_layer(&layer, &input, &weights);
+            assert_eq!(fast.ofmaps, reg.ofmaps, "k={k}: ofmaps");
+            assert_eq!(fast.stats, reg.stats, "k={k}: stats");
+            assert_eq!(fast.plan.total_cycles, reg.plan.total_cycles, "k={k}: plan");
+        }
+    }
+
+    #[test]
+    fn fast_tier_filter_range_partitions_like_register() {
+        let layer = ConvLayer::new("t", 10, 3, 5, 5, 1, 1);
+        let input = rand_tensor(5, 10, 10, 3);
+        let weights = rand_weights(5, 5, 3, 11);
+        let sim = EngineSim::fast(ArchConfig::small(3, 2, 2));
+        let whole = sim.run_layer(&layer, &input, &weights);
+        let lo = sim.run_filter_range(&layer, &input, &weights, 0..2);
+        let hi = sim.run_filter_range(&layer, &input, &weights, 2..5);
+        let (h_o, w_o) = (layer.h_o(), layer.w_o());
+        assert_eq!(lo.ofmaps.data[..], whole.ofmaps.data[..2 * h_o * w_o]);
+        assert_eq!(hi.ofmaps.data[..], whole.ofmaps.data[2 * h_o * w_o..]);
+        assert_eq!(lo.stats.macs + hi.stats.macs, whole.stats.macs);
+        assert_eq!(lo.stats.output_writes + hi.stats.output_writes, whole.stats.output_writes);
+        assert!(lo.stats.cycles.max(hi.stats.cycles) < whole.stats.cycles);
     }
 }

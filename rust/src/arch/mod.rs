@@ -17,11 +17,19 @@
 //!
 //! The [`control`] module holds the step scheduler shared with the
 //! analytical models (including the large-kernel tiling policy of §V).
+//!
+//! [`fastsim`] is the second execution tier: the same engine results
+//! (ofmaps bit-exact, stats counter-exact — property-tested) synthesized
+//! from a blocked functional convolution plus the closed-form counter
+//! model, selected via [`ExecFidelity`] on [`EngineSim`]. The register
+//! tier described above remains the oracle the fast tier is validated
+//! against.
 
 pub mod adder_tree;
 pub mod config;
 pub mod control;
 pub mod engine;
+pub mod fastsim;
 pub mod pe;
 pub mod rsrb;
 pub mod slice;
@@ -30,7 +38,7 @@ pub mod stats;
 #[allow(clippy::module_inception)]
 pub mod core;
 
-pub use config::ArchConfig;
+pub use config::{ArchConfig, ExecFidelity};
 pub use engine::EngineSim;
 pub use slice::SliceSim;
 pub use stats::SimStats;

@@ -8,10 +8,11 @@
 //! which is what makes the slice agnostic to ifmap size at run time.
 //!
 //! The simulator models the RSRB as a tapped delay line: `push` is the
-//! shift-in from the row above's retiring pass register; `pop`/`pop_group`
-//! read the mux output. Occupancy is tracked so the test suite can assert
-//! the structural capacity bound (`≤ W_IM`) and measure the tap position a
-//! given layer requires.
+//! shift-in from the row above's retiring pass register; `pop` reads the
+//! mux output (the slice pops K times back-to-back for the K-wide group
+//! dispatched at an output-row boundary). Occupancy is tracked so the test
+//! suite can assert the structural capacity bound (`≤ W_IM`) and measure
+//! the tap position a given layer requires.
 
 use std::collections::VecDeque;
 
@@ -74,6 +75,16 @@ impl Rsrb {
         Self { fifo: VecDeque::with_capacity(capacity), capacity, max_occupancy: 0, pushes: 0, pops: 0 }
     }
 
+    /// Clear contents and counters for a fresh pass, keeping the allocated
+    /// capacity (the slice reuses its RSRBs across `run_conv` calls instead
+    /// of reallocating them — EXPERIMENTS.md §Perf).
+    pub fn reset(&mut self) {
+        self.fifo.clear();
+        self.max_occupancy = 0;
+        self.pushes = 0;
+        self.pops = 0;
+    }
+
     /// Shift one element in from the PE row above's retiring pass register.
     #[inline]
     pub fn push(&mut self, v: i32) {
@@ -91,16 +102,14 @@ impl Rsrb {
     }
 
     /// Mux output: one element for the steady-state rightmost-PE dispatch.
+    /// The K-wide group dispatch at an output-row boundary ("the leftmost
+    /// K inputs" of the tapped SB, Fig. 4) is K back-to-back pops — kept
+    /// element-wise so the slice's hot loop stays allocation-free
+    /// (EXPERIMENTS.md §Perf).
     #[inline]
     pub fn pop(&mut self) -> i32 {
         self.pops += 1;
         self.fifo.pop_front().expect("RSRB underflow: diagonal dispatch with empty buffer")
-    }
-
-    /// Mux output: the K-wide group dispatched at an output-row boundary
-    /// ("the leftmost K inputs" of the tapped SB, Fig. 4).
-    pub fn pop_group(&mut self, k: usize) -> Vec<i32> {
-        (0..k).map(|_| self.pop()).collect()
     }
 
     pub fn occupancy(&self) -> usize {
@@ -132,7 +141,7 @@ mod tests {
         }
         assert_eq!(b.occupancy(), 5);
         assert_eq!(b.pop(), 0);
-        assert_eq!(b.pop_group(3), vec![1, 2, 3]);
+        assert_eq!((0..3).map(|_| b.pop()).collect::<Vec<_>>(), vec![1, 2, 3]);
         assert_eq!(b.max_occupancy(), 5);
         assert_eq!(b.pushes(), 5);
         assert_eq!(b.pops(), 4);
@@ -142,6 +151,21 @@ mod tests {
     #[should_panic(expected = "underflow")]
     fn underflow_panics() {
         Rsrb::new(4).pop();
+    }
+
+    #[test]
+    fn reset_clears_state_and_counters() {
+        let mut b = Rsrb::new(8);
+        for v in 0..5 {
+            b.push(v);
+        }
+        b.pop();
+        b.reset();
+        assert_eq!(b.occupancy(), 0);
+        assert_eq!(b.max_occupancy(), 0);
+        assert_eq!((b.pushes(), b.pops()), (0, 0));
+        b.push(42);
+        assert_eq!(b.pop(), 42);
     }
 
     #[test]

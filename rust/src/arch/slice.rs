@@ -52,6 +52,11 @@ pub struct SliceRunResult {
 /// register class) so the per-cycle MAC loop vectorises — the [`super::pe::Pe`]
 /// struct documents the per-PE view; the simulation state is the same
 /// registers laid out for the simulator's hot loop (EXPERIMENTS.md §Perf).
+///
+/// The simulator is reusable: all state (registers, RSRBs, adder tree,
+/// per-row scratch) is reset in place at the start of every pass, so a
+/// slice owned by a long-lived core performs no allocations across steps
+/// beyond the returned ofmap (EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone)]
 pub struct SliceSim {
     k: usize,
@@ -63,17 +68,63 @@ pub struct SliceSim {
     /// Psum output registers.
     pe_psum: Vec<i32>,
     rsrbs: Vec<Rsrb>, // K−1 buffers; rsrbs[i] feeds row i, fed by row i+1
+    /// Slice-level adder tree, reset per pass.
+    tree: AdderTree,
+    // --- per-pass scratch, reset in place (allocation-free hot loop) ---
+    row_vals: Vec<i32>,
+    tree_buf: Vec<i32>,
+    row_oy: Vec<usize>,
+    row_ox: Vec<usize>,
+    out1: Vec<i32>,
 }
 
-/// Zero-padded read-only view of an ifmap.
-struct PaddedView<'a> {
+/// Zero-padded read-only view of an ifmap, or a shifted window into a
+/// larger row-major buffer.
+///
+/// The window form is the §V tiled path's *strided view*: tile
+/// `(row0, col0)` of a large kernel convolves the padded ifmap shifted by
+/// its origin, and positions past the buffer edge read as zero. Passing the
+/// view to [`SliceSim::run_conv_view`] replaces the per-(channel, tile)
+/// sub-ifmap copies the engine used to materialise (EXPERIMENTS.md §Perf).
+pub struct InputView<'a> {
     data: &'a [i32],
+    /// Underlying buffer dimensions (row pitch = `src_w`).
+    src_h: usize,
+    src_w: usize,
+    /// Window origin inside the buffer.
+    y0: usize,
+    x0: usize,
+    /// Window dimensions — the `h × w` ifmap the slice convolves.
     h: usize,
     w: usize,
+    /// Zero padding around the window.
     pad: usize,
 }
 
-impl PaddedView<'_> {
+impl<'a> InputView<'a> {
+    /// View an entire `h × w` ifmap with `pad` zeros on each border.
+    pub fn whole(data: &'a [i32], h: usize, w: usize, pad: usize) -> Self {
+        assert_eq!(data.len(), h * w);
+        Self { data, src_h: h, src_w: w, y0: 0, x0: 0, h, w, pad }
+    }
+
+    /// An `h × w` window at `(y0, x0)` inside an `src_h × src_w` buffer,
+    /// unpadded; window positions beyond the buffer read as zero (the
+    /// zero tail a shifted tile view sweeps at the right/bottom edges).
+    pub fn window(
+        data: &'a [i32],
+        src_h: usize,
+        src_w: usize,
+        y0: usize,
+        x0: usize,
+        h: usize,
+        w: usize,
+    ) -> Self {
+        assert_eq!(data.len(), src_h * src_w);
+        assert!(y0 < src_h && x0 < src_w, "window origin outside the buffer");
+        Self { data, src_h, src_w, y0, x0, h, w, pad: 0 }
+    }
+
     /// Padded dimensions.
     fn hp(&self) -> usize {
         self.h + 2 * self.pad
@@ -87,9 +138,14 @@ impl PaddedView<'_> {
         let yy = y as isize - self.pad as isize;
         let xx = x as isize - self.pad as isize;
         if yy < 0 || xx < 0 || yy >= self.h as isize || xx >= self.w as isize {
+            return 0;
+        }
+        let sy = yy as usize + self.y0;
+        let sx = xx as usize + self.x0;
+        if sy >= self.src_h || sx >= self.src_w {
             0
         } else {
-            self.data[yy as usize * self.w + xx as usize]
+            self.data[sy * self.src_w + sx]
         }
     }
 }
@@ -106,6 +162,12 @@ impl SliceSim {
             pe_input: vec![0; k * k],
             pe_psum: vec![0; k * k],
             rsrbs: (0..k - 1).map(|_| Rsrb::new(w_im)).collect(),
+            tree: AdderTree::new(k),
+            row_vals: vec![0; k],
+            tree_buf: vec![0; k],
+            row_oy: vec![0; k],
+            row_ox: vec![0; k],
+            out1: Vec::new(),
         }
     }
 
@@ -134,10 +196,7 @@ impl SliceSim {
     }
 
     /// Run one `K×K` convolution over an `h×w` ifmap with the given zero
-    /// padding and stride. Stride > 1 is executed the way §V describes for
-    /// AlexNet: the array streams every stride-1 position and the control
-    /// logic decimates the outputs (the cycle count reflects the full
-    /// stride-1 sweep — TrIM's known inefficiency on strided layers).
+    /// padding and stride (see [`SliceSim::run_conv_view`]).
     pub fn run_conv(
         &mut self,
         ifmap: &[i32],
@@ -147,8 +206,17 @@ impl SliceSim {
         pad: usize,
         stride: usize,
     ) -> SliceRunResult {
+        self.run_conv_view(&InputView::whole(ifmap, h, w, pad), weights, stride)
+    }
+
+    /// Run one `K×K` convolution over the ifmap described by `view`
+    /// (a whole padded ifmap, or a shifted tile window — see
+    /// [`InputView`]). Stride > 1 is executed the way §V describes for
+    /// AlexNet: the array streams every stride-1 position and the control
+    /// logic decimates the outputs (the cycle count reflects the full
+    /// stride-1 sweep — TrIM's known inefficiency on strided layers).
+    pub fn run_conv_view(&mut self, view: &InputView, weights: &[i32], stride: usize) -> SliceRunResult {
         let k = self.k;
-        let view = PaddedView { data: ifmap, h, w, pad };
         let (hp, wp) = (view.hp(), view.wp());
         assert!(hp >= k && wp >= k, "ifmap smaller than kernel");
         let h_o1 = hp - k + 1; // stride-1 output grid
@@ -157,26 +225,24 @@ impl SliceSim {
         assert!(wp <= self.w_im, "padded ifmap wider than W_IM: reconfigure the slice");
 
         let mut stats = SimStats::default();
-        // fresh state per pass
-        self.pe_weight.iter_mut().for_each(|v| *v = 0);
-        self.pe_input.iter_mut().for_each(|v| *v = 0);
-        self.pe_psum.iter_mut().for_each(|v| *v = 0);
-        self.rsrbs = (0..k - 1).map(|_| Rsrb::new(self.w_im)).collect();
+        // fresh state per pass — everything reset in place, nothing
+        // reallocated (EXPERIMENTS.md §Perf)
+        self.pe_weight.fill(0);
+        self.pe_input.fill(0);
+        self.pe_psum.fill(0);
+        for b in &mut self.rsrbs {
+            b.reset();
+        }
+        self.tree.reset();
+        self.row_oy.fill(0);
+        self.row_ox.fill(0);
+        self.out1.clear();
+        self.out1.reserve(h_o1 * w_o1);
 
         self.load_weights(weights, &mut stats);
 
-        let mut tree = AdderTree::new(k);
-        let mut outputs1 = Vec::with_capacity(h_o1 * w_o1);
         let total_steps = h_o1 * w_o1;
         let compute_cycles = total_steps + (k - 1); // last row's skew
-        // scratch buffers reused across cycles (perf: the compute loop is
-        // allocation-free — see EXPERIMENTS.md §Perf)
-        let mut row_vals = vec![0i32; k];
-        let mut tree_buf = vec![0i32; k];
-        // per-row (oy, ox) counters: incrementally tracked instead of
-        // div/mod per row per cycle (§Perf: −30 % on the hot loop)
-        let mut row_oy = vec![0usize; k];
-        let mut row_ox = vec![0usize; k];
 
         for c in 0..compute_cycles {
             let mut ext_this_cycle = 0u64;
@@ -185,12 +251,12 @@ impl SliceSim {
                 if c < i || c - i >= total_steps {
                     continue; // row idle (fill/drain of the skew)
                 }
-                let oy = row_oy[i];
-                let ox = row_ox[i];
-                row_ox[i] += 1;
-                if row_ox[i] == w_o1 {
-                    row_ox[i] = 0;
-                    row_oy[i] += 1;
+                let oy = self.row_oy[i];
+                let ox = self.row_ox[i];
+                self.row_ox[i] += 1;
+                if self.row_ox[i] == w_o1 {
+                    self.row_ox[i] = 0;
+                    self.row_oy[i] += 1;
                 }
                 let y = oy + i; // padded ifmap row this PE row consumes
 
@@ -202,28 +268,29 @@ impl SliceSim {
                     // output-row start: K-wide window load
                     if ext_row {
                         for j in 0..k {
-                            row_vals[j] = view.get(y, j); // I_ext
+                            self.row_vals[j] = view.get(y, j); // I_ext
                         }
                         ext_this_cycle += k as u64;
                     } else {
-                        let popped = self.rsrbs[i].pop_group(k); // I_D bus
+                        for j in 0..k {
+                            self.row_vals[j] = self.rsrbs[i].pop(); // I_D bus
+                        }
                         debug_assert!(
-                            (0..k).all(|j| popped[j] == view.get(y, j)),
+                            (0..k).all(|j| self.row_vals[j] == view.get(y, j)),
                             "RSRB replay mismatch at row {i} oy {oy}"
                         );
-                        row_vals.copy_from_slice(&popped);
                     }
                 } else {
                     // steady state: one new element at the right edge,
                     // everything else shifts from the right neighbour.
-                    row_vals[..k - 1].copy_from_slice(&self.pe_input[i * k + 1..i * k + k]); // I_R
+                    self.row_vals[..k - 1].copy_from_slice(&self.pe_input[i * k + 1..i * k + k]); // I_R
                     if ext_row {
-                        row_vals[k - 1] = view.get(y, ox + k - 1); // I_ext
+                        self.row_vals[k - 1] = view.get(y, ox + k - 1); // I_ext
                         ext_this_cycle += 1;
                     } else {
                         let popped = self.rsrbs[i].pop(); // I_D
                         debug_assert_eq!(popped, view.get(y, ox + k - 1), "RSRB replay row {i} ({oy},{ox})");
-                        row_vals[k - 1] = popped;
+                        self.row_vals[k - 1] = popped;
                     }
                 }
                 let _ = InputSel::Right; // selections are implied by the schedule
@@ -231,14 +298,14 @@ impl SliceSim {
                 // --- MAC + pass-register update (vectorised: one MAC per
                 // PE of the row against the row-above psum registers) ---
                 let base = i * k;
-                self.pe_input[base..base + k].copy_from_slice(&row_vals[..k]);
+                self.pe_input[base..base + k].copy_from_slice(&self.row_vals[..k]);
                 if i == 0 {
                     for j in 0..k {
-                        self.pe_psum[j] = row_vals[j].wrapping_mul(self.pe_weight[j]);
+                        self.pe_psum[j] = self.row_vals[j].wrapping_mul(self.pe_weight[j]);
                     }
                 } else {
                     for j in 0..k {
-                        self.pe_psum[base + j] = row_vals[j]
+                        self.pe_psum[base + j] = self.row_vals[j]
                             .wrapping_mul(self.pe_weight[base + j])
                             .wrapping_add(self.pe_psum[base - k + j]);
                     }
@@ -247,25 +314,26 @@ impl SliceSim {
 
                 // --- diagonal forwarding: retire to the RSRB below ---
                 if i > 0 {
-                    self.rsrbs[i - 1].push(row_vals[0]);
+                    self.rsrbs[i - 1].push(self.row_vals[0]);
                     if ox == w_o1 - 1 {
                         // end-of-row flush: the last K−1 columns drain out
-                        for v in &row_vals[1..] {
-                            self.rsrbs[i - 1].push(*v);
+                        for j in 1..k {
+                            let v = self.row_vals[j];
+                            self.rsrbs[i - 1].push(v);
                         }
                     }
                 }
             }
 
             // --- adder tree fed by the bottom row's registered psums ---
-            let tree_in = if c >= k - 1 && c - (k - 1) < total_steps {
-                tree_buf.copy_from_slice(&self.pe_psum[(k - 1) * k..]);
-                Some(tree_buf.as_slice())
+            let out = if c >= k - 1 && c - (k - 1) < total_steps {
+                self.tree_buf.copy_from_slice(&self.pe_psum[(k - 1) * k..]);
+                self.tree.step(Some(&self.tree_buf))
             } else {
-                None
+                self.tree.step(None)
             };
-            if let Some(v) = tree.step(tree_in) {
-                outputs1.push(v as i32);
+            if let Some(v) = out {
+                self.out1.push(v as i32);
             }
 
             stats.cycles += 1;
@@ -274,13 +342,13 @@ impl SliceSim {
             }
             stats.ext_input_reads += ext_this_cycle;
         }
-        for v in tree.drain() {
-            outputs1.push(v as i32);
+        for v in self.tree.drain() {
+            self.out1.push(v as i32);
         }
-        stats.cycles += tree.latency() as u64; // output-register drain
+        stats.cycles += self.tree.latency() as u64; // output-register drain
         stats.max_rsrb_occupancy =
             self.rsrbs.iter().map(|b| b.max_occupancy() as u64).max().unwrap_or(0);
-        assert_eq!(outputs1.len(), total_steps);
+        assert_eq!(self.out1.len(), total_steps);
 
         // stride decimation (control logic; no extra cycles — the sweep
         // above already paid the full stride-1 cost)
@@ -289,7 +357,7 @@ impl SliceSim {
         let mut output = Vec::with_capacity(h_o * w_o);
         for oy in 0..h_o {
             for ox in 0..w_o {
-                output.push(outputs1[(oy * stride) * w_o1 + ox * stride]);
+                output.push(self.out1[(oy * stride) * w_o1 + ox * stride]);
             }
         }
         stats.output_writes += output.len() as u64;
@@ -378,5 +446,48 @@ mod tests {
     fn too_wide_ifmap_panics() {
         let ifmap = vec![0i32; 40 * 40];
         SliceSim::new(3, 32).run_conv(&ifmap, 40, 40, &[0; 9], 1, 1);
+    }
+
+    #[test]
+    fn reused_slice_matches_fresh_slice() {
+        // A long-lived slice (reset in place) must reproduce a fresh
+        // slice's output AND stats bit-for-bit, across differing
+        // geometries in sequence.
+        let mut reused = SliceSim::new(3, 32);
+        for (h, w, pad, stride) in [(10usize, 12usize, 1usize, 1usize), (8, 8, 0, 2), (12, 9, 1, 1)] {
+            let ifmap: Vec<i32> = (0..h * w).map(|i| (i as i32 * 29 + 3) % 251 - 120).collect();
+            let weights: Vec<i32> = (0..9).map(|i| (i as i32 % 7) - 3).collect();
+            let a = reused.run_conv(&ifmap, h, w, &weights, pad, stride);
+            let b = SliceSim::new(3, 32).run_conv(&ifmap, h, w, &weights, pad, stride);
+            assert_eq!(a.output, b.output, "{h}x{w} p{pad} s{stride}");
+            assert_eq!(a.stats, b.stats, "{h}x{w} p{pad} s{stride}");
+        }
+    }
+
+    #[test]
+    fn windowed_view_equals_materialised_window() {
+        // The tiled path's strided view: an (hs × ws) window at (y0, x0)
+        // inside a larger buffer must convolve exactly like the explicitly
+        // materialised (zero-tailed) copy.
+        let (src_h, src_w) = (14usize, 15usize);
+        let buf: Vec<i32> = (0..src_h * src_w).map(|i| (i as i32 * 13 + 1) % 101 - 50).collect();
+        let weights: Vec<i32> = (0..9).map(|i| (i as i32 % 5) - 2).collect();
+        let (y0, x0, hs, ws) = (2usize, 3usize, 13usize, 13usize); // overhangs the buffer edge
+        let mut sub = vec![0i32; hs * ws];
+        for y in 0..hs {
+            for x in 0..ws {
+                let (sy, sx) = (y0 + y, x0 + x);
+                if sy < src_h && sx < src_w {
+                    sub[y * ws + x] = buf[sy * src_w + sx];
+                }
+            }
+        }
+        for stride in [1usize, 2] {
+            let view = InputView::window(&buf, src_h, src_w, y0, x0, hs, ws);
+            let a = SliceSim::new(3, 32).run_conv_view(&view, &weights, stride);
+            let b = SliceSim::new(3, 32).run_conv(&sub, hs, ws, &weights, 0, stride);
+            assert_eq!(a.output, b.output, "stride {stride}");
+            assert_eq!(a.stats, b.stats, "stride {stride}");
+        }
     }
 }

@@ -8,6 +8,12 @@
 /// `psum_buf_*` are the engine's on-chip global buffer (the only on-chip
 /// *memory* TrIM uses — RSRBs and PE registers are registers, which the
 /// paper does not count as memory accesses).
+///
+/// Counters are either *measured* (register tier) or *synthesized* from
+/// the closed-form model of [`super::fastsim`] (fast tier); the two are
+/// equal field-for-field, so downstream consumers (farm aggregation,
+/// serving metrics, the Tables I–II reports) never need to know which
+/// tier produced them.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SimStats {
     /// Total clock cycles simulated.

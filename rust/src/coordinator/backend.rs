@@ -106,25 +106,39 @@ impl std::str::FromStr for BackendKind {
 /// Construct the requested backend. `Auto` prefers the PJRT artifacts in
 /// `artifact_dir` and falls back to a `sim_engines`-engine farm (with a
 /// printed notice) when they are missing or PJRT support is compiled out —
-/// serving always comes up.
+/// serving always comes up. `sim_fidelity` selects the sim engines'
+/// execution tier (`trim serve --fidelity fast|register`); both tiers
+/// serve bit-identical logits.
 pub fn make_backend(
     kind: BackendKind,
     artifact_dir: impl AsRef<std::path::Path>,
     sim_engines: usize,
+    sim_fidelity: crate::arch::ExecFidelity,
 ) -> Result<Box<dyn InferenceBackend>> {
-    use crate::scheduler::SimBackend;
+    use crate::scheduler::{ShardMode, SimBackend, SimNetSpec};
+    use crate::arch::ArchConfig;
     let dir = artifact_dir.as_ref();
+    let make_sim = || {
+        Box::new(SimBackend::with_fidelity(
+            sim_engines,
+            ArchConfig::small(3, 2, 1),
+            SimNetSpec::tiny(),
+            ShardMode::FilterShards,
+            sim_fidelity,
+        )) as Box<dyn InferenceBackend>
+    };
     match kind {
         BackendKind::Pjrt => Ok(Box::new(PjrtBackend::load(dir)?)),
-        BackendKind::Sim => Ok(Box::new(SimBackend::new(sim_engines))),
+        BackendKind::Sim => Ok(make_sim()),
         BackendKind::Auto => match PjrtBackend::load(dir) {
             Ok(b) => Ok(Box::new(b)),
             Err(e) => {
                 eprintln!(
                     "notice: PJRT backend unavailable ({e:#}); \
-                     falling back to the simulated engine farm ({sim_engines} engines)"
+                     falling back to the simulated engine farm \
+                     ({sim_engines} engines, {sim_fidelity} fidelity)"
                 );
-                Ok(Box::new(SimBackend::new(sim_engines)))
+                Ok(make_sim())
             }
         },
     }
@@ -186,7 +200,13 @@ mod tests {
 
     #[test]
     fn sim_backend_needs_no_artifacts() {
-        let mut b = make_backend(BackendKind::Sim, "definitely/not/a/dir", 2).unwrap();
+        let mut b = make_backend(
+            BackendKind::Sim,
+            "definitely/not/a/dir",
+            2,
+            crate::arch::ExecFidelity::Fast,
+        )
+        .unwrap();
         let img = vec![7i32; b.input_len()];
         let out = b.infer_batch(&[&img]).unwrap();
         assert_eq!(out.len(), 1);
@@ -195,13 +215,25 @@ mod tests {
 
     #[test]
     fn auto_falls_back_to_sim_without_artifacts() {
-        let b = make_backend(BackendKind::Auto, "definitely/not/a/dir", 2).unwrap();
+        let b = make_backend(
+            BackendKind::Auto,
+            "definitely/not/a/dir",
+            2,
+            crate::arch::ExecFidelity::Fast,
+        )
+        .unwrap();
         assert!(b.describe().starts_with("sim["), "got {}", b.describe());
     }
 
     #[test]
     fn explicit_pjrt_still_errors_without_artifacts() {
-        assert!(make_backend(BackendKind::Pjrt, "definitely/not/a/dir", 2).is_err());
+        assert!(make_backend(
+            BackendKind::Pjrt,
+            "definitely/not/a/dir",
+            2,
+            crate::arch::ExecFidelity::Fast
+        )
+        .is_err());
     }
 
     #[test]

@@ -6,10 +6,14 @@
 //!
 //! The crate is organised as a software twin of the paper's FPGA design:
 //!
-//! * [`arch`] — cycle-accurate structural simulator of the TrIM hardware
-//!   hierarchy (PE → Slice → Core → Engine), faithful to Figs. 3–6 of the
-//!   paper: registers, muxes, shift-register buffers, adder trees and the
-//!   control FSM are stepped cycle by cycle.
+//! * [`arch`] — the TrIM hardware hierarchy (PE → Slice → Core → Engine)
+//!   at two execution tiers behind one API ([`arch::ExecFidelity`]): the
+//!   cycle-accurate *register* tier, faithful to Figs. 3–6 (registers,
+//!   muxes, shift-register buffers, adder trees and the control FSM
+//!   stepped cycle by cycle), and the *fast* tier ([`arch::fastsim`]) —
+//!   bit-exact ofmaps from a blocked functional convolution plus
+//!   counter-exact stats from the closed-form eq. (2) / Tables I–II
+//!   model, orders of magnitude faster per layer.
 //! * [`golden`] — integer direct-convolution oracle used to validate the
 //!   simulator's numerics.
 //! * [`model`] — CNN workload descriptions (VGG-16, AlexNet), kernel tiling

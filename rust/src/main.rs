@@ -12,7 +12,7 @@
 //! trim sim [--hw N] [--k K]     cycle-accurate slice run + measured stats
 //! trim validate                 simulator vs golden + paper invariants
 //! trim serve [--backend auto|pjrt|sim] [--engines N] [--artifacts DIR]
-//!            [--requests N] [--max-batch B]
+//!            [--requests N] [--max-batch B] [--fidelity fast|register]
 //!                               e2e batched inference. Backends:
 //!                                 pjrt — compiled XLA artifacts (needs
 //!                                        `make artifacts` + the `pjrt`
@@ -21,11 +21,15 @@
 //!                                        zero build products required
 //!                                 auto — pjrt if available, else sim
 //!                                        with a printed notice (default)
+//!                               --fidelity picks the sim engines' tier:
+//!                               fast (functional + closed-form counters,
+//!                               default) or register (cycle-accurate
+//!                               oracle); logits are bit-identical
 //! trim farm [--engines N] [--net vgg16|alexnet] [--mode filter|pipeline]
-//!           [--batch B]
+//!           [--batch B] [--fidelity fast|register]
 //!                               shard real network layers across a farm
-//!                               of cycle-accurate engines: per-layer
-//!                               speedup table + bit-exactness check.
+//!                               of simulated engines: per-layer speedup
+//!                               table + bit-exactness check.
 //!                               pipeline mode streams a batch of B images
 //!                               through the serving chain instead of
 //!                               --net (real CNNs pool between CLs)
@@ -34,7 +38,7 @@
 use std::collections::HashMap;
 
 use trim_sa::arch::control::plan_layer;
-use trim_sa::arch::{ArchConfig, EngineSim, SliceSim};
+use trim_sa::arch::{ArchConfig, EngineSim, ExecFidelity, SliceSim};
 use trim_sa::coordinator::{make_backend, BackendKind, BatcherConfig, Coordinator, CoordinatorConfig};
 use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer, Network};
@@ -169,10 +173,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some(s) => s.parse()?,
         None => BackendKind::Auto,
     };
+    let fidelity: ExecFidelity = match flags.get("fidelity") {
+        Some(s) => s.parse()?,
+        None => ExecFidelity::Fast,
+    };
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: std::time::Duration::from_millis(2) },
     };
-    let c = Coordinator::start_with(move || make_backend(kind, &dir, engines), cfg)?;
+    let c = Coordinator::start_with(move || make_backend(kind, &dir, engines, fidelity), cfg)?;
     println!("serving with {} ({} int32 inputs per request)", c.backend_description(), c.input_len());
 
     let len = c.input_len();
@@ -221,16 +229,20 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some(s) => s.parse()?,
         None => ShardMode::FilterShards,
     };
+    let fidelity: ExecFidelity = match flags.get("fidelity") {
+        Some(s) => s.parse()?,
+        None => ExecFidelity::Fast,
+    };
     let arch = ArchConfig::small(3, 2, 2);
     match mode {
         ShardMode::FilterShards => {
             let net = net_by_name(flags.get("net").map(|s| s.as_str()).unwrap_or("vgg16"));
             println!(
-                "engine farm: {engines} engines of P_N={} x P_M={} (scaled-down {} layers, filter-shard mode)",
+                "engine farm: {engines} engines of P_N={} x P_M={} (scaled-down {} layers, filter-shard mode, {fidelity} fidelity)",
                 arch.p_n, arch.p_m, net.name
             );
-            let farm = EngineFarm::new(FarmConfig::new(engines, arch));
-            let single = EngineSim::new(arch);
+            let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
+            let single = EngineSim::with_fidelity(arch, fidelity);
             let mut rng = SplitMix64::new(2024);
             let (mut tot_single, mut tot_farm) = (0u64, 0u64);
             println!(
@@ -293,8 +305,8 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             let images: Vec<Tensor3> = (0..batch)
                 .map(|_| Tensor3 { c: c0, h: h0, w: w0, data: rng.vec_i32(c0 * h0 * w0, 0, 256) })
                 .collect();
-            let serial = EngineFarm::new(FarmConfig::new(1, arch));
-            let farm = EngineFarm::new(FarmConfig::new(engines, arch));
+            let serial = EngineFarm::new(FarmConfig::with_fidelity(1, arch, fidelity));
+            let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
             let r1 = serial.run_pipeline(&stages, images.clone());
             let rn = farm.run_pipeline(&stages, images);
             anyhow::ensure!(r1.outputs == rn.outputs, "pipeline outputs diverged across engine counts");

@@ -17,7 +17,7 @@
 
 use super::farm::{EngineFarm, FarmConfig, PipelineStage};
 use super::shard::ShardMode;
-use crate::arch::ArchConfig;
+use crate::arch::{ArchConfig, ExecFidelity};
 use crate::coordinator::InferenceBackend;
 use crate::golden::{conv3d_i32, Tensor3};
 use crate::model::quant::Requant;
@@ -97,10 +97,24 @@ impl SimBackend {
         Self::with_spec(engines, ArchConfig::small(3, 2, 1), SimNetSpec::tiny(), ShardMode::FilterShards)
     }
 
-    /// Full control over the farm and workload.
+    /// Full control over the farm and workload (fast-tier engines — the
+    /// farm default; see [`SimBackend::with_fidelity`] for the oracle).
     pub fn with_spec(engines: usize, arch: ArchConfig, spec: SimNetSpec, mode: ShardMode) -> Self {
+        Self::with_fidelity(engines, arch, spec, mode, ExecFidelity::Fast)
+    }
+
+    /// Full control including the engines' execution tier. Both tiers
+    /// serve bit-identical logits; `Register` trades orders of magnitude
+    /// of throughput for cycle-by-cycle engine observability.
+    pub fn with_fidelity(
+        engines: usize,
+        arch: ArchConfig,
+        spec: SimNetSpec,
+        mode: ShardMode,
+        fidelity: ExecFidelity,
+    ) -> Self {
         spec.validate();
-        let farm = EngineFarm::new(FarmConfig::new(engines, arch));
+        let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
         let weights = (0..spec.layers.len()).map(|i| Arc::new(spec.layer_weights(i))).collect();
         let requant = Requant::new(spec.requant_shift, 8);
         Self { farm, spec, weights, mode, requant, calls: 0 }
@@ -200,9 +214,10 @@ impl InferenceBackend for SimBackend {
 
     fn describe(&self) -> String {
         format!(
-            "sim[{} engines, {:?}, {} layers, {} classes]",
+            "sim[{} engines, {:?}, {} fidelity, {} layers, {} classes]",
             self.farm.engines(),
             self.mode,
+            self.farm.fidelity(),
             self.spec.layers.len(),
             self.spec.classes
         )
@@ -245,6 +260,24 @@ mod tests {
     fn describe_names_the_farm() {
         let b = SimBackend::new(3);
         assert!(b.describe().contains("3 engines"));
+        assert!(b.describe().contains("fast fidelity"), "got {}", b.describe());
         assert_eq!(b.engines(), 3);
+    }
+
+    #[test]
+    fn register_fidelity_backend_serves_identical_logits() {
+        let mut fast = SimBackend::new(2);
+        let mut reg = SimBackend::with_fidelity(
+            2,
+            ArchConfig::small(3, 2, 1),
+            SimNetSpec::tiny(),
+            ShardMode::FilterShards,
+            ExecFidelity::Register,
+        );
+        assert!(reg.describe().contains("register fidelity"));
+        let len = fast.input_len();
+        let imgs: Vec<Vec<i32>> = (0..2).map(|i| image(400 + i, len)).collect();
+        let refs: Vec<&[i32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(fast.infer_batch(&refs).unwrap(), reg.infer_batch(&refs).unwrap());
     }
 }

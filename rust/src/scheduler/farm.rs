@@ -23,7 +23,7 @@
 
 use super::shard::{plan_filter_shards, ShardPlan};
 use crate::arch::engine::EngineRunResult;
-use crate::arch::{ArchConfig, EngineSim, SimStats};
+use crate::arch::{ArchConfig, EngineSim, ExecFidelity, SimStats};
 use crate::golden::Tensor3;
 use crate::model::quant::Requant;
 use crate::model::ConvLayer;
@@ -39,17 +39,26 @@ pub struct FarmConfig {
     pub engines: usize,
     /// Architecture of every engine in the pool (homogeneous farm).
     pub arch: ArchConfig,
+    /// Execution tier of every engine. The farm defaults to
+    /// [`ExecFidelity::Fast`] — identical results (bit-exact ofmaps,
+    /// counter-exact stats), orders of magnitude more layer throughput;
+    /// pick [`ExecFidelity::Register`] to run the cycle-accurate oracle.
+    pub fidelity: ExecFidelity,
 }
 
 impl FarmConfig {
     pub fn new(engines: usize, arch: ArchConfig) -> Self {
-        Self { engines, arch }
+        Self { engines, arch, fidelity: ExecFidelity::Fast }
+    }
+
+    pub fn with_fidelity(engines: usize, arch: ArchConfig, fidelity: ExecFidelity) -> Self {
+        Self { engines, arch, fidelity }
     }
 }
 
 impl Default for FarmConfig {
     fn default() -> Self {
-        Self { engines: 4, arch: ArchConfig::paper_engine() }
+        Self::new(4, ArchConfig::paper_engine())
     }
 }
 
@@ -135,7 +144,7 @@ impl EngineFarm {
         let mut workers = Vec::with_capacity(cfg.engines);
         for i in 0..cfg.engines {
             let (tx, rx) = mpsc::channel::<Job>();
-            let engine = EngineSim::new(cfg.arch);
+            let engine = EngineSim::with_fidelity(cfg.arch, cfg.fidelity);
             let handle = std::thread::Builder::new()
                 .name(format!("trim-farm-{i}"))
                 .spawn(move || worker_loop(engine, rx))
@@ -152,6 +161,10 @@ impl EngineFarm {
 
     pub fn arch(&self) -> &ArchConfig {
         &self.cfg.arch
+    }
+
+    pub fn fidelity(&self) -> ExecFidelity {
+        self.cfg.fidelity
     }
 
     /// Run one layer sharded across the farm (filter-shard mode) and merge
@@ -353,5 +366,25 @@ mod tests {
     fn drop_joins_workers_cleanly() {
         let farm = EngineFarm::new(FarmConfig::new(3, ArchConfig::small(3, 2, 2)));
         drop(farm); // must not hang or panic
+    }
+
+    #[test]
+    fn farm_fidelities_agree_exactly() {
+        // A fast farm and a register farm must return identical
+        // FarmRunResults (ofmaps, merged stats, per-shard stats).
+        let mut rng = SplitMix64::new(77);
+        let layer = ConvLayer::new("fid", 9, 3, 5, 7, 1, 1);
+        let input = rand_tensor(&mut rng, 5, 9, 9);
+        let weights = rng.vec_i32(7 * 5 * 9, -8, 8);
+        let arch = ArchConfig::small(3, 2, 2);
+        assert_eq!(FarmConfig::new(2, arch).fidelity, ExecFidelity::Fast);
+        let fast = EngineFarm::new(FarmConfig::new(2, arch));
+        let reg = EngineFarm::new(FarmConfig::with_fidelity(2, arch, ExecFidelity::Register));
+        assert_eq!(reg.fidelity(), ExecFidelity::Register);
+        let rf = fast.run_layer(&layer, &input, &weights);
+        let rr = reg.run_layer(&layer, &input, &weights);
+        assert_eq!(rf.ofmaps, rr.ofmaps);
+        assert_eq!(rf.stats, rr.stats);
+        assert_eq!(rf.per_shard, rr.per_shard);
     }
 }

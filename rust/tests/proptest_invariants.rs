@@ -3,8 +3,8 @@
 //! property runs across a seeded sweep and prints the failing seed).
 
 use trim_sa::arch::control::plan_layer;
-use trim_sa::arch::ArchConfig;
-use trim_sa::golden::conv2d_i32;
+use trim_sa::arch::{ArchConfig, EngineSim};
+use trim_sa::golden::{conv2d_i32, conv3d_i32, Tensor3};
 use trim_sa::model::quant::{DatapathBits, Requant};
 use trim_sa::model::{ConvLayer, KernelTiling};
 use trim_sa::util::SplitMix64;
@@ -84,6 +84,52 @@ fn prop_plan_structure_and_monotonicity() {
         assert!(pb.steps <= ps.steps, "seed {seed}: parallelism must not add steps");
         assert!(ps.utilization > 0.0 && ps.utilization <= 1.0);
         assert!(pb.utilization > 0.0 && pb.utilization <= 1.0);
+    }
+}
+
+/// Property: the fast execution tier ([`trim_sa::arch::ExecFidelity`])
+/// equals the register tier on randomized (layer, ArchConfig) — ofmaps
+/// bit-exact and **every** [`trim_sa::arch::SimStats`] counter equal —
+/// across multi-group (M > P_M, N > P_N), tiled K > 3, stride > 1 and
+/// padded geometries, plus `run_filter_range` shards on both tiers.
+#[test]
+fn prop_fast_tier_bit_and_counter_exact_vs_register() {
+    let mut rng = SplitMix64::new(0xFA57);
+    for seed in 0..24u64 {
+        let k = [3usize, 3, 3, 5, 7, 11][rng.range(0, 6)];
+        // keep the stride-1 sweep grid wide enough for the slice schedule
+        // (w_o1 ≥ K_nat) at pad 0
+        let hw = rng.range(k + 6, k + 14);
+        let m = rng.range(1, 6);
+        let n = rng.range(1, 10);
+        let stride = [1usize, 1, 2, 4][rng.range(0, 4)];
+        let pad = rng.range(0, 3);
+        let arch = ArchConfig::small(3, rng.range(1, 5), rng.range(1, 4));
+        let layer = ConvLayer::new("fastprop", hw, k, m, n, stride, pad);
+        let input = Tensor3 { c: m, h: hw, w: hw, data: rng.vec_i32(m * hw * hw, -96, 96) };
+        let weights = rng.vec_i32(n * m * k * k, -9, 9);
+        let ctx = format!(
+            "seed {seed}: k={k} hw={hw} m={m} n={n} s={stride} p={pad} P_M={} P_N={}",
+            arch.p_m, arch.p_n
+        );
+
+        let reg = EngineSim::new(arch).run_layer(&layer, &input, &weights);
+        let fast = EngineSim::fast(arch).run_layer(&layer, &input, &weights);
+        assert_eq!(fast.ofmaps, conv3d_i32(&input, &weights, n, k, stride, pad), "{ctx}: vs golden");
+        assert_eq!(fast.ofmaps, reg.ofmaps, "{ctx}: ofmaps fast vs register");
+        assert_eq!(fast.stats, reg.stats, "{ctx}: stats fast vs register");
+
+        // Sharded entry point: both tiers, a P_N-aligned split.
+        let groups = n.div_ceil(arch.p_n);
+        if groups > 1 {
+            let cut = arch.p_n * rng.range(1, groups);
+            for range in [0..cut, cut..n] {
+                let rs = EngineSim::new(arch).run_filter_range(&layer, &input, &weights, range.clone());
+                let fs = EngineSim::fast(arch).run_filter_range(&layer, &input, &weights, range.clone());
+                assert_eq!(fs.ofmaps, rs.ofmaps, "{ctx}: shard {range:?} ofmaps");
+                assert_eq!(fs.stats, rs.stats, "{ctx}: shard {range:?} stats");
+            }
+        }
     }
 }
 

@@ -7,7 +7,7 @@
 //! ≥ 96-request batched workload from the sim backend with no artifacts.
 
 use std::sync::Arc;
-use trim_sa::arch::{ArchConfig, EngineSim};
+use trim_sa::arch::{ArchConfig, EngineSim, ExecFidelity};
 use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend};
 use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::quant::Requant;
@@ -153,7 +153,9 @@ fn prop_shard_planner_invariants() {
 
 /// Acceptance: a farm with N ≥ 2 engines is byte-identical to the
 /// single-engine `EngineSim` and to the golden conv on a full-size VGG-16
-/// layer (CL1: 3→64 filters over 224×224).
+/// layer (CL1: 3→64 filters over 224×224). Runs on the fast tier (the
+/// farm default) so the full-size acceptance suite stays quick; the
+/// `#[ignore]`d test below is the same workload on the register oracle.
 #[test]
 fn vgg16_cl1_full_size_farm_bit_exact() {
     let net = vgg16();
@@ -165,8 +167,9 @@ fn vgg16_cl1_full_size_farm_bit_exact() {
     let arch = ArchConfig::small(3, 2, 4);
     let arch = ArchConfig { w_im: 226, psum_buf_depth: 224 * 224, ..arch };
     let golden = conv3d_i32(&input, &weights, 64, 3, 1, 1);
-    let single = EngineSim::new(arch).run_layer(&layer, &input, &weights);
+    let single = EngineSim::fast(arch).run_layer(&layer, &input, &weights);
     let farm = EngineFarm::new(FarmConfig::new(4, arch));
+    assert_eq!(farm.fidelity(), ExecFidelity::Fast, "fast is the farm default");
     let r = farm.run_layer(&layer, &input, &weights);
     assert_eq!(r.plan.shards.len(), 4);
     assert_eq!(r.ofmaps, golden, "farm vs golden on VGG-16 CL1");
@@ -175,8 +178,30 @@ fn vgg16_cl1_full_size_farm_bit_exact() {
     assert!(r.stats.cycles < single.stats.cycles, "4-way sharding must cut wall-clock cycles");
 }
 
+/// The slow oracle: the same full-size VGG-16 CL1 workload on the
+/// register tier, checked against both the golden conv and the fast tier
+/// (ofmaps AND stats). Ignored by default — run with
+/// `cargo test -- --ignored vgg16_cl1_full_size_register_oracle`.
+#[test]
+#[ignore = "register-tier full-size run: minutes in debug; the fast-tier test above is the default gate"]
+fn vgg16_cl1_full_size_register_oracle() {
+    let net = vgg16();
+    let layer = net.layers[0].clone();
+    let mut rng = SplitMix64::new(16);
+    let input = Tensor3 { c: 3, h: 224, w: 224, data: rng.vec_i32(3 * 224 * 224, 0, 256) };
+    let weights = rng.vec_i32(64 * 3 * 9, -8, 8);
+    let arch = ArchConfig::small(3, 2, 4);
+    let arch = ArchConfig { w_im: 226, psum_buf_depth: 224 * 224, ..arch };
+    let golden = conv3d_i32(&input, &weights, 64, 3, 1, 1);
+    let register = EngineSim::new(arch).run_layer(&layer, &input, &weights);
+    let fast = EngineSim::fast(arch).run_layer(&layer, &input, &weights);
+    assert_eq!(register.ofmaps, golden, "register oracle vs golden on VGG-16 CL1");
+    assert_eq!(fast.ofmaps, register.ofmaps, "fast tier vs register oracle: ofmaps");
+    assert_eq!(fast.stats, register.stats, "fast tier vs register oracle: stats");
+}
+
 /// Acceptance: same bit-exactness on a full-size AlexNet layer (CL5:
-/// 192→256 filters over 13×13).
+/// 192→256 filters over 13×13), fast tier.
 #[test]
 fn alexnet_cl5_full_size_farm_bit_exact() {
     let net = alexnet();
@@ -187,7 +212,7 @@ fn alexnet_cl5_full_size_farm_bit_exact() {
     let weights = rng.vec_i32(256 * 192 * 9, -6, 6);
     let arch = ArchConfig::small(3, 8, 4);
     let golden = conv3d_i32(&input, &weights, 256, 3, 1, 1);
-    let single = EngineSim::new(arch).run_layer(&layer, &input, &weights);
+    let single = EngineSim::fast(arch).run_layer(&layer, &input, &weights);
     let farm = EngineFarm::new(FarmConfig::new(3, arch));
     let r = farm.run_layer(&layer, &input, &weights);
     assert_eq!(r.ofmaps, golden, "farm vs golden on AlexNet CL5");
