@@ -80,6 +80,18 @@ fn main() -> anyhow::Result<()> {
             m.batches,
             m.mean_batch
         );
+        // Sim-backed serving carries the paper's cost accounting through
+        // the response path; PJRT-backed serving has no simulated cost.
+        if m.sim_batches > 0 {
+            println!(
+                "             | sim cost: {} cycles | {} off-chip + {} on-chip accesses | {:.3} mJ | {:.2} GOPs/s",
+                m.sim_cycles,
+                m.sim_off_chip_accesses,
+                m.sim_on_chip_accesses,
+                m.sim_joules * 1e3,
+                m.sim_gops
+            );
+        }
     }
     println!("e2e serving OK — record results in EXPERIMENTS.md");
     Ok(())

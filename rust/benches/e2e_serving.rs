@@ -1,51 +1,138 @@
-//! Bench: end-to-end serving over the PJRT artifacts (latency/throughput
-//! vs batch size). Skips gracefully when artifacts/ is missing.
+//! Bench: end-to-end serving through the coordinator/router stack —
+//! latency, throughput AND simulated cost (GOPS/joules) vs batch size and
+//! farm count. Runs on the simulated engine farm, so it needs no
+//! artifacts and always produces numbers; when PJRT artifacts are present
+//! an extra PJRT sweep runs too (no simulated cost there).
+//!
+//! Emits one `JSON ` line per configuration for the CI bench-trajectory
+//! artifact (same convention as farm_scaling/fidelity_speedup):
+//!
+//! ```text
+//! JSON {"bench":"e2e_serving","farms":1,"max_batch":8,"rps":...,"sim_gops":...}
+//! ```
 #[path = "bench_harness.rs"]
 mod harness;
 use harness::header;
 use std::time::{Duration, Instant};
-use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, PjrtBackend};
+use trim_sa::arch::ArchConfig;
+use trim_sa::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend, PjrtBackend, Router,
+};
+use trim_sa::scheduler::{ShardMode, SimBackend, SimNetSpec};
+
+fn sim_router(farms: usize, max_batch: usize) -> anyhow::Result<Router> {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+    };
+    let coordinators: Vec<Coordinator> = (0..farms)
+        .map(|_| {
+            Coordinator::start_with(
+                move || {
+                    Ok(Box::new(SimBackend::with_spec(
+                        2,
+                        ArchConfig::small(3, 2, 1),
+                        SimNetSpec::tiny(),
+                        ShardMode::FilterShards,
+                    )) as Box<dyn InferenceBackend>)
+                },
+                cfg,
+            )
+        })
+        .collect::<anyhow::Result<_>>()?;
+    Router::new(coordinators)
+}
 
 fn main() -> anyhow::Result<()> {
-    header("e2e serving — TrimNet over PJRT artifacts");
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        println!("SKIP: artifacts/ missing — run `make artifacts`");
-        return Ok(());
-    }
-    let n_req = 64;
-    for max_batch in [1usize, 4, 16] {
-        let cfg = CoordinatorConfig {
-            batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
-        };
-        let d = dir.clone();
-        // Graceful skip when artifacts exist but PJRT support is compiled
-        // out (the offline default — see Cargo.toml's `pjrt` feature).
-        let c = match Coordinator::start_with(move || Ok(Box::new(PjrtBackend::load(&d)?) as _), cfg) {
-            Ok(c) => c,
-            Err(e) => {
-                println!("SKIP: PJRT backend unavailable ({e:#}) — build with --features pjrt");
-                return Ok(());
-            }
-        };
-        let len = c.input_len();
+    header("e2e serving — sim engine farms behind the coordinator/router");
+    let n_req = 64usize;
+    let mut json_lines = Vec::new();
+    for (farms, max_batch) in [(1usize, 1usize), (1, 4), (1, 16), (2, 16)] {
+        let router = sim_router(farms, max_batch)?;
+        let len = router.input_len();
         let t0 = Instant::now();
-        let rxs: Vec<_> = (0..n_req)
-            .map(|i| c.submit((0..len).map(|j| ((i * 31 + j) % 256) as i32).collect()).unwrap())
+        let pending: Vec<_> = (0..n_req)
+            .map(|i| {
+                let img: Vec<i32> = (0..len).map(|j| ((i * 31 + j) % 256) as i32).collect();
+                router.submit(img).unwrap()
+            })
             .collect();
-        for rx in rxs {
+        for mut rx in pending {
             rx.recv()?;
         }
         let wall = t0.elapsed();
-        let m = c.metrics();
+        let m = router.metrics();
+        let rps = n_req as f64 / wall.as_secs_f64();
         println!(
-            "max_batch={max_batch:<3} {:>7.1} req/s   p50 {:>9.3?}   p95 {:>9.3?}   {} batches (mean {:.1})",
-            n_req as f64 / wall.as_secs_f64(),
+            "farms={farms} max_batch={max_batch:<3} {rps:>7.1} req/s   {:>7.2} sim GOPs/s   {:>12} sim cycles   {:>9.3} mJ   p50 {:>9.3?}   p95 {:>9.3?}   {} batches (mean {:.1})",
+            m.sim_gops,
+            m.sim_cycles,
+            m.sim_joules * 1e3,
             m.p50_latency,
             m.p95_latency,
             m.batches,
             m.mean_batch
         );
+        json_lines.push(format!(
+            "JSON {{\"bench\":\"e2e_serving\",\"backend\":\"sim\",\"farms\":{farms},\
+             \"max_batch\":{max_batch},\"requests\":{n_req},\"rps\":{rps:.2},\
+             \"sim_gops\":{:.4},\"sim_cycles\":{},\"sim_joules\":{:.6e},\
+             \"p50_us\":{},\"p95_us\":{},\"mean_batch\":{:.2}}}",
+            m.sim_gops,
+            m.sim_cycles,
+            m.sim_joules,
+            m.p50_latency.as_micros(),
+            m.p95_latency.as_micros(),
+            m.mean_batch
+        ));
+    }
+
+    // Optional PJRT sweep (the original e2e path) — skipped without
+    // artifacts or with PJRT support compiled out.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        'pjrt: for max_batch in [1usize, 16] {
+            let cfg = CoordinatorConfig {
+                batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+            };
+            let d = dir.clone();
+            let c = match Coordinator::start_with(
+                move || Ok(Box::new(PjrtBackend::load(&d)?) as _),
+                cfg,
+            ) {
+                Ok(c) => c,
+                Err(e) => {
+                    println!("SKIP pjrt: backend unavailable ({e:#}) — build with --features pjrt");
+                    break 'pjrt;
+                }
+            };
+            let len = c.input_len();
+            let t0 = Instant::now();
+            let rxs: Vec<_> = (0..n_req)
+                .map(|i| c.submit((0..len).map(|j| ((i * 31 + j) % 256) as i32).collect()).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv()?;
+            }
+            let rps = n_req as f64 / t0.elapsed().as_secs_f64();
+            let m = c.metrics();
+            println!(
+                "pjrt max_batch={max_batch:<3} {rps:>7.1} req/s   p50 {:>9.3?}   p95 {:>9.3?}   {} batches (mean {:.1})",
+                m.p50_latency,
+                m.p95_latency,
+                m.batches,
+                m.mean_batch
+            );
+            json_lines.push(format!(
+                "JSON {{\"bench\":\"e2e_serving\",\"backend\":\"pjrt\",\"farms\":1,\
+                 \"max_batch\":{max_batch},\"requests\":{n_req},\"rps\":{rps:.2},\"sim_gops\":0}}"
+            ));
+        }
+    } else {
+        println!("note: artifacts/ missing — PJRT sweep skipped (sim sweep above is the gate)");
+    }
+
+    for line in &json_lines {
+        println!("{line}");
     }
     Ok(())
 }

@@ -2,11 +2,113 @@
 //! farm (re-exported from [`crate::scheduler`]), and a mock for testing
 //! the coordination logic in isolation. [`make_backend`] is the single
 //! construction point the CLI and examples plumb `--backend` through.
+//!
+//! Every `infer_batch` returns a [`BatchReport`]: logits plus an optional
+//! [`BatchCost`] carrying the farm-aggregated [`SimStats`] and the derived
+//! GOPS/joules, so execution cost is a first-class part of the serving
+//! API rather than something the simulators compute and throw away.
 
+use crate::analytics::EnergyModel;
+use crate::arch::SimStats;
 use crate::runtime::Runtime;
 use anyhow::Result;
 
-/// Something that can turn a batch of images into logits.
+/// Farm-aggregated execution cost of one served batch.
+///
+/// The counters follow the Tables I–II accounting the farm already uses:
+/// cycles take the **max** over parallel shards and **add** across
+/// sequential phases (layers of one image, images of one batch), while
+/// access/MAC counters always **sum** — every access really happens. GOPS
+/// and joules are derived once per batch via [`EnergyModel`], so the cost
+/// a client sees is priced in the same units as the paper's headline
+/// claims (453.6 GOPS peak, Tables I–II energy columns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchCost {
+    /// Aggregated simulation counters for the whole batch.
+    pub stats: SimStats,
+    /// Clock the cycles are priced at (Hz) — the farm engines' `f_clk`.
+    pub f_clk: f64,
+    /// Achieved throughput over the batch, GOPs/s
+    /// (`2·MACs·f_clk/cycles`).
+    pub gops: f64,
+    /// Total simulated energy in joules: off-chip + on-chip memory
+    /// traffic plus MAC compute, at the paper-calibrated constants.
+    pub joules: f64,
+}
+
+impl BatchCost {
+    /// Price aggregated counters: derive GOPS and joules from `stats`.
+    pub fn from_stats(stats: SimStats, f_clk: f64, energy: &EnergyModel) -> Self {
+        let gops = stats.ops_per_s(f_clk) / 1e9;
+        let joules = energy
+            .memory_energy_j(stats.off_chip_accesses() as f64, stats.on_chip_accesses() as f64)
+            + energy.compute_energy_j(stats.macs as f64);
+        Self { stats, f_clk, gops, joules }
+    }
+
+    /// Attribute this batch's cost to one of its `batch_size` requests:
+    /// divisible counters (accesses, MACs, joules) are split evenly, while
+    /// cycles and GOPS describe the whole batch the request shared.
+    pub fn per_request(&self, batch_size: usize) -> SimCost {
+        let n = batch_size.max(1) as f64;
+        SimCost {
+            batch_cycles: self.stats.cycles,
+            off_chip_accesses: self.stats.off_chip_accesses() as f64 / n,
+            on_chip_accesses: self.stats.on_chip_accesses() as f64 / n,
+            macs: self.stats.macs as f64 / n,
+            joules: self.joules / n,
+            gops: self.gops,
+        }
+    }
+}
+
+/// Per-request attributed share of a [`BatchCost`] (carried on
+/// [`super::InferenceResponse`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimCost {
+    /// Simulated wall-clock cycles of the batch this request rode in —
+    /// shared by every request of the batch, not divided.
+    pub batch_cycles: u64,
+    /// This request's share of off-chip (DRAM-side) element accesses.
+    pub off_chip_accesses: f64,
+    /// This request's share of on-chip (psum-buffer) element accesses.
+    pub on_chip_accesses: f64,
+    /// This request's share of the batch's MACs.
+    pub macs: f64,
+    /// This request's share of the batch's simulated energy (J).
+    pub joules: f64,
+    /// Achieved GOPs/s of the batch (a rate — shared, not divided).
+    pub gops: f64,
+}
+
+/// What one [`InferenceBackend::infer_batch`] call produced: the logits,
+/// plus the simulated execution cost when the backend can measure one.
+///
+/// Simulation-backed backends ([`crate::scheduler::SimBackend`]) always
+/// attach a [`BatchCost`]; backends that run on real hardware or carry no
+/// cost model ([`PjrtBackend`], [`MockBackend`]) return `None`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchReport {
+    /// One logits vector per input image, in input order.
+    pub outputs: Vec<Vec<i32>>,
+    /// Farm-aggregated execution cost, when the backend measures one.
+    pub cost: Option<BatchCost>,
+}
+
+impl BatchReport {
+    /// A report with no cost model (hardware or mock backends).
+    pub fn functional(outputs: Vec<Vec<i32>>) -> Self {
+        Self { outputs, cost: None }
+    }
+
+    /// A report with measured/synthesized cost (simulation backends).
+    pub fn with_cost(outputs: Vec<Vec<i32>>, cost: BatchCost) -> Self {
+        Self { outputs, cost: Some(cost) }
+    }
+}
+
+/// Something that can turn a batch of images into logits (and, when it
+/// simulates the hardware, say what the batch cost to execute).
 ///
 /// Not `Send`: PJRT clients are `Rc`-based, so the backend is constructed
 /// *on* the engine thread via the factory passed to
@@ -14,8 +116,9 @@ use anyhow::Result;
 pub trait InferenceBackend {
     /// Flat image length this backend expects.
     fn input_len(&self) -> usize;
-    /// Run a batch; returns one logits vector per image.
-    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<Vec<Vec<i32>>>;
+    /// Run a batch; returns one logits vector per image plus the optional
+    /// execution cost.
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchReport>;
     /// Human-readable identification.
     fn describe(&self) -> String;
 }
@@ -56,7 +159,7 @@ impl InferenceBackend for PjrtBackend {
         self.input_len
     }
 
-    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchReport> {
         // Layer-serial over the batch: block b for every image, then b+1 —
         // one weight-resident pass per layer, like the engine's steps.
         let mut acts: Vec<Vec<i32>> = images.iter().map(|v| v.to_vec()).collect();
@@ -67,7 +170,9 @@ impl InferenceBackend for PjrtBackend {
             }
         }
         let head = self.rt.module(&self.head)?;
-        acts.iter().map(|a| head.run_i32(&[a])).collect()
+        let outputs: Result<Vec<Vec<i32>>> = acts.iter().map(|a| head.run_i32(&[a])).collect();
+        // Real-hardware execution: no simulated cost to report.
+        Ok(BatchReport::functional(outputs?))
     }
 
     fn describe(&self) -> String {
@@ -172,12 +277,12 @@ impl InferenceBackend for MockBackend {
         self.input_len
     }
 
-    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchReport> {
         self.calls += 1;
         if !self.delay.is_zero() {
             std::thread::sleep(self.delay * images.len() as u32);
         }
-        Ok(images.iter().map(|img| self.expected_logits(img)).collect())
+        Ok(BatchReport::functional(images.iter().map(|img| self.expected_logits(img)).collect()))
     }
 
     fn describe(&self) -> String {
@@ -208,8 +313,10 @@ mod tests {
         )
         .unwrap();
         let img = vec![7i32; b.input_len()];
-        let out = b.infer_batch(&[&img]).unwrap();
-        assert_eq!(out.len(), 1);
+        let r = b.infer_batch(&[&img]).unwrap();
+        assert_eq!(r.outputs.len(), 1);
+        let cost = r.cost.expect("sim backend must report a batch cost");
+        assert!(cost.stats.cycles > 0 && cost.joules > 0.0 && cost.gops > 0.0);
         assert!(b.describe().starts_with("sim["));
     }
 
@@ -241,9 +348,40 @@ mod tests {
         let mut b = MockBackend::new(4, 3);
         let i1 = vec![1, 2, 3, 4];
         let i2 = vec![5, 5, 5, 5];
-        let out = b.infer_batch(&[&i1, &i2]).unwrap();
-        assert_eq!(out[0], b.expected_logits(&i1));
-        assert_eq!(out[1], b.expected_logits(&i2));
+        let r = b.infer_batch(&[&i1, &i2]).unwrap();
+        assert_eq!(r.outputs[0], b.expected_logits(&i1));
+        assert_eq!(r.outputs[1], b.expected_logits(&i2));
+        assert!(r.cost.is_none(), "mock has no cost model");
         assert_eq!(b.calls, 1);
+    }
+
+    #[test]
+    fn batch_cost_derivations_and_attribution() {
+        let stats = SimStats {
+            cycles: 1000,
+            ext_input_reads: 300,
+            weight_reads: 100,
+            output_writes: 100,
+            psum_buf_reads: 40,
+            psum_buf_writes: 60,
+            macs: 5000,
+            ..Default::default()
+        };
+        let e = EnergyModel::paper();
+        let c = BatchCost::from_stats(stats, 150.0e6, &e);
+        // gops = 2·MACs·f_clk/cycles
+        assert!((c.gops - 2.0 * 5000.0 * 150.0e6 / 1000.0 / 1e9).abs() < 1e-12);
+        let expect_j = e.memory_energy_j(500.0, 100.0) + e.compute_energy_j(5000.0);
+        assert!((c.joules - expect_j).abs() < 1e-18);
+        // attribution: divisible counters split, cycles/GOPS shared
+        let per = c.per_request(4);
+        assert_eq!(per.batch_cycles, 1000);
+        assert!((per.off_chip_accesses - 125.0).abs() < 1e-12);
+        assert!((per.on_chip_accesses - 25.0).abs() < 1e-12);
+        assert!((per.macs - 1250.0).abs() < 1e-12);
+        assert!((per.joules - expect_j / 4.0).abs() < 1e-18);
+        assert!((per.gops - c.gops).abs() < 1e-12);
+        // degenerate batch size never divides by zero
+        assert_eq!(c.per_request(0).batch_cycles, 1000);
     }
 }

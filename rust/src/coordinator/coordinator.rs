@@ -83,32 +83,47 @@ impl Coordinator {
         while let Some(batch) = batcher.next_batch() {
             let images: Vec<&[i32]> = batch.iter().map(|r| r.image.as_slice()).collect();
             match backend.infer_batch(&images) {
-                Ok(outs) => {
+                Ok(report) => {
                     let n = batch.len();
+                    // Attribute the batch's simulated cost per request:
+                    // divisible counters split evenly, cycles are shared.
+                    let per_req = report.cost.map(|c| c.per_request(n));
                     let resps: Vec<(InferenceRequest, InferenceResponse)> = batch
                         .into_iter()
-                        .zip(outs)
+                        .zip(report.outputs)
                         .map(|(req, logits)| {
-                            let resp = InferenceResponse::from_logits(req.id, logits, req.enqueued_at, n);
+                            let resp = InferenceResponse::from_logits(
+                                req.id,
+                                logits,
+                                req.enqueued_at,
+                                n,
+                                per_req,
+                            );
                             (req, resp)
                         })
                         .collect();
                     // record before replying so observers see consistent
                     // counters as soon as their response arrives
                     let lats: Vec<_> = resps.iter().map(|(_, r)| r.latency).collect();
-                    metrics.record_batch(&lats);
+                    metrics.record_batch(&lats, report.cost.as_ref());
                     for (req, resp) in resps {
                         let _ = req.reply.send(resp); // receiver may be gone
                     }
                 }
                 Err(e) => {
-                    // Report failure as empty logits; a real deployment
-                    // would attach an error enum — the tests only need the
-                    // requests to resolve.
+                    // Report failure as empty logits (class/cost `None`); a
+                    // real deployment would attach an error enum — the
+                    // tests only need the requests to resolve.
                     eprintln!("engine batch failed: {e:#}");
                     let n = batch.len();
                     for req in batch {
-                        let _ = req.reply.send(InferenceResponse::from_logits(req.id, vec![], req.enqueued_at, n));
+                        let _ = req.reply.send(InferenceResponse::from_logits(
+                            req.id,
+                            vec![],
+                            req.enqueued_at,
+                            n,
+                            None,
+                        ));
                     }
                 }
             }

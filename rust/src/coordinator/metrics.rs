@@ -1,7 +1,33 @@
-//! Serving metrics: counters + latency distribution.
+//! Serving metrics: counters, a bounded latency distribution, and the
+//! cumulative simulated execution cost (cycles / memory accesses / joules)
+//! reported by cost-carrying backends.
+//!
+//! Latencies are kept in a fixed-size **reservoir sample** (Vitter's
+//! algorithm R, deterministic in-tree PRNG): under sustained load the
+//! p50/p95 estimates stay meaningful while memory stays O(1) — the
+//! previous unbounded `Vec` grew forever. `max_latency` is tracked exactly
+//! outside the reservoir.
 
+use super::backend::BatchCost;
+use crate::util::SplitMix64;
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Reservoir capacity: enough for stable p50/p95 estimates, small enough
+/// that a week of sustained load costs the same memory as a minute.
+pub const LATENCY_RESERVOIR: usize = 4096;
+
+/// Achieved simulated throughput in GOPs/s: `2·MACs / simulated seconds`.
+/// Working from accumulated simulated *time* (each batch contributes
+/// `cycles/f_clk`) rather than `Σcycles` priced at one clock keeps the
+/// figure correct when farms with different clocks merge.
+fn achieved_gops(macs: u64, sim_seconds: f64) -> f64 {
+    if sim_seconds > 0.0 {
+        2.0 * macs as f64 / sim_seconds / 1e9
+    } else {
+        0.0
+    }
+}
 
 /// Point-in-time snapshot.
 #[derive(Debug, Clone, Default)]
@@ -13,14 +39,120 @@ pub struct MetricsSnapshot {
     pub p95_latency: Duration,
     pub max_latency: Duration,
     pub throughput_rps: f64,
+    /// Batches that carried a simulated [`BatchCost`] (0 for PJRT/mock
+    /// backends — all `sim_*` fields stay zero then).
+    pub sim_batches: u64,
+    /// Cumulative simulated engine cycles (each batch contributes its
+    /// farm-aggregated wall-clock cycles: max over parallel shards, sum
+    /// over sequential phases).
+    pub sim_cycles: u64,
+    /// Cumulative off-chip (DRAM-side) element accesses.
+    pub sim_off_chip_accesses: u64,
+    /// Cumulative on-chip (psum-buffer) element accesses.
+    pub sim_on_chip_accesses: u64,
+    /// Cumulative MACs.
+    pub sim_macs: u64,
+    /// Cumulative simulated energy (J).
+    pub sim_joules: f64,
+    /// Cumulative simulated engine time in seconds (Σ batch
+    /// `cycles/f_clk` — well-defined even across mixed-clock farms).
+    pub sim_seconds: f64,
+    /// Achieved simulated throughput over everything served so far, in
+    /// GOPs/s: `2·sim_macs/sim_seconds`.
+    pub sim_gops: f64,
+    /// Clock (Hz) of the most recent cost seen — display only; rate
+    /// derivations use `sim_seconds`, not this. 0 until a cost is seen.
+    pub sim_f_clk: f64,
 }
 
-#[derive(Debug, Default)]
+impl MetricsSnapshot {
+    /// Fold another farm's snapshot into this one (the [`super::Router`]
+    /// merged view): countable fields **sum** (requests, batches, sim
+    /// counters, joules, throughput), latency percentiles take the
+    /// conservative **max** across farms, and derived rates (`mean_batch`,
+    /// `sim_gops`) are recomputed from the merged totals.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.mean_batch =
+            if self.batches == 0 { 0.0 } else { self.requests as f64 / self.batches as f64 };
+        self.p50_latency = self.p50_latency.max(other.p50_latency);
+        self.p95_latency = self.p95_latency.max(other.p95_latency);
+        self.max_latency = self.max_latency.max(other.max_latency);
+        self.throughput_rps += other.throughput_rps;
+        self.sim_batches += other.sim_batches;
+        self.sim_cycles += other.sim_cycles;
+        self.sim_off_chip_accesses += other.sim_off_chip_accesses;
+        self.sim_on_chip_accesses += other.sim_on_chip_accesses;
+        self.sim_macs += other.sim_macs;
+        self.sim_joules += other.sim_joules;
+        self.sim_seconds += other.sim_seconds;
+        if self.sim_f_clk == 0.0 {
+            self.sim_f_clk = other.sim_f_clk;
+        }
+        self.sim_gops = achieved_gops(self.sim_macs, self.sim_seconds);
+    }
+}
+
+#[derive(Debug)]
 struct Inner {
     requests: u64,
     batches: u64,
-    latencies_us: Vec<u64>,
+    /// Fixed-size latency reservoir (µs) — see module docs.
+    lat_sample: Vec<u64>,
+    /// Latencies observed in total (≥ `lat_sample.len()`).
+    lat_seen: u64,
+    /// Exact maximum, tracked outside the reservoir.
+    max_us: u64,
+    rng: SplitMix64,
     started: Option<std::time::Instant>,
+    sim_batches: u64,
+    sim_cycles: u64,
+    sim_off_chip: u64,
+    sim_on_chip: u64,
+    sim_macs: u64,
+    sim_joules: f64,
+    sim_seconds: f64,
+    sim_f_clk: f64,
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        Self {
+            requests: 0,
+            batches: 0,
+            lat_sample: Vec::new(),
+            lat_seen: 0,
+            max_us: 0,
+            rng: SplitMix64::new(0x5EED_CAFE),
+            started: None,
+            sim_batches: 0,
+            sim_cycles: 0,
+            sim_off_chip: 0,
+            sim_on_chip: 0,
+            sim_macs: 0,
+            sim_joules: 0.0,
+            sim_seconds: 0.0,
+            sim_f_clk: 0.0,
+        }
+    }
+}
+
+impl Inner {
+    fn record_latency(&mut self, us: u64) {
+        self.max_us = self.max_us.max(us);
+        if self.lat_sample.len() < LATENCY_RESERVOIR {
+            self.lat_sample.push(us);
+        } else {
+            // Algorithm R: item i (1-based) replaces a reservoir slot with
+            // probability k/i, keeping the sample uniform over all seen.
+            let j = self.rng.next_u64() % (self.lat_seen + 1);
+            if (j as usize) < LATENCY_RESERVOIR {
+                self.lat_sample[j as usize] = us;
+            }
+        }
+        self.lat_seen += 1;
+    }
 }
 
 /// Thread-safe metrics accumulator shared between the engine thread and
@@ -35,13 +167,28 @@ impl ServeMetrics {
         Self::default()
     }
 
-    /// Record one served batch.
-    pub fn record_batch(&self, latencies: &[Duration]) {
+    /// Record one served batch: its per-request latencies plus the
+    /// backend's [`BatchCost`] when it reported one.
+    pub fn record_batch(&self, latencies: &[Duration], cost: Option<&BatchCost>) {
         let mut g = self.inner.lock().unwrap();
         g.started.get_or_insert_with(std::time::Instant::now);
         g.batches += 1;
         g.requests += latencies.len() as u64;
-        g.latencies_us.extend(latencies.iter().map(|d| d.as_micros() as u64));
+        for d in latencies {
+            g.record_latency(d.as_micros() as u64);
+        }
+        if let Some(c) = cost {
+            g.sim_batches += 1;
+            g.sim_cycles += c.stats.cycles;
+            g.sim_off_chip += c.stats.off_chip_accesses();
+            g.sim_on_chip += c.stats.on_chip_accesses();
+            g.sim_macs += c.stats.macs;
+            g.sim_joules += c.joules;
+            if c.f_clk > 0.0 {
+                g.sim_seconds += c.stats.cycles as f64 / c.f_clk;
+            }
+            g.sim_f_clk = c.f_clk;
+        }
     }
 
     fn pct(sorted: &[u64], p: f64) -> Duration {
@@ -54,7 +201,7 @@ impl ServeMetrics {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
-        let mut lats = g.latencies_us.clone();
+        let mut lats = g.lat_sample.clone();
         lats.sort_unstable();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         MetricsSnapshot {
@@ -63,8 +210,17 @@ impl ServeMetrics {
             mean_batch: if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 },
             p50_latency: Self::pct(&lats, 0.50),
             p95_latency: Self::pct(&lats, 0.95),
-            max_latency: lats.last().copied().map(Duration::from_micros).unwrap_or_default(),
+            max_latency: if g.lat_seen == 0 { Duration::ZERO } else { Duration::from_micros(g.max_us) },
             throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
+            sim_batches: g.sim_batches,
+            sim_cycles: g.sim_cycles,
+            sim_off_chip_accesses: g.sim_off_chip,
+            sim_on_chip_accesses: g.sim_on_chip,
+            sim_macs: g.sim_macs,
+            sim_joules: g.sim_joules,
+            sim_seconds: g.sim_seconds,
+            sim_gops: achieved_gops(g.sim_macs, g.sim_seconds),
+            sim_f_clk: g.sim_f_clk,
         }
     }
 }
@@ -72,18 +228,21 @@ impl ServeMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::SimStats;
 
     #[test]
     fn percentiles_and_counts() {
         let m = ServeMetrics::new();
-        m.record_batch(&[Duration::from_micros(100), Duration::from_micros(200)]);
-        m.record_batch(&[Duration::from_micros(300)]);
+        m.record_batch(&[Duration::from_micros(100), Duration::from_micros(200)], None);
+        m.record_batch(&[Duration::from_micros(300)], None);
         let s = m.snapshot();
         assert_eq!(s.requests, 3);
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch - 1.5).abs() < 1e-9);
         assert_eq!(s.p50_latency, Duration::from_micros(200));
         assert_eq!(s.max_latency, Duration::from_micros(300));
+        assert_eq!(s.sim_batches, 0);
+        assert_eq!(s.sim_gops, 0.0);
     }
 
     #[test]
@@ -91,5 +250,118 @@ mod tests {
         let s = ServeMetrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p95_latency, Duration::ZERO);
+        assert_eq!(s.sim_cycles, 0);
+    }
+
+    #[test]
+    fn latency_reservoir_is_bounded_and_max_exact() {
+        let m = ServeMetrics::new();
+        let n = (LATENCY_RESERVOIR * 3) as u64;
+        for i in 0..n {
+            m.record_batch(&[Duration::from_micros(i + 1)], None);
+        }
+        let g = m.inner.lock().unwrap();
+        assert_eq!(g.lat_sample.len(), LATENCY_RESERVOIR, "reservoir must not grow past cap");
+        assert_eq!(g.lat_seen, n);
+        drop(g);
+        let s = m.snapshot();
+        assert_eq!(s.requests, n);
+        assert_eq!(s.max_latency, Duration::from_micros(n), "max is exact, not sampled");
+        // Percentiles of a uniform ramp stay near the true values even
+        // though 2/3 of the observations were sampled out.
+        let p50 = s.p50_latency.as_micros() as f64;
+        assert!((p50 - n as f64 / 2.0).abs() < n as f64 * 0.1, "p50 ≈ n/2, got {p50}");
+        assert!(s.p50_latency <= s.p95_latency && s.p95_latency <= s.max_latency);
+    }
+
+    fn cost_at(cycles: u64, macs: u64, f_clk: f64) -> BatchCost {
+        let stats = SimStats {
+            cycles,
+            ext_input_reads: 10,
+            weight_reads: 5,
+            output_writes: 5,
+            psum_buf_reads: 3,
+            psum_buf_writes: 3,
+            macs,
+            ..Default::default()
+        };
+        BatchCost::from_stats(stats, f_clk, &crate::analytics::EnergyModel::paper())
+    }
+
+    fn cost(cycles: u64, macs: u64) -> BatchCost {
+        cost_at(cycles, macs, 150.0e6)
+    }
+
+    #[test]
+    fn sim_cost_accumulates() {
+        let m = ServeMetrics::new();
+        let c1 = cost(100, 400);
+        let c2 = cost(50, 200);
+        m.record_batch(&[Duration::from_micros(10)], Some(&c1));
+        m.record_batch(&[Duration::from_micros(10)], Some(&c2));
+        m.record_batch(&[Duration::from_micros(10)], None); // mixed traffic
+        let s = m.snapshot();
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.sim_batches, 2);
+        assert_eq!(s.sim_cycles, 150);
+        assert_eq!(s.sim_macs, 600);
+        assert_eq!(s.sim_off_chip_accesses, 40);
+        assert_eq!(s.sim_on_chip_accesses, 12);
+        assert!((s.sim_joules - (c1.joules + c2.joules)).abs() < 1e-18);
+        let gops = 2.0 * 600.0 * 150.0e6 / 150.0 / 1e9;
+        assert!((s.sim_gops - gops).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_merge_sums_counters_and_recomputes_rates() {
+        let m1 = ServeMetrics::new();
+        let m2 = ServeMetrics::new();
+        m1.record_batch(&[Duration::from_micros(100)], Some(&cost(100, 400)));
+        m2.record_batch(
+            &[Duration::from_micros(300), Duration::from_micros(50)],
+            Some(&cost(300, 600)),
+        );
+        let (s1, s2) = (m1.snapshot(), m2.snapshot());
+        let mut merged = s1.clone();
+        merged.merge(&s2);
+        assert_eq!(merged.requests, s1.requests + s2.requests);
+        assert_eq!(merged.batches, s1.batches + s2.batches);
+        assert_eq!(merged.sim_batches, s1.sim_batches + s2.sim_batches);
+        assert_eq!(merged.sim_cycles, s1.sim_cycles + s2.sim_cycles);
+        assert_eq!(merged.sim_macs, s1.sim_macs + s2.sim_macs);
+        assert_eq!(
+            merged.sim_off_chip_accesses,
+            s1.sim_off_chip_accesses + s2.sim_off_chip_accesses
+        );
+        assert!((merged.sim_joules - (s1.sim_joules + s2.sim_joules)).abs() < 1e-18);
+        assert_eq!(merged.max_latency, Duration::from_micros(300));
+        assert!((merged.mean_batch - 1.5).abs() < 1e-9);
+        let gops = 2.0 * merged.sim_macs as f64 * 150.0e6 / merged.sim_cycles as f64 / 1e9;
+        assert!((merged.sim_gops - gops).abs() < 1e-9);
+        // merging into a default snapshot is the identity
+        let mut from_zero = MetricsSnapshot::default();
+        from_zero.merge(&s1);
+        assert_eq!(from_zero.sim_cycles, s1.sim_cycles);
+        assert_eq!(from_zero.sim_f_clk, s1.sim_f_clk);
+    }
+
+    #[test]
+    fn mixed_clock_merge_prices_each_farm_at_its_own_clock() {
+        // A 150 MHz farm and a 300 MHz farm behind one router: the merged
+        // GOPS must come from Σ simulated seconds, not Σ cycles priced at
+        // one farm's clock.
+        let slow = ServeMetrics::new();
+        let fast = ServeMetrics::new();
+        slow.record_batch(&[Duration::from_micros(1)], Some(&cost_at(100, 400, 150.0e6)));
+        fast.record_batch(&[Duration::from_micros(1)], Some(&cost_at(100, 400, 300.0e6)));
+        let mut merged = slow.snapshot();
+        merged.merge(&fast.snapshot());
+        let seconds = 100.0 / 150.0e6 + 100.0 / 300.0e6;
+        assert!((merged.sim_seconds - seconds).abs() < 1e-18);
+        let gops = 2.0 * 800.0 / seconds / 1e9;
+        assert!((merged.sim_gops - gops).abs() < 1e-9, "got {}", merged.sim_gops);
+        // the single-clock formula over summed cycles would be wrong here
+        let naive = 2.0 * 800.0 * 150.0e6 / 200.0 / 1e9;
+        assert!((merged.sim_gops - naive).abs() > 0.1);
     }
 }

@@ -9,6 +9,21 @@
 //! `Sync`), per-layer dispatch mirroring the engine's layer-serial
 //! schedule, and metrics.
 //!
+//! Execution cost is a first-class part of the serving API: every
+//! [`InferenceBackend::infer_batch`] returns a [`BatchReport`] whose
+//! optional [`BatchCost`] carries the farm-aggregated
+//! [`crate::arch::SimStats`] (cycles = max over parallel shards,
+//! accesses = sum) plus GOPS/joules derived via
+//! [`crate::analytics::EnergyModel`]. The coordinator attributes that
+//! cost per request ([`InferenceResponse::cost`]) and accumulates it in
+//! [`ServeMetrics`], so `trim serve --backend sim` reports simulated
+//! cycles, memory accesses and joules next to rps — the paper's Tables
+//! I–II accounting, live at the serving boundary.
+//!
+//! Scale-out is the [`Router`]: one `submit`/`infer`/`metrics` ingress
+//! over N coordinators (each its own farm, possibly heterogeneous), with
+//! least-outstanding-requests dispatch and a merged metrics snapshot.
+//!
 //! Threads + channels only — this crate builds offline with no async
 //! runtime; the blocking batcher with a deadline performs the same
 //! time-or-size batching policy a tokio select-loop would.
@@ -18,10 +33,15 @@ pub mod batcher;
 pub mod coordinator;
 pub mod metrics;
 pub mod request;
+pub mod router;
 
-pub use backend::{make_backend, BackendKind, InferenceBackend, MockBackend, PjrtBackend};
+pub use backend::{
+    make_backend, BackendKind, BatchCost, BatchReport, InferenceBackend, MockBackend, PjrtBackend,
+    SimCost,
+};
 pub use crate::scheduler::SimBackend;
 pub use batcher::{Batcher, BatcherConfig};
 pub use coordinator::{Coordinator, CoordinatorConfig};
-pub use metrics::{MetricsSnapshot, ServeMetrics};
+pub use metrics::{MetricsSnapshot, ServeMetrics, LATENCY_RESERVOIR};
 pub use request::{InferenceRequest, InferenceResponse};
+pub use router::{Router, RouterReply};

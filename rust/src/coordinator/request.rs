@@ -1,5 +1,6 @@
 //! Request/response types flowing through the coordinator.
 
+use super::backend::SimCost;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -19,26 +20,36 @@ pub struct InferenceRequest {
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
-    /// Classifier logits.
+    /// Classifier logits. Empty when the backend failed the batch.
     pub logits: Vec<i32>,
-    /// argmax of the logits.
-    pub class: usize,
+    /// argmax of the logits; `None` when there are no logits (failed
+    /// batch), so failure is never mistaken for class 0.
+    pub class: Option<usize>,
     /// Queue + execution latency.
     pub latency: std::time::Duration,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
+    /// This request's attributed share of the batch's simulated execution
+    /// cost; `None` for backends with no cost model (PJRT, mock).
+    pub cost: Option<SimCost>,
 }
 
 impl InferenceResponse {
-    pub fn from_logits(id: u64, logits: Vec<i32>, enqueued_at: Instant, batch_size: usize) -> Self {
+    pub fn from_logits(
+        id: u64,
+        logits: Vec<i32>,
+        enqueued_at: Instant,
+        batch_size: usize,
+        cost: Option<SimCost>,
+    ) -> Self {
         // first maximum wins (deterministic tie-break)
-        let mut class = 0;
+        let mut class = None;
         for (i, &v) in logits.iter().enumerate() {
-            if v > logits[class] {
-                class = i;
+            if class.map_or(true, |c: usize| v > logits[c]) {
+                class = Some(i);
             }
         }
-        Self { id, logits, class, latency: enqueued_at.elapsed(), batch_size }
+        Self { id, logits, class, latency: enqueued_at.elapsed(), batch_size, cost }
     }
 }
 
@@ -48,14 +59,21 @@ mod tests {
 
     #[test]
     fn argmax_class() {
-        let r = InferenceResponse::from_logits(1, vec![3, 9, -2, 9], Instant::now(), 4);
-        assert_eq!(r.class, 1); // first max wins
+        let r = InferenceResponse::from_logits(1, vec![3, 9, -2, 9], Instant::now(), 4, None);
+        assert_eq!(r.class, Some(1)); // first max wins
         assert_eq!(r.batch_size, 4);
+        assert!(r.cost.is_none());
     }
 
     #[test]
-    fn empty_logits_class_zero() {
-        let r = InferenceResponse::from_logits(1, vec![], Instant::now(), 1);
-        assert_eq!(r.class, 0);
+    fn empty_logits_have_no_class() {
+        let r = InferenceResponse::from_logits(1, vec![], Instant::now(), 1, None);
+        assert_eq!(r.class, None);
+    }
+
+    #[test]
+    fn single_logit_is_class_zero() {
+        let r = InferenceResponse::from_logits(1, vec![-7], Instant::now(), 1, None);
+        assert_eq!(r.class, Some(0));
     }
 }

@@ -1,0 +1,236 @@
+//! Multi-farm front door: one ingress over N coordinators.
+//!
+//! Each [`Coordinator`] owns one backend — typically one simulated engine
+//! farm — and the [`Router`] puts a single `submit`/`infer`/`metrics`
+//! surface in front of a fleet of them, the "one ingress, many farms"
+//! shape of ROADMAP §Serving. Farms may be heterogeneous (different
+//! engine counts, shard modes or [`crate::arch::ExecFidelity`] tiers);
+//! the only requirement is that they serve the same model, i.e. agree on
+//! `input_len` — bit-exactness across farm shapes is property-tested, so
+//! a client cannot tell which farm answered.
+//!
+//! Dispatch is **least-outstanding-requests**: every submit goes to the
+//! farm with the fewest in-flight requests (first farm wins ties), which
+//! keeps a slow register-fidelity farm from starving a fast one. The
+//! in-flight count is decremented when the reply is received (or the
+//! [`RouterReply`] dropped), not when the request is enqueued.
+
+use super::coordinator::Coordinator;
+use super::metrics::MetricsSnapshot;
+use super::request::InferenceResponse;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+struct RoutedFarm {
+    coordinator: Coordinator,
+    /// Requests submitted to this farm whose replies are still pending.
+    outstanding: Arc<AtomicUsize>,
+}
+
+/// One ingress over many coordinators (one farm each).
+pub struct Router {
+    farms: Vec<RoutedFarm>,
+    input_len: usize,
+}
+
+/// Pending reply to a routed request. Receiving the response — or
+/// dropping the handle — releases the request's slot in the owning farm's
+/// outstanding count.
+pub struct RouterReply {
+    rx: mpsc::Receiver<InferenceResponse>,
+    outstanding: Arc<AtomicUsize>,
+    farm: usize,
+    settled: bool,
+}
+
+impl RouterReply {
+    /// Block for the response.
+    pub fn recv(&mut self) -> Result<InferenceResponse> {
+        let resp = self.rx.recv()?;
+        self.settle();
+        Ok(resp)
+    }
+
+    /// Index of the farm this request was dispatched to.
+    pub fn farm(&self) -> usize {
+        self.farm
+    }
+
+    fn settle(&mut self) {
+        if !self.settled {
+            self.settled = true;
+            self.outstanding.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+impl Drop for RouterReply {
+    fn drop(&mut self) {
+        self.settle();
+    }
+}
+
+impl Router {
+    /// Front a fleet of running coordinators. Fails on an empty fleet or
+    /// when the farms disagree on the model's input length.
+    pub fn new(coordinators: Vec<Coordinator>) -> Result<Self> {
+        let Some(first) = coordinators.first() else {
+            bail!("router needs at least one farm");
+        };
+        let input_len = first.input_len();
+        for (i, c) in coordinators.iter().enumerate() {
+            if c.input_len() != input_len {
+                bail!(
+                    "farm {i} expects {} int32 inputs but farm 0 expects {input_len} — \
+                     all farms behind one router must serve the same model",
+                    c.input_len()
+                );
+            }
+        }
+        let farms = coordinators
+            .into_iter()
+            .map(|coordinator| RoutedFarm { coordinator, outstanding: Arc::new(AtomicUsize::new(0)) })
+            .collect();
+        Ok(Self { farms, input_len })
+    }
+
+    pub fn farms(&self) -> usize {
+        self.farms.len()
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Descriptions of every farm's backend, in dispatch-index order.
+    pub fn backend_descriptions(&self) -> Vec<String> {
+        self.farms.iter().map(|f| f.coordinator.backend_description().to_string()).collect()
+    }
+
+    fn least_loaded(&self) -> usize {
+        self.farms
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, f)| f.outstanding.load(Ordering::Acquire))
+            .map(|(i, _)| i)
+            .expect("router has at least one farm")
+    }
+
+    /// Submit one image to the least-loaded farm.
+    pub fn submit(&self, image: Vec<i32>) -> Result<RouterReply> {
+        let idx = self.least_loaded();
+        let farm = &self.farms[idx];
+        farm.outstanding.fetch_add(1, Ordering::AcqRel);
+        match farm.coordinator.submit(image) {
+            Ok(rx) => Ok(RouterReply {
+                rx,
+                outstanding: Arc::clone(&farm.outstanding),
+                farm: idx,
+                settled: false,
+            }),
+            Err(e) => {
+                farm.outstanding.fetch_sub(1, Ordering::AcqRel);
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit and block for the result.
+    pub fn infer(&self, image: Vec<i32>) -> Result<InferenceResponse> {
+        self.submit(image)?.recv()
+    }
+
+    /// Merged snapshot across every farm (see [`MetricsSnapshot::merge`]).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut merged = MetricsSnapshot::default();
+        for f in &self.farms {
+            merged.merge(&f.coordinator.metrics());
+        }
+        merged
+    }
+
+    /// Per-farm snapshots, in dispatch-index order.
+    pub fn farm_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.farms.iter().map(|f| f.coordinator.metrics()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{InferenceBackend, MockBackend};
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::coordinator::CoordinatorConfig;
+    use std::time::Duration;
+
+    fn mock_coordinator(input_len: usize) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        };
+        Coordinator::start_with(
+            move || Ok(Box::new(MockBackend::new(input_len, 3)) as Box<dyn InferenceBackend>),
+            cfg,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_fleet_is_rejected() {
+        assert!(Router::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn mismatched_input_lens_are_rejected() {
+        let r = Router::new(vec![mock_coordinator(4), mock_coordinator(8)]);
+        assert!(r.is_err(), "farms serving different models must not share a router");
+    }
+
+    #[test]
+    fn routes_and_answers_like_a_single_coordinator() {
+        let router = Router::new(vec![mock_coordinator(4), mock_coordinator(4)]).unwrap();
+        assert_eq!(router.farms(), 2);
+        assert_eq!(router.input_len(), 4);
+        let probe = MockBackend::new(4, 3);
+        let img = vec![1, 2, 3, 4];
+        let resp = router.infer(img.clone()).unwrap();
+        assert_eq!(resp.logits, probe.expected_logits(&img));
+        assert_eq!(router.metrics().requests, 1);
+    }
+
+    #[test]
+    fn least_outstanding_dispatch_spreads_load() {
+        let router = Router::new(vec![mock_coordinator(4), mock_coordinator(4)]).unwrap();
+        // Submit without receiving: outstanding counts force alternation.
+        let pending: Vec<_> = (0..10).map(|i| router.submit(vec![i, 0, 0, 0]).unwrap()).collect();
+        let farm0 = pending.iter().filter(|r| r.farm() == 0).count();
+        assert_eq!(farm0, 5, "in-flight dispatch must alternate across equal farms");
+        for mut p in pending {
+            p.recv().unwrap();
+        }
+        let per = router.farm_metrics();
+        assert_eq!(per.iter().map(|m| m.requests).sum::<u64>(), 10);
+        assert!(per.iter().all(|m| m.requests == 5));
+    }
+
+    #[test]
+    fn dropping_a_reply_releases_the_slot() {
+        let router = Router::new(vec![mock_coordinator(4), mock_coordinator(4)]).unwrap();
+        let first = router.submit(vec![0; 4]).unwrap();
+        let farm = first.farm();
+        drop(first);
+        // With the slot released, the next submit goes to the same farm
+        // again (ties break toward farm 0 and counts are equal).
+        let second = router.submit(vec![0; 4]).unwrap();
+        assert_eq!(second.farm(), farm);
+    }
+
+    #[test]
+    fn wrong_image_size_is_rejected_and_slot_released() {
+        let router = Router::new(vec![mock_coordinator(4)]).unwrap();
+        assert!(router.submit(vec![1, 2]).is_err());
+        let mut ok = router.submit(vec![0; 4]).unwrap();
+        ok.recv().unwrap();
+        assert_eq!(router.metrics().requests, 1);
+    }
+}

@@ -21,9 +21,15 @@
 //! * [`analytics`] — the paper's analytical models: eqs. (1)–(4), the
 //!   memory-access models for TrIM / Eyeriss-RS / WS-GeMM, the energy
 //!   model, the Fig. 7 design-space sweep and the Table III FPGA cost model.
-//! * [`coordinator`] — the L3 runtime contribution: an async inference
+//! * [`coordinator`] — the L3 runtime contribution: an inference
 //!   coordinator that batches requests and drives a pluggable backend
 //!   (compiled XLA artifacts, the simulated engine farm, or a mock).
+//!   Execution cost is part of the API: `infer_batch` returns a
+//!   [`coordinator::BatchReport`] whose [`coordinator::BatchCost`]
+//!   carries the farm-aggregated [`arch::SimStats`] plus derived
+//!   GOPS/joules, attributed per request and accumulated in the serving
+//!   metrics; [`coordinator::Router`] fronts many farms behind one
+//!   ingress (least-outstanding dispatch, merged metrics).
 //! * [`scheduler`] — the engine-farm layer: a pool of worker threads each
 //!   wrapping an [`arch::EngineSim`], a sharding planner that splits
 //!   layers on the paper's `P_N`-filter group boundaries (plus a

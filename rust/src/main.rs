@@ -13,6 +13,7 @@
 //! trim validate                 simulator vs golden + paper invariants
 //! trim serve [--backend auto|pjrt|sim] [--engines N] [--artifacts DIR]
 //!            [--requests N] [--max-batch B] [--fidelity fast|register]
+//!            [--farms F]
 //!                               e2e batched inference. Backends:
 //!                                 pjrt — compiled XLA artifacts (needs
 //!                                        `make artifacts` + the `pjrt`
@@ -24,7 +25,13 @@
 //!                               --fidelity picks the sim engines' tier:
 //!                               fast (functional + closed-form counters,
 //!                               default) or register (cycle-accurate
-//!                               oracle); logits are bit-identical
+//!                               oracle); logits are bit-identical.
+//!                               --farms F fronts F coordinators (one
+//!                               farm each) with the least-outstanding
+//!                               Router and reports the merged metrics.
+//!                               Sim-backed serving also reports the
+//!                               simulated cost per snapshot: cycles,
+//!                               off-/on-chip accesses, joules, GOPS
 //! trim farm [--engines N] [--net vgg16|alexnet] [--mode filter|pipeline]
 //!           [--batch B] [--fidelity fast|register]
 //!                               shard real network layers across a farm
@@ -37,9 +44,12 @@
 
 use std::collections::HashMap;
 
+use trim_sa::analytics::EnergyModel;
 use trim_sa::arch::control::plan_layer;
-use trim_sa::arch::{ArchConfig, EngineSim, ExecFidelity, SliceSim};
-use trim_sa::coordinator::{make_backend, BackendKind, BatcherConfig, Coordinator, CoordinatorConfig};
+use trim_sa::arch::{ArchConfig, EngineSim, ExecFidelity, SimStats, SliceSim};
+use trim_sa::coordinator::{
+    make_backend, BackendKind, BatchCost, BatcherConfig, Coordinator, CoordinatorConfig, Router,
+};
 use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer, Network};
 use trim_sa::report::{render_fig1, render_fig7, render_table1_or_2, render_table3};
@@ -169,6 +179,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let n_req: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(96);
     let max_batch: usize = flags.get("max-batch").and_then(|v| v.parse().ok()).unwrap_or(8);
     let engines: usize = flags.get("engines").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let farms: usize = flags.get("farms").and_then(|v| v.parse().ok()).unwrap_or(1).max(1);
     let kind: BackendKind = match flags.get("backend") {
         Some(s) => s.parse()?,
         None => BackendKind::Auto,
@@ -180,28 +191,51 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: std::time::Duration::from_millis(2) },
     };
-    let c = Coordinator::start_with(move || make_backend(kind, &dir, engines, fidelity), cfg)?;
-    println!("serving with {} ({} int32 inputs per request)", c.backend_description(), c.input_len());
+    // One ingress, `farms` farms: a single-farm router degenerates to the
+    // plain coordinator, so serve always goes through the front door.
+    let coordinators: Vec<Coordinator> = (0..farms)
+        .map(|_| {
+            let d = dir.clone();
+            Coordinator::start_with(move || make_backend(kind, &d, engines, fidelity), cfg)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let router = Router::new(coordinators)?;
+    for (i, desc) in router.backend_descriptions().iter().enumerate() {
+        println!("farm {i}: {desc} ({} int32 inputs per request)", router.input_len());
+    }
 
-    let len = c.input_len();
+    let len = router.input_len();
     let pending: Vec<_> = (0..n_req)
         .map(|i| {
             let img: Vec<i32> = (0..len).map(|j| ((i * 7919 + j * 31) % 256) as i32).collect();
-            c.submit(img).unwrap()
+            router.submit(img).unwrap()
         })
         .collect();
     let mut classes = vec![0usize; 10];
-    for rx in pending {
+    for mut rx in pending {
         let resp = rx.recv()?;
-        if resp.class < classes.len() {
-            classes[resp.class] += 1;
+        if let Some(class) = resp.class {
+            if class < classes.len() {
+                classes[class] += 1;
+            }
         }
     }
-    let m = c.metrics();
+    let m = router.metrics();
     println!("requests  : {}", m.requests);
     println!("batches   : {} (mean batch {:.1})", m.batches, m.mean_batch);
     println!("latency   : p50 {:?}  p95 {:?}  max {:?}", m.p50_latency, m.p95_latency, m.max_latency);
     println!("throughput: {:.1} req/s", m.throughput_rps);
+    if m.sim_batches > 0 {
+        println!(
+            "sim cost  : {} cycles  {} off-chip + {} on-chip accesses  {:.3} mJ  {:.2} GOPs/s @ {:.0} MHz",
+            m.sim_cycles,
+            m.sim_off_chip_accesses,
+            m.sim_on_chip_accesses,
+            m.sim_joules * 1e3,
+            m.sim_gops,
+            m.sim_f_clk / 1e6
+        );
+    }
     println!("class histogram: {classes:?}");
     Ok(())
 }
@@ -245,6 +279,7 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             let single = EngineSim::with_fidelity(arch, fidelity);
             let mut rng = SplitMix64::new(2024);
             let (mut tot_single, mut tot_farm) = (0u64, 0u64);
+            let mut farm_stats = SimStats::default();
             println!(
                 "{:<6} {:>3} {:>6} {:>13} {:>13} {:>8}  exact",
                 "layer", "K", "shards", "1-engine cyc", "farm cyc", "speedup"
@@ -260,6 +295,7 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 let ok = f.ofmaps == golden && f.ofmaps == s.ofmaps;
                 tot_single += s.stats.cycles;
                 tot_farm += f.stats.cycles;
+                farm_stats.merge_sequential(&f.stats); // layers run back to back
                 println!(
                     "{:<6} {:>3} {:>6} {:>13} {:>13} {:>7.2}x  {}",
                     l.name,
@@ -276,6 +312,14 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 "total: {tot_single} -> {tot_farm} cycles ({:.2}x with {engines} engines); \
                  all layers bit-exact vs single engine and golden conv",
                 tot_single as f64 / tot_farm as f64
+            );
+            let cost = BatchCost::from_stats(farm_stats, arch.f_clk, &EnergyModel::paper());
+            println!(
+                "sim cost: {} off-chip + {} on-chip accesses  {:.3} mJ  {:.2} GOPs/s achieved",
+                cost.stats.off_chip_accesses(),
+                cost.stats.on_chip_accesses(),
+                cost.joules * 1e3,
+                cost.gops
             );
         }
         ShardMode::LayerPipeline => {
@@ -320,6 +364,14 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             for (i, s) in rn.per_engine.iter().enumerate() {
                 println!("  engine {i}: {:>10} cycles  {:>10} MACs", s.cycles, s.macs);
             }
+            let cost = BatchCost::from_stats(rn.stats, arch.f_clk, &EnergyModel::paper());
+            println!(
+                "sim cost: {} off-chip + {} on-chip accesses  {:.3} mJ  {:.2} GOPs/s achieved",
+                cost.stats.off_chip_accesses(),
+                cost.stats.on_chip_accesses(),
+                cost.joules * 1e3,
+                cost.gops
+            );
         }
     }
     Ok(())

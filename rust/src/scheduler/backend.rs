@@ -17,8 +17,9 @@
 
 use super::farm::{EngineFarm, FarmConfig, PipelineStage};
 use super::shard::ShardMode;
-use crate::arch::{ArchConfig, ExecFidelity};
-use crate::coordinator::InferenceBackend;
+use crate::analytics::EnergyModel;
+use crate::arch::{ArchConfig, ExecFidelity, SimStats};
+use crate::coordinator::{BatchCost, BatchReport, InferenceBackend};
 use crate::golden::{conv3d_i32, Tensor3};
 use crate::model::quant::Requant;
 use crate::model::ConvLayer;
@@ -79,12 +80,18 @@ impl SimNetSpec {
 }
 
 /// Inference backend that runs entirely on the simulated engine farm.
+///
+/// Because the farm is a simulator, every batch comes back with a
+/// [`BatchCost`]: the farm-aggregated [`SimStats`] of the batch plus the
+/// derived GOPS/joules — the Tables I–II accounting, priced by
+/// [`EnergyModel`], surfaced through the serving API.
 pub struct SimBackend {
     farm: EngineFarm,
     spec: SimNetSpec,
     weights: Vec<Arc<Vec<i32>>>,
     mode: ShardMode,
     requant: Requant,
+    energy: EnergyModel,
     /// infer_batch calls observed (exposed for batching assertions).
     pub calls: u64,
 }
@@ -117,7 +124,7 @@ impl SimBackend {
         let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
         let weights = (0..spec.layers.len()).map(|i| Arc::new(spec.layer_weights(i))).collect();
         let requant = Requant::new(spec.requant_shift, 8);
-        Self { farm, spec, weights, mode, requant, calls: 0 }
+        Self { farm, spec, weights, mode, requant, energy: EnergyModel::paper(), calls: 0 }
     }
 
     pub fn mode(&self) -> ShardMode {
@@ -126,6 +133,11 @@ impl SimBackend {
 
     pub fn engines(&self) -> usize {
         self.farm.engines()
+    }
+
+    /// The energy model used to price [`BatchCost::joules`].
+    pub fn energy_model(&self) -> &EnergyModel {
+        &self.energy
     }
 
     fn image_tensor(&self, image: &[i32]) -> Tensor3 {
@@ -149,15 +161,20 @@ impl SimBackend {
     /// Layer-serial forward of one image, every layer sharded across the
     /// farm (the weight-resident order of the PJRT backend). Weights stay
     /// behind their cached `Arc`s — nothing is copied per request except
-    /// the incoming image.
-    fn forward_sharded(&self, image: &[i32]) -> Vec<i32> {
+    /// the incoming image. Returns the logits plus the image's aggregated
+    /// stats: each layer's [`super::farm::FarmRunResult`] already reduces
+    /// its shards (cycles = max, accesses = sum) and the layers run
+    /// sequentially, so their cycles add.
+    fn forward_sharded(&self, image: &[i32]) -> (Vec<i32>, SimStats) {
         let mut act = Arc::new(self.image_tensor(image));
+        let mut stats = SimStats::default();
         for (layer, weights) in self.spec.layers.iter().zip(&self.weights) {
             let mut r = self.farm.run_layer_shared(layer, act, Arc::clone(weights));
+            stats.merge_sequential(&r.stats);
             self.requant_inplace(&mut r.ofmaps);
             act = Arc::new(r.ofmaps);
         }
-        self.head(&act)
+        (self.head(&act), stats)
     }
 
     fn pipeline_stages(&self) -> Vec<PipelineStage> {
@@ -193,7 +210,7 @@ impl InferenceBackend for SimBackend {
         c * h * w
     }
 
-    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchReport> {
         self.calls += 1;
         let expect = self.input_len();
         for img in images {
@@ -201,15 +218,32 @@ impl InferenceBackend for SimBackend {
                 bail!("sim backend: image length {} != expected {}", img.len(), expect);
             }
         }
-        match self.mode {
-            ShardMode::FilterShards => Ok(images.iter().map(|img| self.forward_sharded(img)).collect()),
+        let f_clk = self.farm.arch().f_clk;
+        let (outputs, stats) = match self.mode {
+            ShardMode::FilterShards => {
+                // Images run back to back through the farm: per-image
+                // stats (already shard-reduced per layer) add cycles.
+                let mut stats = SimStats::default();
+                let outputs = images
+                    .iter()
+                    .map(|img| {
+                        let (logits, s) = self.forward_sharded(img);
+                        stats.merge_sequential(&s);
+                        logits
+                    })
+                    .collect();
+                (outputs, stats)
+            }
             ShardMode::LayerPipeline => {
                 let stages = self.pipeline_stages();
                 let inputs: Vec<Tensor3> = images.iter().map(|img| self.image_tensor(img)).collect();
                 let r = self.farm.run_pipeline(&stages, inputs);
-                Ok(r.outputs.iter().map(|t| self.head(t)).collect())
+                // PipelineRunResult already reduces across engines
+                // (cycles = max over parallel engines, accesses = sum).
+                (r.outputs.iter().map(|t| self.head(t)).collect(), r.stats)
             }
-        }
+        };
+        Ok(BatchReport::with_cost(outputs, BatchCost::from_stats(stats, f_clk, &self.energy)))
     }
 
     fn describe(&self) -> String {
@@ -245,8 +279,19 @@ mod tests {
         let imgs: Vec<Vec<i32>> = (0..3).map(|i| image(100 + i, len)).collect();
         let refs: Vec<&[i32]> = imgs.iter().map(|v| v.as_slice()).collect();
         let expect: Vec<Vec<i32>> = imgs.iter().map(|v| sharded.reference_logits(v)).collect();
-        assert_eq!(sharded.infer_batch(&refs).unwrap(), expect);
-        assert_eq!(piped.infer_batch(&refs).unwrap(), expect);
+        let rs = sharded.infer_batch(&refs).unwrap();
+        let rp = piped.infer_batch(&refs).unwrap();
+        assert_eq!(rs.outputs, expect);
+        assert_eq!(rp.outputs, expect);
+        // Both modes report a priced batch cost, and since they execute
+        // the same layers on the same images, the work counters agree —
+        // only the wall-cycle reduction differs between the modes.
+        let (cs, cp) = (rs.cost.unwrap(), rp.cost.unwrap());
+        assert!(cs.stats.cycles > 0 && cp.stats.cycles > 0);
+        assert_eq!(cs.stats.macs, cp.stats.macs, "same MACs either way");
+        assert_eq!(cs.stats.ext_input_reads, cp.stats.ext_input_reads);
+        assert_eq!(cs.stats.output_writes, cp.stats.output_writes);
+        assert!(cs.joules > 0.0 && cp.joules > 0.0);
     }
 
     #[test]
@@ -278,6 +323,8 @@ mod tests {
         let len = fast.input_len();
         let imgs: Vec<Vec<i32>> = (0..2).map(|i| image(400 + i, len)).collect();
         let refs: Vec<&[i32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        // Whole-report equality: identical logits AND identical BatchCost
+        // (the fast tier's counters are exact vs the register oracle).
         assert_eq!(fast.infer_batch(&refs).unwrap(), reg.infer_batch(&refs).unwrap());
     }
 }

@@ -1,12 +1,15 @@
 //! Integration: the coordinator under concurrent load (mock backend —
 //! PJRT-backed serving is covered by tests/runtime_artifacts.rs and the
-//! serve_cnn example).
+//! serve_cnn example), the cost-telemetry plumbing of sim-backed serving,
+//! and the multi-farm Router front door.
 
 use std::sync::Arc;
 use std::time::Duration;
 use trim_sa::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend, MockBackend,
+    BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend, MockBackend, Router,
+    SimBackend,
 };
+use trim_sa::util::SplitMix64;
 
 fn start(max_batch: usize, wait_ms: u64, delay_us: u64) -> Coordinator {
     let cfg = CoordinatorConfig {
@@ -95,4 +98,111 @@ fn responses_preserve_request_identity() {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.logits, probe.expected_logits(&vec![i as i32; 16]));
     }
+}
+
+fn sim_coordinator(engines: usize, max_batch: usize) -> Coordinator {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(5) },
+    };
+    Coordinator::start_with(
+        move || Ok(Box::new(SimBackend::new(engines)) as Box<dyn InferenceBackend>),
+        cfg,
+    )
+    .unwrap()
+}
+
+/// Sim-backed serving surfaces the execution cost end to end: every
+/// response carries an attributed `SimCost`, the metrics snapshot
+/// accumulates nonzero cycles/accesses/joules/GOPS, and the per-request
+/// shares of joules add back up to the snapshot's cumulative total.
+#[test]
+fn sim_backed_serving_reports_cost_telemetry() {
+    let c = sim_coordinator(2, 8);
+    let len = c.input_len();
+    let pending: Vec<_> = (0..12)
+        .map(|i| c.submit(SplitMix64::new(0x7E1 + i as u64).vec_i32(len, 0, 256)).unwrap())
+        .collect();
+    let mut joules_sum = 0.0f64;
+    for rx in pending {
+        let resp = rx.recv().unwrap();
+        let cost = resp.cost.expect("sim responses carry an attributed cost");
+        assert!(cost.batch_cycles > 0);
+        assert!(cost.off_chip_accesses > 0.0 && cost.on_chip_accesses > 0.0);
+        assert!(cost.macs > 0.0 && cost.joules > 0.0 && cost.gops > 0.0);
+        assert!(resp.class.is_some(), "real logits must classify");
+        joules_sum += cost.joules;
+    }
+    let m = c.metrics();
+    assert_eq!(m.requests, 12);
+    assert!(m.sim_batches > 0 && m.sim_batches == m.batches);
+    assert!(m.sim_cycles > 0 && m.sim_off_chip_accesses > 0 && m.sim_on_chip_accesses > 0);
+    assert!(m.sim_macs > 0 && m.sim_joules > 0.0 && m.sim_gops > 0.0);
+    assert!((m.sim_f_clk - 150.0e6).abs() < 1.0, "priced at the engines' clock");
+    // attribution conserves energy: per-request shares sum to the total
+    assert!(
+        (joules_sum - m.sim_joules).abs() < 1e-9 * m.sim_joules,
+        "Σ per-request joules {joules_sum} != cumulative {}",
+        m.sim_joules
+    );
+}
+
+/// Backends with no cost model leave every `sim_*` field zero and every
+/// response's cost `None` — telemetry never lies about measuring.
+#[test]
+fn mock_backend_reports_no_cost() {
+    let c = start(4, 1, 0);
+    let resp = c.infer(vec![0; 16]).unwrap();
+    assert!(resp.cost.is_none());
+    let m = c.metrics();
+    assert_eq!(m.sim_batches, 0);
+    assert_eq!(m.sim_cycles, 0);
+    assert_eq!(m.sim_joules, 0.0);
+    assert_eq!(m.sim_gops, 0.0);
+}
+
+/// Acceptance: a Router over ≥ 2 farms (heterogeneous engine counts)
+/// serves a batch **bit-identically** to a single farm and to the golden
+/// reference, and its merged metrics equal the sum of the per-farm
+/// snapshots on every countable field.
+#[test]
+fn router_over_two_farms_is_bit_identical_and_merges_metrics() {
+    let probe = SimBackend::new(1);
+    let len = probe.input_len();
+    let images: Vec<Vec<i32>> =
+        (0..24).map(|i| SplitMix64::new(0x2024 + i as u64).vec_i32(len, 0, 256)).collect();
+
+    let single = sim_coordinator(2, 8);
+    let single_logits: Vec<Vec<i32>> =
+        images.iter().map(|img| single.infer(img.clone()).unwrap().logits).collect();
+
+    let router = Router::new(vec![sim_coordinator(2, 8), sim_coordinator(3, 8)]).unwrap();
+    assert_eq!(router.farms(), 2);
+    let pending: Vec<_> = images.iter().map(|img| router.submit(img.clone()).unwrap()).collect();
+    for ((img, expect), mut rx) in images.iter().zip(&single_logits).zip(pending) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(&resp.logits, expect, "router must serve bit-identically to a single farm");
+        assert_eq!(resp.logits, probe.reference_logits(img), "…and to the golden reference");
+        assert!(resp.cost.is_some());
+    }
+
+    let merged = router.metrics();
+    let per = router.farm_metrics();
+    assert!(per.iter().all(|m| m.requests > 0), "least-outstanding dispatch must use both farms");
+    assert_eq!(merged.requests, per.iter().map(|m| m.requests).sum::<u64>());
+    assert_eq!(merged.requests, 24);
+    assert_eq!(merged.batches, per.iter().map(|m| m.batches).sum::<u64>());
+    assert_eq!(merged.sim_batches, per.iter().map(|m| m.sim_batches).sum::<u64>());
+    assert_eq!(merged.sim_cycles, per.iter().map(|m| m.sim_cycles).sum::<u64>());
+    assert_eq!(
+        merged.sim_off_chip_accesses,
+        per.iter().map(|m| m.sim_off_chip_accesses).sum::<u64>()
+    );
+    assert_eq!(
+        merged.sim_on_chip_accesses,
+        per.iter().map(|m| m.sim_on_chip_accesses).sum::<u64>()
+    );
+    assert_eq!(merged.sim_macs, per.iter().map(|m| m.sim_macs).sum::<u64>());
+    let joules: f64 = per.iter().map(|m| m.sim_joules).sum();
+    assert!(merged.sim_joules > 0.0 && (merged.sim_joules - joules).abs() <= 1e-12 * joules);
+    assert!(merged.sim_gops > 0.0);
 }

@@ -7,7 +7,8 @@
 //! ≥ 96-request batched workload from the sim backend with no artifacts.
 
 use std::sync::Arc;
-use trim_sa::arch::{ArchConfig, EngineSim, ExecFidelity};
+use trim_sa::analytics::EnergyModel;
+use trim_sa::arch::{ArchConfig, EngineSim, ExecFidelity, SimStats};
 use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend};
 use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::quant::Requant;
@@ -237,6 +238,93 @@ fn alexnet_cl2_geometry_tiled_farm_bit_exact() {
     assert_eq!(r.ofmaps, single.ofmaps, "tiled farm vs single engine");
 }
 
+/// Acceptance: the [`trim_sa::coordinator::BatchCost`] a served
+/// `SimNetSpec::tiny()` batch reports is pinned to the **register-tier
+/// oracle** — a layer-serial chain of cycle-accurate `EngineSim` runs on
+/// the same deterministic weights — and its joules/GOPS follow the
+/// paper-calibrated energy model exactly.
+#[test]
+fn batch_cost_pinned_to_register_oracle() {
+    let spec = SimNetSpec::tiny();
+    let arch = ArchConfig::small(3, 2, 1);
+    let mut backend =
+        SimBackend::with_fidelity(1, arch, spec.clone(), ShardMode::FilterShards, ExecFidelity::Fast);
+    let len = backend.input_len();
+    let img = SplitMix64::new(0x07AC).vec_i32(len, 0, 256);
+    let report = backend.infer_batch(&[&img]).unwrap();
+    let cost = report.cost.expect("sim backend must report a batch cost");
+
+    // The oracle: every layer stepped register by register, stats merged
+    // the way the serving path promises (layers run sequentially).
+    let oracle = EngineSim::new(arch);
+    let q = Requant::new(spec.requant_shift, 8);
+    let (c, h, w) = spec.input;
+    let mut act = Tensor3 { c, h, w, data: img.clone() };
+    let mut expect = SimStats::default();
+    for (i, layer) in spec.layers.iter().enumerate() {
+        let weights = spec.layer_weights(i);
+        let r = oracle.run_layer(layer, &act, &weights);
+        expect.merge_sequential(&r.stats);
+        act = r.ofmaps;
+        for v in act.data.iter_mut() {
+            *v = q.apply(*v as i64) as i32;
+        }
+    }
+    assert_eq!(cost.stats, expect, "served batch stats == register-tier oracle");
+    assert!(cost.stats.cycles > 0);
+    assert!(cost.stats.off_chip_accesses() > 0 && cost.stats.on_chip_accesses() > 0);
+    let e = EnergyModel::paper();
+    let joules = e
+        .memory_energy_j(expect.off_chip_accesses() as f64, expect.on_chip_accesses() as f64)
+        + e.compute_energy_j(expect.macs as f64);
+    assert!(cost.joules > 0.0 && (cost.joules - joules).abs() < 1e-15);
+    let gops = expect.ops_per_s(arch.f_clk) / 1e9;
+    assert!(cost.gops > 0.0 && (cost.gops - gops).abs() < 1e-9);
+}
+
+/// A served batch's `BatchCost` obeys the farm's own aggregation
+/// invariants: per layer, cycles = **max** over the shard plan while
+/// accesses/MACs = **sum** over shards; across the layer-serial chain and
+/// the images of the batch, cycles add. Reconstructed shard for shard
+/// with an identical farm.
+#[test]
+fn served_batch_cost_matches_farm_aggregation() {
+    let spec = SimNetSpec::tiny();
+    let arch = ArchConfig::small(3, 2, 1);
+    let engines = 3;
+    let mut backend = SimBackend::with_spec(engines, arch, spec.clone(), ShardMode::FilterShards);
+    let len = backend.input_len();
+    let imgs: Vec<Vec<i32>> =
+        (0..3).map(|i| SplitMix64::new(0xBA7C + i as u64).vec_i32(len, 0, 256)).collect();
+    let refs: Vec<&[i32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let cost = backend.infer_batch(&refs).unwrap().cost.unwrap();
+
+    let farm = EngineFarm::new(FarmConfig::new(engines, arch));
+    let q = Requant::new(spec.requant_shift, 8);
+    let mut expect = SimStats::default();
+    for img in &imgs {
+        let (c, h, w) = spec.input;
+        let mut act = Tensor3 { c, h, w, data: img.clone() };
+        for (i, layer) in spec.layers.iter().enumerate() {
+            let weights = spec.layer_weights(i);
+            let r = farm.run_layer(layer, &act, &weights);
+            // the per-layer reduction the farm promises
+            assert_eq!(r.stats.cycles, r.per_shard.iter().map(|s| s.cycles).max().unwrap());
+            assert_eq!(r.stats.macs, r.per_shard.iter().map(|s| s.macs).sum::<u64>());
+            assert_eq!(
+                r.stats.off_chip_accesses(),
+                r.per_shard.iter().map(|s| s.off_chip_accesses()).sum::<u64>()
+            );
+            expect.merge_sequential(&r.stats);
+            act = r.ofmaps;
+            for v in act.data.iter_mut() {
+                *v = q.apply(*v as i64) as i32;
+            }
+        }
+    }
+    assert_eq!(cost.stats, expect, "served BatchCost == farm aggregation, shard for shard");
+}
+
 fn serve_workload(mode: ShardMode) {
     let n_req = 96usize;
     let cfg = CoordinatorConfig {
@@ -261,12 +349,17 @@ fn serve_workload(mode: ShardMode) {
     for (img, rx) in images.iter().zip(pending) {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.logits, probe.reference_logits(img), "{mode:?}: wrong logits");
+        let cost = resp.cost.expect("sim-served responses carry attributed cost");
+        assert!(cost.batch_cycles > 0 && cost.joules > 0.0 && cost.gops > 0.0, "{mode:?}");
         max_batch_seen = max_batch_seen.max(resp.batch_size);
     }
     let m = c.metrics();
     assert_eq!(m.requests, n_req as u64);
     assert!(max_batch_seen > 1, "{mode:?}: expected batched execution under load");
     assert!(m.batches < n_req as u64, "{mode:?}: batches = {}", m.batches);
+    assert_eq!(m.sim_batches, m.batches, "{mode:?}: every sim batch carries cost");
+    assert!(m.sim_cycles > 0 && m.sim_off_chip_accesses > 0, "{mode:?}");
+    assert!(m.sim_joules > 0.0 && m.sim_gops > 0.0, "{mode:?}");
 }
 
 /// Acceptance: `trim serve --backend sim` semantics — the coordinator
