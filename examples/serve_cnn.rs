@@ -51,7 +51,15 @@ fn main() -> anyhow::Result<()> {
         };
         let d = dir.clone();
         let c = Coordinator::start_with(
-            move || make_backend(BackendKind::Auto, &d, sim_engines, trim_sa::arch::ExecFidelity::Fast),
+            move || {
+                make_backend(
+                    BackendKind::Auto,
+                    &d,
+                    sim_engines,
+                    trim_sa::arch::ExecFidelity::Fast,
+                    trim_sa::scheduler::ShardMode::Auto,
+                )
+            },
             cfg,
         )?;
         if max_batch == 1 {

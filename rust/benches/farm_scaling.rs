@@ -1,19 +1,25 @@
-//! Bench: serving throughput vs engine-farm size — requests/sec at 1, 2,
-//! 4, 8 simulated TrIM engines, in both sharding modes and both execution
-//! fidelities, through the full coordinator (ingress → batcher → sim
-//! backend). Needs no artifacts.
+//! Bench: serving throughput vs engine-farm size — requests/sec through
+//! the full coordinator (ingress → batcher → sim backend), in both
+//! execution fidelities, across the farm's shard modes. Needs no
+//! artifacts.
 //!
-//! The fidelity axis is the PR-over-PR trajectory hook: `register` is the
-//! farm's pre-fast-tier behaviour (every engine cycle-accurate), `fast` is
-//! the current default — same logits, closed-form counters. The rps ratio
-//! between the two at equal engine count is the serving-level speedup of
-//! the fast tier.
+//! Two workloads:
+//!
+//! * `tiny` — the `SimNetSpec::tiny` serving CNN at 1/2/4/8 engines in
+//!   {filter, pipeline} mode: the PR-over-PR trajectory rows carried since
+//!   PR 1 (the fidelity axis since PR 2).
+//! * `cl1` — the `SimNetSpec::cl1_class` workload (one wide-spatial,
+//!   filter-starved 3→10 layer over 112², the VGG-16 CL1 geometry class)
+//!   at 4/8 engines in {filter, spatial, auto} mode: the shard-axis sweep
+//!   of the spatial-sharding PR. On 8 narrow engines the filter axis is
+//!   bounded at 5× while rows bound 8× — `auto` must match or beat
+//!   `filter` rps at 8 engines (strictly, on the fast tier).
 //!
 //! Emits one JSON line per configuration (prefixed `JSON `) so the bench
 //! trajectory can be scraped into EXPERIMENTS.md / dashboards:
 //!
 //! ```text
-//! JSON {"bench":"farm_scaling","mode":"FilterShards","fidelity":"fast",...}
+//! JSON {"bench":"farm_scaling","workload":"cl1","shard_mode":"auto",...}
 //! ```
 
 #[path = "bench_harness.rs"]
@@ -24,65 +30,101 @@ use trim_sa::arch::{ArchConfig, ExecFidelity};
 use trim_sa::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend};
 use trim_sa::scheduler::{ShardMode, SimBackend, SimNetSpec};
 
+#[allow(clippy::too_many_arguments)]
+fn run_config(
+    workload: &str,
+    spec: &SimNetSpec,
+    mode: ShardMode,
+    fidelity: ExecFidelity,
+    engines: usize,
+    n_req: usize,
+    max_batch: usize,
+    base_rps: &mut f64,
+    json_lines: &mut Vec<String>,
+) -> anyhow::Result<()> {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+    };
+    let spec = spec.clone();
+    let c = Coordinator::start_with(
+        move || {
+            Ok(Box::new(SimBackend::with_fidelity(
+                engines,
+                ArchConfig::small(3, 2, 1),
+                spec,
+                mode,
+                fidelity,
+            )) as Box<dyn InferenceBackend>)
+        },
+        cfg,
+    )?;
+    let len = c.input_len();
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..n_req)
+        .map(|i| {
+            let img: Vec<i32> = (0..len).map(|j| ((i * 131 + j * 31) % 256) as i32).collect();
+            c.submit(img).unwrap()
+        })
+        .collect();
+    for rx in pending {
+        rx.recv()?;
+    }
+    let wall = t0.elapsed();
+    let m = c.metrics();
+    let rps = n_req as f64 / wall.as_secs_f64();
+    if *base_rps == 0.0 {
+        *base_rps = rps;
+    }
+    println!(
+        "{workload:<4} {fidelity:<8} {mode:<8} engines={engines:<2} {rps:>9.1} req/s ({:>5.2}x vs base)  p50 {:>9.3?}  p95 {:>9.3?}  {} batches (mean {:.1})",
+        rps / *base_rps,
+        m.p50_latency,
+        m.p95_latency,
+        m.batches,
+        m.mean_batch
+    );
+    json_lines.push(format!(
+        "JSON {{\"bench\":\"farm_scaling\",\"workload\":\"{workload}\",\"shard_mode\":\"{mode}\",\
+         \"fidelity\":\"{fidelity}\",\"engines\":{engines},\"requests\":{n_req},\
+         \"max_batch\":{max_batch},\"rps\":{rps:.2},\"speedup_vs_base\":{:.3},\
+         \"p50_us\":{},\"p95_us\":{},\"mean_batch\":{:.2}}}",
+        rps / *base_rps,
+        m.p50_latency.as_micros(),
+        m.p95_latency.as_micros(),
+        m.mean_batch
+    ));
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    header("farm scaling — serving throughput vs engine count (sim backend)");
+    header("farm scaling — serving throughput vs engine count and shard mode (sim backend)");
     let n_req = 96usize; // the acceptance-sized workload
     let max_batch = 8usize;
     let mut json_lines = Vec::new();
+    let tiny = SimNetSpec::tiny();
+    let cl1 = SimNetSpec::cl1_class();
     for fidelity in [ExecFidelity::Register, ExecFidelity::Fast] {
+        // Trajectory rows carried since PR 1: the tiny serving net across
+        // engine counts, filter-sharded and layer-pipelined. Base rps for
+        // the speedup column is the 1-engine run of each (mode, fidelity).
         for mode in [ShardMode::FilterShards, ShardMode::LayerPipeline] {
-            let mut base_rps = 0.0f64;
+            let mut base = 0.0f64;
             for engines in [1usize, 2, 4, 8] {
-                let cfg = CoordinatorConfig {
-                    batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
-                };
-                let c = Coordinator::start_with(
-                    move || {
-                        Ok(Box::new(SimBackend::with_fidelity(
-                            engines,
-                            ArchConfig::small(3, 2, 1),
-                            SimNetSpec::tiny(),
-                            mode,
-                            fidelity,
-                        )) as Box<dyn InferenceBackend>)
-                    },
-                    cfg,
-                )?;
-                let len = c.input_len();
-                let t0 = Instant::now();
-                let pending: Vec<_> = (0..n_req)
-                    .map(|i| {
-                        let img: Vec<i32> =
-                            (0..len).map(|j| ((i * 131 + j * 31) % 256) as i32).collect();
-                        c.submit(img).unwrap()
-                    })
-                    .collect();
-                for rx in pending {
-                    rx.recv()?;
-                }
-                let wall = t0.elapsed();
-                let m = c.metrics();
-                let rps = n_req as f64 / wall.as_secs_f64();
-                if engines == 1 {
-                    base_rps = rps;
-                }
-                println!(
-                    "{fidelity:<8} {mode:?} engines={engines:<2} {rps:>9.1} req/s ({:>5.2}x vs 1 engine)  p50 {:>9.3?}  p95 {:>9.3?}  {} batches (mean {:.1})",
-                    rps / base_rps,
-                    m.p50_latency,
-                    m.p95_latency,
-                    m.batches,
-                    m.mean_batch
-                );
-                json_lines.push(format!(
-                    "JSON {{\"bench\":\"farm_scaling\",\"mode\":\"{mode:?}\",\"fidelity\":\"{fidelity}\",\
-                     \"engines\":{engines},\"requests\":{n_req},\"max_batch\":{max_batch},\"rps\":{rps:.2},\
-                     \"speedup_vs_1\":{:.3},\"p50_us\":{},\"p95_us\":{},\"mean_batch\":{:.2}}}",
-                    rps / base_rps,
-                    m.p50_latency.as_micros(),
-                    m.p95_latency.as_micros(),
-                    m.mean_batch
-                ));
+                run_config("tiny", &tiny, mode, fidelity, engines, n_req, max_batch, &mut base, &mut json_lines)?;
+            }
+        }
+        // The shard-axis sweep on the CL1-class layer: filter sharding is
+        // starved (10 filter groups on these P_N = 1 engines — the largest
+        // shard still carries 2 groups at 8 engines, bounding 5×) while
+        // spatial/auto split 112 output rows evenly (8×). Base rps is the
+        // 4-engine filter run of each fidelity. 32 requests: the layer is
+        // ~50× the tiny net's work per image, so the smaller workload
+        // keeps the register rows affordable without losing the signal.
+        let cl1_req = 32usize;
+        let mut base = 0.0f64;
+        for mode in [ShardMode::FilterShards, ShardMode::Spatial, ShardMode::Auto] {
+            for engines in [4usize, 8] {
+                run_config("cl1", &cl1, mode, fidelity, engines, cl1_req, max_batch, &mut base, &mut json_lines)?;
             }
         }
     }

@@ -19,11 +19,14 @@
 use super::config::{ArchConfig, ExecFidelity};
 use super::control::{plan_layer, StepPlan};
 use super::core::CoreSim;
-use super::fastsim;
+use super::fastsim::{self, ConvScratch};
 use super::slice::{InputView, SliceSim};
 use super::stats::SimStats;
 use crate::golden::Tensor3;
 use crate::model::{ConvLayer, KernelTiling};
+use std::cell::RefCell;
+use std::ops::Range;
+use std::sync::Arc;
 
 /// Result of running one layer on the engine.
 #[derive(Debug, Clone)]
@@ -38,6 +41,12 @@ pub struct EngineRunResult {
 pub struct EngineSim {
     cfg: ArchConfig,
     fidelity: ExecFidelity,
+    /// Fast-tier working set (padded ifmap + accumulator arena), reused
+    /// across every layer/shard/step this engine runs so the hot path
+    /// performs no per-call allocation and at most one padded-input
+    /// materialisation per batch input (see [`ConvScratch`]). `RefCell`:
+    /// an engine is owned by exactly one farm worker thread.
+    scratch: RefCell<ConvScratch>,
 }
 
 impl EngineSim {
@@ -52,7 +61,14 @@ impl EngineSim {
     }
 
     pub fn with_fidelity(cfg: ArchConfig, fidelity: ExecFidelity) -> Self {
-        Self { cfg, fidelity }
+        Self { cfg, fidelity, scratch: RefCell::new(ConvScratch::new()) }
+    }
+
+    /// `(fills, hits, padded-buffer address)` of the fast tier's
+    /// [`ConvScratch`] — observability for the allocation-reuse tests.
+    pub fn scratch_stats(&self) -> (u64, u64, usize) {
+        let s = self.scratch.borrow();
+        (s.fills(), s.hits(), s.padded_ptr() as usize)
     }
 
     pub fn cfg(&self) -> &ArchConfig {
@@ -83,21 +99,125 @@ impl EngineSim {
         layer: &ConvLayer,
         input: &Tensor3,
         weights: &[i32],
-        filters: std::ops::Range<usize>,
+        filters: Range<usize>,
     ) -> EngineRunResult {
         assert!(filters.start < filters.end && filters.end <= layer.n, "bad filter range {filters:?}");
         assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
         if filters.start == 0 && filters.end == layer.n {
             return self.run_layer(layer, input, weights);
         }
-        let kk = layer.k * layer.k;
-        let sub = ConvLayer {
-            name: format!("{}[f{}..{}]", layer.name, filters.start, filters.end),
-            n: filters.end - filters.start,
-            ..layer.clone()
-        };
-        let wslice = &weights[filters.start * layer.m * kk..filters.end * layer.m * kk];
-        self.run_layer(&sub, input, wslice)
+        let (sub, w0, w1) = filter_sub_layer(layer, &filters);
+        self.run_layer(&sub, input, &weights[w0..w1])
+    }
+
+    /// [`EngineSim::run_filter_range`] for callers that hold the input
+    /// behind an `Arc` (the farm's dispatch path): on the fast tier the
+    /// shard reuses the engine-resident padded-input materialisation
+    /// instead of re-padding per call. Results are identical to the
+    /// borrowed variant.
+    pub fn run_filter_range_shared(
+        &self,
+        layer: &ConvLayer,
+        input: &Arc<Tensor3>,
+        weights: &[i32],
+        filters: Range<usize>,
+    ) -> EngineRunResult {
+        assert!(filters.start < filters.end && filters.end <= layer.n, "bad filter range {filters:?}");
+        assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
+        if filters.start == 0 && filters.end == layer.n {
+            return self.run_layer_shared(layer, input, weights);
+        }
+        let (sub, w0, w1) = filter_sub_layer(layer, &filters);
+        self.run_layer_shared(&sub, input, &weights[w0..w1])
+    }
+
+    /// Row-band entry point for the spatial shard axis
+    /// ([`crate::scheduler::plan_row_shards`]): run all `N` filters of
+    /// `layer` over output rows `[rows.start, rows.end)` only.
+    ///
+    /// The band is executed as the ordinary layer [`ConvLayer::row_band`]
+    /// describes — `pad = 0` over the band's explicitly-padded input slab
+    /// (halo rows included) — so the returned ofmaps (`[N][rows.len()][W_O]`,
+    /// bit-identical to the corresponding rows of a whole-layer run) and
+    /// stats are equal across fidelity tiers by the same property that
+    /// makes whole layers equal. The register tier materialises the slab
+    /// (it is the slow oracle); the fast tier computes the band straight
+    /// out of the engine-resident full padded ifmap, copying nothing.
+    pub fn run_row_range(
+        &self,
+        layer: &ConvLayer,
+        input: &Tensor3,
+        weights: &[i32],
+        rows: Range<usize>,
+    ) -> EngineRunResult {
+        self.row_range_impl(layer, input, None, weights, rows)
+    }
+
+    /// [`EngineSim::run_row_range`] for `Arc`-held inputs: fast-tier
+    /// bands of the same input share one padded-input materialisation
+    /// (see [`ConvScratch`]).
+    pub fn run_row_range_shared(
+        &self,
+        layer: &ConvLayer,
+        input: &Arc<Tensor3>,
+        weights: &[i32],
+        rows: Range<usize>,
+    ) -> EngineRunResult {
+        self.row_range_impl(layer, input, Some(input), weights, rows)
+    }
+
+    fn row_range_impl(
+        &self,
+        layer: &ConvLayer,
+        input: &Tensor3,
+        shared: Option<&Arc<Tensor3>>,
+        weights: &[i32],
+        rows: Range<usize>,
+    ) -> EngineRunResult {
+        assert!(rows.start < rows.end && rows.end <= layer.h_o(), "bad output-row range {rows:?}");
+        assert_eq!(input.c, layer.m);
+        assert_eq!(input.h, layer.h_i);
+        assert_eq!(input.w, layer.w_i);
+        assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
+        if rows == (0..layer.h_o()) {
+            return match shared {
+                Some(a) => self.run_layer_shared(layer, a, weights),
+                None => self.run_layer(layer, input, weights),
+            };
+        }
+        let band = layer.row_band(&rows);
+        match self.fidelity {
+            ExecFidelity::Fast => {
+                let plan = plan_layer(&self.cfg, &band);
+                let stats = fastsim::analytic_stats_rows(&self.cfg, layer, &rows);
+                let mut scratch = self.scratch.borrow_mut();
+                let ofmaps = match shared {
+                    Some(a) => scratch.conv_rows_shared(layer, a, weights, rows),
+                    None => scratch.conv_rows(layer, input, weights, rows),
+                };
+                EngineRunResult { ofmaps, stats, plan }
+            }
+            ExecFidelity::Register => {
+                // Materialise the band's explicitly-padded slab and step
+                // it register by register as a normal pad-0 layer.
+                let slab_rows = layer.band_input_rows(&rows);
+                let wp = layer.w_i + 2 * layer.pad;
+                let mut slab = Tensor3::zeros(layer.m, slab_rows.len(), wp);
+                for c in 0..layer.m {
+                    for (sy, py) in slab_rows.clone().enumerate() {
+                        // padded row `py` holds unpadded row `py − pad`
+                        // (zero outside the ifmap)
+                        if py >= layer.pad && py < layer.pad + layer.h_i {
+                            let y = py - layer.pad;
+                            let src = &input.channel(c)[y * layer.w_i..(y + 1) * layer.w_i];
+                            let at = (c * slab_rows.len() + sy) * wp + layer.pad;
+                            slab.data[at..at + layer.w_i].copy_from_slice(src);
+                        }
+                    }
+                }
+                self.run_layer(&band, &slab, weights)
+            }
+        }
     }
 
     /// Run a full convolutional layer: `input` is `[M][H][W]`, `weights`
@@ -109,7 +229,7 @@ impl EngineSim {
         assert_eq!(input.w, layer.w_i);
         assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
         match self.fidelity {
-            ExecFidelity::Fast => self.run_fast(layer, input, weights),
+            ExecFidelity::Fast => self.run_fast(layer, input, None, weights),
             ExecFidelity::Register => {
                 if layer.k <= self.cfg.k {
                     self.run_native(layer, input, weights)
@@ -120,12 +240,39 @@ impl EngineSim {
         }
     }
 
+    /// [`EngineSim::run_layer`] for `Arc`-held inputs: on the fast tier
+    /// the padded-input materialisation is keyed on the input's identity
+    /// and reused across the calls that share it (the register tier has no
+    /// scratch and simply delegates).
+    pub fn run_layer_shared(&self, layer: &ConvLayer, input: &Arc<Tensor3>, weights: &[i32]) -> EngineRunResult {
+        assert_eq!(input.c, layer.m);
+        assert_eq!(input.h, layer.h_i);
+        assert_eq!(input.w, layer.w_i);
+        assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
+        match self.fidelity {
+            ExecFidelity::Fast => self.run_fast(layer, input, Some(input), weights),
+            ExecFidelity::Register => self.run_layer(layer, input, weights),
+        }
+    }
+
     /// Fast tier: blocked functional convolution + closed-form stats
-    /// ([`super::fastsim`]). Identical [`EngineRunResult`] to the register
-    /// paths below, enforced by property tests.
-    fn run_fast(&self, layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> EngineRunResult {
+    /// ([`super::fastsim`]), through the engine-owned [`ConvScratch`].
+    /// Identical [`EngineRunResult`] to the register paths below, enforced
+    /// by property tests.
+    fn run_fast(
+        &self,
+        layer: &ConvLayer,
+        input: &Tensor3,
+        shared: Option<&Arc<Tensor3>>,
+        weights: &[i32],
+    ) -> EngineRunResult {
         let plan = plan_layer(&self.cfg, layer);
-        let ofmaps = fastsim::conv_blocked(layer, input, weights);
+        let rows = 0..layer.h_o();
+        let mut scratch = self.scratch.borrow_mut();
+        let ofmaps = match shared {
+            Some(a) => scratch.conv_rows_shared(layer, a, weights, rows),
+            None => scratch.conv_rows(layer, input, weights, rows),
+        };
         let stats = fastsim::analytic_stats(&self.cfg, layer, &plan);
         EngineRunResult { ofmaps, stats, plan }
     }
@@ -282,6 +429,18 @@ impl EngineSim {
     }
 }
 
+/// The sub-layer computing filters `[filters.start, filters.end)` of
+/// `layer`, plus the flat-weight range it reads.
+fn filter_sub_layer(layer: &ConvLayer, filters: &Range<usize>) -> (ConvLayer, usize, usize) {
+    let kk = layer.k * layer.k;
+    let sub = ConvLayer {
+        name: format!("{}[f{}..{}]", layer.name, filters.start, filters.end),
+        n: filters.end - filters.start,
+        ..layer.clone()
+    };
+    (sub, filters.start * layer.m * kk, filters.end * layer.m * kk)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -429,6 +588,81 @@ mod tests {
             assert_eq!(fast.stats, reg.stats, "k={k}: stats");
             assert_eq!(fast.plan.total_cycles, reg.plan.total_cycles, "k={k}: plan");
         }
+    }
+
+    #[test]
+    fn row_range_partitions_whole_layer_both_tiers() {
+        // Bands of run_row_range must reproduce the matching ofmap rows of
+        // a whole-layer run bit-for-bit on both tiers, with identical
+        // per-band stats across tiers, for native/tiled/strided layers.
+        for (hw, k, m, n, stride, pad) in
+            [(10usize, 3usize, 5usize, 5usize, 1usize, 1usize), (12, 5, 3, 4, 1, 2), (31, 11, 2, 3, 4, 0)]
+        {
+            let layer = ConvLayer::new("rr", hw, k, m, n, stride, pad);
+            let input = rand_tensor(m, hw, hw, 71);
+            let weights = rand_weights(n, m, k, 73);
+            let cfg = ArchConfig::small(3, 2, 2);
+            let reg = EngineSim::new(cfg);
+            let fast = EngineSim::fast(cfg);
+            let whole = fast.run_layer(&layer, &input, &weights);
+            let (h_o, w_o) = (layer.h_o(), layer.w_o());
+            let mid = h_o / 2;
+            for rows in [0..mid, mid..h_o] {
+                let rf = fast.run_row_range(&layer, &input, &weights, rows.clone());
+                let rr = reg.run_row_range(&layer, &input, &weights, rows.clone());
+                assert_eq!(rf.ofmaps, rr.ofmaps, "k={k} rows={rows:?}: ofmaps fast vs register");
+                assert_eq!(rf.stats, rr.stats, "k={k} rows={rows:?}: stats fast vs register");
+                assert_eq!((rf.ofmaps.c, rf.ofmaps.h, rf.ofmaps.w), (n, rows.len(), w_o));
+                for f in 0..n {
+                    assert_eq!(
+                        rf.ofmaps.channel(f),
+                        &whole.ofmaps.channel(f)[rows.start * w_o..rows.end * w_o],
+                        "k={k} f={f} rows={rows:?}: band vs whole-layer rows"
+                    );
+                }
+                assert!(rf.stats.cycles < whole.stats.cycles, "a proper band is faster");
+            }
+            // Full range degenerates to the whole-layer run, stats included.
+            let full = fast.run_row_range(&layer, &input, &weights, 0..h_o);
+            assert_eq!(full.ofmaps, whole.ofmaps);
+            assert_eq!(full.stats, whole.stats);
+        }
+    }
+
+    #[test]
+    fn shared_row_bands_reuse_one_padded_materialisation() {
+        // The acceptance hook for "no per-shard padded-input allocation":
+        // consecutive row bands of the same Arc input on one fast engine
+        // fill the scratch once and keep the buffer address stable.
+        let layer = ConvLayer::new("sh", 12, 3, 3, 5, 1, 1);
+        let input = std::sync::Arc::new(rand_tensor(3, 12, 12, 81));
+        let weights = rand_weights(5, 3, 3, 83);
+        let sim = EngineSim::fast(ArchConfig::small(3, 2, 2));
+        let whole = sim.run_layer_shared(&layer, &input, &weights);
+        let (fills0, _, ptr0) = sim.scratch_stats();
+        assert_eq!(fills0, 1, "whole-layer run materialises the padded input once");
+        let (h_o, w_o) = (layer.h_o(), layer.w_o());
+        let bands = [0..4, 4..8, 8..h_o];
+        for rows in bands.clone() {
+            let band = sim.run_row_range_shared(&layer, &input, &weights, rows.clone());
+            for f in 0..layer.n {
+                assert_eq!(
+                    band.ofmaps.channel(f),
+                    &whole.ofmaps.channel(f)[rows.start * w_o..rows.end * w_o]
+                );
+            }
+        }
+        let (fills, hits, ptr) = sim.scratch_stats();
+        assert_eq!(fills, 1, "row shards must not re-materialise the padded input");
+        assert_eq!(hits, bands.len() as u64, "every band reuses the resident ifmap");
+        assert_eq!(ptr, ptr0, "padded buffer identity is stable across shards");
+        // The register tier has no scratch to exercise: its shared call is
+        // pure delegation and still bit-matches the fast band.
+        let reg = EngineSim::new(ArchConfig::small(3, 2, 2));
+        let rr = reg.run_row_range_shared(&layer, &input, &weights, 0..4);
+        let rf = sim.run_row_range_shared(&layer, &input, &weights, 0..4);
+        assert_eq!(rr.ofmaps, rf.ofmaps);
+        assert_eq!(rr.stats, rf.stats);
     }
 
     #[test]

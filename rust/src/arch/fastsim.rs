@@ -52,54 +52,173 @@
 
 use super::adder_tree::AdderTree;
 use super::config::ArchConfig;
-use super::control::StepPlan;
+use super::control::{plan_layer, StepPlan};
 use super::stats::SimStats;
 use crate::golden::Tensor3;
 use crate::model::{ConvLayer, KernelTiling};
+use std::ops::Range;
+use std::sync::Arc;
 
 /// Filter-block size of the blocked convolution (the `N_B` of
 /// `blocked.py`): how many filters' i64 psum rows stay resident while one
 /// input channel streams through.
 const N_BLOCK: usize = 8;
 
-/// Blocked direct convolution, bit-exact against the register tier's
-/// datapath (wrapping-i32 products, i64 accumulation, single final
-/// truncation — see the module docs). `input` is `[M][H_I][W_I]`,
-/// `weights` flat `[N][M][K][K]`; returns `[N][H_O][W_O]`.
-pub fn conv_blocked(layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> Tensor3 {
-    assert_eq!(input.c, layer.m);
-    assert_eq!(input.h, layer.h_i);
-    assert_eq!(input.w, layer.w_i);
-    assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
-    let (k, m, n, stride, pad) = (layer.k, layer.m, layer.n, layer.stride, layer.pad);
-    let kk = k * k;
-    let (h_o, w_o) = (layer.h_o(), layer.w_o());
-    let (hp, wp) = (layer.h_i + 2 * pad, layer.w_i + 2 * pad);
+/// Geometry of a materialised padded ifmap (the part of [`ConvScratch`]'s
+/// cache key that is not the input tensor's identity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PadGeom {
+    m: usize,
+    h_i: usize,
+    w_i: usize,
+    pad: usize,
+}
 
-    // Materialise the padded ifmaps once (the engine's broadcast buffer);
-    // the inner loops then index without bounds arithmetic.
-    let mut padded = vec![0i32; m * hp * wp];
-    for c in 0..m {
+impl PadGeom {
+    fn of(layer: &ConvLayer) -> Self {
+        Self { m: layer.m, h_i: layer.h_i, w_i: layer.w_i, pad: layer.pad }
+    }
+}
+
+/// Reusable fast-tier working set: the padded-ifmap materialisation (the
+/// engine's broadcast buffer) plus the i64 accumulator arena of the
+/// blocked convolution.
+///
+/// This is what makes the fast tier **allocation-free on the hot path**:
+/// one scratch, owned by an [`super::engine::EngineSim`], serves every
+/// layer/shard/step that engine runs. The two buffers are `resize`d in
+/// place (capacity is kept across calls), and the padded ifmap is keyed on
+/// the input tensor's `Arc` identity + pad geometry, so all shards and
+/// filter-block steps of one batch input share a **single** padded-input
+/// materialisation — a row shard computes its `oy0..oy1` band straight out
+/// of the resident full padded ifmap instead of re-padding (or slab-
+/// copying) the input per shard. The held `Arc` keeps the input alive
+/// while it is cached, so a pointer match can never be a stale
+/// reallocation.
+///
+/// `fills`/`hits` count (re)materialisations vs cache reuses — the
+/// observability hook the allocation-reuse tests pin.
+#[derive(Default)]
+pub struct ConvScratch {
+    padded: Vec<i32>,
+    acc: Vec<i64>,
+    /// Identity of the input whose padded ifmap is resident.
+    held: Option<(Arc<Tensor3>, PadGeom)>,
+    fills: u64,
+    hits: u64,
+}
+
+impl ConvScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Times the padded ifmap was (re)materialised.
+    pub fn fills(&self) -> u64 {
+        self.fills
+    }
+
+    /// Times a call found the right padded ifmap already resident.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Address of the padded-ifmap buffer (stable across cache hits —
+    /// pinned by the pointer-identity test).
+    pub fn padded_ptr(&self) -> *const i32 {
+        self.padded.as_ptr()
+    }
+
+    /// Blocked convolution of output rows `rows`, reusing the resident
+    /// padded ifmap when `input` is the same `Arc` (same tensor, same pad
+    /// geometry) as the previous call — the batch-level input reuse of
+    /// ROADMAP §Two-tier engine.
+    pub fn conv_rows_shared(
+        &mut self,
+        layer: &ConvLayer,
+        input: &Arc<Tensor3>,
+        weights: &[i32],
+        rows: Range<usize>,
+    ) -> Tensor3 {
+        let geom = PadGeom::of(layer);
+        let resident = matches!(&self.held, Some((held, g)) if Arc::ptr_eq(held, input) && *g == geom);
+        if resident {
+            self.hits += 1;
+        } else {
+            fill_padded(&mut self.padded, layer, input);
+            self.held = Some((Arc::clone(input), geom));
+            self.fills += 1;
+        }
+        conv_rows_from_padded(layer, &self.padded, weights, rows, &mut self.acc)
+    }
+
+    /// Blocked convolution of output rows `rows` for a caller that holds
+    /// only a reference: always re-materialises the padded ifmap (no safe
+    /// identity to key on) but still reuses both buffers' capacity.
+    pub fn conv_rows(
+        &mut self,
+        layer: &ConvLayer,
+        input: &Tensor3,
+        weights: &[i32],
+        rows: Range<usize>,
+    ) -> Tensor3 {
+        self.held = None;
+        fill_padded(&mut self.padded, layer, input);
+        self.fills += 1;
+        conv_rows_from_padded(layer, &self.padded, weights, rows, &mut self.acc)
+    }
+}
+
+/// Materialise the padded ifmaps (the engine's broadcast buffer) into
+/// `padded`, reusing its capacity; the inner conv loops then index without
+/// bounds arithmetic.
+fn fill_padded(padded: &mut Vec<i32>, layer: &ConvLayer, input: &Tensor3) {
+    let (hp, wp) = (layer.h_i + 2 * layer.pad, layer.w_i + 2 * layer.pad);
+    padded.clear();
+    padded.resize(layer.m * hp * wp, 0);
+    for c in 0..layer.m {
         for y in 0..layer.h_i {
             let src = &input.channel(c)[y * layer.w_i..(y + 1) * layer.w_i];
-            let dst = &mut padded[(c * hp + y + pad) * wp + pad..];
+            let dst = &mut padded[(c * hp + y + layer.pad) * wp + layer.pad..];
             dst[..layer.w_i].copy_from_slice(src);
         }
     }
+}
 
-    let mut ofmaps = Tensor3::zeros(n, h_o, w_o);
-    let mut acc = vec![0i64; N_BLOCK.min(n) * h_o * w_o];
+/// The blocked-conv loop nest over output rows `[rows.start, rows.end)` of
+/// `layer`, reading the already-materialised full padded ifmap. Returns
+/// `[N][rows.len()][W_O]`. `acc` is the caller's i64 arena (resized in
+/// place, zeroed per filter block).
+fn conv_rows_from_padded(
+    layer: &ConvLayer,
+    padded: &[i32],
+    weights: &[i32],
+    rows: Range<usize>,
+    acc: &mut Vec<i64>,
+) -> Tensor3 {
+    assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
+    assert!(rows.start < rows.end && rows.end <= layer.h_o(), "bad output-row range {rows:?}");
+    let (k, m, n, stride) = (layer.k, layer.m, layer.n, layer.stride);
+    let kk = k * k;
+    let w_o = layer.w_o();
+    let b_h = rows.len();
+    let (hp, wp) = (layer.h_i + 2 * layer.pad, layer.w_i + 2 * layer.pad);
+    debug_assert_eq!(padded.len(), m * hp * wp);
+
+    let mut ofmaps = Tensor3::zeros(n, b_h, w_o);
+    acc.clear();
+    acc.resize(N_BLOCK.min(n) * b_h * w_o, 0);
     for f0 in (0..n).step_by(N_BLOCK) {
         let fb = N_BLOCK.min(n - f0);
-        let acc = &mut acc[..fb * h_o * w_o];
+        let acc = &mut acc[..fb * b_h * w_o];
         acc.fill(0);
         for c in 0..m {
             let chan = &padded[c * hp * wp..(c + 1) * hp * wp];
             for df in 0..fb {
                 let kern = &weights[((f0 + df) * m + c) * kk..((f0 + df) * m + c + 1) * kk];
-                let a = &mut acc[df * h_o * w_o..(df + 1) * h_o * w_o];
-                for oy in 0..h_o {
-                    let arow = &mut a[oy * w_o..(oy + 1) * w_o];
+                let a = &mut acc[df * b_h * w_o..(df + 1) * b_h * w_o];
+                for (by, oy) in rows.clone().enumerate() {
+                    let arow = &mut a[by * w_o..(by + 1) * w_o];
                     for r in 0..k {
                         let irow = &chan[(oy * stride + r) * wp..(oy * stride + r + 1) * wp];
                         for (s, &wv) in kern[r * k..(r + 1) * k].iter().enumerate() {
@@ -129,10 +248,26 @@ pub fn conv_blocked(layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> Tens
         }
         // single truncation, as the engine accumulator drains (mod 2³²)
         for (i, &v) in acc.iter().enumerate() {
-            ofmaps.data[f0 * h_o * w_o + i] = v as i32;
+            ofmaps.data[f0 * b_h * w_o + i] = v as i32;
         }
     }
     ofmaps
+}
+
+/// Blocked direct convolution, bit-exact against the register tier's
+/// datapath (wrapping-i32 products, i64 accumulation, single final
+/// truncation — see the module docs). `input` is `[M][H_I][W_I]`,
+/// `weights` flat `[N][M][K][K]`; returns `[N][H_O][W_O]`.
+///
+/// Standalone convenience over a throwaway [`ConvScratch`]; the serving
+/// hot path goes through the [`super::engine::EngineSim`]-owned scratch
+/// instead, which keeps the padded ifmap and accumulator arena alive
+/// across layers, shards and steps.
+pub fn conv_blocked(layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> Tensor3 {
+    assert_eq!(input.c, layer.m);
+    assert_eq!(input.h, layer.h_i);
+    assert_eq!(input.w, layer.w_i);
+    ConvScratch::new().conv_rows(layer, input, weights, 0..layer.h_o())
 }
 
 /// Synthesize the complete [`SimStats`] of a register-tier
@@ -197,6 +332,38 @@ pub fn analytic_stats(cfg: &ArchConfig, layer: &ConvLayer, plan: &StepPlan) -> S
         s.max_rsrb_occupancy = ws as u64;
     }
     s
+}
+
+/// Row-band variant of [`analytic_stats`]: the complete [`SimStats`] of
+/// computing only output rows `rows` of `layer` — the counters the fast
+/// tier of [`super::engine::EngineSim::run_row_range`] reports for a
+/// proper sub-range.
+///
+/// A row band is exactly the band's slab run as an ordinary layer
+/// ([`ConvLayer::row_band`]): `pad = 0`, ifmap = the slab of padded rows
+/// `[rows.start·stride, (rows.end−1)·stride + K)` — so the band's
+/// counters are [`analytic_stats`] of that synthetic layer, which is also
+/// precisely what the register tier measures for the band. Off-chip input
+/// reads therefore count the band's **whole slab including halo rows**:
+/// summed over the bands of a [`crate::scheduler::ShardPlan`] they equal
+/// the single-engine reads plus exactly the inter-band halo duplication,
+/// while MACs/output/psum counters partition the single-engine counters
+/// exactly on stride-1 layers (strided layers sweep-and-decimate, so
+/// bands skip the sweep rows between bands and their MAC sum is
+/// correspondingly *smaller* — pinned by the farm property tests).
+///
+/// Full-range caveat: for `rows == 0..H_O` this still prices the band's
+/// slab of `(H_O−1)·stride + K` rows, whereas `run_row_range` degenerates
+/// to a whole-layer run that reads the entire padded ifmap — on strided
+/// layers the whole-layer run additionally pays the decimation-leftover
+/// rows (`H_P mod stride`-ish tail the sweep walks but no band needs).
+/// The engine short-circuits before ever pricing a full range as a band,
+/// so the two only differ if you call this helper with the full range
+/// yourself.
+pub fn analytic_stats_rows(cfg: &ArchConfig, layer: &ConvLayer, rows: &Range<usize>) -> SimStats {
+    let band = layer.row_band(rows);
+    let plan = plan_layer(cfg, &band);
+    analytic_stats(cfg, &band, &plan)
 }
 
 #[cfg(test)]
@@ -268,5 +435,69 @@ mod tests {
         let reg = EngineSim::new(cfg).run_layer(&layer, &input, &weights);
         let plan = plan_layer(&cfg, &layer);
         assert_eq!(analytic_stats(&cfg, &layer, &plan), reg.stats);
+    }
+
+    #[test]
+    fn conv_rows_slices_the_full_conv() {
+        // Every contiguous band of conv_rows must equal the matching rows
+        // of the whole-layer conv, native and tiled, strided and padded.
+        for (hw, k, m, n, stride, pad) in
+            [(10usize, 3usize, 4usize, 5usize, 1usize, 1usize), (12, 5, 3, 4, 1, 2), (31, 11, 2, 3, 4, 0)]
+        {
+            let layer = ConvLayer::new("rb", hw, k, m, n, stride, pad);
+            let input = Arc::new(rand_tensor(m, hw, hw, 29));
+            let weights = rand_weights(n, m, k, 31);
+            let whole = conv_blocked(&layer, &input, &weights);
+            let (h_o, w_o) = (layer.h_o(), layer.w_o());
+            let mid = h_o / 2;
+            let mut scratch = ConvScratch::new();
+            for rows in [0..mid.max(1), mid.min(h_o - 1)..h_o] {
+                let band = scratch.conv_rows_shared(&layer, &input, &weights, rows.clone());
+                assert_eq!((band.c, band.h, band.w), (n, rows.len(), w_o));
+                for f in 0..n {
+                    assert_eq!(
+                        band.channel(f),
+                        &whole.channel(f)[rows.start * w_o..rows.end * w_o],
+                        "k={k} f={f} rows={rows:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_pads_once_per_shared_input() {
+        let layer = ConvLayer::new("sc", 9, 3, 3, 4, 1, 1);
+        let input = Arc::new(rand_tensor(3, 9, 9, 55));
+        let weights = rand_weights(4, 3, 3, 57);
+        let mut scratch = ConvScratch::new();
+        let _ = scratch.conv_rows_shared(&layer, &input, &weights, 0..4);
+        let ptr = scratch.padded_ptr();
+        let _ = scratch.conv_rows_shared(&layer, &input, &weights, 4..9);
+        let _ = scratch.conv_rows_shared(&layer, &input, &weights, 0..9);
+        assert_eq!((scratch.fills(), scratch.hits()), (1, 2), "one materialisation, two reuses");
+        assert_eq!(scratch.padded_ptr(), ptr, "padded buffer identity is stable across hits");
+        // A different tensor (even with identical contents) must re-fill.
+        let other = Arc::new(rand_tensor(3, 9, 9, 55));
+        let _ = scratch.conv_rows_shared(&layer, &other, &weights, 0..9);
+        assert_eq!(scratch.fills(), 2, "new input identity re-materialises");
+    }
+
+    #[test]
+    fn analytic_stats_rows_match_register_band_run() {
+        // The band's analytic counters equal the register tier run on the
+        // band's slab layer — native multi-group and tiled strided.
+        for (hw, k, m, n, stride, pad) in
+            [(10usize, 3usize, 5usize, 5usize, 1usize, 1usize), (31, 11, 2, 3, 4, 0)]
+        {
+            let layer = ConvLayer::new("bs", hw, k, m, n, stride, pad);
+            let input = rand_tensor(m, hw, hw, 61);
+            let weights = rand_weights(n, m, k, 63);
+            let cfg = ArchConfig::small(3, 2, 2);
+            let h_o = layer.h_o();
+            let rows = 1..h_o - 1;
+            let reg = EngineSim::new(cfg).run_row_range(&layer, &input, &weights, rows.clone());
+            assert_eq!(analytic_stats_rows(&cfg, &layer, &rows), reg.stats, "k={k}");
+        }
     }
 }

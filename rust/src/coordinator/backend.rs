@@ -213,22 +213,25 @@ impl std::str::FromStr for BackendKind {
 /// printed notice) when they are missing or PJRT support is compiled out —
 /// serving always comes up. `sim_fidelity` selects the sim engines'
 /// execution tier (`trim serve --fidelity fast|register`); both tiers
-/// serve bit-identical logits.
+/// serve bit-identical logits. `sim_shard` selects how the farm cuts each
+/// batch (`trim serve --shard filter|pipeline|spatial|auto`); every mode
+/// serves bit-identical logits too.
 pub fn make_backend(
     kind: BackendKind,
     artifact_dir: impl AsRef<std::path::Path>,
     sim_engines: usize,
     sim_fidelity: crate::arch::ExecFidelity,
+    sim_shard: crate::scheduler::ShardMode,
 ) -> Result<Box<dyn InferenceBackend>> {
-    use crate::scheduler::{ShardMode, SimBackend, SimNetSpec};
     use crate::arch::ArchConfig;
+    use crate::scheduler::{SimBackend, SimNetSpec};
     let dir = artifact_dir.as_ref();
     let make_sim = || {
         Box::new(SimBackend::with_fidelity(
             sim_engines,
             ArchConfig::small(3, 2, 1),
             SimNetSpec::tiny(),
-            ShardMode::FilterShards,
+            sim_shard,
             sim_fidelity,
         )) as Box<dyn InferenceBackend>
     };
@@ -241,7 +244,7 @@ pub fn make_backend(
                 eprintln!(
                     "notice: PJRT backend unavailable ({e:#}); \
                      falling back to the simulated engine farm \
-                     ({sim_engines} engines, {sim_fidelity} fidelity)"
+                     ({sim_engines} engines, {sim_fidelity} fidelity, {sim_shard} sharding)"
                 );
                 Ok(make_sim())
             }
@@ -310,6 +313,7 @@ mod tests {
             "definitely/not/a/dir",
             2,
             crate::arch::ExecFidelity::Fast,
+            crate::scheduler::ShardMode::Auto,
         )
         .unwrap();
         let img = vec![7i32; b.input_len()];
@@ -327,6 +331,7 @@ mod tests {
             "definitely/not/a/dir",
             2,
             crate::arch::ExecFidelity::Fast,
+            crate::scheduler::ShardMode::FilterShards,
         )
         .unwrap();
         assert!(b.describe().starts_with("sim["), "got {}", b.describe());
@@ -338,7 +343,8 @@ mod tests {
             BackendKind::Pjrt,
             "definitely/not/a/dir",
             2,
-            crate::arch::ExecFidelity::Fast
+            crate::arch::ExecFidelity::Fast,
+            crate::scheduler::ShardMode::FilterShards
         )
         .is_err());
     }

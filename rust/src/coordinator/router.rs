@@ -9,23 +9,67 @@
 //! `input_len` — bit-exactness across farm shapes is property-tested, so
 //! a client cannot tell which farm answered.
 //!
-//! Dispatch is **least-outstanding-requests**: every submit goes to the
-//! farm with the fewest in-flight requests (first farm wins ties), which
-//! keeps a slow register-fidelity farm from starving a fast one. The
-//! in-flight count is decremented when the reply is received (or the
-//! [`RouterReply`] dropped), not when the request is enqueued.
+//! Dispatch is **cost-aware**: each farm keeps an EWMA of the
+//! per-request simulated cycles its responses report
+//! ([`crate::coordinator::SimCost::batch_cycles`] divided by the batch
+//! size, so the estimate measures the farm rather than how full the
+//! batcher ran), and every submit goes to the farm minimising
+//! `EWMA cycles × (outstanding + 1)` — the expected simulated cost of its
+//! queue with this request appended. Farms that have not yet reported a
+//! cost are scored optimistically with the cheapest EWMA observed in the
+//! fleet (they win ties at equal queue depth, so cold farms get probed,
+//! but still pay for their queue — a backend that never reports, like
+//! PJRT or the mock, competes on load instead of monopolising dispatch);
+//! with no cost reported anywhere dispatch degenerates to plain
+//! **least-outstanding-requests**, the pre-cost-aware behaviour. Either
+//! way the in-flight count is decremented when the reply is received (or
+//! the [`RouterReply`] dropped), not when the request is enqueued.
 
 use super::coordinator::Coordinator;
 use super::metrics::MetricsSnapshot;
 use super::request::InferenceResponse;
 use anyhow::{bail, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
+
+/// EWMA smoothing factor for reported batch cycles (`new = old + α·(x −
+/// old)`); small enough to ride out batch-size noise, large enough that a
+/// farm's first few reports dominate its cold-start estimate.
+const COST_EWMA_ALPHA: f64 = 0.25;
+
+/// Lock-free EWMA of a farm's reported simulated batch cycles; the f64 is
+/// stored as bits, `None` until the first report.
+#[derive(Default)]
+struct CostEwma(AtomicU64);
+
+impl CostEwma {
+    const UNSET: u64 = 0;
+
+    fn get(&self) -> Option<f64> {
+        match self.0.load(Ordering::Acquire) {
+            Self::UNSET => None,
+            bits => Some(f64::from_bits(bits)),
+        }
+    }
+
+    fn observe(&self, sample: f64) {
+        // Races between concurrent receivers may drop an update; the EWMA
+        // is a dispatch heuristic, so last-writer-wins is fine.
+        let next = match self.get() {
+            None => sample,
+            Some(old) => old + COST_EWMA_ALPHA * (sample - old),
+        };
+        // `max(1)`: cycles are ≥ 1 in practice; never store the UNSET bits.
+        self.0.store(f64::to_bits(next.max(1.0)), Ordering::Release);
+    }
+}
 
 struct RoutedFarm {
     coordinator: Coordinator,
     /// Requests submitted to this farm whose replies are still pending.
     outstanding: Arc<AtomicUsize>,
+    /// EWMA of the simulated batch cycles this farm's responses report.
+    cost: Arc<CostEwma>,
 }
 
 /// One ingress over many coordinators (one farm each).
@@ -36,10 +80,12 @@ pub struct Router {
 
 /// Pending reply to a routed request. Receiving the response — or
 /// dropping the handle — releases the request's slot in the owning farm's
-/// outstanding count.
+/// outstanding count; a received response carrying a simulated cost also
+/// feeds the farm's dispatch EWMA.
 pub struct RouterReply {
     rx: mpsc::Receiver<InferenceResponse>,
     outstanding: Arc<AtomicUsize>,
+    cost: Arc<CostEwma>,
     farm: usize,
     settled: bool,
 }
@@ -48,6 +94,13 @@ impl RouterReply {
     /// Block for the response.
     pub fn recv(&mut self) -> Result<InferenceResponse> {
         let resp = self.rx.recv()?;
+        if let Some(c) = &resp.cost {
+            // Normalise per request: `batch_cycles` is the whole batch's
+            // simulated wall-clock (shared, not divided), so dividing by
+            // the batch size measures the farm's per-request cost rather
+            // than how full the batcher happened to run.
+            self.cost.observe(c.batch_cycles as f64 / resp.batch_size.max(1) as f64);
+        }
         self.settle();
         Ok(resp)
     }
@@ -90,7 +143,11 @@ impl Router {
         }
         let farms = coordinators
             .into_iter()
-            .map(|coordinator| RoutedFarm { coordinator, outstanding: Arc::new(AtomicUsize::new(0)) })
+            .map(|coordinator| RoutedFarm {
+                coordinator,
+                outstanding: Arc::new(AtomicUsize::new(0)),
+                cost: Arc::new(CostEwma::default()),
+            })
             .collect();
         Ok(Self { farms, input_len })
     }
@@ -108,24 +165,60 @@ impl Router {
         self.farms.iter().map(|f| f.coordinator.backend_description().to_string()).collect()
     }
 
-    fn least_loaded(&self) -> usize {
-        self.farms
+    /// Pick the dispatch target: minimise the expected simulated queue
+    /// cost `EWMA cycles × (outstanding + 1)`. Farms that have not yet
+    /// reported a cost are scored **optimistically** with the cheapest
+    /// EWMA observed anywhere in the fleet — at equal queue depth they win
+    /// ties against sampled farms (so a cold farm gets probed) but they
+    /// still pay for their outstanding queue, so a backend that *never*
+    /// reports cost (PJRT/mock) competes on load like everyone else
+    /// instead of monopolising dispatch. With no cost reported anywhere
+    /// this degenerates to plain least-outstanding. First farm wins ties.
+    fn pick_farm(&self) -> usize {
+        let snaps: Vec<(usize, Option<f64>)> = self
+            .farms
+            .iter()
+            .map(|f| (f.outstanding.load(Ordering::Acquire), f.cost.get()))
+            .collect();
+        let min_ewma = snaps.iter().filter_map(|(_, e)| *e).fold(f64::INFINITY, f64::min);
+        if min_ewma.is_infinite() {
+            // no farm has reported yet: least-outstanding
+            return snaps
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (out, _))| *out)
+                .map(|(i, _)| i)
+                .expect("router has at least one farm");
+        }
+        snaps
             .iter()
             .enumerate()
-            .min_by_key(|(_, f)| f.outstanding.load(Ordering::Acquire))
+            .min_by(|(_, (oa, ea)), (_, (ob, eb))| {
+                let sa = ea.unwrap_or(min_ewma) * (oa + 1) as f64;
+                let sb = eb.unwrap_or(min_ewma) * (ob + 1) as f64;
+                sa.partial_cmp(&sb).expect("queue scores are finite")
+            })
             .map(|(i, _)| i)
             .expect("router has at least one farm")
     }
 
-    /// Submit one image to the least-loaded farm.
+    /// Per-farm dispatch cost estimates (EWMA of reported simulated batch
+    /// cycles), in dispatch-index order; `None` until a farm's first
+    /// cost-carrying response.
+    pub fn farm_cost_estimates(&self) -> Vec<Option<f64>> {
+        self.farms.iter().map(|f| f.cost.get()).collect()
+    }
+
+    /// Submit one image to the farm [`Router::pick_farm`] selects.
     pub fn submit(&self, image: Vec<i32>) -> Result<RouterReply> {
-        let idx = self.least_loaded();
+        let idx = self.pick_farm();
         let farm = &self.farms[idx];
         farm.outstanding.fetch_add(1, Ordering::AcqRel);
         match farm.coordinator.submit(image) {
             Ok(rx) => Ok(RouterReply {
                 rx,
                 outstanding: Arc::clone(&farm.outstanding),
+                cost: Arc::clone(&farm.cost),
                 farm: idx,
                 settled: false,
             }),
@@ -159,7 +252,9 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::{InferenceBackend, MockBackend};
+    use crate::analytics::EnergyModel;
+    use crate::arch::SimStats;
+    use crate::coordinator::backend::{BatchCost, BatchReport, InferenceBackend, MockBackend};
     use crate::coordinator::batcher::BatcherConfig;
     use crate::coordinator::coordinator::CoordinatorConfig;
     use std::time::Duration;
@@ -170,6 +265,49 @@ mod tests {
         };
         Coordinator::start_with(
             move || Ok(Box::new(MockBackend::new(input_len, 3)) as Box<dyn InferenceBackend>),
+            cfg,
+        )
+        .unwrap()
+    }
+
+    /// A backend whose every batch reports a fixed simulated cycle count —
+    /// the minimal cost model the EWMA dispatch tests need.
+    struct FixedCostBackend {
+        input_len: usize,
+        cycles: u64,
+    }
+
+    impl InferenceBackend for FixedCostBackend {
+        fn input_len(&self) -> usize {
+            self.input_len
+        }
+
+        fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchReport> {
+            let outputs = images.iter().map(|_| vec![1i32, 0, 0]).collect();
+            let stats = SimStats {
+                cycles: self.cycles,
+                ext_input_reads: 10,
+                output_writes: 10,
+                macs: 100,
+                ..Default::default()
+            };
+            Ok(BatchReport::with_cost(
+                outputs,
+                BatchCost::from_stats(stats, 150.0e6, &EnergyModel::paper()),
+            ))
+        }
+
+        fn describe(&self) -> String {
+            format!("fixed[{} cycles]", self.cycles)
+        }
+    }
+
+    fn fixed_cost_coordinator(cycles: u64) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        };
+        Coordinator::start_with(
+            move || Ok(Box::new(FixedCostBackend { input_len: 4, cycles }) as Box<dyn InferenceBackend>),
             cfg,
         )
         .unwrap()
@@ -196,6 +334,71 @@ mod tests {
         let resp = router.infer(img.clone()).unwrap();
         assert_eq!(resp.logits, probe.expected_logits(&img));
         assert_eq!(router.metrics().requests, 1);
+    }
+
+    #[test]
+    fn cost_aware_dispatch_follows_reported_cycles() {
+        // Farm 0 reports 1000× the simulated batch cycles of farm 1. Cold
+        // start probes both (least-outstanding fallback); once both have
+        // reported, every sequential request must go to the cheap farm.
+        let router =
+            Router::new(vec![fixed_cost_coordinator(100_000), fixed_cost_coordinator(100)]).unwrap();
+        assert_eq!(router.farm_cost_estimates(), vec![None, None], "no cost reported yet");
+        let mut a = router.submit(vec![0; 4]).unwrap();
+        let mut b = router.submit(vec![0; 4]).unwrap();
+        assert_ne!(a.farm(), b.farm(), "cold start probes every unsampled farm");
+        a.recv().unwrap();
+        b.recv().unwrap();
+        let est = router.farm_cost_estimates();
+        assert!((est[0].unwrap() - 100_000.0).abs() < 1e-6);
+        assert!((est[1].unwrap() - 100.0).abs() < 1e-6);
+        for _ in 0..8 {
+            let mut r = router.submit(vec![0; 4]).unwrap();
+            assert_eq!(r.farm(), 1, "dispatch must follow the lower EWMA cost");
+            r.recv().unwrap();
+        }
+        let per = router.farm_metrics();
+        assert_eq!(per[1].requests, 9, "cheap farm serves the warmed-up load");
+        assert_eq!(per[0].requests, 1, "expensive farm only saw its probe");
+    }
+
+    #[test]
+    fn unreported_farms_do_not_monopolise_dispatch() {
+        // Farm 0 never reports cost (mock); farm 1 does. Once farm 1 has
+        // an EWMA the mock is scored optimistically at that same EWMA, so
+        // it is probed at equal queue depth but loses as soon as requests
+        // pile up on it — a permanently-unsampled farm must not pin all
+        // dispatch to itself.
+        let router = Router::new(vec![mock_coordinator(4), fixed_cost_coordinator(100)]).unwrap();
+        let mut a = router.submit(vec![0; 4]).unwrap();
+        let mut b = router.submit(vec![0; 4]).unwrap();
+        assert_eq!((a.farm(), b.farm()), (0, 1), "cold start is least-outstanding");
+        a.recv().unwrap();
+        b.recv().unwrap();
+        let est = router.farm_cost_estimates();
+        assert_eq!(est[0], None, "mock never reports a cost");
+        assert!(est[1].is_some());
+        // Equal depth: optimistic tie goes to the first (unsampled) farm…
+        let hold = router.submit(vec![0; 4]).unwrap();
+        assert_eq!(hold.farm(), 0);
+        // …but with its slot still held, the sampled farm must win.
+        let mut next = router.submit(vec![0; 4]).unwrap();
+        assert_eq!(next.farm(), 1, "queued unsampled farm loses to the idle sampled farm");
+        drop(hold);
+        next.recv().unwrap();
+    }
+
+    #[test]
+    fn cost_free_backends_keep_least_outstanding_dispatch() {
+        // Mock backends never report a cost, so the router must behave
+        // exactly like the pre-cost-aware least-outstanding dispatcher.
+        let router = Router::new(vec![mock_coordinator(4), mock_coordinator(4)]).unwrap();
+        let pending: Vec<_> = (0..6).map(|i| router.submit(vec![i, 0, 0, 0]).unwrap()).collect();
+        assert_eq!(pending.iter().filter(|r| r.farm() == 0).count(), 3);
+        for mut p in pending {
+            p.recv().unwrap();
+        }
+        assert_eq!(router.farm_cost_estimates(), vec![None, None], "mocks never report cost");
     }
 
     #[test]

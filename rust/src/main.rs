@@ -13,7 +13,7 @@
 //! trim validate                 simulator vs golden + paper invariants
 //! trim serve [--backend auto|pjrt|sim] [--engines N] [--artifacts DIR]
 //!            [--requests N] [--max-batch B] [--fidelity fast|register]
-//!            [--farms F]
+//!            [--farms F] [--shard filter|pipeline|spatial|auto]
 //!                               e2e batched inference. Backends:
 //!                                 pjrt — compiled XLA artifacts (needs
 //!                                        `make artifacts` + the `pjrt`
@@ -26,17 +26,27 @@
 //!                               fast (functional + closed-form counters,
 //!                               default) or register (cycle-accurate
 //!                               oracle); logits are bit-identical.
+//!                               --shard picks how the sim farm cuts each
+//!                               layer: filter (filter groups), spatial
+//!                               (output-row bands), auto (per-layer
+//!                               better of the two — the default) or
+//!                               pipeline (one engine per layer); logits
+//!                               are bit-identical across modes.
 //!                               --farms F fronts F coordinators (one
-//!                               farm each) with the least-outstanding
-//!                               Router and reports the merged metrics.
-//!                               Sim-backed serving also reports the
-//!                               simulated cost per snapshot: cycles,
+//!                               farm each) with the cost-aware Router
+//!                               (EWMA of reported per-request sim
+//!                               cycles × queue depth; least-outstanding
+//!                               until a cost is reported) and reports
+//!                               merged metrics. Sim-backed serving also reports
+//!                               the simulated cost per snapshot: cycles,
 //!                               off-/on-chip accesses, joules, GOPS
-//! trim farm [--engines N] [--net vgg16|alexnet] [--mode filter|pipeline]
-//!           [--batch B] [--fidelity fast|register]
+//! trim farm [--engines N] [--net vgg16|alexnet] [--batch B]
+//!           [--shard filter|pipeline|spatial|auto] [--fidelity fast|register]
 //!                               shard real network layers across a farm
 //!                               of simulated engines: per-layer speedup
-//!                               table + bit-exactness check.
+//!                               table (chosen axis + speedup bound) +
+//!                               bit-exactness check. --mode is accepted
+//!                               as a legacy alias of --shard.
 //!                               pipeline mode streams a batch of B images
 //!                               through the serving chain instead of
 //!                               --net (real CNNs pool between CLs)
@@ -188,6 +198,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some(s) => s.parse()?,
         None => ExecFidelity::Fast,
     };
+    let shard: ShardMode = match flags.get("shard") {
+        Some(s) => s.parse()?,
+        None => ShardMode::Auto,
+    };
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: std::time::Duration::from_millis(2) },
     };
@@ -196,7 +210,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let coordinators: Vec<Coordinator> = (0..farms)
         .map(|_| {
             let d = dir.clone();
-            Coordinator::start_with(move || make_backend(kind, &d, engines, fidelity), cfg)
+            Coordinator::start_with(move || make_backend(kind, &d, engines, fidelity, shard), cfg)
         })
         .collect::<anyhow::Result<_>>()?;
     let router = Router::new(coordinators)?;
@@ -259,7 +273,8 @@ fn scale_layer(l: &ConvLayer, max_hw: usize, max_m: usize, max_n: usize) -> Conv
 
 fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let engines: usize = flags.get("engines").and_then(|v| v.parse().ok()).unwrap_or(4);
-    let mode: ShardMode = match flags.get("mode") {
+    // `--shard` is the canonical flag; `--mode` stays as a legacy alias.
+    let mode: ShardMode = match flags.get("shard").or_else(|| flags.get("mode")) {
         Some(s) => s.parse()?,
         None => ShardMode::FilterShards,
     };
@@ -269,10 +284,10 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     let arch = ArchConfig::small(3, 2, 2);
     match mode {
-        ShardMode::FilterShards => {
+        ShardMode::FilterShards | ShardMode::Spatial | ShardMode::Auto => {
             let net = net_by_name(flags.get("net").map(|s| s.as_str()).unwrap_or("vgg16"));
             println!(
-                "engine farm: {engines} engines of P_N={} x P_M={} (scaled-down {} layers, filter-shard mode, {fidelity} fidelity)",
+                "engine farm: {engines} engines of P_N={} x P_M={} (scaled-down {} layers, {mode} shard mode, {fidelity} fidelity)",
                 arch.p_n, arch.p_m, net.name
             );
             let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
@@ -281,8 +296,8 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             let (mut tot_single, mut tot_farm) = (0u64, 0u64);
             let mut farm_stats = SimStats::default();
             println!(
-                "{:<6} {:>3} {:>6} {:>13} {:>13} {:>8}  exact",
-                "layer", "K", "shards", "1-engine cyc", "farm cyc", "speedup"
+                "{:<6} {:>3} {:>7} {:>6} {:>6} {:>13} {:>13} {:>8}  exact",
+                "layer", "K", "axis", "shards", "bound", "1-engine cyc", "farm cyc", "speedup"
             );
             for l in &net.layers {
                 let l = scale_layer(l, 32, 8, 16);
@@ -290,17 +305,22 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                     Tensor3 { c: l.m, h: l.h_i, w: l.w_i, data: rng.vec_i32(l.m * l.h_i * l.w_i, 0, 256) };
                 let weights = rng.vec_i32(l.weight_elems() as usize, -8, 8);
                 let s = single.run_layer(&l, &input, &weights);
-                let f = farm.run_layer(&l, &input, &weights);
+                let f = farm.run_layer_mode(&l, &input, &weights, mode);
                 let golden = conv3d_i32(&input, &weights, l.n, l.k, l.stride, l.pad);
                 let ok = f.ofmaps == golden && f.ofmaps == s.ofmaps;
                 tot_single += s.stats.cycles;
                 tot_farm += f.stats.cycles;
                 farm_stats.merge_sequential(&f.stats); // layers run back to back
                 println!(
-                    "{:<6} {:>3} {:>6} {:>13} {:>13} {:>7.2}x  {}",
+                    "{:<6} {:>3} {:>7} {:>6} {:>5.2}x {:>13} {:>13} {:>7.2}x  {}",
                     l.name,
                     l.k,
+                    match f.plan.axis {
+                        trim_sa::scheduler::ShardAxis::Filters => "filters",
+                        trim_sa::scheduler::ShardAxis::Rows => "rows",
+                    },
                     f.plan.shards.len(),
+                    f.plan.speedup_bound(),
                     s.stats.cycles,
                     f.stats.cycles,
                     s.stats.cycles as f64 / f.stats.cycles as f64,

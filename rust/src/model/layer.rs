@@ -100,6 +100,39 @@ impl ConvLayer {
     pub fn needs_tiling(&self, native_k: usize) -> bool {
         self.k > native_k
     }
+
+    /// The *padded* ifmap rows needed to compute output rows
+    /// `[rows.start, rows.end)`: `[rows.start·stride, (rows.end−1)·stride + K)`.
+    /// This is the slab an output-row shard must read — overlapping slabs of
+    /// adjacent bands are the halo rows (`K − stride` per interior boundary
+    /// when `stride < K`; strides beyond `K` leave gaps instead).
+    pub fn band_input_rows(&self, rows: &std::ops::Range<usize>) -> std::ops::Range<usize> {
+        assert!(rows.start < rows.end && rows.end <= self.h_o(), "bad output-row range {rows:?}");
+        rows.start * self.stride..(rows.end - 1) * self.stride + self.k
+    }
+
+    /// The synthetic layer equivalent to computing only output rows `rows`
+    /// of `self`: its ifmap is the band's slab of the *explicitly padded*
+    /// input ([`ConvLayer::band_input_rows`] tall, `W_I + 2·pad` wide, all
+    /// padding materialised as zeros), so `pad = 0`. Convolving that slab
+    /// yields exactly rows `rows` of the full ofmap, and the layer is a
+    /// perfectly ordinary [`ConvLayer`] — the row-shard path of the engine
+    /// runs it through the standard native/tiled schedules on both
+    /// fidelity tiers, which is what keeps row shards bit- and
+    /// counter-exact across tiers for free.
+    pub fn row_band(&self, rows: &std::ops::Range<usize>) -> ConvLayer {
+        let slab = self.band_input_rows(rows);
+        ConvLayer {
+            name: format!("{}[r{}..{}]", self.name, rows.start, rows.end),
+            h_i: slab.len(),
+            w_i: self.w_i + 2 * self.pad,
+            k: self.k,
+            stride: self.stride,
+            pad: 0,
+            m: self.m,
+            n: self.n,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -142,5 +175,26 @@ mod tests {
     fn tiling_predicate() {
         assert!(ConvLayer::new("a", 27, 5, 48, 256, 1, 2).needs_tiling(3));
         assert!(!ConvLayer::new("b", 14, 3, 512, 512, 1, 1).needs_tiling(3));
+    }
+
+    #[test]
+    fn band_geometry_round_trips() {
+        // stride 1: band of 4 rows needs 4+K−1 slab rows.
+        let l = ConvLayer::new("x", 10, 3, 4, 8, 1, 1);
+        assert_eq!(l.band_input_rows(&(0..4)), 0..6);
+        assert_eq!(l.band_input_rows(&(4..10)), 4..12); // = hp
+        let b = l.row_band(&(4..10));
+        assert_eq!((b.h_i, b.w_i, b.pad), (8, 12, 0));
+        assert_eq!(b.h_o(), 6, "band layer computes exactly the band rows");
+        assert_eq!(b.w_o(), l.w_o());
+
+        // stride 4 tiled (AlexNet CL1-like): slabs of adjacent bands gap.
+        let l = ConvLayer::new("t", 31, 11, 2, 3, 4, 0);
+        assert_eq!(l.h_o(), 6);
+        let lo = l.row_band(&(0..3));
+        let hi = l.row_band(&(3..6));
+        assert_eq!(lo.h_i, 2 * 4 + 11);
+        assert_eq!(hi.h_i, 2 * 4 + 11);
+        assert_eq!((lo.h_o(), hi.h_o()), (3, 3));
     }
 }

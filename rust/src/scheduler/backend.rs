@@ -4,15 +4,17 @@
 //! The backend owns an [`EngineFarm`] and a small quantised CNN
 //! ([`SimNetSpec`]) whose weights are generated deterministically, so any
 //! two processes (and the golden reference path) agree bit-exactly on
-//! every logit. Batches are executed in one of the farm's two modes:
+//! every logit. Batches are executed in one of the farm's modes:
 //!
-//! * [`ShardMode::FilterShards`] — layer-serial over the batch (the same
+//! * [`ShardMode::FilterShards`] / [`ShardMode::Spatial`] /
+//!   [`ShardMode::Auto`] — layer-serial over the batch (the same
 //!   weight-resident order as [`crate::coordinator::PjrtBackend`]), each
-//!   layer sharded across engines;
+//!   layer sharded across engines along the chosen axis (filters, output
+//!   rows, or the per-layer better of the two);
 //! * [`ShardMode::LayerPipeline`] — the batch streams through the layer
 //!   chain with one engine per stage.
 //!
-//! Both produce identical logits (property-tested); they differ only in
+//! All produce identical logits (property-tested); they differ only in
 //! how the work is spread over the farm.
 
 use super::farm::{EngineFarm, FarmConfig, PipelineStage};
@@ -58,6 +60,19 @@ impl SimNetSpec {
             ConvLayer::new("SL3", 8, 3, 8, 10, 1, 1),  // 8×8×8  → 10×8×8
         ];
         Self { input: (3, 16, 16), layers, requant_shift: 6, classes: 10, weight_seed: 0x7215 }
+    }
+
+    /// A CL1-class serving workload: one wide-spatial, filter-starved
+    /// layer (3 → 10 filters over 112×112 — the geometry class of VGG-16
+    /// CL1, where `⌈N/P_N⌉` filter groups cannot occupy a big farm but
+    /// `H_O` rows can). This is the workload `benches/farm_scaling.rs`
+    /// sweeps the shard axes over: on 8 narrow engines the filter axis is
+    /// capped at `10/2 = 5×` while the spatial axis bounds `8×`.
+    pub fn cl1_class() -> Self {
+        let layers = vec![
+            ConvLayer::new("WL1", 112, 3, 3, 10, 1, 1), // 3×112×112 → 10×112×112
+        ];
+        Self { input: (3, 112, 112), layers, requant_shift: 6, classes: 10, weight_seed: 0xC11 }
     }
 
     /// Deterministic weights for layer `idx` of this spec.
@@ -159,17 +174,18 @@ impl SimBackend {
     }
 
     /// Layer-serial forward of one image, every layer sharded across the
-    /// farm (the weight-resident order of the PJRT backend). Weights stay
-    /// behind their cached `Arc`s — nothing is copied per request except
-    /// the incoming image. Returns the logits plus the image's aggregated
-    /// stats: each layer's [`super::farm::FarmRunResult`] already reduces
-    /// its shards (cycles = max, accesses = sum) and the layers run
-    /// sequentially, so their cycles add.
+    /// farm along `self.mode`'s axis (the weight-resident order of the
+    /// PJRT backend). Weights stay behind their cached `Arc`s — nothing is
+    /// copied per request except the incoming image. Returns the logits
+    /// plus the image's aggregated stats: each layer's
+    /// [`super::farm::FarmRunResult`] already reduces its shards
+    /// (cycles = max, accesses = sum) and the layers run sequentially, so
+    /// their cycles add.
     fn forward_sharded(&self, image: &[i32]) -> (Vec<i32>, SimStats) {
         let mut act = Arc::new(self.image_tensor(image));
         let mut stats = SimStats::default();
         for (layer, weights) in self.spec.layers.iter().zip(&self.weights) {
-            let mut r = self.farm.run_layer_shared(layer, act, Arc::clone(weights));
+            let mut r = self.farm.run_layer_shared(layer, act, Arc::clone(weights), self.mode);
             stats.merge_sequential(&r.stats);
             self.requant_inplace(&mut r.ofmaps);
             act = Arc::new(r.ofmaps);
@@ -220,9 +236,18 @@ impl InferenceBackend for SimBackend {
         }
         let f_clk = self.farm.arch().f_clk;
         let (outputs, stats) = match self.mode {
-            ShardMode::FilterShards => {
-                // Images run back to back through the farm: per-image
-                // stats (already shard-reduced per layer) add cycles.
+            ShardMode::LayerPipeline => {
+                let stages = self.pipeline_stages();
+                let inputs: Vec<Tensor3> = images.iter().map(|img| self.image_tensor(img)).collect();
+                let r = self.farm.run_pipeline(&stages, inputs);
+                // PipelineRunResult already reduces across engines
+                // (cycles = max over parallel engines, accesses = sum).
+                (r.outputs.iter().map(|t| self.head(t)).collect(), r.stats)
+            }
+            // Filter, spatial or auto axis: images run back to back
+            // through the farm; per-image stats (already shard-reduced per
+            // layer) add cycles.
+            ShardMode::FilterShards | ShardMode::Spatial | ShardMode::Auto => {
                 let mut stats = SimStats::default();
                 let outputs = images
                     .iter()
@@ -233,14 +258,6 @@ impl InferenceBackend for SimBackend {
                     })
                     .collect();
                 (outputs, stats)
-            }
-            ShardMode::LayerPipeline => {
-                let stages = self.pipeline_stages();
-                let inputs: Vec<Tensor3> = images.iter().map(|img| self.image_tensor(img)).collect();
-                let r = self.farm.run_pipeline(&stages, inputs);
-                // PipelineRunResult already reduces across engines
-                // (cycles = max over parallel engines, accesses = sum).
-                (r.outputs.iter().map(|t| self.head(t)).collect(), r.stats)
             }
         };
         Ok(BatchReport::with_cost(outputs, BatchCost::from_stats(stats, f_clk, &self.energy)))
@@ -292,6 +309,38 @@ mod tests {
         assert_eq!(cs.stats.ext_input_reads, cp.stats.ext_input_reads);
         assert_eq!(cs.stats.output_writes, cp.stats.output_writes);
         assert!(cs.joules > 0.0 && cp.joules > 0.0);
+    }
+
+    #[test]
+    fn spatial_and_auto_modes_match_the_golden_reference() {
+        let mut by_mode: Vec<SimBackend> = [ShardMode::Spatial, ShardMode::Auto]
+            .into_iter()
+            .map(|m| SimBackend::with_spec(3, ArchConfig::small(3, 2, 1), SimNetSpec::tiny(), m))
+            .collect();
+        let len = by_mode[0].input_len();
+        let imgs: Vec<Vec<i32>> = (0..2).map(|i| image(700 + i, len)).collect();
+        let refs: Vec<&[i32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let expect: Vec<Vec<i32>> = imgs.iter().map(|v| by_mode[0].reference_logits(v)).collect();
+        for b in by_mode.iter_mut() {
+            let mode = b.mode();
+            let r = b.infer_batch(&refs).unwrap();
+            assert_eq!(r.outputs, expect, "{mode:?} logits vs golden");
+            let cost = r.cost.expect("sharded sim batches carry cost");
+            assert!(cost.stats.cycles > 0 && cost.joules > 0.0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn cl1_class_spec_is_filter_starved() {
+        // The bench workload's defining property: on 8 narrow engines the
+        // filter axis bounds 5× while rows bound 8× — Auto must pick rows.
+        use crate::scheduler::shard::{plan_shards, ShardAxis};
+        let spec = SimNetSpec::cl1_class();
+        spec.validate();
+        let arch = ArchConfig::small(3, 2, 2); // P_N = 2 → 5 filter groups
+        let plan = plan_shards(&arch, &spec.layers[0], 8, ShardMode::Auto);
+        assert_eq!(plan.axis, ShardAxis::Rows);
+        assert!((plan.speedup_bound() - 8.0).abs() < 1e-9);
     }
 
     #[test]

@@ -2,13 +2,19 @@
 //! cycle-accurate [`EngineSim`], plus the dispatch/merge logic that makes
 //! the pool behave like one big accelerator.
 //!
-//! Two distribution strategies (see [`super::shard::ShardMode`]):
+//! Distribution strategies (see [`super::shard::ShardMode`]):
 //!
 //! * **filter shards** — [`EngineFarm::run_layer`] splits a layer's
 //!   filters across engines on `P_N`-group boundaries (the planner of
 //!   [`super::shard`]) and reassembles the ofmaps bit-exactly. This is the
 //!   multi-fabric scaling of the 3D-TrIM follow-up: every fabric sees the
 //!   same broadcast inputs and owns a disjoint set of filters.
+//! * **spatial (row) shards** — split the layer's *output rows* instead:
+//!   each engine runs all `N` filters over a contiguous row band
+//!   ([`super::shard::plan_row_shards`]), reading its input slab including
+//!   the halo rows shared with neighbouring bands. This is the axis that
+//!   saturates the farm on CL1-class layers whose few filter groups leave
+//!   filter sharding starved; `Auto` picks the better axis per layer.
 //! * **layer pipeline** — [`EngineFarm::run_pipeline`] pins each layer of
 //!   a chain to an engine (`layer i → engine i mod E`) and streams images
 //!   through, so engine 0 convolves image 1's first layer while engine 1
@@ -16,12 +22,13 @@
 //!   chain, where one fabric owns the whole network).
 //!
 //! Stats follow the Tables I–II accounting: counters of parallel shards
-//! **sum** (every access really happens) while cycles take the **max**
-//! (shards run concurrently); within one engine, sequential jobs add their
-//! cycles. Both reductions reuse [`SimStats::merge`] /
+//! **sum** (every access really happens — a row band's off-chip input
+//! reads count its whole slab, halo rows included) while cycles take the
+//! **max** (shards run concurrently); within one engine, sequential jobs
+//! add their cycles. Both reductions reuse [`SimStats::merge`] /
 //! [`SimStats::merge_sequential`].
 
-use super::shard::{plan_filter_shards, ShardPlan};
+use super::shard::{plan_shards, ShardAxis, ShardMode, ShardPlan};
 use crate::arch::engine::EngineRunResult;
 use crate::arch::{ArchConfig, EngineSim, ExecFidelity, SimStats};
 use crate::golden::Tensor3;
@@ -62,13 +69,22 @@ impl Default for FarmConfig {
     }
 }
 
-/// One unit of work for a worker: a filter range of one layer, plus an
-/// optional output re-quantisation (used between pipeline stages).
+/// The slice of a layer one worker computes: a contiguous filter range
+/// (over all output rows) or a contiguous output-row band (over all
+/// filters) — the two shard axes of [`super::shard`].
+#[derive(Debug, Clone)]
+enum ShardWork {
+    Filters(Range<usize>),
+    Rows(Range<usize>),
+}
+
+/// One unit of work for a worker: a piece of one layer, plus an optional
+/// output re-quantisation (used between pipeline stages).
 struct Job {
     layer: ConvLayer,
     input: Arc<Tensor3>,
     weights: Arc<Vec<i32>>,
-    filters: Range<usize>,
+    work: ShardWork,
     requant: Option<Requant>,
     tag: u64,
     reply: Sender<JobDone>,
@@ -76,31 +92,43 @@ struct Job {
 
 struct JobDone {
     tag: u64,
-    filters: Range<usize>,
+    work: ShardWork,
     result: EngineRunResult,
 }
 
 fn worker_loop(engine: EngineSim, rx: Receiver<Job>) {
     while let Ok(job) = rx.recv() {
-        let mut result = engine.run_filter_range(&job.layer, &job.input, &job.weights, job.filters.clone());
+        // The `_shared` entry points let the engine's fast tier key its
+        // padded-input materialisation on the Arc'd input identity.
+        let mut result = match &job.work {
+            ShardWork::Filters(r) => {
+                engine.run_filter_range_shared(&job.layer, &job.input, &job.weights, r.clone())
+            }
+            ShardWork::Rows(r) => {
+                engine.run_row_range_shared(&job.layer, &job.input, &job.weights, r.clone())
+            }
+        };
         if let Some(q) = job.requant {
             for v in result.ofmaps.data.iter_mut() {
                 *v = q.apply(*v as i64) as i32;
             }
         }
         // Receiver may have given up (farm dropped mid-run) — ignore.
-        let _ = job.reply.send(JobDone { tag: job.tag, filters: job.filters, result });
+        let _ = job.reply.send(JobDone { tag: job.tag, work: job.work, result });
     }
 }
 
-/// Result of one farmed layer run (filter-shard mode).
+/// Result of one farmed layer run (filter- or row-shard mode).
 #[derive(Debug, Clone)]
 pub struct FarmRunResult {
     /// Reassembled ofmaps `[N][H_O][W_O]` — bit-identical to a
     /// single-engine [`EngineSim::run_layer`] of the same layer.
     pub ofmaps: Tensor3,
-    /// Aggregate stats: cycles = max over shards, accesses/MACs = sum
-    /// (they partition the single-engine counters exactly).
+    /// Aggregate stats: cycles = max over shards, accesses/MACs = sum.
+    /// Filter shards partition the single-engine counters exactly; row
+    /// bands additionally count their halo input rows (each band reads its
+    /// whole slab), so summed off-chip input reads exceed the
+    /// single-engine count by exactly the inter-band halo duplication.
     pub stats: SimStats,
     /// Per-shard stats, indexed like `plan.shards`.
     pub per_shard: Vec<SimStats>,
@@ -167,31 +195,54 @@ impl EngineFarm {
         self.cfg.fidelity
     }
 
-    /// Run one layer sharded across the farm (filter-shard mode) and merge
-    /// the results. Blocks until every shard has completed. Copies `input`
-    /// and `weights` into shared buffers — callers that already hold
-    /// `Arc`s (the serving hot path) should use
-    /// [`EngineFarm::run_layer_shared`] to avoid the copies.
+    /// Run one layer sharded across the farm in filter-shard mode and
+    /// merge the results (the PR-1 entry point, kept for the existing
+    /// callers/tests). See [`EngineFarm::run_layer_mode`].
     pub fn run_layer(&self, layer: &ConvLayer, input: &Tensor3, weights: &[i32]) -> FarmRunResult {
-        self.run_layer_shared(layer, Arc::new(input.clone()), Arc::new(weights.to_vec()))
+        self.run_layer_mode(layer, input, weights, ShardMode::FilterShards)
     }
 
-    /// Zero-copy variant of [`EngineFarm::run_layer`]: shards reference
-    /// the caller's buffers through `Arc` clones.
+    /// Run one layer sharded across the farm under `mode` (filter, spatial
+    /// or auto) and merge the results. Blocks until every shard has
+    /// completed. Copies `input` and `weights` into shared buffers —
+    /// callers that already hold `Arc`s (the serving hot path) should use
+    /// [`EngineFarm::run_layer_shared`] to avoid the copies.
+    pub fn run_layer_mode(
+        &self,
+        layer: &ConvLayer,
+        input: &Tensor3,
+        weights: &[i32],
+        mode: ShardMode,
+    ) -> FarmRunResult {
+        self.run_layer_shared(layer, Arc::new(input.clone()), Arc::new(weights.to_vec()), mode)
+    }
+
+    /// Zero-copy variant of [`EngineFarm::run_layer_mode`]: shards
+    /// reference the caller's buffers through `Arc` clones. `mode` picks
+    /// the shard axis ([`ShardMode::FilterShards`], [`ShardMode::Spatial`]
+    /// or the per-layer [`ShardMode::Auto`]);
+    /// [`ShardMode::LayerPipeline`] is a cross-layer mode served by
+    /// [`EngineFarm::run_pipeline`] instead.
     pub fn run_layer_shared(
         &self,
         layer: &ConvLayer,
         input: Arc<Tensor3>,
         weights: Arc<Vec<i32>>,
+        mode: ShardMode,
     ) -> FarmRunResult {
-        let plan = plan_filter_shards(&self.cfg.arch, layer, self.engines());
+        assert!(mode != ShardMode::LayerPipeline, "pipeline mode goes through run_pipeline");
+        let plan = plan_shards(&self.cfg.arch, layer, self.engines(), mode);
         let (reply, done_rx) = mpsc::channel::<JobDone>();
         for shard in &plan.shards {
+            let work = match plan.axis {
+                ShardAxis::Filters => ShardWork::Filters(shard.filters.clone()),
+                ShardAxis::Rows => ShardWork::Rows(shard.rows.clone()),
+            };
             let job = Job {
                 layer: layer.clone(),
                 input: Arc::clone(&input),
                 weights: Arc::clone(&weights),
-                filters: shard.filters.clone(),
+                work,
                 requant: None,
                 tag: shard.index as u64,
                 reply: reply.clone(),
@@ -206,9 +257,23 @@ impl EngineFarm {
         let mut per_shard = vec![SimStats::default(); plan.shards.len()];
         let mut received = 0usize;
         while let Ok(done) = done_rx.recv() {
-            let at = done.filters.start * h_o * w_o;
             let data = &done.result.ofmaps.data;
-            ofmaps.data[at..at + data.len()].copy_from_slice(data);
+            match &done.work {
+                // A filter shard is a contiguous channel block of the ofmap.
+                ShardWork::Filters(filters) => {
+                    let at = filters.start * h_o * w_o;
+                    ofmaps.data[at..at + data.len()].copy_from_slice(data);
+                }
+                // A row band interleaves: rows `rows` of every filter.
+                ShardWork::Rows(rows) => {
+                    let b_h = rows.len();
+                    for f in 0..layer.n {
+                        let src = &data[f * b_h * w_o..(f + 1) * b_h * w_o];
+                        let at = (f * h_o + rows.start) * w_o;
+                        ofmaps.data[at..at + b_h * w_o].copy_from_slice(src);
+                    }
+                }
+            }
             stats.merge(&done.result.stats); // parallel: cycles max, counters sum
             per_shard[done.tag as usize] = done.result.stats;
             received += 1;
@@ -238,7 +303,7 @@ impl EngineFarm {
                 layer: s.layer.clone(),
                 input,
                 weights: Arc::clone(&s.weights),
-                filters: 0..s.layer.n,
+                work: ShardWork::Filters(0..s.layer.n),
                 requant: s.requant,
                 tag: (img * n_stage + stage) as u64,
                 reply: reply.clone(),
@@ -366,6 +431,54 @@ mod tests {
     fn drop_joins_workers_cleanly() {
         let farm = EngineFarm::new(FarmConfig::new(3, ArchConfig::small(3, 2, 2)));
         drop(farm); // must not hang or panic
+    }
+
+    #[test]
+    fn row_shards_stitch_bit_exact() {
+        // Spatial mode must reassemble the interleaved row bands into the
+        // same ofmaps a single engine produces, on a strided layer too.
+        let mut rng = SplitMix64::new(41);
+        for (hw, k, stride, pad) in [(10usize, 3usize, 1usize, 1usize), (13, 3, 2, 1)] {
+            let layer = ConvLayer::new("rs", hw, k, 4, 5, stride, pad);
+            let input = rand_tensor(&mut rng, 4, hw, hw);
+            let weights = rng.vec_i32(5 * 4 * k * k, -8, 8);
+            let arch = ArchConfig::small(3, 2, 2);
+            let farm = EngineFarm::new(FarmConfig::new(3, arch));
+            let r = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Spatial);
+            assert_eq!(r.plan.axis, ShardAxis::Rows);
+            assert_eq!(r.plan.shards.len(), 3);
+            let single = EngineSim::fast(arch).run_layer(&layer, &input, &weights);
+            assert_eq!(r.ofmaps, single.ofmaps, "s={stride}: row stitch vs single engine");
+            assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 5, k, stride, pad));
+            // work counters that are proportional to ofmap rows partition
+            assert_eq!(r.stats.output_writes, single.stats.output_writes);
+            assert_eq!(r.stats.cycles, r.per_shard.iter().map(|s| s.cycles).max().unwrap());
+            assert!(r.stats.cycles < single.stats.cycles, "bands must cut parallel cycles");
+            // halo accounting: bands read at least the single-engine slab
+            assert!(r.stats.ext_input_reads >= single.stats.ext_input_reads);
+        }
+    }
+
+    #[test]
+    fn auto_mode_picks_rows_on_narrow_wide_layers() {
+        // CL1-class shape: few filters (1 group on P_N=2), wide spatial.
+        let mut rng = SplitMix64::new(43);
+        let layer = ConvLayer::new("cl1ish", 16, 3, 3, 2, 1, 1);
+        let input = rand_tensor(&mut rng, 3, 16, 16);
+        let weights = rng.vec_i32(2 * 3 * 9, -8, 8);
+        let arch = ArchConfig::small(3, 2, 2);
+        let farm = EngineFarm::new(FarmConfig::new(4, arch));
+        let auto = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Auto);
+        let filt = farm.run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards);
+        assert_eq!(auto.plan.axis, ShardAxis::Rows, "auto must pick the spatial axis here");
+        assert_eq!(filt.plan.shards.len(), 1, "filter axis is starved (1 group)");
+        assert_eq!(auto.ofmaps, filt.ofmaps, "both modes serve identical ofmaps");
+        assert!(
+            auto.stats.cycles < filt.stats.cycles,
+            "spatial sharding must beat starved filter sharding: {} vs {}",
+            auto.stats.cycles,
+            filt.stats.cycles
+        );
     }
 
     #[test]

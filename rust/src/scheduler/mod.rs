@@ -8,8 +8,11 @@
 //!
 //! * [`shard`] — the planner: split a [`crate::model::ConvLayer`] into
 //!   independent filter shards on the paper's own `P_N`-filter group
-//!   boundaries (the `⌈N/P_N⌉` outer loop of eq. (2)), or assign whole
-//!   layers of a network to engines ([`ShardMode`]).
+//!   boundaries (the `⌈N/P_N⌉` outer loop of eq. (2)), into contiguous
+//!   output-row bands (the spatial axis that saturates the farm on
+//!   CL1-class layers — [`plan_row_shards`]), per-layer whichever of the
+//!   two bounds better ([`ShardMode::Auto`]), or assign whole layers of a
+//!   network to engines ([`ShardMode`]).
 //! * [`farm`] — [`EngineFarm`]: worker threads, each wrapping one
 //!   cycle-accurate [`crate::arch::EngineSim`]; dispatch, bit-exact ofmap
 //!   reassembly, and [`crate::arch::SimStats`] aggregation (cycles = max
@@ -25,4 +28,4 @@ pub mod shard;
 
 pub use backend::{SimBackend, SimNetSpec};
 pub use farm::{EngineFarm, FarmConfig, FarmRunResult, PipelineRunResult, PipelineStage};
-pub use shard::{plan_filter_shards, Shard, ShardMode, ShardPlan};
+pub use shard::{plan_filter_shards, plan_row_shards, plan_shards, Shard, ShardAxis, ShardMode, ShardPlan};

@@ -1,18 +1,36 @@
 //! Sharding planner: split one [`ConvLayer`] into independent pieces of
 //! work along the paper's own step structure.
 //!
-//! The TrIM engine executes a layer as `⌈N/P_N⌉ × ⌈M/P_M⌉` computational
-//! steps (eq. (2)): the outer loop walks *filter groups* of `P_N` filters,
-//! and filters never share state — each core owns one filter and one psum
-//! buffer (Fig. 6). Filter groups are therefore the natural shard unit for
-//! a farm of engines (the multi-fabric scaling of the 3D-TrIM follow-up):
-//! give each engine a contiguous run of whole filter groups and the union
-//! of the shard ofmaps is bit-identical to a single-engine run, while the
-//! shard access counters partition the single-engine counters exactly.
+//! Two per-layer shard axes (plus the cross-layer pipeline mode):
+//!
+//! * **Filters** — the TrIM engine executes a layer as `⌈N/P_N⌉ × ⌈M/P_M⌉`
+//!   computational steps (eq. (2)): the outer loop walks *filter groups* of
+//!   `P_N` filters, and filters never share state — each core owns one
+//!   filter and one psum buffer (Fig. 6). Filter groups are therefore the
+//!   natural shard unit for a farm of engines (the multi-fabric scaling of
+//!   the 3D-TrIM follow-up): give each engine a contiguous run of whole
+//!   filter groups and the union of the shard ofmaps is bit-identical to a
+//!   single-engine run, while the shard access counters partition the
+//!   single-engine counters exactly.
+//! * **Rows** ([`plan_row_shards`]) — split the *spatial* dimension
+//!   instead: contiguous bands of output rows, each engine computing all
+//!   `N` filters over its band (the multi-fabric spatial split the 3D-TrIM
+//!   follow-up motivates for wide early layers). This is the axis that
+//!   saturates a farm on CL1-class layers, where `⌈N/P_N⌉` filter groups
+//!   cap filter-shard parallelism below the engine count (VGG-16 CL1 on
+//!   the paper engine: 10 groups — an 8+-engine farm is starved on the
+//!   filter axis but `H_O = 224` rows split 8 ways evenly). Each band
+//!   reads its input slab *including halo rows* shared with the adjacent
+//!   band ([`ConvLayer::band_input_rows`]), so band off-chip input reads
+//!   sum to the single-engine count plus exactly the halo duplication.
 //!
 //! Tiled layers (K > K_nat, §V) keep a different *intra*-engine schedule,
-//! but filters remain independent there too, so the same filter-aligned
-//! split stays exact.
+//! but filters remain independent there too and a row band is just a
+//! shorter layer, so both splits stay exact.
+//!
+//! [`ShardMode::Auto`] picks per layer: whichever axis has the better
+//! [`ShardPlan::speedup_bound`], rows winning ties on layers whose filter
+//! count cannot occupy the farm (`N < engines·P_N`).
 
 use crate::arch::ArchConfig;
 use crate::model::ConvLayer;
@@ -28,6 +46,31 @@ pub enum ShardMode {
     /// (pipeline-parallel across layers); engine `i` runs layers
     /// `i, i+E, …` of the chain.
     LayerPipeline,
+    /// Split each layer's output rows across engines (spatial-parallel
+    /// within a layer); every engine runs all `N` filters over its band.
+    Spatial,
+    /// Per layer, pick the better of [`ShardMode::FilterShards`] and
+    /// [`ShardMode::Spatial`] by [`ShardPlan::speedup_bound`] (rows win
+    /// ties on `N < engines·P_N` layers).
+    Auto,
+}
+
+impl ShardMode {
+    /// CLI-facing name (`--shard filter|pipeline|spatial|auto`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::FilterShards => "filter",
+            Self::LayerPipeline => "pipeline",
+            Self::Spatial => "spatial",
+            Self::Auto => "auto",
+        }
+    }
+}
+
+impl std::fmt::Display for ShardMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.as_str())
+    }
 }
 
 impl std::str::FromStr for ShardMode {
@@ -37,13 +80,28 @@ impl std::str::FromStr for ShardMode {
         match s {
             "filter" | "filters" | "shards" => Ok(Self::FilterShards),
             "pipeline" | "layers" => Ok(Self::LayerPipeline),
-            other => Err(anyhow::anyhow!("unknown shard mode {other:?} (expected filter|pipeline)")),
+            "spatial" | "rows" => Ok(Self::Spatial),
+            "auto" => Ok(Self::Auto),
+            other => Err(anyhow::anyhow!(
+                "unknown shard mode {other:?} (expected filter|pipeline|spatial|auto)"
+            )),
         }
     }
 }
 
-/// One engine's piece of a layer: a contiguous filter range, aligned to
-/// `P_N`-filter group boundaries (except for the tail of the layer).
+/// Which dimension a [`ShardPlan`] cuts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardAxis {
+    /// Shards are contiguous filter ranges (each over all output rows).
+    Filters,
+    /// Shards are contiguous output-row bands (each over all filters).
+    Rows,
+}
+
+/// One engine's piece of a layer: a filter range × an output-row range.
+/// Filter-axis shards cover all rows; row-axis shards cover all filters.
+/// Filter boundaries are aligned to `P_N`-filter group boundaries (except
+/// for the tail of the layer).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Shard {
     /// Shard index (== the engine it is dispatched to).
@@ -52,26 +110,59 @@ pub struct Shard {
     pub filters: Range<usize>,
     /// Whole filter groups of `P_N` covered by this shard.
     pub groups: usize,
+    /// Output rows `[start, end)` of the layer this shard computes.
+    pub rows: Range<usize>,
 }
 
 /// The per-layer shard assignment.
 #[derive(Debug, Clone)]
 pub struct ShardPlan {
+    /// The dimension this plan cuts.
+    pub axis: ShardAxis,
     /// One entry per engine that received work (`len() ≤ engines`).
     pub shards: Vec<Shard>,
     /// Total filter groups in the layer: `⌈N/P_N⌉`.
     pub filter_groups: usize,
-    /// The group size the split is aligned to (`P_N` of the engine).
+    /// The group size filter splits are aligned to (`P_N` of the engine).
     pub p_n: usize,
+    /// Total output rows in the layer (`H_O`).
+    pub rows: usize,
 }
 
 impl ShardPlan {
-    /// Upper bound on the parallel speedup this split can deliver
-    /// (whole-layer groups over the largest shard's groups).
+    /// Upper bound on the parallel speedup this split can deliver, in the
+    /// plan's own work unit: whole-layer filter groups over the largest
+    /// shard's groups (filter axis), or whole-layer output rows over the
+    /// largest band (row axis). One metric across both axes, so
+    /// [`ShardMode::Auto`] can compare them directly.
     pub fn speedup_bound(&self) -> f64 {
-        let largest = self.shards.iter().map(|s| s.groups).max().unwrap_or(1);
-        self.filter_groups as f64 / largest as f64
+        match self.axis {
+            ShardAxis::Filters => {
+                let largest = self.shards.iter().map(|s| s.groups).max().unwrap_or(1);
+                self.filter_groups as f64 / largest as f64
+            }
+            ShardAxis::Rows => {
+                let largest = self.shards.iter().map(|s| s.rows.len()).max().unwrap_or(1);
+                self.rows as f64 / largest as f64
+            }
+        }
     }
+}
+
+/// Split `n_units` contiguous work units across at most `engines` shards,
+/// as evenly as possible (counts differ by at most one).
+fn balanced_split(n_units: usize, engines: usize) -> Vec<Range<usize>> {
+    let n_shards = engines.min(n_units);
+    let base = n_units / n_shards;
+    let extra = n_units % n_shards;
+    let mut out = Vec::with_capacity(n_shards);
+    let mut at = 0usize;
+    for index in 0..n_shards {
+        let take = base + usize::from(index < extra);
+        out.push(at..at + take);
+        at += take;
+    }
+    out
 }
 
 /// Split `layer` into at most `engines` filter shards on `P_N`-group
@@ -86,20 +177,69 @@ pub fn plan_filter_shards(arch: &ArchConfig, layer: &ConvLayer, engines: usize) 
     assert!(engines >= 1, "need at least one engine");
     assert!(layer.n >= 1, "layer has no filters");
     let p_n = arch.p_n;
+    let h_o = layer.h_o();
     let filter_groups = layer.n.div_ceil(p_n);
-    let n_shards = engines.min(filter_groups);
-    let base = filter_groups / n_shards;
-    let extra = filter_groups % n_shards;
-    let mut shards = Vec::with_capacity(n_shards);
-    let mut group0 = 0usize;
-    for index in 0..n_shards {
-        let groups = base + usize::from(index < extra);
-        let start = group0 * p_n;
-        let end = ((group0 + groups) * p_n).min(layer.n);
-        shards.push(Shard { index, filters: start..end, groups });
-        group0 += groups;
+    let shards = balanced_split(filter_groups, engines)
+        .into_iter()
+        .enumerate()
+        .map(|(index, g)| Shard {
+            index,
+            filters: g.start * p_n..(g.end * p_n).min(layer.n),
+            groups: g.len(),
+            rows: 0..h_o,
+        })
+        .collect();
+    ShardPlan { axis: ShardAxis::Filters, shards, filter_groups, p_n, rows: h_o }
+}
+
+/// Split `layer` into at most `engines` contiguous output-row bands; each
+/// shard computes all `N` filters over its band.
+///
+/// Guarantees (property-tested in tests/scheduler_farm.rs):
+/// * bands are non-empty, disjoint, contiguous and cover `0..H_O`;
+/// * band heights differ by at most one;
+/// * `shards.len() == min(engines, H_O)`.
+pub fn plan_row_shards(arch: &ArchConfig, layer: &ConvLayer, engines: usize) -> ShardPlan {
+    assert!(engines >= 1, "need at least one engine");
+    let h_o = layer.h_o();
+    assert!(h_o >= 1, "layer has no output rows");
+    let filter_groups = layer.n.div_ceil(arch.p_n);
+    let shards = balanced_split(h_o, engines)
+        .into_iter()
+        .enumerate()
+        .map(|(index, rows)| Shard {
+            index,
+            filters: 0..layer.n,
+            groups: filter_groups,
+            rows,
+        })
+        .collect();
+    ShardPlan { axis: ShardAxis::Rows, shards, filter_groups, p_n: arch.p_n, rows: h_o }
+}
+
+/// Plan one layer under `mode`. `Auto` compares the two per-layer axes on
+/// [`ShardPlan::speedup_bound`]; ties go to rows exactly when the layer's
+/// filters cannot occupy the farm (`N < engines·P_N` — the CL1-class
+/// shape spatial sharding exists for). [`ShardMode::LayerPipeline`] is a
+/// cross-layer mode and has no per-layer plan.
+pub fn plan_shards(arch: &ArchConfig, layer: &ConvLayer, engines: usize, mode: ShardMode) -> ShardPlan {
+    match mode {
+        ShardMode::FilterShards => plan_filter_shards(arch, layer, engines),
+        ShardMode::Spatial => plan_row_shards(arch, layer, engines),
+        ShardMode::Auto => {
+            let by_filters = plan_filter_shards(arch, layer, engines);
+            let by_rows = plan_row_shards(arch, layer, engines);
+            let (bf, br) = (by_filters.speedup_bound(), by_rows.speedup_bound());
+            if br > bf || (br == bf && layer.n < engines * arch.p_n) {
+                by_rows
+            } else {
+                by_filters
+            }
+        }
+        ShardMode::LayerPipeline => {
+            panic!("LayerPipeline is a cross-layer mode; it has no per-layer shard plan")
+        }
     }
-    ShardPlan { shards, filter_groups, p_n }
 }
 
 #[cfg(test)]
@@ -111,6 +251,7 @@ mod tests {
     }
 
     fn check_invariants(plan: &ShardPlan, n: usize, engines: usize) {
+        assert_eq!(plan.axis, ShardAxis::Filters);
         assert_eq!(plan.shards.len(), engines.min(plan.filter_groups));
         let mut next = 0usize;
         for (i, s) in plan.shards.iter().enumerate() {
@@ -120,6 +261,7 @@ mod tests {
             if s.filters.end != n {
                 assert_eq!(s.filters.end % plan.p_n, 0, "group-aligned");
             }
+            assert_eq!(s.rows, 0..plan.rows, "filter shards cover all rows");
             next = s.filters.end;
         }
         assert_eq!(next, n, "covers all filters");
@@ -165,9 +307,75 @@ mod tests {
     }
 
     #[test]
+    fn row_shards_cover_and_balance() {
+        let cfg = ArchConfig::small(3, 2, 2);
+        for h_w in [8usize, 9, 10, 13] {
+            let l = ConvLayer::new("r", h_w, 3, 2, 5, 1, 1);
+            for engines in [1usize, 2, 3, 4, 64] {
+                let plan = plan_row_shards(&cfg, &l, engines);
+                assert_eq!(plan.axis, ShardAxis::Rows);
+                assert_eq!(plan.rows, l.h_o());
+                assert_eq!(plan.shards.len(), engines.min(l.h_o()));
+                let mut next = 0usize;
+                for (i, s) in plan.shards.iter().enumerate() {
+                    assert_eq!(s.index, i);
+                    assert_eq!(s.rows.start, next, "contiguous");
+                    assert!(!s.rows.is_empty(), "non-empty");
+                    assert_eq!(s.filters, 0..l.n, "row shards cover all filters");
+                    next = s.rows.end;
+                }
+                assert_eq!(next, l.h_o(), "covers all rows");
+                let bmin = plan.shards.iter().map(|s| s.rows.len()).min().unwrap();
+                let bmax = plan.shards.iter().map(|s| s.rows.len()).max().unwrap();
+                assert!(bmax - bmin <= 1, "balanced");
+                assert!((plan.speedup_bound() - plan.rows as f64 / bmax as f64).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_engine_vgg_cl1_rows_beat_filters() {
+        // VGG-16 CL1 (N = 64, H_O = 224) on the paper engine: only 10
+        // filter groups, so an 8-engine farm is capped at 10/2 = 5× on the
+        // filter axis while 224 rows split 8 ways bound 8×. Auto must pick
+        // rows.
+        let cfg = ArchConfig::paper_engine();
+        let cl1 = ConvLayer::new("CL1", 224, 3, 3, 64, 1, 1);
+        let f = plan_filter_shards(&cfg, &cl1, 8);
+        let r = plan_row_shards(&cfg, &cl1, 8);
+        assert!((f.speedup_bound() - 5.0).abs() < 1e-9);
+        assert!((r.speedup_bound() - 8.0).abs() < 1e-9);
+        let auto = plan_shards(&cfg, &cl1, 8, ShardMode::Auto);
+        assert_eq!(auto.axis, ShardAxis::Rows);
+        assert!((auto.speedup_bound() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auto_tie_breaks_toward_rows_only_on_narrow_layers() {
+        let cfg = ArchConfig::small(3, 2, 2); // P_N = 2
+        // N = 4 → 2 groups; H_O = 8. Two engines: both axes bound 2×, and
+        // N = 4 == engines·P_N, so the tie goes to the filter axis.
+        let wide = ConvLayer::new("w", 8, 3, 2, 4, 1, 1);
+        assert_eq!(plan_shards(&cfg, &wide, 2, ShardMode::Auto).axis, ShardAxis::Filters);
+        // N = 2 → 1 group; a 1-engine farm ties at 1× on both axes, and
+        // N = 2 < 1·2 is false → filters; with 2 engines rows bound 2× > 1×.
+        let narrow = ConvLayer::new("n", 8, 3, 2, 2, 1, 1);
+        assert_eq!(plan_shards(&cfg, &narrow, 2, ShardMode::Auto).axis, ShardAxis::Rows);
+        // Explicit modes pass through.
+        assert_eq!(plan_shards(&cfg, &wide, 2, ShardMode::Spatial).axis, ShardAxis::Rows);
+        assert_eq!(plan_shards(&cfg, &wide, 2, ShardMode::FilterShards).axis, ShardAxis::Filters);
+    }
+
+    #[test]
     fn mode_parsing() {
         assert_eq!("filter".parse::<ShardMode>().unwrap(), ShardMode::FilterShards);
         assert_eq!("pipeline".parse::<ShardMode>().unwrap(), ShardMode::LayerPipeline);
-        assert!("bogus".parse::<ShardMode>().is_err());
+        assert_eq!("spatial".parse::<ShardMode>().unwrap(), ShardMode::Spatial);
+        assert_eq!("rows".parse::<ShardMode>().unwrap(), ShardMode::Spatial);
+        assert_eq!("auto".parse::<ShardMode>().unwrap(), ShardMode::Auto);
+        let err = "bogus".parse::<ShardMode>().unwrap_err().to_string();
+        assert!(err.contains("filter|pipeline|spatial|auto"), "error lists every mode: {err}");
+        assert_eq!(ShardMode::Spatial.to_string(), "spatial");
+        assert_eq!(ShardMode::Auto.as_str(), "auto");
     }
 }

@@ -130,6 +130,27 @@ fn prop_fast_tier_bit_and_counter_exact_vs_register() {
                 assert_eq!(fs.stats, rs.stats, "{ctx}: shard {range:?} stats");
             }
         }
+
+        // Row-band entry point (spatial shard axis): both tiers agree on a
+        // random interior band, and the band matches the whole-layer rows.
+        let h_o = layer.h_o();
+        if h_o > 1 {
+            let oy0 = rng.range(0, h_o - 1);
+            let oy1 = rng.range(oy0 + 1, h_o + 1);
+            let band = oy0..oy1;
+            let rb = EngineSim::new(arch).run_row_range(&layer, &input, &weights, band.clone());
+            let fb = EngineSim::fast(arch).run_row_range(&layer, &input, &weights, band.clone());
+            assert_eq!(fb.ofmaps, rb.ofmaps, "{ctx}: band {band:?} ofmaps fast vs register");
+            assert_eq!(fb.stats, rb.stats, "{ctx}: band {band:?} stats fast vs register");
+            let w_o = layer.w_o();
+            for f in 0..n {
+                assert_eq!(
+                    fb.ofmaps.channel(f),
+                    &reg.ofmaps.channel(f)[band.start * w_o..band.end * w_o],
+                    "{ctx}: band {band:?} filter {f} vs whole-layer rows"
+                );
+            }
+        }
     }
 }
 

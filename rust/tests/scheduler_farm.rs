@@ -14,12 +14,36 @@ use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::quant::Requant;
 use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer};
 use trim_sa::scheduler::{
-    plan_filter_shards, EngineFarm, FarmConfig, PipelineStage, ShardMode, SimBackend, SimNetSpec,
+    plan_filter_shards, plan_row_shards, plan_shards, EngineFarm, FarmConfig, PipelineStage,
+    ShardAxis, ShardMode, SimBackend, SimNetSpec,
 };
 use trim_sa::util::SplitMix64;
 
 fn rand_tensor(rng: &mut SplitMix64, c: usize, h: usize, w: usize) -> Tensor3 {
     Tensor3 { c, h, w, data: rng.vec_i32(c * h * w, -96, 96) }
+}
+
+/// Closed-form off-chip input reads of one output-row band (the slab the
+/// band reads, halo rows included) — the "halo accounting" the row-shard
+/// stats must follow. Mirrors `fastsim::analytic_stats` applied to the
+/// band's slab layer: native layers broadcast the slab once per filter
+/// group; tiled layers read the shifted slab view once per filter pass.
+/// The full-row "band" is a whole-layer run and reads the whole padded
+/// ifmap (strided layers pay their decimation leftover rows there).
+fn expected_band_reads(arch: &ArchConfig, layer: &ConvLayer, rows: &std::ops::Range<usize>) -> u64 {
+    let wp = layer.w_i + 2 * layer.pad;
+    let slab_rows = if *rows == (0..layer.h_o()) {
+        layer.h_i + 2 * layer.pad
+    } else {
+        layer.band_input_rows(rows).len()
+    };
+    if layer.k <= arch.k {
+        let n_groups = layer.n.div_ceil(arch.p_n) as u64;
+        n_groups * (layer.m * slab_rows * wp) as u64
+    } else {
+        let (hs, ws) = (slab_rows - layer.k + arch.k, wp - layer.k + arch.k);
+        layer.n as u64 * (hs * ws) as u64
+    }
 }
 
 /// Property: for random layer shapes (native 3×3 and tiled 5×5/7×7 paths,
@@ -152,6 +176,181 @@ fn prop_shard_planner_invariants() {
     }
 }
 
+/// Property: row-shard and auto-shard farm runs are **bit-identical** to
+/// a single-engine run (and the golden conv) on BOTH fidelity tiers, and
+/// their `SimStats` partition exactly: merged cycles = max over bands,
+/// counters = sum; every per-shard entry equals an independent
+/// single-engine `run_row_range`/`run_filter_range` of that shard;
+/// ofmap-proportional counters (output writes, psum traffic) partition
+/// the single-engine counters exactly; off-chip input reads follow the
+/// closed-form slab-with-halo accounting per band; and on stride-1
+/// layers MACs and the full halo formula are exact. Sweeps strided,
+/// tiled-K>3, multi-group and padded geometries.
+#[test]
+fn prop_row_and_auto_shards_bit_exact_both_fidelities() {
+    let mut rng = SplitMix64::new(0x0551);
+    for seed in 0..10u64 {
+        let k = [3usize, 3, 5, 7][rng.range(0, 4)];
+        let hw = rng.range(k + 3, k + 12);
+        let m = rng.range(1, 5);
+        let n = rng.range(1, 10);
+        let stride = rng.range(1, 3);
+        let pad = rng.range(0, 2);
+        let layer = ConvLayer::new("rprop", hw, k, m, n, stride, pad);
+        let input = rand_tensor(&mut rng, m, hw, hw);
+        let weights = rng.vec_i32(n * m * k * k, -9, 9);
+        let engines = rng.range(2, 6);
+        let arch = ArchConfig::small(3, 2, rng.range(1, 4));
+        let golden = conv3d_i32(&input, &weights, n, k, stride, pad);
+
+        for fidelity in [ExecFidelity::Fast, ExecFidelity::Register] {
+            let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
+            let single = EngineSim::with_fidelity(arch, fidelity);
+            let whole = single.run_layer(&layer, &input, &weights);
+            for mode in [ShardMode::Spatial, ShardMode::Auto] {
+                let r = farm.run_layer_mode(&layer, &input, &weights, mode);
+                let ctx = format!(
+                    "seed {seed} {fidelity} {mode}: k={k} hw={hw} m={m} n={n} s={stride} p={pad} \
+                     e={engines} P_N={} axis={:?}",
+                    arch.p_n, r.plan.axis
+                );
+                assert_eq!(r.ofmaps, golden, "{ctx}: farm vs golden");
+                assert_eq!(r.ofmaps, whole.ofmaps, "{ctx}: farm vs single engine");
+
+                // merged = fold of the per-shard stats
+                assert_eq!(
+                    r.stats.cycles,
+                    r.per_shard.iter().map(|s| s.cycles).max().unwrap(),
+                    "{ctx}: cycles = max over shards"
+                );
+                assert_eq!(
+                    r.stats.macs,
+                    r.per_shard.iter().map(|s| s.macs).sum::<u64>(),
+                    "{ctx}: MACs sum over shards"
+                );
+                assert_eq!(
+                    r.stats.ext_input_reads,
+                    r.per_shard.iter().map(|s| s.ext_input_reads).sum::<u64>(),
+                    "{ctx}: reads sum over shards"
+                );
+                assert!(r.stats.cycles <= whole.stats.cycles, "{ctx}: sharding must not slow down");
+
+                // ofmap-proportional counters partition the single run
+                assert_eq!(r.stats.output_writes, whole.stats.output_writes, "{ctx}: writes");
+                assert_eq!(
+                    r.stats.psum_buf_reads + r.stats.psum_buf_writes,
+                    whole.stats.psum_buf_reads + whole.stats.psum_buf_writes,
+                    "{ctx}: on-chip accesses"
+                );
+
+                // every shard equals an independent single-engine run of
+                // exactly that piece
+                for (shard, st) in r.plan.shards.iter().zip(&r.per_shard) {
+                    let solo = match r.plan.axis {
+                        ShardAxis::Filters => {
+                            single.run_filter_range(&layer, &input, &weights, shard.filters.clone())
+                        }
+                        ShardAxis::Rows => {
+                            single.run_row_range(&layer, &input, &weights, shard.rows.clone())
+                        }
+                    };
+                    assert_eq!(*st, solo.stats, "{ctx}: shard {} stats", shard.index);
+                }
+
+                // halo accounting: bands read their whole slab
+                if r.plan.axis == ShardAxis::Rows {
+                    let expect: u64 = r
+                        .plan
+                        .shards
+                        .iter()
+                        .map(|s| expected_band_reads(&arch, &layer, &s.rows))
+                        .sum();
+                    assert_eq!(r.stats.ext_input_reads, expect, "{ctx}: slab+halo reads");
+                    if stride == 1 && r.plan.shards.len() > 1 {
+                        // exact halo formula vs the single engine: each of
+                        // the B−1 interior boundaries duplicates K−1 slab
+                        // rows — read per filter group × channel on the
+                        // native path; the tiled path reads the *shifted
+                        // view* (`hs = slab − K + K_nat`), where the same
+                        // boundary overlaps as K_nat−1 view rows per
+                        // filter pass
+                        let b = r.plan.shards.len() as u64;
+                        let wp = (layer.w_i + 2 * layer.pad) as u64;
+                        let halo = if k <= arch.k {
+                            layer.n.div_ceil(arch.p_n) as u64
+                                * layer.m as u64
+                                * wp
+                                * (b - 1)
+                                * (k as u64 - 1)
+                        } else {
+                            layer.n as u64
+                                * (wp - k as u64 + arch.k as u64)
+                                * (b - 1)
+                                * (arch.k as u64 - 1)
+                        };
+                        assert_eq!(
+                            r.stats.ext_input_reads,
+                            whole.stats.ext_input_reads + halo,
+                            "{ctx}: halo formula"
+                        );
+                        assert_eq!(r.stats.macs, whole.stats.macs, "{ctx}: stride-1 MACs partition");
+                    }
+                }
+
+                // Auto must never pick a worse bound than either pure axis.
+                if mode == ShardMode::Auto {
+                    let bf = plan_filter_shards(&arch, &layer, engines).speedup_bound();
+                    let br = plan_row_shards(&arch, &layer, engines).speedup_bound();
+                    assert!(
+                        r.plan.speedup_bound() >= bf.max(br) - 1e-12,
+                        "{ctx}: auto bound {} < max({bf}, {br})",
+                        r.plan.speedup_bound()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property: the row-shard planner's structural invariants hold for
+/// arbitrary (H, stride, engines) — full cover of `0..H_O`, disjoint
+/// contiguous non-empty bands, balance within one row, shard count =
+/// min(engines, H_O), and the row-axis speedup bound is whole rows over
+/// the largest band.
+#[test]
+fn prop_row_planner_invariants() {
+    let mut rng = SplitMix64::new(0x2075);
+    for _ in 0..200 {
+        let k = [3usize, 5][rng.range(0, 2)];
+        let hw = rng.range(k, k + 40);
+        let stride = rng.range(1, 4);
+        let engines = rng.range(1, 12);
+        let layer = ConvLayer::new("rp", hw, k, 2, rng.range(1, 9), stride, 1);
+        let arch = ArchConfig { p_n: rng.range(1, 5), ..ArchConfig::paper_engine() };
+        let plan = plan_row_shards(&arch, &layer, engines);
+        let h_o = layer.h_o();
+        assert_eq!(plan.axis, ShardAxis::Rows);
+        assert_eq!(plan.rows, h_o);
+        assert_eq!(plan.shards.len(), engines.min(h_o));
+        let mut next = 0usize;
+        for s in &plan.shards {
+            assert_eq!(s.rows.start, next);
+            assert!(!s.rows.is_empty());
+            assert_eq!(s.filters, 0..layer.n);
+            next = s.rows.end;
+        }
+        assert_eq!(next, h_o);
+        let bmin = plan.shards.iter().map(|s| s.rows.len()).min().unwrap();
+        let bmax = plan.shards.iter().map(|s| s.rows.len()).max().unwrap();
+        assert!(bmax - bmin <= 1);
+        assert!((plan.speedup_bound() - h_o as f64 / bmax as f64).abs() < 1e-12);
+        // Auto returns one of the two pure plans, never something else.
+        let auto = plan_shards(&arch, &layer, engines, ShardMode::Auto);
+        let bf = plan_filter_shards(&arch, &layer, engines).speedup_bound();
+        assert!(auto.speedup_bound() >= bf.max(plan.speedup_bound()) - 1e-12);
+    }
+}
+
 /// Acceptance: a farm with N ≥ 2 engines is byte-identical to the
 /// single-engine `EngineSim` and to the golden conv on a full-size VGG-16
 /// layer (CL1: 3→64 filters over 224×224). Runs on the fast tier (the
@@ -199,6 +398,41 @@ fn vgg16_cl1_full_size_register_oracle() {
     assert_eq!(register.ofmaps, golden, "register oracle vs golden on VGG-16 CL1");
     assert_eq!(fast.ofmaps, register.ofmaps, "fast tier vs register oracle: ofmaps");
     assert_eq!(fast.stats, register.stats, "fast tier vs register oracle: stats");
+}
+
+/// Acceptance: the spatial axis is what saturates an 8-engine farm on the
+/// paper's own starved layer — full-size VGG-16 CL1 (3→64 over 224², only
+/// 10 filter groups on the paper engine's P_N = 7). Filter sharding is
+/// bounded at 10/2 = 5×; row sharding splits 224 rows 8 ways (bound 8×).
+/// `Auto` must pick rows, serve bit-identical ofmaps, and cut simulated
+/// wall-clock cycles strictly below the filter-shard run. Fast tier.
+#[test]
+fn vgg16_cl1_full_size_auto_beats_filter_sharding() {
+    let net = vgg16();
+    let layer = net.layers[0].clone();
+    let mut rng = SplitMix64::new(81);
+    let input = Tensor3 { c: 3, h: 224, w: 224, data: rng.vec_i32(3 * 224 * 224, 0, 256) };
+    let weights = rng.vec_i32(64 * 3 * 9, -8, 8);
+    let arch = ArchConfig::paper_engine(); // P_N = 7 → 10 filter groups
+    let farm = EngineFarm::new(FarmConfig::new(8, arch));
+    let filt = farm.run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards);
+    let rows = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Spatial);
+    let auto = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Auto);
+    assert_eq!(filt.plan.axis, ShardAxis::Filters);
+    assert_eq!(rows.plan.axis, ShardAxis::Rows);
+    assert_eq!(auto.plan.axis, ShardAxis::Rows, "auto must pick the spatial axis on CL1");
+    assert!((filt.plan.speedup_bound() - 5.0).abs() < 1e-9);
+    assert!((auto.plan.speedup_bound() - 8.0).abs() < 1e-9);
+    assert_eq!(rows.ofmaps, filt.ofmaps, "row shards vs filter shards");
+    assert_eq!(auto.ofmaps, filt.ofmaps, "auto vs filter shards");
+    assert_eq!(auto.ofmaps, conv3d_i32(&input, &weights, 64, 3, 1, 1), "vs golden");
+    assert!(
+        auto.stats.cycles < filt.stats.cycles,
+        "spatial sharding must cut CL1 wall-clock: auto {} vs filter {} cycles",
+        auto.stats.cycles,
+        filt.stats.cycles
+    );
+    assert_eq!(auto.stats.output_writes, filt.stats.output_writes, "same ofmap either way");
 }
 
 /// Acceptance: same bit-exactness on a full-size AlexNet layer (CL5:
@@ -374,4 +608,16 @@ fn coordinator_serves_96_requests_sim_filter_shards() {
 #[test]
 fn coordinator_serves_96_requests_sim_layer_pipeline() {
     serve_workload(ShardMode::LayerPipeline);
+}
+
+/// Same workload through the spatial (output-row) shard axis.
+#[test]
+fn coordinator_serves_96_requests_sim_spatial() {
+    serve_workload(ShardMode::Spatial);
+}
+
+/// Same workload with the per-layer auto axis pick.
+#[test]
+fn coordinator_serves_96_requests_sim_auto() {
+    serve_workload(ShardMode::Auto);
 }
