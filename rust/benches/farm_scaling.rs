@@ -9,11 +9,14 @@
 //!   {filter, pipeline} mode: the PR-over-PR trajectory rows carried since
 //!   PR 1 (the fidelity axis since PR 2).
 //! * `cl1` — the `SimNetSpec::cl1_class` workload (one wide-spatial,
-//!   filter-starved 3→10 layer over 112², the VGG-16 CL1 geometry class)
-//!   at 4/8 engines in {filter, spatial, auto} mode: the shard-axis sweep
-//!   of the spatial-sharding PR. On 8 narrow engines the filter axis is
-//!   bounded at 5× while rows bound 8× — `auto` must match or beat
-//!   `filter` rps at 8 engines (strictly, on the fast tier).
+//!   filter-starved 3→10 layer over 120², the VGG-16 CL1 geometry class)
+//!   at 4/8/16 engines in {filter, spatial, hybrid, auto} mode: the
+//!   shard-axis sweep. On 8 narrow engines the filter axis is bounded at
+//!   5× while rows bound 8× — `auto` must match or beat `filter` rps at
+//!   8 engines (strictly, on the fast tier). At 16 engines *both* single
+//!   axes fall short (filters 10×, rows 15×) and auto resolves to the
+//!   2×8 hybrid grid (bound 16×) — its rps must be ≥ the spatial-only
+//!   row at the same engine count.
 //!
 //! Emits one JSON line per configuration (prefixed `JSON `) so the bench
 //! trajectory can be scraped into EXPERIMENTS.md / dashboards:
@@ -116,14 +119,18 @@ fn main() -> anyhow::Result<()> {
         // The shard-axis sweep on the CL1-class layer: filter sharding is
         // starved (10 filter groups on these P_N = 1 engines — the largest
         // shard still carries 2 groups at 8 engines, bounding 5×) while
-        // spatial/auto split 112 output rows evenly (8×). Base rps is the
-        // 4-engine filter run of each fidelity. 32 requests: the layer is
-        // ~50× the tiny net's work per image, so the smaller workload
-        // keeps the register rows affordable without losing the signal.
+        // spatial/auto split 120 output rows evenly at 8 engines (8×); at
+        // 16 engines rows cap at 15× and only the hybrid 2×8 grid (which
+        // auto resolves to) reaches 16×. Base rps is the 4-engine filter
+        // run of each fidelity. 32 requests: the layer is ~50× the tiny
+        // net's work per image, so the smaller workload keeps the
+        // register rows affordable without losing the signal.
         let cl1_req = 32usize;
         let mut base = 0.0f64;
-        for mode in [ShardMode::FilterShards, ShardMode::Spatial, ShardMode::Auto] {
-            for engines in [4usize, 8] {
+        for mode in
+            [ShardMode::FilterShards, ShardMode::Spatial, ShardMode::Hybrid, ShardMode::Auto]
+        {
+            for engines in [4usize, 8, 16] {
                 run_config("cl1", &cl1, mode, fidelity, engines, cl1_req, max_batch, &mut base, &mut json_lines)?;
             }
         }

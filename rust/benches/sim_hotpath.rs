@@ -1,6 +1,18 @@
-//! Bench: the cycle-accurate simulator hot path (the §Perf L3 target) —
-//! PE-array cycle updates per second across slice geometries and a small
-//! engine layer.
+//! Bench: the simulator hot paths — the cycle-accurate register tier
+//! (PE-array cycle updates per second across slice geometries and a small
+//! engine layer, the §Perf L3 target) AND the fast-tier conv microkernel
+//! (`arch/fastsim.rs::conv_rows_from_padded` — the serving hot path: the
+//! K-specialized, autovectorized blocked conv), so the before/after of
+//! microkernel work is recorded per PR.
+//!
+//! Emits one JSON line per case (prefixed `JSON `) for the CI
+//! bench-trajectory artifact:
+//!
+//! ```text
+//! JSON {"bench":"sim_hotpath","kernel":"conv_k3_cl1class","mean_ms":...,
+//!       "gmacs_per_s":...}
+//! ```
+
 #[path = "bench_harness.rs"]
 mod harness;
 use harness::{bench, header};
@@ -12,6 +24,9 @@ use trim_sa::util::SplitMix64;
 fn main() {
     header("Simulator hot path");
     let mut rng = SplitMix64::new(1);
+    let mut json = Vec::new();
+
+    // --- register tier: the slice sweep ---
     for (hw, k) in [(56usize, 3usize), (112, 3), (224, 3), (64, 5)] {
         let ifmap = rng.vec_i32(hw * hw, 0, 256);
         let weights = rng.vec_i32(k * k, -8, 8);
@@ -22,10 +37,58 @@ fn main() {
         let rate = cycles as f64 / r.mean.as_secs_f64() / 1e6;
         println!("{r}");
         println!("{:<44} {:>10.1} Mcycles/s  ({:.0} M PE-updates/s)", " ", rate, rate * (k * k) as f64);
+        json.push(format!(
+            "JSON {{\"bench\":\"sim_hotpath\",\"kernel\":\"slice_{hw}x{hw}_k{k}\",\
+             \"mean_ms\":{:.3},\"mcycles_per_s\":{rate:.1}}}",
+            r.mean.as_secs_f64() * 1e3,
+        ));
     }
+
+    // --- register tier: a small engine layer ---
     let layer = ConvLayer::new("e", 28, 3, 8, 8, 1, 1);
     let input = Tensor3::from_fn(8, 28, 28, |c, y, x| ((c + y + x) % 251) as i32);
     let weights = rng.vec_i32(8 * 8 * 9, -8, 8);
     let sim = EngineSim::new(ArchConfig::small(3, 4, 4));
-    println!("{}", bench("engine_28x28_m8_n8", 1, 3, || sim.run_layer(&layer, &input, &weights).stats.cycles));
+    let r = bench("engine_28x28_m8_n8", 1, 3, || sim.run_layer(&layer, &input, &weights).stats.cycles);
+    println!("{r}");
+    json.push(format!(
+        "JSON {{\"bench\":\"sim_hotpath\",\"kernel\":\"engine_28x28_m8_n8\",\"mean_ms\":{:.3}}}",
+        r.mean.as_secs_f64() * 1e3,
+    ));
+
+    // --- fast tier: the conv microkernel (serving hot path) ---
+    // One case per dispatch arm: the fused K=3 kernel on the CL1-class
+    // serving geometry, the same kernel on a channel-heavy deep layer,
+    // the generic unit-stride K=5 arm, and the strided gather arm.
+    let cases: Vec<(&str, ConvLayer)> = vec![
+        ("conv_k3_cl1class", ConvLayer::new("c", 120, 3, 3, 10, 1, 1)),
+        ("conv_k3_deep", ConvLayer::new("d", 28, 3, 64, 64, 1, 1)),
+        ("conv_k5_unit", ConvLayer::new("u", 64, 5, 8, 8, 1, 2)),
+        ("conv_k11_s4", ConvLayer::new("t", 127, 11, 3, 8, 4, 0)),
+    ];
+    for (name, layer) in &cases {
+        let input = Tensor3 {
+            c: layer.m,
+            h: layer.h_i,
+            w: layer.w_i,
+            data: rng.vec_i32(layer.m * layer.h_i * layer.w_i, -96, 96),
+        };
+        let weights = rng.vec_i32(layer.weight_elems() as usize, -8, 8);
+        let fast = EngineSim::fast(ArchConfig::small(3, 2, 2));
+        let r = bench(name, 2, 5, || fast.run_layer(layer, &input, &weights).stats.macs);
+        // Gmacs/s of the *functional* kernel (the analytic stats are
+        // closed-form and cost nothing; wall-clock is the conv).
+        let gmacs = layer.macs() as f64 / r.mean.as_secs_f64() / 1e9;
+        println!("{r}");
+        println!("{:<44} {:>10.2} Gmacs/s (fast-tier microkernel)", " ", gmacs);
+        json.push(format!(
+            "JSON {{\"bench\":\"sim_hotpath\",\"kernel\":\"{name}\",\"mean_ms\":{:.3},\
+             \"gmacs_per_s\":{gmacs:.3}}}",
+            r.mean.as_secs_f64() * 1e3,
+        ));
+    }
+
+    for l in &json {
+        println!("{l}");
+    }
 }

@@ -101,20 +101,15 @@ impl EngineSim {
         weights: &[i32],
         filters: Range<usize>,
     ) -> EngineRunResult {
-        assert!(filters.start < filters.end && filters.end <= layer.n, "bad filter range {filters:?}");
-        assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
-        if filters.start == 0 && filters.end == layer.n {
-            return self.run_layer(layer, input, weights);
-        }
-        let (sub, w0, w1) = filter_sub_layer(layer, &filters);
-        self.run_layer(&sub, input, &weights[w0..w1])
+        // Thin wrapper over the 2-D tile entry point (full row range) so
+        // the 1-D and 2-D shard paths cannot drift apart.
+        self.run_shard(layer, input, weights, filters, 0..layer.h_o())
     }
 
     /// [`EngineSim::run_filter_range`] for callers that hold the input
-    /// behind an `Arc` (the farm's dispatch path): on the fast tier the
-    /// shard reuses the engine-resident padded-input materialisation
-    /// instead of re-padding per call. Results are identical to the
-    /// borrowed variant.
+    /// behind an `Arc`: on the fast tier the shard reuses the
+    /// engine-resident padded-input materialisation instead of re-padding
+    /// per call. Results are identical to the borrowed variant.
     pub fn run_filter_range_shared(
         &self,
         layer: &ConvLayer,
@@ -122,13 +117,7 @@ impl EngineSim {
         weights: &[i32],
         filters: Range<usize>,
     ) -> EngineRunResult {
-        assert!(filters.start < filters.end && filters.end <= layer.n, "bad filter range {filters:?}");
-        assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
-        if filters.start == 0 && filters.end == layer.n {
-            return self.run_layer_shared(layer, input, weights);
-        }
-        let (sub, w0, w1) = filter_sub_layer(layer, &filters);
-        self.run_layer_shared(&sub, input, &weights[w0..w1])
+        self.run_shard_shared(layer, input, weights, filters, 0..layer.h_o())
     }
 
     /// Row-band entry point for the spatial shard axis
@@ -166,6 +155,59 @@ impl EngineSim {
         self.row_range_impl(layer, input, Some(input), weights, rows)
     }
 
+    /// 2-D shard entry point for the hybrid (filter-group × row-band)
+    /// axis ([`crate::scheduler::plan_hybrid_shards`]): run only filters
+    /// `[filters.start, filters.end)` over output rows
+    /// `[rows.start, rows.end)` of `layer`.
+    ///
+    /// This is the composition of [`EngineSim::run_filter_range`] and
+    /// [`EngineSim::run_row_range`] — the filter slice first (filters are
+    /// independent), then the row band of the resulting sub-layer — so
+    /// every guarantee of the two 1-D entry points composes: the returned
+    /// ofmaps (`[filters.len()][rows.len()][W_O]`) are bit-identical to
+    /// the corresponding block of a whole-layer run on both fidelity
+    /// tiers, and the stats are the analytic band counters of the filter
+    /// sub-layer (halo-aware slab reads, as for pure row bands). Full
+    /// ranges degenerate to the matching 1-D (or whole-layer) paths.
+    pub fn run_shard(
+        &self,
+        layer: &ConvLayer,
+        input: &Tensor3,
+        weights: &[i32],
+        filters: Range<usize>,
+        rows: Range<usize>,
+    ) -> EngineRunResult {
+        assert!(filters.start < filters.end && filters.end <= layer.n, "bad filter range {filters:?}");
+        assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
+        if filters == (0..layer.n) {
+            return self.run_row_range(layer, input, weights, rows);
+        }
+        let (sub, w0, w1) = filter_sub_layer(layer, &filters);
+        self.run_row_range(&sub, input, &weights[w0..w1], rows)
+    }
+
+    /// [`EngineSim::run_shard`] for `Arc`-held inputs (the farm's dispatch
+    /// path): on the fast tier every shard of the same input — across both
+    /// grid axes — reuses the engine-resident padded-input materialisation
+    /// (the filter sub-layer shares the parent's pad geometry, so the
+    /// [`ConvScratch`] cache key matches across filter splits too).
+    pub fn run_shard_shared(
+        &self,
+        layer: &ConvLayer,
+        input: &Arc<Tensor3>,
+        weights: &[i32],
+        filters: Range<usize>,
+        rows: Range<usize>,
+    ) -> EngineRunResult {
+        assert!(filters.start < filters.end && filters.end <= layer.n, "bad filter range {filters:?}");
+        assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
+        if filters == (0..layer.n) {
+            return self.run_row_range_shared(layer, input, weights, rows);
+        }
+        let (sub, w0, w1) = filter_sub_layer(layer, &filters);
+        self.run_row_range_shared(&sub, input, &weights[w0..w1], rows)
+    }
+
     fn row_range_impl(
         &self,
         layer: &ConvLayer,
@@ -188,8 +230,12 @@ impl EngineSim {
         let band = layer.row_band(&rows);
         match self.fidelity {
             ExecFidelity::Fast => {
+                // One band + plan materialisation serves both the plan
+                // field and the analytic counters (analytic_stats_rows is
+                // exactly analytic_stats over this band/plan pair — don't
+                // rebuild them on the per-shard hot path).
                 let plan = plan_layer(&self.cfg, &band);
-                let stats = fastsim::analytic_stats_rows(&self.cfg, layer, &rows);
+                let stats = fastsim::analytic_stats(&self.cfg, &band, &plan);
                 let mut scratch = self.scratch.borrow_mut();
                 let ofmaps = match shared {
                     Some(a) => scratch.conv_rows_shared(layer, a, weights, rows),
@@ -663,6 +709,43 @@ mod tests {
         let rf = sim.run_row_range_shared(&layer, &input, &weights, 0..4);
         assert_eq!(rr.ofmaps, rf.ofmaps);
         assert_eq!(rr.stats, rf.stats);
+    }
+
+    #[test]
+    fn shard_tile_partitions_whole_layer_both_tiers() {
+        // A filter-range × row-band tile (the hybrid shard unit) equals
+        // the matching block of a whole-layer run on both fidelity tiers,
+        // with tier-identical stats, for native/tiled/strided layers.
+        for (hw, k, m, n, stride, pad) in
+            [(10usize, 3usize, 5usize, 5usize, 1usize, 1usize), (12, 5, 3, 4, 1, 2), (31, 11, 2, 3, 4, 0)]
+        {
+            let layer = ConvLayer::new("tile", hw, k, m, n, stride, pad);
+            let input = rand_tensor(m, hw, hw, 87);
+            let weights = rand_weights(n, m, k, 89);
+            let cfg = ArchConfig::small(3, 2, 2);
+            let reg = EngineSim::new(cfg);
+            let fast = EngineSim::fast(cfg);
+            let whole = fast.run_layer(&layer, &input, &weights);
+            let (h_o, w_o) = (layer.h_o(), layer.w_o());
+            let filters = 0..(n / 2).max(1);
+            let rows = (h_o / 2).min(h_o - 1)..h_o;
+            let tf = fast.run_shard(&layer, &input, &weights, filters.clone(), rows.clone());
+            let tr = reg.run_shard(&layer, &input, &weights, filters.clone(), rows.clone());
+            assert_eq!(tf.ofmaps, tr.ofmaps, "k={k}: tile ofmaps fast vs register");
+            assert_eq!(tf.stats, tr.stats, "k={k}: tile stats fast vs register");
+            assert_eq!((tf.ofmaps.c, tf.ofmaps.h, tf.ofmaps.w), (filters.len(), rows.len(), w_o));
+            for (df, f) in filters.clone().enumerate() {
+                assert_eq!(
+                    tf.ofmaps.channel(df),
+                    &whole.ofmaps.channel(f)[rows.start * w_o..rows.end * w_o],
+                    "k={k} f={f}: tile vs whole-layer block"
+                );
+            }
+            // degenerate full ranges fall back to the whole-layer path
+            let full = fast.run_shard(&layer, &input, &weights, 0..n, 0..h_o);
+            assert_eq!(full.ofmaps, whole.ofmaps);
+            assert_eq!(full.stats, whole.stats);
+        }
     }
 
     #[test]

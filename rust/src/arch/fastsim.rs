@@ -145,6 +145,11 @@ impl ConvScratch {
         if resident {
             self.hits += 1;
         } else {
+            // Invalidate the key *before* filling: a farm worker survives
+            // job panics (catch_unwind keeps this scratch alive), so if
+            // fill_padded panics mid-fill the stale key must not alias the
+            // half-overwritten buffer on a later call.
+            self.held = None;
             fill_padded(&mut self.padded, layer, input);
             self.held = Some((Arc::clone(input), geom));
             self.fills += 1;
@@ -189,6 +194,17 @@ fn fill_padded(padded: &mut Vec<i32>, layer: &ConvLayer, input: &Tensor3) {
 /// `layer`, reading the already-materialised full padded ifmap. Returns
 /// `[N][rows.len()][W_O]`. `acc` is the caller's i64 arena (resized in
 /// place, zeroed per filter block).
+///
+/// The per-(filter, channel) inner work is dispatched once, outside the
+/// row loops, to one of three `w_o`-contiguous microkernels:
+/// [`conv_taps_k3`] (the paper-native K = 3 / stride 1 serving hot path,
+/// all three taps of a kernel row fused into one unit-stride pass),
+/// [`conv_taps_unit`] (generic K at stride 1) and [`conv_taps_strided`]
+/// (sweep-and-decimate geometries). All three accumulate with wrapping
+/// i64 adds, which are associative/commutative mod 2⁶⁴ — so the tap
+/// reordering cannot change the final mod-2³² truncation, and the
+/// microkernels stay bit-exact vs the register oracle by construction
+/// (property-tested in tests/proptest_invariants.rs).
 fn conv_rows_from_padded(
     layer: &ConvLayer,
     padded: &[i32],
@@ -217,32 +233,12 @@ fn conv_rows_from_padded(
             for df in 0..fb {
                 let kern = &weights[((f0 + df) * m + c) * kk..((f0 + df) * m + c + 1) * kk];
                 let a = &mut acc[df * b_h * w_o..(df + 1) * b_h * w_o];
-                for (by, oy) in rows.clone().enumerate() {
-                    let arow = &mut a[by * w_o..(by + 1) * w_o];
-                    for r in 0..k {
-                        let irow = &chan[(oy * stride + r) * wp..(oy * stride + r + 1) * wp];
-                        for (s, &wv) in kern[r * k..(r + 1) * k].iter().enumerate() {
-                            if wv == 0 {
-                                continue;
-                            }
-                            // i32×i32 products never overflow i64; the
-                            // accumulation wraps mod 2⁶⁴, which preserves
-                            // the final mod-2³² truncation exactly (and
-                            // matches the register datapath under extreme
-                            // operands without a debug-overflow panic).
-                            let wv = wv as i64;
-                            if stride == 1 {
-                                // contiguous tap row: vectorisable AXPY
-                                for (av, &x) in arow.iter_mut().zip(&irow[s..s + w_o]) {
-                                    *av = av.wrapping_add(x as i64 * wv);
-                                }
-                            } else {
-                                for (ox, av) in arow.iter_mut().enumerate() {
-                                    *av = av.wrapping_add(irow[ox * stride + s] as i64 * wv);
-                                }
-                            }
-                        }
-                    }
+                if stride == 1 && k == 3 {
+                    conv_taps_k3(a, chan, kern, rows.clone(), wp, w_o);
+                } else if stride == 1 {
+                    conv_taps_unit(a, chan, kern, rows.clone(), wp, w_o, k);
+                } else {
+                    conv_taps_strided(a, chan, kern, rows.clone(), wp, w_o, k, stride);
                 }
             }
         }
@@ -252,6 +248,94 @@ fn conv_rows_from_padded(
         }
     }
     ofmaps
+}
+
+/// K = 3, stride 1 — the paper's native geometry and the serving hot
+/// path. The three taps of each kernel row are fused into a single
+/// unit-stride pass over the padded input row, so every input element is
+/// loaded once per kernel row (not once per tap); the i32→i64 widening
+/// of the taps is hoisted out of the inner loop; and `x0/x1/x2` are
+/// fixed-length `w_o` sub-slices of the same row, so the bounds checks
+/// fold away and the loop autovectorizes (widening multiply-accumulate)
+/// on stable Rust with no dependencies. All-zero kernel rows skip the
+/// pass (bit-exact either way: the skipped terms are zero).
+// The indexed loop (rather than a 4-deep iterator zip) is the form LLVM
+// reliably turns into one vectorised pass over the four streams.
+#[allow(clippy::needless_range_loop)]
+#[inline]
+fn conv_taps_k3(a: &mut [i64], chan: &[i32], kern: &[i32], rows: Range<usize>, wp: usize, w_o: usize) {
+    for (by, oy) in rows.enumerate() {
+        let arow = &mut a[by * w_o..(by + 1) * w_o];
+        for r in 0..3 {
+            let kr = &kern[r * 3..r * 3 + 3];
+            if kr[0] == 0 && kr[1] == 0 && kr[2] == 0 {
+                continue;
+            }
+            let (w0, w1, w2) = (kr[0] as i64, kr[1] as i64, kr[2] as i64);
+            // w_o = wp − 2 here, so the row slice is exactly wp long.
+            let irow = &chan[(oy + r) * wp..(oy + r) * wp + w_o + 2];
+            let (x0, x1, x2) = (&irow[..w_o], &irow[1..w_o + 1], &irow[2..w_o + 2]);
+            for i in 0..w_o {
+                arow[i] = arow[i]
+                    .wrapping_add(x0[i] as i64 * w0)
+                    .wrapping_add(x1[i] as i64 * w1)
+                    .wrapping_add(x2[i] as i64 * w2);
+            }
+        }
+    }
+}
+
+/// Generic K at stride 1: per-tap AXPY, unit-stride over the padded row
+/// with the tap's widened weight hoisted; zero taps skip their pass.
+#[inline]
+fn conv_taps_unit(a: &mut [i64], chan: &[i32], kern: &[i32], rows: Range<usize>, wp: usize, w_o: usize, k: usize) {
+    for (by, oy) in rows.enumerate() {
+        let arow = &mut a[by * w_o..(by + 1) * w_o];
+        for r in 0..k {
+            // w_o = wp − k + 1, so the row slice is exactly wp long.
+            let irow = &chan[(oy + r) * wp..(oy + r) * wp + w_o + k - 1];
+            for (s, &wv) in kern[r * k..(r + 1) * k].iter().enumerate() {
+                if wv == 0 {
+                    continue;
+                }
+                let wv = wv as i64;
+                for (av, &x) in arow.iter_mut().zip(&irow[s..s + w_o]) {
+                    *av = av.wrapping_add(x as i64 * wv);
+                }
+            }
+        }
+    }
+}
+
+/// Strided fallback (sweep-and-decimate geometries, e.g. AlexNet CL1):
+/// per-tap gather at `stride`-spaced columns.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn conv_taps_strided(
+    a: &mut [i64],
+    chan: &[i32],
+    kern: &[i32],
+    rows: Range<usize>,
+    wp: usize,
+    w_o: usize,
+    k: usize,
+    stride: usize,
+) {
+    for (by, oy) in rows.enumerate() {
+        let arow = &mut a[by * w_o..(by + 1) * w_o];
+        for r in 0..k {
+            let irow = &chan[(oy * stride + r) * wp..(oy * stride + r + 1) * wp];
+            for (s, &wv) in kern[r * k..(r + 1) * k].iter().enumerate() {
+                if wv == 0 {
+                    continue;
+                }
+                let wv = wv as i64;
+                for (ox, av) in arow.iter_mut().enumerate() {
+                    *av = av.wrapping_add(irow[ox * stride + s] as i64 * wv);
+                }
+            }
+        }
+    }
 }
 
 /// Blocked direct convolution, bit-exact against the register tier's
@@ -400,6 +484,27 @@ mod tests {
     }
 
     #[test]
+    fn k3_microkernel_zero_row_skip_stays_exact() {
+        // All-zero kernel rows hit the fused K=3 microkernel's skip path;
+        // whole-zero kernels and mixed kernels must still be bit-exact.
+        let layer = ConvLayer::new("z", 9, 3, 2, 3, 1, 1);
+        let input = rand_tensor(2, 9, 9, 91);
+        let mut weights = rand_weights(3, 2, 3, 93);
+        for fc in 0..3 * 2 {
+            for s in 3..6 {
+                weights[fc * 9 + s] = 0; // middle row of every kernel
+            }
+        }
+        for w in weights.iter_mut().take(9) {
+            *w = 0; // the whole first kernel
+        }
+        assert_eq!(
+            conv_blocked(&layer, &input, &weights),
+            conv3d_i32(&input, &weights, 3, 3, 1, 1)
+        );
+    }
+
+    #[test]
     fn blocked_conv_matches_register_datapath_under_overflow() {
         // Large magnitudes force the register tier's wrapping-i32 psum
         // chain to wrap; the i64-accumulate + truncate fast path must land
@@ -481,6 +586,32 @@ mod tests {
         let other = Arc::new(rand_tensor(3, 9, 9, 55));
         let _ = scratch.conv_rows_shared(&layer, &other, &weights, 0..9);
         assert_eq!(scratch.fills(), 2, "new input identity re-materialises");
+    }
+
+    #[test]
+    fn scratch_invalidates_held_key_if_fill_panics() {
+        // A farm worker survives job panics (catch_unwind) with its
+        // scratch alive, so a fill that dies mid-materialisation must not
+        // leave the old cache key pointing at the clobbered buffer.
+        let layer = ConvLayer::new("pz", 9, 3, 3, 4, 1, 1);
+        let good = Arc::new(rand_tensor(3, 9, 9, 11));
+        let weights = rand_weights(4, 3, 3, 13);
+        let mut scratch = ConvScratch::new();
+        let expect = scratch.conv_rows_shared(&layer, &good, &weights, 0..9);
+        // A layer whose M exceeds the resident input's channels makes
+        // fill_padded panic after it has already resized/overwritten the
+        // padded buffer.
+        let wide = ConvLayer::new("pzw", 9, 3, 5, 4, 1, 1);
+        let bad_weights = rand_weights(4, 5, 3, 13);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            scratch.conv_rows_shared(&wide, &good, &bad_weights, 0..9)
+        }));
+        assert!(r.is_err(), "channel-mismatched input must panic in fill_padded");
+        // The good input must re-materialise (no stale-key cache hit on
+        // the half-overwritten buffer) and stay bit-exact.
+        let again = scratch.conv_rows_shared(&layer, &good, &weights, 0..9);
+        assert_eq!(again, expect, "post-panic reuse must not read a clobbered buffer");
+        assert_eq!(scratch.fills(), 2, "the failed fill invalidated the held key");
     }
 
     #[test]

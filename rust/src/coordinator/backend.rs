@@ -13,6 +13,64 @@ use crate::arch::SimStats;
 use crate::runtime::Runtime;
 use anyhow::Result;
 
+/// One layer's share of a [`BatchCost`] — the per-layer accounting of the
+/// TrIM FPGA companion (arXiv 2408.01254), carried through the serving
+/// API so a client can see *where* a batch's cycles and memory traffic
+/// went, not just the totals.
+///
+/// Observations of the same layer fold with [`LayerCost::add`] (layers of
+/// a batch run sequentially per image and across images, so cycles and
+/// counters both add).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LayerCost {
+    /// Layer name (e.g. `"SL2"`, `"CL13"`).
+    pub name: String,
+    /// Simulated cycles this layer contributed to the batch (already
+    /// shard-reduced per run: max over parallel shards, summed across the
+    /// sequential images of the batch).
+    pub cycles: u64,
+    /// Off-chip (DRAM-side) element accesses attributed to this layer.
+    pub off_chip_accesses: u64,
+    /// On-chip (psum-buffer) element accesses attributed to this layer.
+    pub on_chip_accesses: u64,
+    /// MACs attributed to this layer.
+    pub macs: u64,
+}
+
+impl LayerCost {
+    /// A layer's cost from one aggregated stats observation.
+    pub fn from_stats(name: impl Into<String>, stats: &SimStats) -> Self {
+        let mut l = Self { name: name.into(), ..Self::default() };
+        l.add_stats(stats);
+        l
+    }
+
+    /// Fold another sequential stats observation of this layer in.
+    pub fn add_stats(&mut self, stats: &SimStats) {
+        self.cycles += stats.cycles;
+        self.off_chip_accesses += stats.off_chip_accesses();
+        self.on_chip_accesses += stats.on_chip_accesses();
+        self.macs += stats.macs;
+    }
+
+    /// Fold another observation of the same layer in.
+    pub fn add(&mut self, other: &LayerCost) {
+        self.cycles += other.cycles;
+        self.off_chip_accesses += other.off_chip_accesses;
+        self.on_chip_accesses += other.on_chip_accesses;
+        self.macs += other.macs;
+    }
+
+    /// Fold `l` into `acc` by layer name; unseen names append in arrival
+    /// order (layer chains are short, so the linear scan beats a map).
+    pub fn fold_into(acc: &mut Vec<LayerCost>, l: &LayerCost) {
+        match acc.iter_mut().find(|e| e.name == l.name) {
+            Some(e) => e.add(l),
+            None => acc.push(l.clone()),
+        }
+    }
+}
+
 /// Farm-aggregated execution cost of one served batch.
 ///
 /// The counters follow the Tables I–II accounting the farm already uses:
@@ -22,10 +80,16 @@ use anyhow::Result;
 /// and joules are derived once per batch via [`EnergyModel`], so the cost
 /// a client sees is priced in the same units as the paper's headline
 /// claims (453.6 GOPS peak, Tables I–II energy columns).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BatchCost {
     /// Aggregated simulation counters for the whole batch.
     pub stats: SimStats,
+    /// Per-layer breakdown of `stats` (empty when the backend does not
+    /// attribute cost per layer). Sums to the batch totals on
+    /// layer-serial execution; on pipelined execution the per-layer
+    /// cycles sum to the total *work*, which is ≥ the parallel
+    /// wall-clock `stats.cycles`.
+    pub per_layer: Vec<LayerCost>,
     /// Clock the cycles are priced at (Hz) — the farm engines' `f_clk`.
     pub f_clk: f64,
     /// Achieved throughput over the batch, GOPs/s
@@ -43,7 +107,13 @@ impl BatchCost {
         let joules = energy
             .memory_energy_j(stats.off_chip_accesses() as f64, stats.on_chip_accesses() as f64)
             + energy.compute_energy_j(stats.macs as f64);
-        Self { stats, f_clk, gops, joules }
+        Self { stats, per_layer: Vec::new(), f_clk, gops, joules }
+    }
+
+    /// Attach the per-layer breakdown (builder style).
+    pub fn with_per_layer(mut self, per_layer: Vec<LayerCost>) -> Self {
+        self.per_layer = per_layer;
+        self
     }
 
     /// Attribute this batch's cost to one of its `batch_size` requests:
@@ -214,8 +284,8 @@ impl std::str::FromStr for BackendKind {
 /// serving always comes up. `sim_fidelity` selects the sim engines'
 /// execution tier (`trim serve --fidelity fast|register`); both tiers
 /// serve bit-identical logits. `sim_shard` selects how the farm cuts each
-/// batch (`trim serve --shard filter|pipeline|spatial|auto`); every mode
-/// serves bit-identical logits too.
+/// batch (`trim serve --shard filter|pipeline|spatial|hybrid|auto`);
+/// every mode serves bit-identical logits too.
 pub fn make_backend(
     kind: BackendKind,
     artifact_dir: impl AsRef<std::path::Path>,
@@ -389,5 +459,30 @@ mod tests {
         assert!((per.gops - c.gops).abs() < 1e-12);
         // degenerate batch size never divides by zero
         assert_eq!(c.per_request(0).batch_cycles, 1000);
+    }
+
+    #[test]
+    fn layer_cost_folds_by_name() {
+        let s1 = SimStats { cycles: 10, ext_input_reads: 4, weight_reads: 1, output_writes: 2,
+            psum_buf_reads: 3, psum_buf_writes: 5, macs: 100, ..Default::default() };
+        let s2 = SimStats { cycles: 7, ext_input_reads: 2, macs: 50, ..Default::default() };
+        let mut acc: Vec<LayerCost> = Vec::new();
+        LayerCost::fold_into(&mut acc, &LayerCost::from_stats("A", &s1));
+        LayerCost::fold_into(&mut acc, &LayerCost::from_stats("B", &s2));
+        LayerCost::fold_into(&mut acc, &LayerCost::from_stats("A", &s2));
+        assert_eq!(acc.len(), 2, "folds by name, appends new names");
+        assert_eq!(acc[0].name, "A");
+        assert_eq!(acc[0].cycles, 17);
+        assert_eq!(acc[0].off_chip_accesses, 4 + 1 + 2 + 2);
+        assert_eq!(acc[0].on_chip_accesses, 8);
+        assert_eq!(acc[0].macs, 150);
+        assert_eq!(acc[1].name, "B");
+        assert_eq!(acc[1].cycles, 7);
+        // the builder attaches the breakdown without touching the totals
+        let c = BatchCost::from_stats(s1, 150.0e6, &EnergyModel::paper());
+        let gops = c.gops;
+        let c = c.with_per_layer(acc.clone());
+        assert_eq!(c.per_layer, acc);
+        assert_eq!(c.gops, gops);
     }
 }

@@ -87,7 +87,7 @@ impl Coordinator {
                     let n = batch.len();
                     // Attribute the batch's simulated cost per request:
                     // divisible counters split evenly, cycles are shared.
-                    let per_req = report.cost.map(|c| c.per_request(n));
+                    let per_req = report.cost.as_ref().map(|c| c.per_request(n));
                     let resps: Vec<(InferenceRequest, InferenceResponse)> = batch
                         .into_iter()
                         .zip(report.outputs)

@@ -8,7 +8,7 @@
 //! previous unbounded `Vec` grew forever. `max_latency` is tracked exactly
 //! outside the reservoir.
 
-use super::backend::BatchCost;
+use super::backend::{BatchCost, LayerCost};
 use crate::util::SplitMix64;
 use std::sync::Mutex;
 use std::time::Duration;
@@ -63,6 +63,11 @@ pub struct MetricsSnapshot {
     /// Clock (Hz) of the most recent cost seen — display only; rate
     /// derivations use `sim_seconds`, not this. 0 until a cost is seen.
     pub sim_f_clk: f64,
+    /// Cumulative per-layer cost breakdown, folded by layer name across
+    /// every cost-carrying batch (empty when no backend attributes cost
+    /// per layer) — the 2408.01254-style accounting `trim farm`/`trim
+    /// serve` print as a table.
+    pub sim_per_layer: Vec<LayerCost>,
 }
 
 impl MetricsSnapshot {
@@ -90,6 +95,9 @@ impl MetricsSnapshot {
         if self.sim_f_clk == 0.0 {
             self.sim_f_clk = other.sim_f_clk;
         }
+        for l in &other.sim_per_layer {
+            LayerCost::fold_into(&mut self.sim_per_layer, l);
+        }
         self.sim_gops = achieved_gops(self.sim_macs, self.sim_seconds);
     }
 }
@@ -114,6 +122,7 @@ struct Inner {
     sim_joules: f64,
     sim_seconds: f64,
     sim_f_clk: f64,
+    sim_layers: Vec<LayerCost>,
 }
 
 impl Default for Inner {
@@ -134,6 +143,7 @@ impl Default for Inner {
             sim_joules: 0.0,
             sim_seconds: 0.0,
             sim_f_clk: 0.0,
+            sim_layers: Vec::new(),
         }
     }
 }
@@ -188,6 +198,9 @@ impl ServeMetrics {
                 g.sim_seconds += c.stats.cycles as f64 / c.f_clk;
             }
             g.sim_f_clk = c.f_clk;
+            for l in &c.per_layer {
+                LayerCost::fold_into(&mut g.sim_layers, l);
+            }
         }
     }
 
@@ -221,6 +234,7 @@ impl ServeMetrics {
             sim_seconds: g.sim_seconds,
             sim_gops: achieved_gops(g.sim_macs, g.sim_seconds),
             sim_f_clk: g.sim_f_clk,
+            sim_per_layer: g.sim_layers.clone(),
         }
     }
 }
@@ -343,6 +357,41 @@ mod tests {
         from_zero.merge(&s1);
         assert_eq!(from_zero.sim_cycles, s1.sim_cycles);
         assert_eq!(from_zero.sim_f_clk, s1.sim_f_clk);
+    }
+
+    #[test]
+    fn per_layer_costs_accumulate_and_merge_by_name() {
+        let m1 = ServeMetrics::new();
+        let m2 = ServeMetrics::new();
+        let layer = |name: &str, cycles: u64| LayerCost {
+            name: name.into(),
+            cycles,
+            off_chip_accesses: cycles * 2,
+            on_chip_accesses: cycles / 2,
+            macs: cycles * 10,
+        };
+        let c1 = cost(100, 400).with_per_layer(vec![layer("L1", 60), layer("L2", 40)]);
+        let c2 = cost(50, 200).with_per_layer(vec![layer("L1", 30), layer("L2", 20)]);
+        m1.record_batch(&[Duration::from_micros(1)], Some(&c1));
+        m1.record_batch(&[Duration::from_micros(1)], Some(&c2));
+        let s1 = m1.snapshot();
+        assert_eq!(s1.sim_per_layer.len(), 2, "folded by name across batches");
+        assert_eq!(s1.sim_per_layer[0].name, "L1");
+        assert_eq!(s1.sim_per_layer[0].cycles, 90);
+        assert_eq!(s1.sim_per_layer[1].cycles, 60);
+        assert_eq!(s1.sim_per_layer[0].macs, 900);
+        // Router-style snapshot merge folds the other farm's table in.
+        let c3 = cost(10, 40).with_per_layer(vec![layer("L2", 5), layer("L3", 5)]);
+        m2.record_batch(&[Duration::from_micros(1)], Some(&c3));
+        let mut merged = s1.clone();
+        merged.merge(&m2.snapshot());
+        assert_eq!(merged.sim_per_layer.len(), 3);
+        assert_eq!(merged.sim_per_layer[1].cycles, 65, "L2 folded across farms");
+        assert_eq!(merged.sim_per_layer[2].name, "L3");
+        // cost-free batches leave the table untouched
+        let plain = ServeMetrics::new();
+        plain.record_batch(&[Duration::from_micros(1)], None);
+        assert!(plain.snapshot().sim_per_layer.is_empty());
     }
 
     #[test]

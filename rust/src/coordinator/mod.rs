@@ -36,8 +36,8 @@ pub mod request;
 pub mod router;
 
 pub use backend::{
-    make_backend, BackendKind, BatchCost, BatchReport, InferenceBackend, MockBackend, PjrtBackend,
-    SimCost,
+    make_backend, BackendKind, BatchCost, BatchReport, InferenceBackend, LayerCost, MockBackend,
+    PjrtBackend, SimCost,
 };
 pub use crate::scheduler::SimBackend;
 pub use batcher::{Batcher, BatcherConfig};

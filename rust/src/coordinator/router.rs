@@ -68,7 +68,8 @@ struct RoutedFarm {
     coordinator: Coordinator,
     /// Requests submitted to this farm whose replies are still pending.
     outstanding: Arc<AtomicUsize>,
-    /// EWMA of the simulated batch cycles this farm's responses report.
+    /// EWMA of the simulated per-request cycles this farm's responses
+    /// report (batch cycles normalised by batch size).
     cost: Arc<CostEwma>,
 }
 
@@ -196,15 +197,23 @@ impl Router {
             .min_by(|(_, (oa, ea)), (_, (ob, eb))| {
                 let sa = ea.unwrap_or(min_ewma) * (oa + 1) as f64;
                 let sb = eb.unwrap_or(min_ewma) * (ob + 1) as f64;
-                sa.partial_cmp(&sb).expect("queue scores are finite")
+                sa.partial_cmp(&sb)
+                    .expect("queue scores are finite")
+                    // Equal expected cost: probe the farm with no sample
+                    // yet (`false < true`, so `None`-cost farms win — the
+                    // documented cold-farm guarantee; min_by alone would
+                    // keep the lowest index and never sample a cold farm
+                    // listed after the current cheapest).
+                    .then_with(|| ea.is_some().cmp(&eb.is_some()))
             })
             .map(|(i, _)| i)
             .expect("router has at least one farm")
     }
 
-    /// Per-farm dispatch cost estimates (EWMA of reported simulated batch
-    /// cycles), in dispatch-index order; `None` until a farm's first
-    /// cost-carrying response.
+    /// Per-farm dispatch cost estimates (EWMA of reported simulated
+    /// **per-request** cycles — batch cycles normalised by batch size),
+    /// in dispatch-index order; `None` until a farm's first cost-carrying
+    /// response.
     pub fn farm_cost_estimates(&self) -> Vec<Option<f64>> {
         self.farms.iter().map(|f| f.cost.get()).collect()
     }
@@ -386,6 +395,37 @@ mod tests {
         assert_eq!(next.farm(), 1, "queued unsampled farm loses to the idle sampled farm");
         drop(hold);
         next.recv().unwrap();
+    }
+
+    #[test]
+    fn cold_farm_listed_after_the_cheapest_still_gets_probed() {
+        // Regression (PR 5): score ties between a sampled farm and a cold
+        // farm scored at the fleet-minimum EWMA must go to the COLD farm
+        // even when it has the higher index — a plain min_by keeps the
+        // lowest index, pinning all sequential traffic to farm 0 and
+        // never sampling the (here 1000× cheaper) farm 1.
+        let router = Router::new(vec![
+            fixed_cost_coordinator(100_000), // expensive, sampled first
+            fixed_cost_coordinator(100),     // much cheaper, initially cold
+        ])
+        .unwrap();
+        // Request 1: nothing sampled → least-outstanding → farm 0.
+        let mut r = router.submit(vec![0; 4]).unwrap();
+        assert_eq!(r.farm(), 0);
+        r.recv().unwrap();
+        // Request 2: farm 0 has an EWMA; farm 1 scores the same optimistic
+        // value at equal depth — the tie must probe the cold farm.
+        let mut r = router.submit(vec![0; 4]).unwrap();
+        assert_eq!(r.farm(), 1, "cold farm must win the tie and get probed");
+        r.recv().unwrap();
+        let est = router.farm_cost_estimates();
+        assert!(est[0].is_some() && est[1].is_some(), "both farms sampled: {est:?}");
+        // From here the genuinely cheaper farm wins on cost, not luck.
+        for _ in 0..6 {
+            let mut r = router.submit(vec![0; 4]).unwrap();
+            assert_eq!(r.farm(), 1, "dispatch follows the cheaper EWMA");
+            r.recv().unwrap();
+        }
     }
 
     #[test]

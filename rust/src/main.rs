@@ -13,7 +13,7 @@
 //! trim validate                 simulator vs golden + paper invariants
 //! trim serve [--backend auto|pjrt|sim] [--engines N] [--artifacts DIR]
 //!            [--requests N] [--max-batch B] [--fidelity fast|register]
-//!            [--farms F] [--shard filter|pipeline|spatial|auto]
+//!            [--farms F] [--shard filter|pipeline|spatial|hybrid|auto]
 //!                               e2e batched inference. Backends:
 //!                                 pjrt — compiled XLA artifacts (needs
 //!                                        `make artifacts` + the `pjrt`
@@ -28,9 +28,10 @@
 //!                               oracle); logits are bit-identical.
 //!                               --shard picks how the sim farm cuts each
 //!                               layer: filter (filter groups), spatial
-//!                               (output-row bands), auto (per-layer
-//!                               better of the two — the default) or
-//!                               pipeline (one engine per layer); logits
+//!                               (output-row bands), hybrid (2-D filter ×
+//!                               row grid), auto (per-layer best of the
+//!                               three — the default) or pipeline (layer
+//!                               chain as independent stage jobs); logits
 //!                               are bit-identical across modes.
 //!                               --farms F fronts F coordinators (one
 //!                               farm each) with the cost-aware Router
@@ -39,12 +40,15 @@
 //!                               until a cost is reported) and reports
 //!                               merged metrics. Sim-backed serving also reports
 //!                               the simulated cost per snapshot: cycles,
-//!                               off-/on-chip accesses, joules, GOPS
+//!                               off-/on-chip accesses, joules, GOPS and
+//!                               the per-layer cost breakdown table
 //! trim farm [--engines N] [--net vgg16|alexnet] [--batch B]
-//!           [--shard filter|pipeline|spatial|auto] [--fidelity fast|register]
+//!           [--shard filter|pipeline|spatial|hybrid|auto]
+//!           [--fidelity fast|register]
 //!                               shard real network layers across a farm
 //!                               of simulated engines: per-layer speedup
 //!                               table (chosen axis + speedup bound) +
+//!                               per-layer cost breakdown +
 //!                               bit-exactness check. --mode is accepted
 //!                               as a legacy alias of --shard.
 //!                               pipeline mode streams a batch of B images
@@ -58,7 +62,8 @@ use trim_sa::analytics::EnergyModel;
 use trim_sa::arch::control::plan_layer;
 use trim_sa::arch::{ArchConfig, EngineSim, ExecFidelity, SimStats, SliceSim};
 use trim_sa::coordinator::{
-    make_backend, BackendKind, BatchCost, BatcherConfig, Coordinator, CoordinatorConfig, Router,
+    make_backend, BackendKind, BatchCost, BatcherConfig, Coordinator, CoordinatorConfig, LayerCost,
+    Router,
 };
 use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer, Network};
@@ -249,6 +254,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             m.sim_gops,
             m.sim_f_clk / 1e6
         );
+        print_per_layer_costs(&m.sim_per_layer);
     }
     println!("class histogram: {classes:?}");
     Ok(())
@@ -284,7 +290,7 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     let arch = ArchConfig::small(3, 2, 2);
     match mode {
-        ShardMode::FilterShards | ShardMode::Spatial | ShardMode::Auto => {
+        ShardMode::FilterShards | ShardMode::Spatial | ShardMode::Hybrid | ShardMode::Auto => {
             let net = net_by_name(flags.get("net").map(|s| s.as_str()).unwrap_or("vgg16"));
             println!(
                 "engine farm: {engines} engines of P_N={} x P_M={} (scaled-down {} layers, {mode} shard mode, {fidelity} fidelity)",
@@ -295,6 +301,7 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             let mut rng = SplitMix64::new(2024);
             let (mut tot_single, mut tot_farm) = (0u64, 0u64);
             let mut farm_stats = SimStats::default();
+            let mut per_layer: Vec<LayerCost> = Vec::new();
             println!(
                 "{:<6} {:>3} {:>7} {:>6} {:>6} {:>13} {:>13} {:>8}  exact",
                 "layer", "K", "axis", "shards", "bound", "1-engine cyc", "farm cyc", "speedup"
@@ -305,20 +312,18 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                     Tensor3 { c: l.m, h: l.h_i, w: l.w_i, data: rng.vec_i32(l.m * l.h_i * l.w_i, 0, 256) };
                 let weights = rng.vec_i32(l.weight_elems() as usize, -8, 8);
                 let s = single.run_layer(&l, &input, &weights);
-                let f = farm.run_layer_mode(&l, &input, &weights, mode);
+                let f = farm.run_layer_mode(&l, &input, &weights, mode)?;
                 let golden = conv3d_i32(&input, &weights, l.n, l.k, l.stride, l.pad);
                 let ok = f.ofmaps == golden && f.ofmaps == s.ofmaps;
                 tot_single += s.stats.cycles;
                 tot_farm += f.stats.cycles;
                 farm_stats.merge_sequential(&f.stats); // layers run back to back
+                LayerCost::fold_into(&mut per_layer, &LayerCost::from_stats(l.name.as_str(), &f.stats));
                 println!(
                     "{:<6} {:>3} {:>7} {:>6} {:>5.2}x {:>13} {:>13} {:>7.2}x  {}",
                     l.name,
                     l.k,
-                    match f.plan.axis {
-                        trim_sa::scheduler::ShardAxis::Filters => "filters",
-                        trim_sa::scheduler::ShardAxis::Rows => "rows",
-                    },
+                    f.plan.axis.as_str(),
                     f.plan.shards.len(),
                     f.plan.speedup_bound(),
                     s.stats.cycles,
@@ -333,7 +338,8 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                  all layers bit-exact vs single engine and golden conv",
                 tot_single as f64 / tot_farm as f64
             );
-            let cost = BatchCost::from_stats(farm_stats, arch.f_clk, &EnergyModel::paper());
+            let cost = BatchCost::from_stats(farm_stats, arch.f_clk, &EnergyModel::paper())
+                .with_per_layer(per_layer);
             println!(
                 "sim cost: {} off-chip + {} on-chip accesses  {:.3} mJ  {:.2} GOPs/s achieved",
                 cost.stats.off_chip_accesses(),
@@ -341,6 +347,7 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 cost.joules * 1e3,
                 cost.gops
             );
+            print_per_layer_costs(&cost.per_layer);
         }
         ShardMode::LayerPipeline => {
             // Real CNNs interleave pooling between CLs (out of scope, §IV),
@@ -371,8 +378,8 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 .collect();
             let serial = EngineFarm::new(FarmConfig::with_fidelity(1, arch, fidelity));
             let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
-            let r1 = serial.run_pipeline(&stages, images.clone());
-            let rn = farm.run_pipeline(&stages, images);
+            let r1 = serial.run_pipeline(&stages, images.clone())?;
+            let rn = farm.run_pipeline(&stages, images)?;
             anyhow::ensure!(r1.outputs == rn.outputs, "pipeline outputs diverged across engine counts");
             println!(
                 "layer pipeline: {} stages, batch {batch}: {} -> {} cycles ({:.2}x with {engines} engines), bit-exact",
@@ -384,7 +391,14 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             for (i, s) in rn.per_engine.iter().enumerate() {
                 println!("  engine {i}: {:>10} cycles  {:>10} MACs", s.cycles, s.macs);
             }
-            let cost = BatchCost::from_stats(rn.stats, arch.f_clk, &EnergyModel::paper());
+            let per_layer: Vec<LayerCost> = spec
+                .layers
+                .iter()
+                .zip(&rn.per_stage)
+                .map(|(l, s)| LayerCost::from_stats(l.name.as_str(), s))
+                .collect();
+            let cost = BatchCost::from_stats(rn.stats, arch.f_clk, &EnergyModel::paper())
+                .with_per_layer(per_layer);
             println!(
                 "sim cost: {} off-chip + {} on-chip accesses  {:.3} mJ  {:.2} GOPs/s achieved",
                 cost.stats.off_chip_accesses(),
@@ -392,9 +406,28 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 cost.joules * 1e3,
                 cost.gops
             );
+            print_per_layer_costs(&cost.per_layer);
         }
     }
     Ok(())
+}
+
+/// The per-layer cost breakdown table (ROADMAP §Serving: the 2408.01254
+/// companion's per-layer accounting, at the CLI).
+fn print_per_layer_costs(per_layer: &[LayerCost]) {
+    if per_layer.is_empty() {
+        return;
+    }
+    println!(
+        "{:<8} {:>13} {:>14} {:>14} {:>14}",
+        "layer", "cycles", "off-chip", "on-chip", "MACs"
+    );
+    for l in per_layer {
+        println!(
+            "{:<8} {:>13} {:>14} {:>14} {:>14}",
+            l.name, l.cycles, l.off_chip_accesses, l.on_chip_accesses, l.macs
+        );
+    }
 }
 
 fn main() -> anyhow::Result<()> {

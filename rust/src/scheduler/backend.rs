@@ -7,10 +7,11 @@
 //! every logit. Batches are executed in one of the farm's modes:
 //!
 //! * [`ShardMode::FilterShards`] / [`ShardMode::Spatial`] /
-//!   [`ShardMode::Auto`] — layer-serial over the batch (the same
-//!   weight-resident order as [`crate::coordinator::PjrtBackend`]), each
-//!   layer sharded across engines along the chosen axis (filters, output
-//!   rows, or the per-layer better of the two);
+//!   [`ShardMode::Hybrid`] / [`ShardMode::Auto`] — layer-serial over the
+//!   batch (the same weight-resident order as
+//!   [`crate::coordinator::PjrtBackend`]), each layer sharded across
+//!   engines along the chosen axis (filters, output rows, the 2-D
+//!   filter × row grid, or the per-layer best of the three);
 //! * [`ShardMode::LayerPipeline`] — the batch streams through the layer
 //!   chain with one engine per stage.
 //!
@@ -21,7 +22,7 @@ use super::farm::{EngineFarm, FarmConfig, PipelineStage};
 use super::shard::ShardMode;
 use crate::analytics::EnergyModel;
 use crate::arch::{ArchConfig, ExecFidelity, SimStats};
-use crate::coordinator::{BatchCost, BatchReport, InferenceBackend};
+use crate::coordinator::{BatchCost, BatchReport, InferenceBackend, LayerCost};
 use crate::golden::{conv3d_i32, Tensor3};
 use crate::model::quant::Requant;
 use crate::model::ConvLayer;
@@ -63,16 +64,19 @@ impl SimNetSpec {
     }
 
     /// A CL1-class serving workload: one wide-spatial, filter-starved
-    /// layer (3 → 10 filters over 112×112 — the geometry class of VGG-16
+    /// layer (3 → 10 filters over 120×120 — the geometry class of VGG-16
     /// CL1, where `⌈N/P_N⌉` filter groups cannot occupy a big farm but
     /// `H_O` rows can). This is the workload `benches/farm_scaling.rs`
-    /// sweeps the shard axes over: on 8 narrow engines the filter axis is
-    /// capped at `10/2 = 5×` while the spatial axis bounds `8×`.
+    /// sweeps the shard axes over. On 8 narrow (`P_N = 1`) engines the
+    /// filter axis is capped at `10/2 = 5×` while the spatial axis bounds
+    /// `8×`; at 16 engines *both* single axes fall short (filters 10×,
+    /// rows `120/8 = 15×`) and only the 2×8 hybrid grid reaches `16×` —
+    /// the shape the hybrid-sharding acceptance gate pins.
     pub fn cl1_class() -> Self {
         let layers = vec![
-            ConvLayer::new("WL1", 112, 3, 3, 10, 1, 1), // 3×112×112 → 10×112×112
+            ConvLayer::new("WL1", 120, 3, 3, 10, 1, 1), // 3×120×120 → 10×120×120
         ];
-        Self { input: (3, 112, 112), layers, requant_shift: 6, classes: 10, weight_seed: 0xC11 }
+        Self { input: (3, 120, 120), layers, requant_shift: 6, classes: 10, weight_seed: 0xC11 }
     }
 
     /// Deterministic weights for layer `idx` of this spec.
@@ -177,20 +181,20 @@ impl SimBackend {
     /// farm along `self.mode`'s axis (the weight-resident order of the
     /// PJRT backend). Weights stay behind their cached `Arc`s — nothing is
     /// copied per request except the incoming image. Returns the logits
-    /// plus the image's aggregated stats: each layer's
-    /// [`super::farm::FarmRunResult`] already reduces its shards
-    /// (cycles = max, accesses = sum) and the layers run sequentially, so
-    /// their cycles add.
-    fn forward_sharded(&self, image: &[i32]) -> (Vec<i32>, SimStats) {
+    /// plus one shard-reduced [`SimStats`] per layer (cycles = max over
+    /// the layer's parallel shards, accesses = sum); the layers run
+    /// sequentially, so folding them with `merge_sequential` gives the
+    /// image's aggregate.
+    fn forward_sharded(&self, image: &[i32]) -> Result<(Vec<i32>, Vec<SimStats>)> {
         let mut act = Arc::new(self.image_tensor(image));
-        let mut stats = SimStats::default();
+        let mut per_layer = Vec::with_capacity(self.spec.layers.len());
         for (layer, weights) in self.spec.layers.iter().zip(&self.weights) {
-            let mut r = self.farm.run_layer_shared(layer, act, Arc::clone(weights), self.mode);
-            stats.merge_sequential(&r.stats);
+            let mut r = self.farm.run_layer_shared(layer, act, Arc::clone(weights), self.mode)?;
+            per_layer.push(r.stats);
             self.requant_inplace(&mut r.ofmaps);
             act = Arc::new(r.ofmaps);
         }
-        (self.head(&act), stats)
+        Ok((self.head(&act), per_layer))
     }
 
     fn pipeline_stages(&self) -> Vec<PipelineStage> {
@@ -235,32 +239,51 @@ impl InferenceBackend for SimBackend {
             }
         }
         let f_clk = self.farm.arch().f_clk;
-        let (outputs, stats) = match self.mode {
+        let (outputs, stats, per_layer) = match self.mode {
             ShardMode::LayerPipeline => {
                 let stages = self.pipeline_stages();
                 let inputs: Vec<Tensor3> = images.iter().map(|img| self.image_tensor(img)).collect();
-                let r = self.farm.run_pipeline(&stages, inputs);
+                let r = self.farm.run_pipeline(&stages, inputs)?;
                 // PipelineRunResult already reduces across engines
-                // (cycles = max over parallel engines, accesses = sum).
-                (r.outputs.iter().map(|t| self.head(t)).collect(), r.stats)
-            }
-            // Filter, spatial or auto axis: images run back to back
-            // through the farm; per-image stats (already shard-reduced per
-            // layer) add cycles.
-            ShardMode::FilterShards | ShardMode::Spatial | ShardMode::Auto => {
-                let mut stats = SimStats::default();
-                let outputs = images
+                // (cycles = max over parallel engines, accesses = sum);
+                // the per-stage breakdown is the per-layer cost table.
+                let per_layer = self
+                    .spec
+                    .layers
                     .iter()
-                    .map(|img| {
-                        let (logits, s) = self.forward_sharded(img);
-                        stats.merge_sequential(&s);
-                        logits
-                    })
+                    .zip(&r.per_stage)
+                    .map(|(l, s)| LayerCost::from_stats(l.name.as_str(), s))
                     .collect();
-                (outputs, stats)
+                (r.outputs.iter().map(|t| self.head(t)).collect(), r.stats, per_layer)
+            }
+            // Filter, spatial, hybrid or auto axis: images run back to
+            // back through the farm; per-image stats (already
+            // shard-reduced per layer) add cycles, and each layer's
+            // contributions fold into the per-layer cost table.
+            ShardMode::FilterShards | ShardMode::Spatial | ShardMode::Hybrid | ShardMode::Auto => {
+                let mut stats = SimStats::default();
+                let mut per_layer: Vec<LayerCost> = self
+                    .spec
+                    .layers
+                    .iter()
+                    .map(|l| LayerCost { name: l.name.clone(), ..LayerCost::default() })
+                    .collect();
+                let mut outputs = Vec::with_capacity(images.len());
+                for img in images {
+                    let (logits, layer_stats) = self.forward_sharded(img)?;
+                    for (acc, s) in per_layer.iter_mut().zip(&layer_stats) {
+                        acc.add_stats(s);
+                        stats.merge_sequential(s);
+                    }
+                    outputs.push(logits);
+                }
+                (outputs, stats, per_layer)
             }
         };
-        Ok(BatchReport::with_cost(outputs, BatchCost::from_stats(stats, f_clk, &self.energy)))
+        Ok(BatchReport::with_cost(
+            outputs,
+            BatchCost::from_stats(stats, f_clk, &self.energy).with_per_layer(per_layer),
+        ))
     }
 
     fn describe(&self) -> String {
@@ -312,8 +335,8 @@ mod tests {
     }
 
     #[test]
-    fn spatial_and_auto_modes_match_the_golden_reference() {
-        let mut by_mode: Vec<SimBackend> = [ShardMode::Spatial, ShardMode::Auto]
+    fn spatial_hybrid_and_auto_modes_match_the_golden_reference() {
+        let mut by_mode: Vec<SimBackend> = [ShardMode::Spatial, ShardMode::Hybrid, ShardMode::Auto]
             .into_iter()
             .map(|m| SimBackend::with_spec(3, ArchConfig::small(3, 2, 1), SimNetSpec::tiny(), m))
             .collect();
@@ -341,6 +364,49 @@ mod tests {
         let plan = plan_shards(&arch, &spec.layers[0], 8, ShardMode::Auto);
         assert_eq!(plan.axis, ShardAxis::Rows);
         assert!((plan.speedup_bound() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_cost_carries_per_layer_breakdown() {
+        // Layer-serial modes: the per-layer table names every spec layer
+        // in order and sums exactly to the batch totals (layers and
+        // images are sequential, so cycles partition too).
+        let mut b = SimBackend::with_spec(3, ArchConfig::small(3, 2, 1), SimNetSpec::tiny(), ShardMode::Auto);
+        let len = b.input_len();
+        let imgs: Vec<Vec<i32>> = (0..2).map(|i| image(900 + i, len)).collect();
+        let refs: Vec<&[i32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let cost = b.infer_batch(&refs).unwrap().cost.unwrap();
+        let names: Vec<&str> = cost.per_layer.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["SL1", "SL2", "SL3"]);
+        assert!(cost.per_layer.iter().all(|l| l.cycles > 0 && l.macs > 0));
+        assert_eq!(cost.per_layer.iter().map(|l| l.cycles).sum::<u64>(), cost.stats.cycles);
+        assert_eq!(cost.per_layer.iter().map(|l| l.macs).sum::<u64>(), cost.stats.macs);
+        assert_eq!(
+            cost.per_layer.iter().map(|l| l.off_chip_accesses).sum::<u64>(),
+            cost.stats.off_chip_accesses()
+        );
+        assert_eq!(
+            cost.per_layer.iter().map(|l| l.on_chip_accesses).sum::<u64>(),
+            cost.stats.on_chip_accesses()
+        );
+
+        // Pipeline mode: same per-layer work counters; cycles sum to the
+        // total *work*, which is ≥ the parallel wall-clock of the batch.
+        let mut p = SimBackend::with_spec(
+            2,
+            ArchConfig::small(3, 2, 1),
+            SimNetSpec::tiny(),
+            ShardMode::LayerPipeline,
+        );
+        let pcost = p.infer_batch(&refs).unwrap().cost.unwrap();
+        assert_eq!(pcost.per_layer.len(), 3);
+        assert_eq!(pcost.per_layer.iter().map(|l| l.macs).sum::<u64>(), pcost.stats.macs);
+        assert_eq!(
+            pcost.per_layer.iter().map(|l| l.macs).sum::<u64>(),
+            cost.per_layer.iter().map(|l| l.macs).sum::<u64>(),
+            "same work either way"
+        );
+        assert!(pcost.per_layer.iter().map(|l| l.cycles).sum::<u64>() >= pcost.stats.cycles);
     }
 
     #[test]

@@ -10,14 +10,17 @@
 //!   independent filter shards on the paper's own `P_N`-filter group
 //!   boundaries (the `⌈N/P_N⌉` outer loop of eq. (2)), into contiguous
 //!   output-row bands (the spatial axis that saturates the farm on
-//!   CL1-class layers — [`plan_row_shards`]), per-layer whichever of the
-//!   two bounds better ([`ShardMode::Auto`]), or assign whole layers of a
-//!   network to engines ([`ShardMode`]).
+//!   CL1-class layers — [`plan_row_shards`]), into a 2-D filter × row
+//!   grid for farms bigger than either single axis
+//!   ([`plan_hybrid_shards`]), per-layer whichever bounds best
+//!   ([`ShardMode::Auto`]), or assign whole layers of a network to
+//!   engines ([`ShardMode`]).
 //! * [`farm`] — [`EngineFarm`]: worker threads, each wrapping one
-//!   cycle-accurate [`crate::arch::EngineSim`]; dispatch, bit-exact ofmap
-//!   reassembly, and [`crate::arch::SimStats`] aggregation (cycles = max
-//!   over parallel shards, accesses = sum) so the Tables I–II accounting
-//!   stays meaningful at farm scale.
+//!   cycle-accurate [`crate::arch::EngineSim`], stealing jobs from one
+//!   shared injector queue; bit-exact ofmap reassembly, named-engine
+//!   errors for panicked jobs, and [`crate::arch::SimStats`] aggregation
+//!   (cycles = max over parallel shards, accesses = sum) so the
+//!   Tables I–II accounting stays meaningful at farm scale.
 //! * [`backend`] — [`SimBackend`]: a [`crate::coordinator::InferenceBackend`]
 //!   that serves batched requests straight from the farm, with zero PJRT
 //!   artifacts (`trim serve --backend sim`).
@@ -28,4 +31,7 @@ pub mod shard;
 
 pub use backend::{SimBackend, SimNetSpec};
 pub use farm::{EngineFarm, FarmConfig, FarmRunResult, PipelineRunResult, PipelineStage};
-pub use shard::{plan_filter_shards, plan_row_shards, plan_shards, Shard, ShardAxis, ShardMode, ShardPlan};
+pub use shard::{
+    plan_filter_shards, plan_hybrid_shards, plan_row_shards, plan_shards, Shard, ShardAxis,
+    ShardMode, ShardPlan,
+};

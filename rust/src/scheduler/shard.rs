@@ -1,7 +1,7 @@
 //! Sharding planner: split one [`ConvLayer`] into independent pieces of
 //! work along the paper's own step structure.
 //!
-//! Two per-layer shard axes (plus the cross-layer pipeline mode):
+//! Three per-layer shard axes (plus the cross-layer pipeline mode):
 //!
 //! * **Filters** — the TrIM engine executes a layer as `⌈N/P_N⌉ × ⌈M/P_M⌉`
 //!   computational steps (eq. (2)): the outer loop walks *filter groups* of
@@ -24,13 +24,24 @@
 //!   band ([`ConvLayer::band_input_rows`]), so band off-chip input reads
 //!   sum to the single-engine count plus exactly the halo duplication.
 //!
+//! * **Hybrid grid** ([`plan_hybrid_shards`]) — cut *both* dimensions at
+//!   once: a `g_f × g_r` grid of filter-split × row-band tiles
+//!   (`g_f·g_r ≤ engines`). Either single axis caps the farm at
+//!   `⌈N/P_N⌉` groups or at the engine count's fit into `H_O` rows; the
+//!   grid keeps scaling past both (the Eyeriss-style 2-D tiling of the
+//!   row-stationary mapper, applied to TrIM's own step structure) — e.g.
+//!   16 engines on a 10-group, 120-row CL1-class layer bound 10× by
+//!   filters and 15× by rows, but 16× on the 2×8 grid.
+//!
 //! Tiled layers (K > K_nat, §V) keep a different *intra*-engine schedule,
 //! but filters remain independent there too and a row band is just a
-//! shorter layer, so both splits stay exact.
+//! shorter layer, so every split stays exact (a hybrid tile is simply the
+//! row band of a filter sub-layer).
 //!
 //! [`ShardMode::Auto`] picks per layer: whichever axis has the better
-//! [`ShardPlan::speedup_bound`], rows winning ties on layers whose filter
-//! count cannot occupy the farm (`N < engines·P_N`).
+//! [`ShardPlan::speedup_bound`], rows winning the filter/rows tie on
+//! layers whose filter count cannot occupy the farm (`N < engines·P_N`),
+//! and the hybrid grid winning only when strictly better than both.
 
 use crate::arch::ArchConfig;
 use crate::model::ConvLayer;
@@ -49,19 +60,26 @@ pub enum ShardMode {
     /// Split each layer's output rows across engines (spatial-parallel
     /// within a layer); every engine runs all `N` filters over its band.
     Spatial,
-    /// Per layer, pick the better of [`ShardMode::FilterShards`] and
-    /// [`ShardMode::Spatial`] by [`ShardPlan::speedup_bound`] (rows win
-    /// ties on `N < engines·P_N` layers).
+    /// Split each layer across a 2-D filter-group × output-row grid
+    /// ([`plan_hybrid_shards`]): farms larger than either single axis
+    /// keep scaling (e.g. 16 engines on a 10-group, 120-row layer).
+    Hybrid,
+    /// Per layer, pick the best of [`ShardMode::FilterShards`],
+    /// [`ShardMode::Spatial`] and [`ShardMode::Hybrid`] by
+    /// [`ShardPlan::speedup_bound`]: rows win the filter/rows tie on
+    /// `N < engines·P_N` layers, and the hybrid grid is chosen only when
+    /// its bound is *strictly* higher than both single axes.
     Auto,
 }
 
 impl ShardMode {
-    /// CLI-facing name (`--shard filter|pipeline|spatial|auto`).
+    /// CLI-facing name (`--shard filter|pipeline|spatial|hybrid|auto`).
     pub fn as_str(&self) -> &'static str {
         match self {
             Self::FilterShards => "filter",
             Self::LayerPipeline => "pipeline",
             Self::Spatial => "spatial",
+            Self::Hybrid => "hybrid",
             Self::Auto => "auto",
         }
     }
@@ -81,9 +99,10 @@ impl std::str::FromStr for ShardMode {
             "filter" | "filters" | "shards" => Ok(Self::FilterShards),
             "pipeline" | "layers" => Ok(Self::LayerPipeline),
             "spatial" | "rows" => Ok(Self::Spatial),
+            "hybrid" | "grid" => Ok(Self::Hybrid),
             "auto" => Ok(Self::Auto),
             other => Err(anyhow::anyhow!(
-                "unknown shard mode {other:?} (expected filter|pipeline|spatial|auto)"
+                "unknown shard mode {other:?} (expected filter|pipeline|spatial|hybrid|auto)"
             )),
         }
     }
@@ -96,6 +115,19 @@ pub enum ShardAxis {
     Filters,
     /// Shards are contiguous output-row bands (each over all filters).
     Rows,
+    /// Shards are filter-range × row-band tiles of a 2-D grid.
+    Hybrid,
+}
+
+impl ShardAxis {
+    /// Short display name (the `trim farm` per-layer table).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Filters => "filters",
+            Self::Rows => "rows",
+            Self::Hybrid => "hybrid",
+        }
+    }
 }
 
 /// One engine's piece of a layer: a filter range × an output-row range.
@@ -127,14 +159,21 @@ pub struct ShardPlan {
     pub p_n: usize,
     /// Total output rows in the layer (`H_O`).
     pub rows: usize,
+    /// Shard-grid dimensions `(filter splits, row splits)`: `(len, 1)`
+    /// for the filter axis, `(1, len)` for rows, `(g_f, g_r)` for the
+    /// hybrid grid. `grid.0 · grid.1 == shards.len()` always.
+    pub grid: (usize, usize),
 }
 
 impl ShardPlan {
     /// Upper bound on the parallel speedup this split can deliver, in the
     /// plan's own work unit: whole-layer filter groups over the largest
-    /// shard's groups (filter axis), or whole-layer output rows over the
-    /// largest band (row axis). One metric across both axes, so
-    /// [`ShardMode::Auto`] can compare them directly.
+    /// shard's groups (filter axis), whole-layer output rows over the
+    /// largest band (row axis), or — on the hybrid grid — whole-layer
+    /// (groups × rows) cells over the largest tile's cells, which reduces
+    /// to the 1-D formulas when one grid dimension is 1. One metric
+    /// across all three axes, so [`ShardMode::Auto`] can compare them
+    /// directly.
     pub fn speedup_bound(&self) -> f64 {
         match self.axis {
             ShardAxis::Filters => {
@@ -144,6 +183,11 @@ impl ShardPlan {
             ShardAxis::Rows => {
                 let largest = self.shards.iter().map(|s| s.rows.len()).max().unwrap_or(1);
                 self.rows as f64 / largest as f64
+            }
+            ShardAxis::Hybrid => {
+                let largest =
+                    self.shards.iter().map(|s| s.groups * s.rows.len()).max().unwrap_or(1);
+                (self.filter_groups * self.rows) as f64 / largest as f64
             }
         }
     }
@@ -188,8 +232,9 @@ pub fn plan_filter_shards(arch: &ArchConfig, layer: &ConvLayer, engines: usize) 
             groups: g.len(),
             rows: 0..h_o,
         })
-        .collect();
-    ShardPlan { axis: ShardAxis::Filters, shards, filter_groups, p_n, rows: h_o }
+        .collect::<Vec<_>>();
+    let grid = (shards.len(), 1);
+    ShardPlan { axis: ShardAxis::Filters, shards, filter_groups, p_n, rows: h_o, grid }
 }
 
 /// Split `layer` into at most `engines` contiguous output-row bands; each
@@ -213,27 +258,98 @@ pub fn plan_row_shards(arch: &ArchConfig, layer: &ConvLayer, engines: usize) -> 
             groups: filter_groups,
             rows,
         })
-        .collect();
-    ShardPlan { axis: ShardAxis::Rows, shards, filter_groups, p_n: arch.p_n, rows: h_o }
+        .collect::<Vec<_>>();
+    let grid = (1, shards.len());
+    ShardPlan { axis: ShardAxis::Rows, shards, filter_groups, p_n: arch.p_n, rows: h_o, grid }
 }
 
-/// Plan one layer under `mode`. `Auto` compares the two per-layer axes on
-/// [`ShardPlan::speedup_bound`]; ties go to rows exactly when the layer's
-/// filters cannot occupy the farm (`N < engines·P_N` — the CL1-class
-/// shape spatial sharding exists for). [`ShardMode::LayerPipeline`] is a
+/// Split `layer` across a 2-D grid of at most `engines` filter-group ×
+/// output-row tiles: `g_f` contiguous filter splits (on `P_N`-group
+/// boundaries, like [`plan_filter_shards`]) × `g_r` contiguous row bands
+/// (like [`plan_row_shards`]), with `g_f·g_r ≤ engines`. The grid is the
+/// `(g_f, g_r)` pair maximising the 2-D [`ShardPlan::speedup_bound`]
+/// (row-heavier grids win ties), which is what lets farms bigger than
+/// either single axis keep scaling — the Eyeriss-style 2-D tiling axis
+/// the ROADMAP names.
+///
+/// Guarantees (property-tested in tests/scheduler_farm.rs):
+/// * the tiles partition the full filter-range × row-range rectangle:
+///   every (filter, output row) pair is covered by exactly one shard;
+/// * filter splits are `P_N`-group aligned (except the layer tail) and
+///   balanced within one group; row bands are balanced within one row;
+/// * `shards.len() == grid.0 · grid.1 ≤ engines`, indexed row-major
+///   (filter split outer, row band inner);
+/// * with `grid == (1, g)` or `(g, 1)` the tiles coincide with the pure
+///   row/filter plans, so the hybrid bound is never below either axis.
+pub fn plan_hybrid_shards(arch: &ArchConfig, layer: &ConvLayer, engines: usize) -> ShardPlan {
+    assert!(engines >= 1, "need at least one engine");
+    assert!(layer.n >= 1, "layer has no filters");
+    let h_o = layer.h_o();
+    assert!(h_o >= 1, "layer has no output rows");
+    let p_n = arch.p_n;
+    let filter_groups = layer.n.div_ceil(p_n);
+    // Exhaustive grid search (both dims are tiny): for each filter-split
+    // count, rows get the whole remaining engine budget — the bound is
+    // monotone in g_r, so nothing smaller can win.
+    let bound_of = |g_f: usize, g_r: usize| -> f64 {
+        let gmax = filter_groups.div_ceil(g_f.min(filter_groups));
+        let rmax = h_o.div_ceil(g_r.min(h_o));
+        (filter_groups as f64 / gmax as f64) * (h_o as f64 / rmax as f64)
+    };
+    let mut best = (1usize, engines.min(h_o));
+    let mut best_bound = bound_of(best.0, best.1);
+    for g_f in 2..=engines.min(filter_groups) {
+        let g_r = (engines / g_f).min(h_o).max(1);
+        let b = bound_of(g_f, g_r);
+        if b > best_bound + 1e-12 {
+            best = (g_f, g_r);
+            best_bound = b;
+        }
+    }
+    let fsplits = balanced_split(filter_groups, best.0);
+    let rsplits = balanced_split(h_o, best.1);
+    let mut shards = Vec::with_capacity(fsplits.len() * rsplits.len());
+    for g in &fsplits {
+        for rows in &rsplits {
+            shards.push(Shard {
+                index: shards.len(),
+                filters: g.start * p_n..(g.end * p_n).min(layer.n),
+                groups: g.len(),
+                rows: rows.clone(),
+            });
+        }
+    }
+    let grid = (fsplits.len(), rsplits.len());
+    ShardPlan { axis: ShardAxis::Hybrid, shards, filter_groups, p_n, rows: h_o, grid }
+}
+
+/// Plan one layer under `mode`. `Auto` compares the three per-layer axes
+/// on [`ShardPlan::speedup_bound`]: the filter/rows tie goes to rows
+/// exactly when the layer's filters cannot occupy the farm
+/// (`N < engines·P_N` — the CL1-class shape spatial sharding exists for),
+/// and the hybrid grid wins only when its bound is *strictly* above both
+/// single axes (a pure axis is the simpler plan at equal bound — fewer
+/// halo rows, contiguous stitches). [`ShardMode::LayerPipeline`] is a
 /// cross-layer mode and has no per-layer plan.
 pub fn plan_shards(arch: &ArchConfig, layer: &ConvLayer, engines: usize, mode: ShardMode) -> ShardPlan {
     match mode {
         ShardMode::FilterShards => plan_filter_shards(arch, layer, engines),
         ShardMode::Spatial => plan_row_shards(arch, layer, engines),
+        ShardMode::Hybrid => plan_hybrid_shards(arch, layer, engines),
         ShardMode::Auto => {
             let by_filters = plan_filter_shards(arch, layer, engines);
             let by_rows = plan_row_shards(arch, layer, engines);
             let (bf, br) = (by_filters.speedup_bound(), by_rows.speedup_bound());
-            if br > bf || (br == bf && layer.n < engines * arch.p_n) {
+            let pure = if br > bf || (br == bf && layer.n < engines * arch.p_n) {
                 by_rows
             } else {
                 by_filters
+            };
+            let by_grid = plan_hybrid_shards(arch, layer, engines);
+            if by_grid.speedup_bound() > pure.speedup_bound() + 1e-9 {
+                by_grid
+            } else {
+                pure
             }
         }
         ShardMode::LayerPipeline => {
@@ -372,10 +488,55 @@ mod tests {
         assert_eq!("pipeline".parse::<ShardMode>().unwrap(), ShardMode::LayerPipeline);
         assert_eq!("spatial".parse::<ShardMode>().unwrap(), ShardMode::Spatial);
         assert_eq!("rows".parse::<ShardMode>().unwrap(), ShardMode::Spatial);
+        assert_eq!("hybrid".parse::<ShardMode>().unwrap(), ShardMode::Hybrid);
+        assert_eq!("grid".parse::<ShardMode>().unwrap(), ShardMode::Hybrid);
         assert_eq!("auto".parse::<ShardMode>().unwrap(), ShardMode::Auto);
         let err = "bogus".parse::<ShardMode>().unwrap_err().to_string();
-        assert!(err.contains("filter|pipeline|spatial|auto"), "error lists every mode: {err}");
+        assert!(err.contains("filter|pipeline|spatial|hybrid|auto"), "error lists every mode: {err}");
         assert_eq!(ShardMode::Spatial.to_string(), "spatial");
+        assert_eq!(ShardMode::Hybrid.to_string(), "hybrid");
         assert_eq!(ShardMode::Auto.as_str(), "auto");
+        assert_eq!(ShardAxis::Hybrid.as_str(), "hybrid");
     }
+
+    #[test]
+    fn hybrid_grid_partitions_the_layer() {
+        // Every (filter, output row) cell is covered by exactly one tile;
+        // filter splits stay group-aligned; grid dims match shards.
+        let cfg = ArchConfig::small(3, 2, 2); // P_N = 2
+        for (n, hw, engines) in [(4usize, 8usize, 4usize), (10, 15, 6), (7, 9, 12), (2, 20, 5)] {
+            let l = ConvLayer::new("h", hw, 3, 2, n, 1, 1);
+            let plan = plan_hybrid_shards(&cfg, &l, engines);
+            assert_eq!(plan.axis, ShardAxis::Hybrid);
+            let (g_f, g_r) = plan.grid;
+            assert_eq!(plan.shards.len(), g_f * g_r);
+            assert!(g_f * g_r <= engines);
+            let mut covered = vec![0u32; n * l.h_o()];
+            for (i, s) in plan.shards.iter().enumerate() {
+                assert_eq!(s.index, i);
+                assert!(!s.filters.is_empty() && !s.rows.is_empty());
+                if s.filters.end != n {
+                    assert_eq!(s.filters.end % plan.p_n, 0, "group-aligned tail");
+                }
+                if s.filters.start != 0 {
+                    assert_eq!(s.filters.start % plan.p_n, 0, "group-aligned head");
+                }
+                for f in s.filters.clone() {
+                    for r in s.rows.clone() {
+                        covered[f * l.h_o() + r] += 1;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "exact cover: n={n} hw={hw} e={engines}");
+            // The grid bound is never below either pure axis.
+            let bf = plan_filter_shards(&cfg, &l, engines).speedup_bound();
+            let br = plan_row_shards(&cfg, &l, engines).speedup_bound();
+            assert!(plan.speedup_bound() >= bf.max(br) - 1e-9, "n={n} hw={hw} e={engines}");
+        }
+    }
+
+    // The acceptance geometry (10 groups × 120 rows on 16 engines:
+    // filters 10×, rows 15×, the 2×8 grid 16×, auto → hybrid; 8 engines
+    // stay on rows) is pinned once, planner + farm together, in
+    // tests/scheduler_farm.rs::cl1_class_16_engines_auto_selects_hybrid.
 }

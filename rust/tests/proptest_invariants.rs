@@ -150,6 +150,29 @@ fn prop_fast_tier_bit_and_counter_exact_vs_register() {
                     "{ctx}: band {band:?} filter {f} vs whole-layer rows"
                 );
             }
+
+            // Hybrid tile (the 2-D shard unit): a P_N-aligned filter
+            // split × the same row band, both tiers, against the matching
+            // block of the whole-layer register run.
+            if groups > 1 {
+                let cut = arch.p_n * rng.range(1, groups);
+                let filters = 0..cut.min(n);
+                let rt = EngineSim::new(arch).run_shard(
+                    &layer, &input, &weights, filters.clone(), band.clone(),
+                );
+                let ft = EngineSim::fast(arch).run_shard(
+                    &layer, &input, &weights, filters.clone(), band.clone(),
+                );
+                assert_eq!(ft.ofmaps, rt.ofmaps, "{ctx}: tile ofmaps fast vs register");
+                assert_eq!(ft.stats, rt.stats, "{ctx}: tile stats fast vs register");
+                for (df, f) in filters.enumerate() {
+                    assert_eq!(
+                        ft.ofmaps.channel(df),
+                        &reg.ofmaps.channel(f)[band.start * w_o..band.end * w_o],
+                        "{ctx}: tile {band:?} filter {f} vs whole-layer block"
+                    );
+                }
+            }
         }
     }
 }

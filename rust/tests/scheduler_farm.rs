@@ -2,9 +2,11 @@
 //! in-tree SplitMix64 driver, like tests/proptest_invariants.rs) plus the
 //! acceptance workloads — farm output must be bit-exact against both the
 //! golden convolution oracle and a single-engine `EngineSim` run, for any
-//! engine count, in both sharding modes, including the tiled K > 3 path
-//! and full-size VGG-16 / AlexNet layers; and the coordinator must serve a
-//! ≥ 96-request batched workload from the sim backend with no artifacts.
+//! engine count, in every sharding mode (filter / spatial / hybrid grid /
+//! auto / pipeline, all dispatched by work stealing), including the tiled
+//! K > 3 path and full-size VGG-16 / AlexNet layers; and the coordinator
+//! must serve a ≥ 96-request batched workload from the sim backend with
+//! no artifacts.
 
 use std::sync::Arc;
 use trim_sa::analytics::EnergyModel;
@@ -14,8 +16,8 @@ use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::quant::Requant;
 use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer};
 use trim_sa::scheduler::{
-    plan_filter_shards, plan_row_shards, plan_shards, EngineFarm, FarmConfig, PipelineStage,
-    ShardAxis, ShardMode, SimBackend, SimNetSpec,
+    plan_filter_shards, plan_hybrid_shards, plan_row_shards, plan_shards, EngineFarm, FarmConfig,
+    PipelineStage, ShardAxis, ShardMode, SimBackend, SimNetSpec,
 };
 use trim_sa::util::SplitMix64;
 
@@ -23,14 +25,21 @@ fn rand_tensor(rng: &mut SplitMix64, c: usize, h: usize, w: usize) -> Tensor3 {
     Tensor3 { c, h, w, data: rng.vec_i32(c * h * w, -96, 96) }
 }
 
-/// Closed-form off-chip input reads of one output-row band (the slab the
-/// band reads, halo rows included) — the "halo accounting" the row-shard
-/// stats must follow. Mirrors `fastsim::analytic_stats` applied to the
-/// band's slab layer: native layers broadcast the slab once per filter
-/// group; tiled layers read the shifted slab view once per filter pass.
-/// The full-row "band" is a whole-layer run and reads the whole padded
-/// ifmap (strided layers pay their decimation leftover rows there).
-fn expected_band_reads(arch: &ArchConfig, layer: &ConvLayer, rows: &std::ops::Range<usize>) -> u64 {
+/// Closed-form off-chip input reads of one shard: `n_filters` filters of
+/// `layer` over the output-row band `rows` (the slab the band reads, halo
+/// rows included) — the "halo accounting" the row- and hybrid-shard stats
+/// must follow. Mirrors `fastsim::analytic_stats` applied to the filter
+/// sub-layer's slab layer: native layers broadcast the slab once per
+/// filter group; tiled layers read the shifted slab view once per filter
+/// pass. The full-row "band" is a whole-(sub-)layer run and reads the
+/// whole padded ifmap (strided layers pay their decimation leftover rows
+/// there).
+fn expected_band_reads(
+    arch: &ArchConfig,
+    layer: &ConvLayer,
+    n_filters: usize,
+    rows: &std::ops::Range<usize>,
+) -> u64 {
     let wp = layer.w_i + 2 * layer.pad;
     let slab_rows = if *rows == (0..layer.h_o()) {
         layer.h_i + 2 * layer.pad
@@ -38,11 +47,11 @@ fn expected_band_reads(arch: &ArchConfig, layer: &ConvLayer, rows: &std::ops::Ra
         layer.band_input_rows(rows).len()
     };
     if layer.k <= arch.k {
-        let n_groups = layer.n.div_ceil(arch.p_n) as u64;
+        let n_groups = n_filters.div_ceil(arch.p_n) as u64;
         n_groups * (layer.m * slab_rows * wp) as u64
     } else {
         let (hs, ws) = (slab_rows - layer.k + arch.k, wp - layer.k + arch.k);
-        layer.n as u64 * (hs * ws) as u64
+        n_filters as u64 * (hs * ws) as u64
     }
 }
 
@@ -70,7 +79,7 @@ fn prop_farm_bit_exact_any_engine_count() {
         let golden = conv3d_i32(&input, &weights, n, k, stride, pad);
         let single = EngineSim::new(arch).run_layer(&layer, &input, &weights);
         let farm = EngineFarm::new(FarmConfig::new(engines, arch));
-        let r = farm.run_layer(&layer, &input, &weights);
+        let r = farm.run_layer(&layer, &input, &weights).unwrap();
 
         let ctx = format!("seed {seed}: k={k} hw={hw} m={m} n={n} s={stride} p={pad} e={engines}");
         assert_eq!(r.ofmaps, golden, "{ctx}: farm vs golden");
@@ -128,7 +137,7 @@ fn prop_pipeline_bit_exact_any_engine_count() {
             (0..batch).map(|_| rand_tensor(&mut rng, chans[0], hw0, hw0)).collect();
         let engines = rng.range(1, 4);
         let farm = EngineFarm::new(FarmConfig::new(engines, ArchConfig::small(3, 2, 2)));
-        let r = farm.run_pipeline(&stages, images.clone());
+        let r = farm.run_pipeline(&stages, images.clone()).unwrap();
 
         for (img_idx, (img, out)) in images.iter().zip(&r.outputs).enumerate() {
             let mut act = img.clone();
@@ -176,16 +185,18 @@ fn prop_shard_planner_invariants() {
     }
 }
 
-/// Property: row-shard and auto-shard farm runs are **bit-identical** to
-/// a single-engine run (and the golden conv) on BOTH fidelity tiers, and
-/// their `SimStats` partition exactly: merged cycles = max over bands,
-/// counters = sum; every per-shard entry equals an independent
-/// single-engine `run_row_range`/`run_filter_range` of that shard;
+/// Property: row-, hybrid- and auto-shard farm runs are **bit-identical**
+/// to a single-engine run (and the golden conv) on BOTH fidelity tiers,
+/// and their `SimStats` partition exactly: merged cycles = max over
+/// shards, counters = sum; every per-shard entry equals an independent
+/// single-engine `run_shard` of that (filters × rows) tile;
 /// ofmap-proportional counters (output writes, psum traffic) partition
 /// the single-engine counters exactly; off-chip input reads follow the
-/// closed-form slab-with-halo accounting per band; and on stride-1
-/// layers MACs and the full halo formula are exact. Sweeps strided,
-/// tiled-K>3, multi-group and padded geometries.
+/// closed-form slab-with-halo accounting per shard (the PR-4 band
+/// formulas extended to the grid: the halo depends only on the row-split
+/// count `grid.1`, never on the filter splits); and on stride-1 layers
+/// MACs and the full halo formula are exact. Sweeps strided, tiled-K>3,
+/// multi-group and padded geometries.
 #[test]
 fn prop_row_and_auto_shards_bit_exact_both_fidelities() {
     let mut rng = SplitMix64::new(0x0551);
@@ -207,15 +218,16 @@ fn prop_row_and_auto_shards_bit_exact_both_fidelities() {
             let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
             let single = EngineSim::with_fidelity(arch, fidelity);
             let whole = single.run_layer(&layer, &input, &weights);
-            for mode in [ShardMode::Spatial, ShardMode::Auto] {
-                let r = farm.run_layer_mode(&layer, &input, &weights, mode);
+            for mode in [ShardMode::Spatial, ShardMode::Hybrid, ShardMode::Auto] {
+                let r = farm.run_layer_mode(&layer, &input, &weights, mode).unwrap();
                 let ctx = format!(
                     "seed {seed} {fidelity} {mode}: k={k} hw={hw} m={m} n={n} s={stride} p={pad} \
-                     e={engines} P_N={} axis={:?}",
-                    arch.p_n, r.plan.axis
+                     e={engines} P_N={} axis={:?} grid={:?}",
+                    arch.p_n, r.plan.axis, r.plan.grid
                 );
                 assert_eq!(r.ofmaps, golden, "{ctx}: farm vs golden");
                 assert_eq!(r.ofmaps, whole.ofmaps, "{ctx}: farm vs single engine");
+                assert_eq!(r.plan.shards.len(), r.plan.grid.0 * r.plan.grid.1, "{ctx}: grid dims");
 
                 // merged = fold of the per-shard stats
                 assert_eq!(
@@ -244,66 +256,67 @@ fn prop_row_and_auto_shards_bit_exact_both_fidelities() {
                 );
 
                 // every shard equals an independent single-engine run of
-                // exactly that piece
+                // exactly that (filters × rows) tile
                 for (shard, st) in r.plan.shards.iter().zip(&r.per_shard) {
-                    let solo = match r.plan.axis {
-                        ShardAxis::Filters => {
-                            single.run_filter_range(&layer, &input, &weights, shard.filters.clone())
-                        }
-                        ShardAxis::Rows => {
-                            single.run_row_range(&layer, &input, &weights, shard.rows.clone())
-                        }
-                    };
+                    let solo = single.run_shard(
+                        &layer,
+                        &input,
+                        &weights,
+                        shard.filters.clone(),
+                        shard.rows.clone(),
+                    );
                     assert_eq!(*st, solo.stats, "{ctx}: shard {} stats", shard.index);
                 }
 
-                // halo accounting: bands read their whole slab
-                if r.plan.axis == ShardAxis::Rows {
-                    let expect: u64 = r
-                        .plan
-                        .shards
-                        .iter()
-                        .map(|s| expected_band_reads(&arch, &layer, &s.rows))
-                        .sum();
-                    assert_eq!(r.stats.ext_input_reads, expect, "{ctx}: slab+halo reads");
-                    if stride == 1 && r.plan.shards.len() > 1 {
-                        // exact halo formula vs the single engine: each of
-                        // the B−1 interior boundaries duplicates K−1 slab
-                        // rows — read per filter group × channel on the
-                        // native path; the tiled path reads the *shifted
-                        // view* (`hs = slab − K + K_nat`), where the same
-                        // boundary overlaps as K_nat−1 view rows per
-                        // filter pass
-                        let b = r.plan.shards.len() as u64;
-                        let wp = (layer.w_i + 2 * layer.pad) as u64;
-                        let halo = if k <= arch.k {
-                            layer.n.div_ceil(arch.p_n) as u64
-                                * layer.m as u64
-                                * wp
-                                * (b - 1)
-                                * (k as u64 - 1)
-                        } else {
-                            layer.n as u64
-                                * (wp - k as u64 + arch.k as u64)
-                                * (b - 1)
-                                * (arch.k as u64 - 1)
-                        };
-                        assert_eq!(
-                            r.stats.ext_input_reads,
-                            whole.stats.ext_input_reads + halo,
-                            "{ctx}: halo formula"
-                        );
-                        assert_eq!(r.stats.macs, whole.stats.macs, "{ctx}: stride-1 MACs partition");
-                    }
+                // halo accounting: every shard reads its whole slab (for
+                // its own filter count) — holds on all three axes
+                let expect: u64 = r
+                    .plan
+                    .shards
+                    .iter()
+                    .map(|s| expected_band_reads(&arch, &layer, s.filters.len(), &s.rows))
+                    .sum();
+                assert_eq!(r.stats.ext_input_reads, expect, "{ctx}: slab+halo reads");
+                let g_r = r.plan.grid.1 as u64;
+                if stride == 1 && g_r > 1 {
+                    // exact halo formula vs the single engine: each of the
+                    // g_r−1 interior row boundaries duplicates K−1 slab
+                    // rows — read per filter group × channel on the native
+                    // path; the tiled path reads the *shifted view*
+                    // (`hs = slab − K + K_nat`), where the same boundary
+                    // overlaps as K_nat−1 view rows per filter pass.
+                    // Filter splits duplicate nothing (each group's
+                    // broadcast is counted once wherever it runs), so the
+                    // grid halo is the PR-4 row formula with B = grid.1.
+                    let wp = (layer.w_i + 2 * layer.pad) as u64;
+                    let halo = if k <= arch.k {
+                        layer.n.div_ceil(arch.p_n) as u64
+                            * layer.m as u64
+                            * wp
+                            * (g_r - 1)
+                            * (k as u64 - 1)
+                    } else {
+                        layer.n as u64
+                            * (wp - k as u64 + arch.k as u64)
+                            * (g_r - 1)
+                            * (arch.k as u64 - 1)
+                    };
+                    assert_eq!(
+                        r.stats.ext_input_reads,
+                        whole.stats.ext_input_reads + halo,
+                        "{ctx}: halo formula"
+                    );
+                    assert_eq!(r.stats.macs, whole.stats.macs, "{ctx}: stride-1 MACs partition");
                 }
 
-                // Auto must never pick a worse bound than either pure axis.
+                // Auto must never pick a worse bound than any pure axis.
                 if mode == ShardMode::Auto {
                     let bf = plan_filter_shards(&arch, &layer, engines).speedup_bound();
                     let br = plan_row_shards(&arch, &layer, engines).speedup_bound();
+                    let bh = plan_hybrid_shards(&arch, &layer, engines).speedup_bound();
                     assert!(
-                        r.plan.speedup_bound() >= bf.max(br) - 1e-12,
-                        "{ctx}: auto bound {} < max({bf}, {br})",
+                        r.plan.speedup_bound() >= bf.max(br).max(bh) - 1e-9,
+                        "{ctx}: auto bound {} < max({bf}, {br}, {bh})",
                         r.plan.speedup_bound()
                     );
                 }
@@ -370,7 +383,7 @@ fn vgg16_cl1_full_size_farm_bit_exact() {
     let single = EngineSim::fast(arch).run_layer(&layer, &input, &weights);
     let farm = EngineFarm::new(FarmConfig::new(4, arch));
     assert_eq!(farm.fidelity(), ExecFidelity::Fast, "fast is the farm default");
-    let r = farm.run_layer(&layer, &input, &weights);
+    let r = farm.run_layer(&layer, &input, &weights).unwrap();
     assert_eq!(r.plan.shards.len(), 4);
     assert_eq!(r.ofmaps, golden, "farm vs golden on VGG-16 CL1");
     assert_eq!(r.ofmaps, single.ofmaps, "farm vs single engine on VGG-16 CL1");
@@ -415,9 +428,9 @@ fn vgg16_cl1_full_size_auto_beats_filter_sharding() {
     let weights = rng.vec_i32(64 * 3 * 9, -8, 8);
     let arch = ArchConfig::paper_engine(); // P_N = 7 → 10 filter groups
     let farm = EngineFarm::new(FarmConfig::new(8, arch));
-    let filt = farm.run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards);
-    let rows = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Spatial);
-    let auto = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Auto);
+    let filt = farm.run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards).unwrap();
+    let rows = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Spatial).unwrap();
+    let auto = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Auto).unwrap();
     assert_eq!(filt.plan.axis, ShardAxis::Filters);
     assert_eq!(rows.plan.axis, ShardAxis::Rows);
     assert_eq!(auto.plan.axis, ShardAxis::Rows, "auto must pick the spatial axis on CL1");
@@ -435,6 +448,109 @@ fn vgg16_cl1_full_size_auto_beats_filter_sharding() {
     assert_eq!(auto.stats.output_writes, filt.stats.output_writes, "same ofmap either way");
 }
 
+/// Property (PR 5): work-stealing dispatch is invisible in the results.
+/// For random geometries, engine counts and every per-layer shard mode,
+/// the farm's `FarmRunResult` — ofmaps, merged stats AND every per-shard
+/// entry — is bit-identical to a static serial baseline that runs each
+/// planned shard on one engine in plan order and merges by hand. Which
+/// worker stole which shard can therefore never leak into the output.
+#[test]
+fn prop_work_stealing_bit_identical_to_static_baseline() {
+    let mut rng = SplitMix64::new(0x57EA);
+    for seed in 0..10u64 {
+        let k = [3usize, 3, 5][rng.range(0, 3)];
+        let hw = rng.range(k + 3, k + 11);
+        let m = rng.range(1, 4);
+        let n = rng.range(1, 9);
+        let stride = rng.range(1, 3);
+        let pad = rng.range(0, 2);
+        let layer = ConvLayer::new("steal", hw, k, m, n, stride, pad);
+        let input = rand_tensor(&mut rng, m, hw, hw);
+        let weights = rng.vec_i32(n * m * k * k, -9, 9);
+        let engines = rng.range(2, 9);
+        let arch = ArchConfig::small(3, 2, rng.range(1, 4));
+        let golden = conv3d_i32(&input, &weights, n, k, stride, pad);
+        let farm = EngineFarm::new(FarmConfig::new(engines, arch));
+        let single = EngineSim::fast(arch);
+        let (h_o, w_o) = (layer.h_o(), layer.w_o());
+
+        for mode in
+            [ShardMode::FilterShards, ShardMode::Spatial, ShardMode::Hybrid, ShardMode::Auto]
+        {
+            let ctx = format!("seed {seed} {mode}: k={k} hw={hw} m={m} n={n} s={stride} e={engines}");
+            let r = farm.run_layer_mode(&layer, &input, &weights, mode).unwrap();
+            // Static baseline: the same deterministic plan, every shard on
+            // one engine, merged in plan order.
+            let plan = plan_shards(&arch, &layer, engines, mode);
+            assert_eq!(plan.axis, r.plan.axis, "{ctx}: plan is deterministic");
+            let mut ofmaps = Tensor3::zeros(n, h_o, w_o);
+            let mut stats = SimStats::default();
+            for (i, shard) in plan.shards.iter().enumerate() {
+                let solo = single.run_shard(
+                    &layer,
+                    &input,
+                    &weights,
+                    shard.filters.clone(),
+                    shard.rows.clone(),
+                );
+                assert_eq!(r.per_shard[i], solo.stats, "{ctx}: per-shard stats, shard {i}");
+                stats.merge(&solo.stats);
+                let b_h = shard.rows.len();
+                for (df, f) in shard.filters.clone().enumerate() {
+                    let src = &solo.ofmaps.data[df * b_h * w_o..(df + 1) * b_h * w_o];
+                    let at = (f * h_o + shard.rows.start) * w_o;
+                    ofmaps.data[at..at + b_h * w_o].copy_from_slice(src);
+                }
+            }
+            assert_eq!(r.ofmaps, ofmaps, "{ctx}: ofmaps == static baseline");
+            assert_eq!(r.stats, stats, "{ctx}: merged stats == static baseline");
+            assert_eq!(r.ofmaps, golden, "{ctx}: vs golden");
+        }
+    }
+}
+
+/// Acceptance (PR 5): at 16 engines the CL1-class serving layer
+/// (10 filter groups × 120 output rows on narrow `P_N = 1` engines)
+/// out-scales both single axes only on the 2-D grid — filters bound 10×,
+/// rows 120/8 = 15×, the 2×8 hybrid grid 1200/(5·15) = 16×. `Auto` must
+/// select the hybrid plan with a strictly higher bound than either axis
+/// and land at-or-below the spatial-only wall-clock, bit-exactly.
+#[test]
+fn cl1_class_16_engines_auto_selects_hybrid() {
+    let spec = SimNetSpec::cl1_class();
+    let layer = spec.layers[0].clone();
+    assert_eq!((layer.h_o(), layer.n), (120, 10));
+    let arch = ArchConfig::small(3, 2, 1); // the farm_scaling bench arch
+    let bf = plan_filter_shards(&arch, &layer, 16).speedup_bound();
+    let br = plan_row_shards(&arch, &layer, 16).speedup_bound();
+    assert!((bf - 10.0).abs() < 1e-9, "filter bound {bf}");
+    assert!((br - 15.0).abs() < 1e-9, "row bound {br}");
+    let plan = plan_shards(&arch, &layer, 16, ShardMode::Auto);
+    assert_eq!(plan.axis, ShardAxis::Hybrid, "auto must pick the grid at 16 engines");
+    assert_eq!(plan.grid, (2, 8));
+    assert!((plan.speedup_bound() - 16.0).abs() < 1e-9);
+    assert!(plan.speedup_bound() > bf.max(br), "strictly higher than either single axis");
+
+    // And on the farm: the hybrid pick cuts simulated wall-clock below
+    // the spatial-only run of the same 16 engines (largest tile 5 groups
+    // × 15 rows vs 10 groups × 8 rows), serving bit-identical ofmaps.
+    let mut rng = SplitMix64::new(0x16E);
+    let input = Tensor3 { c: 3, h: 120, w: 120, data: rng.vec_i32(3 * 120 * 120, 0, 256) };
+    let weights = rng.vec_i32(10 * 3 * 9, -8, 8);
+    let farm = EngineFarm::new(FarmConfig::new(16, arch));
+    let auto = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Auto).unwrap();
+    let rows = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Spatial).unwrap();
+    assert_eq!(auto.plan.axis, ShardAxis::Hybrid);
+    assert_eq!(auto.ofmaps, rows.ofmaps, "hybrid vs spatial ofmaps");
+    assert_eq!(auto.ofmaps, conv3d_i32(&input, &weights, 10, 3, 1, 1), "vs golden");
+    assert!(
+        auto.stats.cycles < rows.stats.cycles,
+        "hybrid must cut CL1-class wall-clock at 16 engines: {} vs {}",
+        auto.stats.cycles,
+        rows.stats.cycles
+    );
+}
+
 /// Acceptance: same bit-exactness on a full-size AlexNet layer (CL5:
 /// 192→256 filters over 13×13), fast tier.
 #[test]
@@ -449,7 +565,7 @@ fn alexnet_cl5_full_size_farm_bit_exact() {
     let golden = conv3d_i32(&input, &weights, 256, 3, 1, 1);
     let single = EngineSim::fast(arch).run_layer(&layer, &input, &weights);
     let farm = EngineFarm::new(FarmConfig::new(3, arch));
-    let r = farm.run_layer(&layer, &input, &weights);
+    let r = farm.run_layer(&layer, &input, &weights).unwrap();
     assert_eq!(r.ofmaps, golden, "farm vs golden on AlexNet CL5");
     assert_eq!(r.ofmaps, single.ofmaps, "farm vs single engine on AlexNet CL5");
     assert!(r.stats.cycles < single.stats.cycles);
@@ -467,7 +583,7 @@ fn alexnet_cl2_geometry_tiled_farm_bit_exact() {
     let golden = conv3d_i32(&input, &weights, 10, 5, 1, 2);
     let single = EngineSim::new(arch).run_layer(&layer, &input, &weights);
     let farm = EngineFarm::new(FarmConfig::new(3, arch));
-    let r = farm.run_layer(&layer, &input, &weights);
+    let r = farm.run_layer(&layer, &input, &weights).unwrap();
     assert_eq!(r.ofmaps, golden, "tiled farm vs golden");
     assert_eq!(r.ofmaps, single.ofmaps, "tiled farm vs single engine");
 }
@@ -541,7 +657,7 @@ fn served_batch_cost_matches_farm_aggregation() {
         let mut act = Tensor3 { c, h, w, data: img.clone() };
         for (i, layer) in spec.layers.iter().enumerate() {
             let weights = spec.layer_weights(i);
-            let r = farm.run_layer(layer, &act, &weights);
+            let r = farm.run_layer(layer, &act, &weights).unwrap();
             // the per-layer reduction the farm promises
             assert_eq!(r.stats.cycles, r.per_shard.iter().map(|s| s.cycles).max().unwrap());
             assert_eq!(r.stats.macs, r.per_shard.iter().map(|s| s.macs).sum::<u64>());
@@ -614,6 +730,12 @@ fn coordinator_serves_96_requests_sim_layer_pipeline() {
 #[test]
 fn coordinator_serves_96_requests_sim_spatial() {
     serve_workload(ShardMode::Spatial);
+}
+
+/// Same workload through the 2-D hybrid (filter × row) grid.
+#[test]
+fn coordinator_serves_96_requests_sim_hybrid() {
+    serve_workload(ShardMode::Hybrid);
 }
 
 /// Same workload with the per-layer auto axis pick.
