@@ -84,6 +84,16 @@ fn main() -> anyhow::Result<()> {
             m.p95_latency.as_micros(),
             m.mean_batch
         ));
+        // Full observability snapshot for the largest configuration — the
+        // bench-trajectory artifact keeps one complete MetricsSnapshot
+        // (queue-wait/service histograms, p99, canary totals) per run.
+        if (farms, max_batch) == (2, 16) {
+            json_lines.push(format!(
+                "JSON {{\"bench\":\"e2e_serving\",\"kind\":\"snapshot\",\"farms\":{farms},\
+                 \"max_batch\":{max_batch},\"metrics\":{}}}",
+                m.render_json()
+            ));
+        }
     }
 
     // Optional PJRT sweep (the original e2e path) — skipped without

@@ -71,6 +71,14 @@ impl EngineSim {
         (s.fills(), s.hits(), s.padded_ptr() as usize)
     }
 
+    /// Cumulative microkernel-arm invocation counts of the fast tier's
+    /// [`ConvScratch`], `[k3, unit, strided]` — all zero on a register
+    /// engine, whose datapath never touches the blocked conv. Farm
+    /// workers publish per-job deltas of these into the farm registry.
+    pub fn microkernel_arms(&self) -> [u64; 3] {
+        self.scratch.borrow().microkernel_arms()
+    }
+
     pub fn cfg(&self) -> &ArchConfig {
         &self.cfg
     }

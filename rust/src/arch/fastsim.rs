@@ -106,6 +106,9 @@ pub struct ConvScratch {
     held: Option<(Arc<Tensor3>, PadGeom)>,
     fills: u64,
     hits: u64,
+    /// Per-microkernel-arm invocation counts, one per (channel,
+    /// filter-in-block) dispatch: `[k3, unit, strided]` (saturating).
+    arms: [u64; 3],
 }
 
 impl ConvScratch {
@@ -121,6 +124,13 @@ impl ConvScratch {
     /// Times a call found the right padded ifmap already resident.
     pub fn hits(&self) -> u64 {
         self.hits
+    }
+
+    /// Cumulative microkernel-arm invocations `[k3, unit, strided]` —
+    /// one count per (channel, filter) inner dispatch, the unit the
+    /// `sim_hotpath` bench prices.
+    pub fn microkernel_arms(&self) -> [u64; 3] {
+        self.arms
     }
 
     /// Address of the padded-ifmap buffer (stable across cache hits —
@@ -154,7 +164,7 @@ impl ConvScratch {
             self.held = Some((Arc::clone(input), geom));
             self.fills += 1;
         }
-        conv_rows_from_padded(layer, &self.padded, weights, rows, &mut self.acc)
+        conv_rows_from_padded(layer, &self.padded, weights, rows, &mut self.acc, &mut self.arms)
     }
 
     /// Blocked convolution of output rows `rows` for a caller that holds
@@ -170,7 +180,7 @@ impl ConvScratch {
         self.held = None;
         fill_padded(&mut self.padded, layer, input);
         self.fills += 1;
-        conv_rows_from_padded(layer, &self.padded, weights, rows, &mut self.acc)
+        conv_rows_from_padded(layer, &self.padded, weights, rows, &mut self.acc, &mut self.arms)
     }
 }
 
@@ -211,6 +221,7 @@ fn conv_rows_from_padded(
     weights: &[i32],
     rows: Range<usize>,
     acc: &mut Vec<i64>,
+    arms: &mut [u64; 3],
 ) -> Tensor3 {
     assert_eq!(weights.len(), layer.n * layer.m * layer.k * layer.k);
     assert!(rows.start < rows.end && rows.end <= layer.h_o(), "bad output-row range {rows:?}");
@@ -234,10 +245,13 @@ fn conv_rows_from_padded(
                 let kern = &weights[((f0 + df) * m + c) * kk..((f0 + df) * m + c + 1) * kk];
                 let a = &mut acc[df * b_h * w_o..(df + 1) * b_h * w_o];
                 if stride == 1 && k == 3 {
+                    arms[0] = arms[0].saturating_add(1);
                     conv_taps_k3(a, chan, kern, rows.clone(), wp, w_o);
                 } else if stride == 1 {
+                    arms[1] = arms[1].saturating_add(1);
                     conv_taps_unit(a, chan, kern, rows.clone(), wp, w_o, k);
                 } else {
+                    arms[2] = arms[2].saturating_add(1);
                     conv_taps_strided(a, chan, kern, rows.clone(), wp, w_o, k, stride);
                 }
             }
@@ -586,6 +600,28 @@ mod tests {
         let other = Arc::new(rand_tensor(3, 9, 9, 55));
         let _ = scratch.conv_rows_shared(&layer, &other, &weights, 0..9);
         assert_eq!(scratch.fills(), 2, "new input identity re-materialises");
+    }
+
+    #[test]
+    fn microkernel_arm_counts_follow_dispatch() {
+        // One dispatch per (channel, filter) pair: M·N per whole-layer
+        // call, attributed to the arm the (k, stride) geometry selects.
+        let mut scratch = ConvScratch::new();
+        let l3 = ConvLayer::new("a3", 9, 3, 2, 3, 1, 1); // K=3 s=1 → fused arm
+        let i3 = Arc::new(rand_tensor(2, 9, 9, 5));
+        let w3 = rand_weights(3, 2, 3, 7);
+        let _ = scratch.conv_rows_shared(&l3, &i3, &w3, 0..l3.h_o());
+        assert_eq!(scratch.microkernel_arms(), [6, 0, 0]);
+        let l5 = ConvLayer::new("a5", 12, 5, 1, 2, 1, 2); // K=5 s=1 → unit arm
+        let i5 = Arc::new(rand_tensor(1, 12, 12, 9));
+        let w5 = rand_weights(2, 1, 5, 11);
+        let _ = scratch.conv_rows_shared(&l5, &i5, &w5, 0..l5.h_o());
+        assert_eq!(scratch.microkernel_arms(), [6, 2, 0]);
+        let ls = ConvLayer::new("as", 9, 3, 1, 1, 2, 0); // strided arm
+        let is_ = Arc::new(rand_tensor(1, 9, 9, 13));
+        let ws = rand_weights(1, 1, 3, 15);
+        let _ = scratch.conv_rows_shared(&ls, &is_, &ws, 0..ls.h_o());
+        assert_eq!(scratch.microkernel_arms(), [6, 2, 1]);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use crate::analytics::EnergyModel;
 use crate::arch::SimStats;
 use crate::runtime::Runtime;
+use crate::scheduler::CanaryReport;
 use anyhow::Result;
 
 /// One layer's share of a [`BatchCost`] — the per-layer accounting of the
@@ -46,19 +47,22 @@ impl LayerCost {
     }
 
     /// Fold another sequential stats observation of this layer in.
+    /// Saturating: a long-lived accumulator pegs at `u64::MAX` instead of
+    /// wrapping (or panicking in debug builds).
     pub fn add_stats(&mut self, stats: &SimStats) {
-        self.cycles += stats.cycles;
-        self.off_chip_accesses += stats.off_chip_accesses();
-        self.on_chip_accesses += stats.on_chip_accesses();
-        self.macs += stats.macs;
+        self.cycles = self.cycles.saturating_add(stats.cycles);
+        self.off_chip_accesses = self.off_chip_accesses.saturating_add(stats.off_chip_accesses());
+        self.on_chip_accesses = self.on_chip_accesses.saturating_add(stats.on_chip_accesses());
+        self.macs = self.macs.saturating_add(stats.macs);
     }
 
-    /// Fold another observation of the same layer in.
+    /// Fold another observation of the same layer in (saturating, like
+    /// [`LayerCost::add_stats`]).
     pub fn add(&mut self, other: &LayerCost) {
-        self.cycles += other.cycles;
-        self.off_chip_accesses += other.off_chip_accesses;
-        self.on_chip_accesses += other.on_chip_accesses;
-        self.macs += other.macs;
+        self.cycles = self.cycles.saturating_add(other.cycles);
+        self.off_chip_accesses = self.off_chip_accesses.saturating_add(other.off_chip_accesses);
+        self.on_chip_accesses = self.on_chip_accesses.saturating_add(other.on_chip_accesses);
+        self.macs = self.macs.saturating_add(other.macs);
     }
 
     /// Fold `l` into `acc` by layer name; unseen names append in arrival
@@ -98,6 +102,11 @@ pub struct BatchCost {
     /// Total simulated energy in joules: off-chip + on-chip memory
     /// traffic plus MAC compute, at the paper-calibrated constants.
     pub joules: f64,
+    /// Shadow-execution canary activity attributable to this batch
+    /// (shards re-run on the `Register`-fidelity oracle, divergences
+    /// found). All zero when the farm runs no canary — which keeps
+    /// canary-off reports byte-identical to pre-canary ones.
+    pub canary: CanaryReport,
 }
 
 impl BatchCost {
@@ -107,12 +116,18 @@ impl BatchCost {
         let joules = energy
             .memory_energy_j(stats.off_chip_accesses() as f64, stats.on_chip_accesses() as f64)
             + energy.compute_energy_j(stats.macs as f64);
-        Self { stats, per_layer: Vec::new(), f_clk, gops, joules }
+        Self { stats, per_layer: Vec::new(), f_clk, gops, joules, canary: CanaryReport::default() }
     }
 
     /// Attach the per-layer breakdown (builder style).
     pub fn with_per_layer(mut self, per_layer: Vec<LayerCost>) -> Self {
         self.per_layer = per_layer;
+        self
+    }
+
+    /// Attach the batch's shadow-canary delta (builder style).
+    pub fn with_canary(mut self, canary: CanaryReport) -> Self {
+        self.canary = canary;
         self
     }
 
@@ -285,24 +300,30 @@ impl std::str::FromStr for BackendKind {
 /// execution tier (`trim serve --fidelity fast|register`); both tiers
 /// serve bit-identical logits. `sim_shard` selects how the farm cuts each
 /// batch (`trim serve --shard filter|pipeline|spatial|hybrid|auto`);
-/// every mode serves bit-identical logits too.
+/// every mode serves bit-identical logits too. `sim_canary` is the
+/// shadow-execution sampling rate (`trim serve --canary RATE`): the
+/// fraction of fast-tier shards re-run on a `Register`-fidelity oracle
+/// off the hot path, with divergence surfaced through the metrics
+/// (0 disables the canary thread entirely).
 pub fn make_backend(
     kind: BackendKind,
     artifact_dir: impl AsRef<std::path::Path>,
     sim_engines: usize,
     sim_fidelity: crate::arch::ExecFidelity,
     sim_shard: crate::scheduler::ShardMode,
+    sim_canary: f64,
 ) -> Result<Box<dyn InferenceBackend>> {
     use crate::arch::ArchConfig;
-    use crate::scheduler::{SimBackend, SimNetSpec};
+    use crate::scheduler::{CanaryConfig, SimBackend, SimNetSpec};
     let dir = artifact_dir.as_ref();
     let make_sim = || {
-        Box::new(SimBackend::with_fidelity(
+        Box::new(SimBackend::with_canary(
             sim_engines,
             ArchConfig::small(3, 2, 1),
             SimNetSpec::tiny(),
             sim_shard,
             sim_fidelity,
+            CanaryConfig::sampled(sim_canary),
         )) as Box<dyn InferenceBackend>
     };
     match kind {
@@ -384,6 +405,7 @@ mod tests {
             2,
             crate::arch::ExecFidelity::Fast,
             crate::scheduler::ShardMode::Auto,
+            0.0,
         )
         .unwrap();
         let img = vec![7i32; b.input_len()];
@@ -402,6 +424,7 @@ mod tests {
             2,
             crate::arch::ExecFidelity::Fast,
             crate::scheduler::ShardMode::FilterShards,
+            0.0,
         )
         .unwrap();
         assert!(b.describe().starts_with("sim["), "got {}", b.describe());
@@ -414,7 +437,8 @@ mod tests {
             "definitely/not/a/dir",
             2,
             crate::arch::ExecFidelity::Fast,
-            crate::scheduler::ShardMode::FilterShards
+            crate::scheduler::ShardMode::FilterShards,
+            0.0,
         )
         .is_err());
     }
@@ -478,6 +502,12 @@ mod tests {
         assert_eq!(acc[0].macs, 150);
         assert_eq!(acc[1].name, "B");
         assert_eq!(acc[1].cycles, 7);
+        // accumulation saturates instead of wrapping near u64::MAX
+        let mut pegged = LayerCost { name: "A".into(), cycles: u64::MAX - 5, ..Default::default() };
+        pegged.add(&acc[0]);
+        assert_eq!(pegged.cycles, u64::MAX);
+        pegged.add_stats(&s1);
+        assert_eq!(pegged.cycles, u64::MAX);
         // the builder attaches the breakdown without touching the totals
         let c = BatchCost::from_stats(s1, 150.0e6, &EnergyModel::paper());
         let gops = c.gops;

@@ -8,6 +8,7 @@
 //! normalisation reuses loaded weights across images.
 
 use super::request::InferenceRequest;
+use crate::obs;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -37,23 +38,34 @@ impl Batcher {
     }
 
     /// Block for the next batch. Returns `None` when the ingress channel
-    /// is closed and drained (shutdown).
+    /// is closed and drained (shutdown). Each formed batch emits a
+    /// `batch.formed` trace event naming which bound closed it (`size`,
+    /// `deadline` or `shutdown`).
     pub fn next_batch(&self) -> Option<Vec<InferenceRequest>> {
         // Block indefinitely for the first request of the batch.
         let first = self.rx.recv().ok()?;
         let deadline = Instant::now() + self.cfg.max_wait;
         let mut batch = vec![first];
+        let mut cause = "size";
         while batch.len() < self.cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
+                cause = "deadline";
                 break;
             }
             match self.rx.recv_timeout(deadline - now) {
                 Ok(req) => batch.push(req),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Timeout) => {
+                    cause = "deadline";
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    cause = "shutdown";
+                    break;
+                }
             }
         }
+        obs::tracer().event("batch.formed", 0, format!("n={} cause={cause}", batch.len()));
         Some(batch)
     }
 }
@@ -66,7 +78,8 @@ mod tests {
 
     fn req(id: u64) -> (InferenceRequest, mpsc::Receiver<super::super::request::InferenceResponse>) {
         let (tx, rx) = mpsc::channel();
-        (InferenceRequest { id, image: vec![], enqueued_at: Instant::now(), reply: tx }, rx)
+        let span = obs::tracer().begin("serve.request", 0);
+        (InferenceRequest { id, image: vec![], enqueued_at: Instant::now(), span, reply: tx }, rx)
     }
 
     #[test]

@@ -5,6 +5,7 @@ use super::backend::InferenceBackend;
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::{MetricsSnapshot, ServeMetrics};
 use super::request::{InferenceRequest, InferenceResponse};
+use crate::obs;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -81,8 +82,23 @@ impl Coordinator {
     ) {
         let batcher = Batcher::new(cfg.batcher, rx);
         while let Some(batch) = batcher.next_batch() {
+            // Queue wait per request = admission → batch execution start;
+            // service = the backend call itself. Both feed the obs
+            // histograms so the two components of latency stay separable.
+            let exec_start = Instant::now();
+            let waits: Vec<_> = batch
+                .iter()
+                .map(|r| exec_start.saturating_duration_since(r.enqueued_at))
+                .collect();
+            let batch_span = obs::tracer().begin("serve.batch", 0);
             let images: Vec<&[i32]> = batch.iter().map(|r| r.image.as_slice()).collect();
-            match backend.infer_batch(&images) {
+            let result = backend.infer_batch(&images);
+            metrics.record_queue_service(&waits, exec_start.elapsed());
+            obs::tracer().finish_with(
+                batch_span,
+                format!("n={} ok={}", batch.len(), result.is_ok()),
+            );
+            match result {
                 Ok(report) => {
                     let n = batch.len();
                     // Attribute the batch's simulated cost per request:
@@ -107,7 +123,9 @@ impl Coordinator {
                     let lats: Vec<_> = resps.iter().map(|(_, r)| r.latency).collect();
                     metrics.record_batch(&lats, report.cost.as_ref());
                     for (req, resp) in resps {
+                        let detail = format!("id={} batch={n} class={:?}", req.id, resp.class);
                         let _ = req.reply.send(resp); // receiver may be gone
+                        obs::tracer().finish_with(req.span, detail);
                     }
                 }
                 Err(e) => {
@@ -124,6 +142,7 @@ impl Coordinator {
                             n,
                             None,
                         ));
+                        obs::tracer().finish_with(req.span, format!("id={} ok=false", req.id));
                     }
                 }
             }
@@ -137,8 +156,9 @@ impl Coordinator {
         }
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let span = obs::tracer().begin("serve.request", 0);
         self.tx
-            .send(InferenceRequest { id, image, enqueued_at: Instant::now(), reply })
+            .send(InferenceRequest { id, image, enqueued_at: Instant::now(), span, reply })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         Ok(rx)
     }

@@ -4,17 +4,31 @@
 //!
 //! Latencies are kept in a fixed-size **reservoir sample** (Vitter's
 //! algorithm R, deterministic in-tree PRNG): under sustained load the
-//! p50/p95 estimates stay meaningful while memory stays O(1) — the
+//! p50/p95/p99 estimates stay meaningful while memory stays O(1) — the
 //! previous unbounded `Vec` grew forever. `max_latency` is tracked exactly
 //! outside the reservoir.
+//!
+//! The accumulator is built on [`crate::obs`]: every countable field is a
+//! saturating [`Counter`] (a soak run pegs at `u64::MAX` instead of
+//! wrapping or panicking in debug builds), and queue-wait vs service time
+//! are log₂-bucketed [`Histogram`]s recorded lock-free from the engine
+//! thread. [`MetricsSnapshot`] carries [`HistogramSnapshot`] copies plus
+//! the farm's shadow-canary [`CanaryReport`], merges across farms at the
+//! Router, and renders itself as Prometheus exposition text
+//! ([`MetricsSnapshot::render_prometheus`], `trim serve --metrics-out`)
+//! or a single JSON line for the bench trajectory
+//! ([`MetricsSnapshot::render_json`]).
 
 use super::backend::{BatchCost, LayerCost};
+use crate::obs::{self, Counter, Histogram, HistogramSnapshot};
+use crate::scheduler::CanaryReport;
 use crate::util::SplitMix64;
+use std::fmt::Write as _;
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// Reservoir capacity: enough for stable p50/p95 estimates, small enough
-/// that a week of sustained load costs the same memory as a minute.
+/// Reservoir capacity: enough for stable p50/p95/p99 estimates, small
+/// enough that a week of sustained load costs the same memory as a minute.
 pub const LATENCY_RESERVOIR: usize = 4096;
 
 /// Achieved simulated throughput in GOPs/s: `2·MACs / simulated seconds`.
@@ -37,6 +51,7 @@ pub struct MetricsSnapshot {
     pub mean_batch: f64,
     pub p50_latency: Duration,
     pub p95_latency: Duration,
+    pub p99_latency: Duration,
     pub max_latency: Duration,
     pub throughput_rps: f64,
     /// Batches that carried a simulated [`BatchCost`] (0 for PJRT/mock
@@ -68,28 +83,40 @@ pub struct MetricsSnapshot {
     /// per layer) — the 2408.01254-style accounting `trim farm`/`trim
     /// serve` print as a table.
     pub sim_per_layer: Vec<LayerCost>,
+    /// Shadow-execution canary totals reported by cost-carrying batches
+    /// (all zero when no farm runs a canary).
+    pub canary: CanaryReport,
+    /// Per-request admission→batch-start wait (µs), log₂-bucketed.
+    pub queue_wait: HistogramSnapshot,
+    /// Per-batch backend service time (µs), log₂-bucketed.
+    pub service: HistogramSnapshot,
 }
 
 impl MetricsSnapshot {
     /// Fold another farm's snapshot into this one (the [`super::Router`]
-    /// merged view): countable fields **sum** (requests, batches, sim
-    /// counters, joules, throughput), latency percentiles take the
-    /// conservative **max** across farms, and derived rates (`mean_batch`,
-    /// `sim_gops`) are recomputed from the merged totals.
+    /// merged view): countable fields **sum saturating** (requests,
+    /// batches, sim counters, canary totals, joules, throughput; a pegged
+    /// counter stays pegged instead of wrapping), latency percentiles
+    /// take the conservative **max** across farms, histograms merge
+    /// bucket-wise, and derived rates (`mean_batch`, `sim_gops`) are
+    /// recomputed from the merged totals.
     pub fn merge(&mut self, other: &MetricsSnapshot) {
-        self.requests += other.requests;
-        self.batches += other.batches;
+        self.requests = self.requests.saturating_add(other.requests);
+        self.batches = self.batches.saturating_add(other.batches);
         self.mean_batch =
             if self.batches == 0 { 0.0 } else { self.requests as f64 / self.batches as f64 };
         self.p50_latency = self.p50_latency.max(other.p50_latency);
         self.p95_latency = self.p95_latency.max(other.p95_latency);
+        self.p99_latency = self.p99_latency.max(other.p99_latency);
         self.max_latency = self.max_latency.max(other.max_latency);
         self.throughput_rps += other.throughput_rps;
-        self.sim_batches += other.sim_batches;
-        self.sim_cycles += other.sim_cycles;
-        self.sim_off_chip_accesses += other.sim_off_chip_accesses;
-        self.sim_on_chip_accesses += other.sim_on_chip_accesses;
-        self.sim_macs += other.sim_macs;
+        self.sim_batches = self.sim_batches.saturating_add(other.sim_batches);
+        self.sim_cycles = self.sim_cycles.saturating_add(other.sim_cycles);
+        self.sim_off_chip_accesses =
+            self.sim_off_chip_accesses.saturating_add(other.sim_off_chip_accesses);
+        self.sim_on_chip_accesses =
+            self.sim_on_chip_accesses.saturating_add(other.sim_on_chip_accesses);
+        self.sim_macs = self.sim_macs.saturating_add(other.sim_macs);
         self.sim_joules += other.sim_joules;
         self.sim_seconds += other.sim_seconds;
         if self.sim_f_clk == 0.0 {
@@ -98,14 +125,148 @@ impl MetricsSnapshot {
         for l in &other.sim_per_layer {
             LayerCost::fold_into(&mut self.sim_per_layer, l);
         }
+        self.canary.merge(&other.canary);
+        self.queue_wait.merge(&other.queue_wait);
+        self.service.merge(&other.service);
         self.sim_gops = achieved_gops(self.sim_macs, self.sim_seconds);
+    }
+
+    /// Prometheus text exposition of the snapshot (`trim serve
+    /// --metrics-out`): counters as `trim_*_total`, rates/clocks as
+    /// gauges, latency quantiles as a summary-style gauge family, the
+    /// queue-wait/service histograms with cumulative `le` buckets, and
+    /// the per-layer table as labelled counters.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, v: u64| {
+            let _ = writeln!(out, "# TYPE {name} counter\n{name} {v}");
+        };
+        counter("trim_requests_total", self.requests);
+        counter("trim_batches_total", self.batches);
+        counter("trim_sim_batches_total", self.sim_batches);
+        counter("trim_sim_cycles_total", self.sim_cycles);
+        counter("trim_sim_off_chip_accesses_total", self.sim_off_chip_accesses);
+        counter("trim_sim_on_chip_accesses_total", self.sim_on_chip_accesses);
+        counter("trim_sim_macs_total", self.sim_macs);
+        counter("trim_canary_sampled_total", self.canary.sampled);
+        counter("trim_canary_bit_divergence_total", self.canary.bit_divergence);
+        counter("trim_canary_counter_divergence_total", self.canary.counter_divergence);
+        let mut gauge = |name: &str, v: f64| {
+            let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
+        };
+        gauge("trim_mean_batch", self.mean_batch);
+        gauge("trim_throughput_rps", self.throughput_rps);
+        gauge("trim_sim_joules", self.sim_joules);
+        gauge("trim_sim_seconds", self.sim_seconds);
+        gauge("trim_sim_gops", self.sim_gops);
+        gauge("trim_sim_f_clk_hz", self.sim_f_clk);
+        let _ = writeln!(out, "# TYPE trim_latency_seconds gauge");
+        for (q, d) in [
+            ("0.5", self.p50_latency),
+            ("0.95", self.p95_latency),
+            ("0.99", self.p99_latency),
+        ] {
+            let _ = writeln!(
+                out,
+                "trim_latency_seconds{{quantile=\"{q}\"}} {}",
+                d.as_secs_f64()
+            );
+        }
+        let _ = writeln!(
+            out,
+            "trim_latency_seconds{{quantile=\"max\"}} {}",
+            self.max_latency.as_secs_f64()
+        );
+        render_histogram(&mut out, "trim_queue_wait_us", &self.queue_wait);
+        render_histogram(&mut out, "trim_service_us", &self.service);
+        if !self.sim_per_layer.is_empty() {
+            let _ = writeln!(out, "# TYPE trim_sim_layer_cycles_total counter");
+            for l in &self.sim_per_layer {
+                let _ = writeln!(
+                    out,
+                    "trim_sim_layer_cycles_total{{layer=\"{}\"}} {}",
+                    l.name, l.cycles
+                );
+            }
+            let _ = writeln!(out, "# TYPE trim_sim_layer_macs_total counter");
+            for l in &self.sim_per_layer {
+                let _ = writeln!(
+                    out,
+                    "trim_sim_layer_macs_total{{layer=\"{}\"}} {}",
+                    l.name, l.macs
+                );
+            }
+        }
+        out
+    }
+
+    /// The full snapshot as one JSON object (single line, no trailing
+    /// newline) — what `benches/e2e_serving.rs` emits into the CI
+    /// bench-trajectory artifact.
+    pub fn render_json(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{{\"requests\":{},\"batches\":{},\"mean_batch\":{:.3},\
+             \"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"max_us\":{},\
+             \"throughput_rps\":{:.1},\"sim_batches\":{},\"sim_cycles\":{},\
+             \"sim_off_chip\":{},\"sim_on_chip\":{},\"sim_macs\":{},\
+             \"sim_joules\":{:.6e},\"sim_gops\":{:.2},\
+             \"canary_sampled\":{},\"canary_bit_div\":{},\"canary_counter_div\":{},\
+             \"queue_wait\":{{\"count\":{},\"mean_us\":{:.1},\"p99_us_est\":{}}},\
+             \"service\":{{\"count\":{},\"mean_us\":{:.1},\"p99_us_est\":{}}},\
+             \"layers\":{}}}",
+            self.requests,
+            self.batches,
+            self.mean_batch,
+            self.p50_latency.as_micros(),
+            self.p95_latency.as_micros(),
+            self.p99_latency.as_micros(),
+            self.max_latency.as_micros(),
+            self.throughput_rps,
+            self.sim_batches,
+            self.sim_cycles,
+            self.sim_off_chip_accesses,
+            self.sim_on_chip_accesses,
+            self.sim_macs,
+            self.sim_joules,
+            self.sim_gops,
+            self.canary.sampled,
+            self.canary.bit_divergence,
+            self.canary.counter_divergence,
+            self.queue_wait.count,
+            self.queue_wait.mean(),
+            self.queue_wait.quantile(0.99),
+            self.service.count,
+            self.service.mean(),
+            self.service.quantile(0.99),
+            self.sim_per_layer.len(),
+        );
+        s
     }
 }
 
+/// Append one Prometheus histogram family (cumulative `le` buckets from
+/// the log₂ snapshot, then `_sum`/`_count`).
+fn render_histogram(out: &mut String, name: &str, h: &HistogramSnapshot) {
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, b) in h.buckets.iter().enumerate() {
+        if *b == 0 {
+            continue;
+        }
+        cum = cum.saturating_add(*b);
+        let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", obs::bucket_upper_bound(i));
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+    let _ = writeln!(out, "{name}_sum {}\n{name}_count {}", h.sum, h.count);
+}
+
+/// Mutex-guarded part of the accumulator: the latency reservoir and the
+/// float-valued cost sums (the countable u64 fields live on saturating
+/// [`Counter`]s outside the lock).
 #[derive(Debug)]
 struct Inner {
-    requests: u64,
-    batches: u64,
     /// Fixed-size latency reservoir (µs) — see module docs.
     lat_sample: Vec<u64>,
     /// Latencies observed in total (≥ `lat_sample.len()`).
@@ -114,11 +275,6 @@ struct Inner {
     max_us: u64,
     rng: SplitMix64,
     started: Option<std::time::Instant>,
-    sim_batches: u64,
-    sim_cycles: u64,
-    sim_off_chip: u64,
-    sim_on_chip: u64,
-    sim_macs: u64,
     sim_joules: f64,
     sim_seconds: f64,
     sim_f_clk: f64,
@@ -128,18 +284,11 @@ struct Inner {
 impl Default for Inner {
     fn default() -> Self {
         Self {
-            requests: 0,
-            batches: 0,
             lat_sample: Vec::new(),
             lat_seen: 0,
             max_us: 0,
             rng: SplitMix64::new(0x5EED_CAFE),
             started: None,
-            sim_batches: 0,
-            sim_cycles: 0,
-            sim_off_chip: 0,
-            sim_on_chip: 0,
-            sim_macs: 0,
             sim_joules: 0.0,
             sim_seconds: 0.0,
             sim_f_clk: 0.0,
@@ -161,14 +310,27 @@ impl Inner {
                 self.lat_sample[j as usize] = us;
             }
         }
-        self.lat_seen += 1;
+        self.lat_seen = self.lat_seen.saturating_add(1);
     }
 }
 
 /// Thread-safe metrics accumulator shared between the engine thread and
-/// observers.
+/// observers. Counters are saturating atomics from [`crate::obs`]; only
+/// the reservoir and float sums take the lock.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
+    requests: Counter,
+    batches: Counter,
+    sim_batches: Counter,
+    sim_cycles: Counter,
+    sim_off_chip: Counter,
+    sim_on_chip: Counter,
+    sim_macs: Counter,
+    canary_sampled: Counter,
+    canary_bit_divergence: Counter,
+    canary_counter_divergence: Counter,
+    queue_wait_us: Histogram,
+    service_us: Histogram,
     inner: Mutex<Inner>,
 }
 
@@ -178,21 +340,25 @@ impl ServeMetrics {
     }
 
     /// Record one served batch: its per-request latencies plus the
-    /// backend's [`BatchCost`] when it reported one.
+    /// backend's [`BatchCost`] when it reported one. All counter
+    /// accumulation saturates.
     pub fn record_batch(&self, latencies: &[Duration], cost: Option<&BatchCost>) {
+        self.batches.inc();
+        self.requests.add(latencies.len() as u64);
         let mut g = self.inner.lock().unwrap();
         g.started.get_or_insert_with(std::time::Instant::now);
-        g.batches += 1;
-        g.requests += latencies.len() as u64;
         for d in latencies {
             g.record_latency(d.as_micros() as u64);
         }
         if let Some(c) = cost {
-            g.sim_batches += 1;
-            g.sim_cycles += c.stats.cycles;
-            g.sim_off_chip += c.stats.off_chip_accesses();
-            g.sim_on_chip += c.stats.on_chip_accesses();
-            g.sim_macs += c.stats.macs;
+            self.sim_batches.inc();
+            self.sim_cycles.add(c.stats.cycles);
+            self.sim_off_chip.add(c.stats.off_chip_accesses());
+            self.sim_on_chip.add(c.stats.on_chip_accesses());
+            self.sim_macs.add(c.stats.macs);
+            self.canary_sampled.add(c.canary.sampled);
+            self.canary_bit_divergence.add(c.canary.bit_divergence);
+            self.canary_counter_divergence.add(c.canary.counter_divergence);
             g.sim_joules += c.joules;
             if c.f_clk > 0.0 {
                 g.sim_seconds += c.stats.cycles as f64 / c.f_clk;
@@ -204,12 +370,27 @@ impl ServeMetrics {
         }
     }
 
-    fn pct(sorted: &[u64], p: f64) -> Duration {
-        if sorted.is_empty() {
-            return Duration::ZERO;
+    /// Record batch-formation timing from the engine loop: each
+    /// request's admission→batch-start wait, and the batch's backend
+    /// service time. Lock-free (histograms are atomic).
+    pub fn record_queue_service(&self, queue_waits: &[Duration], service: Duration) {
+        for d in queue_waits {
+            self.queue_wait_us.record(d.as_micros() as u64);
         }
-        let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-        Duration::from_micros(sorted[idx])
+        self.service_us.record(service.as_micros() as u64);
+    }
+
+    /// Exact nearest-rank quantile (`q ∈ [0, 1]`) over the current
+    /// latency reservoir sample — `q = 0.5/0.95/0.99` are the p50/p95/p99
+    /// the serve summary line prints.
+    pub fn latency_quantile(&self, q: f64) -> Duration {
+        let mut lats = self.inner.lock().unwrap().lat_sample.clone();
+        lats.sort_unstable();
+        Duration::from_micros(obs::percentile_u64(&lats, q))
+    }
+
+    fn pct(sorted: &[u64], p: f64) -> Duration {
+        Duration::from_micros(obs::percentile_u64(sorted, p))
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -217,24 +398,34 @@ impl ServeMetrics {
         let mut lats = g.lat_sample.clone();
         lats.sort_unstable();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let requests = self.requests.get();
+        let batches = self.batches.get();
         MetricsSnapshot {
-            requests: g.requests,
-            batches: g.batches,
-            mean_batch: if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 },
+            requests,
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { requests as f64 / batches as f64 },
             p50_latency: Self::pct(&lats, 0.50),
             p95_latency: Self::pct(&lats, 0.95),
+            p99_latency: Self::pct(&lats, 0.99),
             max_latency: if g.lat_seen == 0 { Duration::ZERO } else { Duration::from_micros(g.max_us) },
-            throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
-            sim_batches: g.sim_batches,
-            sim_cycles: g.sim_cycles,
-            sim_off_chip_accesses: g.sim_off_chip,
-            sim_on_chip_accesses: g.sim_on_chip,
-            sim_macs: g.sim_macs,
+            throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
+            sim_batches: self.sim_batches.get(),
+            sim_cycles: self.sim_cycles.get(),
+            sim_off_chip_accesses: self.sim_off_chip.get(),
+            sim_on_chip_accesses: self.sim_on_chip.get(),
+            sim_macs: self.sim_macs.get(),
             sim_joules: g.sim_joules,
             sim_seconds: g.sim_seconds,
-            sim_gops: achieved_gops(g.sim_macs, g.sim_seconds),
+            sim_gops: achieved_gops(self.sim_macs.get(), g.sim_seconds),
             sim_f_clk: g.sim_f_clk,
             sim_per_layer: g.sim_layers.clone(),
+            canary: CanaryReport {
+                sampled: self.canary_sampled.get(),
+                bit_divergence: self.canary_bit_divergence.get(),
+                counter_divergence: self.canary_counter_divergence.get(),
+            },
+            queue_wait: self.queue_wait_us.snapshot(),
+            service: self.service_us.snapshot(),
         }
     }
 }
@@ -264,7 +455,10 @@ mod tests {
         let s = ServeMetrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p95_latency, Duration::ZERO);
+        assert_eq!(s.p99_latency, Duration::ZERO);
         assert_eq!(s.sim_cycles, 0);
+        assert_eq!(s.canary, CanaryReport::default());
+        assert_eq!(s.queue_wait.count, 0);
     }
 
     #[test]
@@ -286,6 +480,26 @@ mod tests {
         let p50 = s.p50_latency.as_micros() as f64;
         assert!((p50 - n as f64 / 2.0).abs() < n as f64 * 0.1, "p50 ≈ n/2, got {p50}");
         assert!(s.p50_latency <= s.p95_latency && s.p95_latency <= s.max_latency);
+    }
+
+    #[test]
+    fn exact_quantiles_on_known_distribution() {
+        // 1..=1000 µs fits wholly in the reservoir, so the nearest-rank
+        // accessors are exact: p50 = 501 (round(999·0.5) = 500 → idx 500),
+        // p95 = 950, p99 = 990.
+        let m = ServeMetrics::new();
+        for i in 1..=1000u64 {
+            m.record_batch(&[Duration::from_micros(i)], None);
+        }
+        assert_eq!(m.latency_quantile(0.50), Duration::from_micros(501));
+        assert_eq!(m.latency_quantile(0.95), Duration::from_micros(950));
+        assert_eq!(m.latency_quantile(0.99), Duration::from_micros(990));
+        assert_eq!(m.latency_quantile(1.0), Duration::from_micros(1000));
+        let s = m.snapshot();
+        assert_eq!(s.p50_latency, m.latency_quantile(0.50));
+        assert_eq!(s.p95_latency, m.latency_quantile(0.95));
+        assert_eq!(s.p99_latency, m.latency_quantile(0.99));
+        assert!(s.p95_latency <= s.p99_latency && s.p99_latency <= s.max_latency);
     }
 
     fn cost_at(cycles: u64, macs: u64, f_clk: f64) -> BatchCost {
@@ -327,6 +541,26 @@ mod tests {
     }
 
     #[test]
+    fn counter_accumulation_saturates_near_u64_max() {
+        // A soak run must peg counters at u64::MAX — never wrap, never
+        // trip a debug overflow panic.
+        let m = ServeMetrics::new();
+        m.record_batch(&[Duration::from_micros(1)], Some(&cost(u64::MAX - 10, u64::MAX - 10)));
+        m.record_batch(&[Duration::from_micros(1)], Some(&cost(100, 100)));
+        let s = m.snapshot();
+        assert_eq!(s.sim_cycles, u64::MAX);
+        assert_eq!(s.sim_macs, u64::MAX);
+        // off/on-chip sums were accumulated twice without wrapping
+        assert_eq!(s.sim_off_chip_accesses, 40);
+        // ... and a merge of two pegged snapshots stays pegged.
+        let mut merged = s.clone();
+        merged.merge(&s);
+        assert_eq!(merged.sim_cycles, u64::MAX);
+        assert_eq!(merged.sim_macs, u64::MAX);
+        assert_eq!(merged.requests, 4);
+    }
+
+    #[test]
     fn snapshot_merge_sums_counters_and_recomputes_rates() {
         let m1 = ServeMetrics::new();
         let m2 = ServeMetrics::new();
@@ -360,6 +594,66 @@ mod tests {
     }
 
     #[test]
+    fn merge_with_empty_snapshot_is_identity() {
+        let m = ServeMetrics::new();
+        m.record_batch(
+            &[Duration::from_micros(100), Duration::from_micros(200)],
+            Some(&cost(100, 400).with_per_layer(vec![LayerCost {
+                name: "L1".into(),
+                cycles: 100,
+                off_chip_accesses: 40,
+                on_chip_accesses: 12,
+                macs: 400,
+            }])),
+        );
+        m.record_queue_service(&[Duration::from_micros(5)], Duration::from_micros(50));
+        let s = m.snapshot();
+        // s ∪ ∅ — every field unchanged.
+        let mut a = s.clone();
+        a.merge(&MetricsSnapshot::default());
+        assert_eq!(a.requests, s.requests);
+        assert_eq!(a.batches, s.batches);
+        assert_eq!((a.p50_latency, a.p95_latency, a.p99_latency), (s.p50_latency, s.p95_latency, s.p99_latency));
+        assert_eq!(a.max_latency, s.max_latency);
+        assert_eq!(a.sim_cycles, s.sim_cycles);
+        assert_eq!(a.sim_f_clk, s.sim_f_clk);
+        assert_eq!(a.sim_per_layer.len(), s.sim_per_layer.len());
+        assert_eq!(a.canary, s.canary);
+        assert_eq!(a.queue_wait, s.queue_wait);
+        assert_eq!(a.service, s.service);
+        assert!((a.mean_batch - s.mean_batch).abs() < 1e-12);
+        // ∅ ∪ s — same thing from the other side.
+        let mut b = MetricsSnapshot::default();
+        b.merge(&s);
+        assert_eq!(b.requests, s.requests);
+        assert_eq!(b.p99_latency, s.p99_latency);
+        assert_eq!(b.queue_wait, s.queue_wait);
+        assert_eq!(b.canary, s.canary);
+    }
+
+    #[test]
+    fn zero_request_farm_does_not_skew_latency_aggregates() {
+        // A farm that served nothing (all-zero percentiles, zero
+        // batches) must not drag the merged percentiles down or distort
+        // mean_batch/throughput.
+        let busy = ServeMetrics::new();
+        busy.record_batch(
+            &[Duration::from_micros(400), Duration::from_micros(800)],
+            None,
+        );
+        let idle = ServeMetrics::new();
+        let mut merged = busy.snapshot();
+        let before = merged.clone();
+        merged.merge(&idle.snapshot());
+        assert_eq!(merged.p50_latency, before.p50_latency);
+        assert_eq!(merged.p95_latency, before.p95_latency);
+        assert_eq!(merged.p99_latency, before.p99_latency);
+        assert_eq!(merged.max_latency, before.max_latency);
+        assert!((merged.mean_batch - before.mean_batch).abs() < 1e-12);
+        assert_eq!(merged.requests, before.requests);
+    }
+
+    #[test]
     fn per_layer_costs_accumulate_and_merge_by_name() {
         let m1 = ServeMetrics::new();
         let m2 = ServeMetrics::new();
@@ -380,12 +674,13 @@ mod tests {
         assert_eq!(s1.sim_per_layer[0].cycles, 90);
         assert_eq!(s1.sim_per_layer[1].cycles, 60);
         assert_eq!(s1.sim_per_layer[0].macs, 900);
-        // Router-style snapshot merge folds the other farm's table in.
+        // Router-style snapshot merge folds the other farm's table in —
+        // shared names dedup (L2 folds), new names append (L3).
         let c3 = cost(10, 40).with_per_layer(vec![layer("L2", 5), layer("L3", 5)]);
         m2.record_batch(&[Duration::from_micros(1)], Some(&c3));
         let mut merged = s1.clone();
         merged.merge(&m2.snapshot());
-        assert_eq!(merged.sim_per_layer.len(), 3);
+        assert_eq!(merged.sim_per_layer.len(), 3, "L2 deduped, L3 appended");
         assert_eq!(merged.sim_per_layer[1].cycles, 65, "L2 folded across farms");
         assert_eq!(merged.sim_per_layer[2].name, "L3");
         // cost-free batches leave the table untouched
@@ -412,5 +707,63 @@ mod tests {
         // the single-clock formula over summed cycles would be wrong here
         let naive = 2.0 * 800.0 * 150.0e6 / 200.0 / 1e9;
         assert!((merged.sim_gops - naive).abs() > 0.1);
+    }
+
+    #[test]
+    fn canary_totals_flow_through_record_and_merge() {
+        let m = ServeMetrics::new();
+        let mut c = cost(10, 40);
+        c.canary = CanaryReport { sampled: 8, bit_divergence: 1, counter_divergence: 0 };
+        m.record_batch(&[Duration::from_micros(1)], Some(&c));
+        m.record_batch(&[Duration::from_micros(1)], Some(&c));
+        let s = m.snapshot();
+        assert_eq!(s.canary.sampled, 16);
+        assert_eq!(s.canary.bit_divergence, 2);
+        let mut merged = s.clone();
+        merged.merge(&s);
+        assert_eq!(merged.canary.sampled, 32, "canary totals merge across farms");
+    }
+
+    #[test]
+    fn queue_and_service_histograms_record_and_snapshot() {
+        let m = ServeMetrics::new();
+        m.record_queue_service(
+            &[Duration::from_micros(3), Duration::from_micros(100)],
+            Duration::from_micros(1000),
+        );
+        let s = m.snapshot();
+        assert_eq!(s.queue_wait.count, 2);
+        assert_eq!(s.queue_wait.sum, 103);
+        assert_eq!(s.service.count, 1);
+        assert_eq!(s.service.sum, 1000);
+    }
+
+    #[test]
+    fn prometheus_rendering_exposes_all_families() {
+        let m = ServeMetrics::new();
+        let mut c = cost(100, 400).with_per_layer(vec![LayerCost {
+            name: "SL1".into(),
+            cycles: 100,
+            off_chip_accesses: 40,
+            on_chip_accesses: 12,
+            macs: 400,
+        }]);
+        c.canary = CanaryReport { sampled: 2, bit_divergence: 0, counter_divergence: 0 };
+        m.record_batch(&[Duration::from_micros(100)], Some(&c));
+        m.record_queue_service(&[Duration::from_micros(5)], Duration::from_micros(80));
+        let text = m.snapshot().render_prometheus();
+        assert!(text.contains("# TYPE trim_requests_total counter"));
+        assert!(text.contains("trim_requests_total 1"));
+        assert!(text.contains("trim_sim_cycles_total 100"));
+        assert!(text.contains("trim_canary_sampled_total 2"));
+        assert!(text.contains("trim_latency_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("trim_queue_wait_us_count 1"));
+        assert!(text.contains("trim_service_us_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("trim_sim_layer_cycles_total{layer=\"SL1\"} 100"));
+        let json = m.snapshot().render_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"canary_sampled\":2"));
+        assert!(json.contains("\"sim_cycles\":100"));
+        assert!(!json.contains('\n'), "one line for the trajectory grep");
     }
 }

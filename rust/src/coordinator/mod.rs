@@ -24,6 +24,16 @@
 //! over N coordinators (each its own farm, possibly heterogeneous), with
 //! least-outstanding-requests dispatch and a merged metrics snapshot.
 //!
+//! Observability rides on [`crate::obs`]: every admission opens a
+//! `serve.request` span (finished when the reply is sent), each executed
+//! batch is a `serve.batch` span, the batcher emits `batch.formed`
+//! events naming which bound closed the batch, and the router emits
+//! `router.dispatch` events with the chosen farm and its EWMA score.
+//! [`ServeMetrics`] separates queue-wait from service time in log₂
+//! histograms, all counters saturate, and [`MetricsSnapshot`] (which
+//! also carries the farm's shadow-canary divergence totals) renders as
+//! Prometheus text or a single JSON trajectory line.
+//!
 //! Threads + channels only — this crate builds offline with no async
 //! runtime; the blocking batcher with a deadline performs the same
 //! time-or-size batching policy a tokio select-loop would.
@@ -39,7 +49,8 @@ pub use backend::{
     make_backend, BackendKind, BatchCost, BatchReport, InferenceBackend, LayerCost, MockBackend,
     PjrtBackend, SimCost,
 };
-pub use crate::scheduler::SimBackend;
+pub use crate::obs::HistogramSnapshot;
+pub use crate::scheduler::{CanaryConfig, CanaryReport, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
 pub use coordinator::{Coordinator, CoordinatorConfig};
 pub use metrics::{MetricsSnapshot, ServeMetrics, LATENCY_RESERVOIR};

@@ -1,6 +1,7 @@
 //! Request/response types flowing through the coordinator.
 
 use super::backend::SimCost;
+use crate::obs;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -12,6 +13,10 @@ pub struct InferenceRequest {
     pub image: Vec<i32>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued_at: Instant,
+    /// The request's `serve.request` trace span, opened at admission and
+    /// finished by the engine loop when the reply is sent — its duration
+    /// is the request's end-to-end time inside the coordinator.
+    pub span: obs::Span,
     /// Where the response goes.
     pub reply: mpsc::Sender<InferenceResponse>,
 }

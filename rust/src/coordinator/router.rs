@@ -28,6 +28,7 @@
 use super::coordinator::Coordinator;
 use super::metrics::MetricsSnapshot;
 use super::request::InferenceResponse;
+use crate::obs;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -182,32 +183,45 @@ impl Router {
             .map(|f| (f.outstanding.load(Ordering::Acquire), f.cost.get()))
             .collect();
         let min_ewma = snaps.iter().filter_map(|(_, e)| *e).fold(f64::INFINITY, f64::min);
-        if min_ewma.is_infinite() {
+        let idx = if min_ewma.is_infinite() {
             // no farm has reported yet: least-outstanding
-            return snaps
+            snaps
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, (out, _))| *out)
                 .map(|(i, _)| i)
-                .expect("router has at least one farm");
-        }
-        snaps
-            .iter()
-            .enumerate()
-            .min_by(|(_, (oa, ea)), (_, (ob, eb))| {
-                let sa = ea.unwrap_or(min_ewma) * (oa + 1) as f64;
-                let sb = eb.unwrap_or(min_ewma) * (ob + 1) as f64;
-                sa.partial_cmp(&sb)
-                    .expect("queue scores are finite")
-                    // Equal expected cost: probe the farm with no sample
-                    // yet (`false < true`, so `None`-cost farms win — the
-                    // documented cold-farm guarantee; min_by alone would
-                    // keep the lowest index and never sample a cold farm
-                    // listed after the current cheapest).
-                    .then_with(|| ea.is_some().cmp(&eb.is_some()))
-            })
-            .map(|(i, _)| i)
-            .expect("router has at least one farm")
+                .expect("router has at least one farm")
+        } else {
+            snaps
+                .iter()
+                .enumerate()
+                .min_by(|(_, (oa, ea)), (_, (ob, eb))| {
+                    let sa = ea.unwrap_or(min_ewma) * (oa + 1) as f64;
+                    let sb = eb.unwrap_or(min_ewma) * (ob + 1) as f64;
+                    sa.partial_cmp(&sb)
+                        .expect("queue scores are finite")
+                        // Equal expected cost: probe the farm with no sample
+                        // yet (`false < true`, so `None`-cost farms win — the
+                        // documented cold-farm guarantee; min_by alone would
+                        // keep the lowest index and never sample a cold farm
+                        // listed after the current cheapest).
+                        .then_with(|| ea.is_some().cmp(&eb.is_some()))
+                })
+                .map(|(i, _)| i)
+                .expect("router has at least one farm")
+        };
+        // Publish the dispatch decision: chosen farm, its queue depth and
+        // its EWMA score (the expected-cost term the comparison ran on).
+        let (out, ewma) = snaps[idx];
+        obs::tracer().event(
+            "router.dispatch",
+            0,
+            match ewma {
+                Some(e) => format!("farm={idx} outstanding={out} ewma_cycles={e:.1}"),
+                None => format!("farm={idx} outstanding={out} ewma_cycles=cold"),
+            },
+        );
+        idx
     }
 
     /// Per-farm dispatch cost estimates (EWMA of reported simulated
@@ -300,9 +314,17 @@ mod tests {
                 macs: 100,
                 ..Default::default()
             };
+            // every batch claims one canary sample, so the router-merged
+            // canary totals are checkable against sim_batches
             Ok(BatchReport::with_cost(
                 outputs,
-                BatchCost::from_stats(stats, 150.0e6, &EnergyModel::paper()),
+                BatchCost::from_stats(stats, 150.0e6, &EnergyModel::paper()).with_canary(
+                    crate::scheduler::CanaryReport {
+                        sampled: 1,
+                        bit_divergence: 0,
+                        counter_divergence: 0,
+                    },
+                ),
             ))
         }
 
@@ -369,6 +391,11 @@ mod tests {
         let per = router.farm_metrics();
         assert_eq!(per[1].requests, 9, "cheap farm serves the warmed-up load");
         assert_eq!(per[0].requests, 1, "expensive farm only saw its probe");
+        // the router-merged snapshot folds both farms' canary totals
+        // (FixedCostBackend reports one sample per batch)
+        let merged = router.metrics();
+        assert_eq!(merged.canary.sampled, merged.sim_batches);
+        assert_eq!(merged.canary.bit_divergence, 0);
     }
 
     #[test]

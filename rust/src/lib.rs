@@ -37,6 +37,14 @@
 //!   multi-fabric 3D-TrIM follow-up), bit-exact shard merging with
 //!   farm-level stats aggregation, and the artifact-free sim serving
 //!   backend (`trim serve --backend sim`, `trim farm`).
+//! * [`obs`] — std-only observability substrate: a span/event tracer
+//!   (monotonic timestamps, parent-linked span ids, bounded ring sink,
+//!   JSON-lines export via `trim trace`) and a metrics registry of
+//!   saturating counters, gauges and log₂-bucketed histograms. The
+//!   serving metrics build on it, the farm exposes per-engine/injector/
+//!   scratch telemetry through it, and the farm's shadow-execution
+//!   canary (re-running sampled shards on a `Register`-fidelity engine)
+//!   publishes bit/counter divergence through the same pipeline.
 //! * [`runtime`] — PJRT wrapper (load HLO text → compile → execute); the
 //!   numeric path produced by the Python build layer (`python/compile/`).
 //!   Gated behind the `pjrt` cargo feature (needs the `xla` crate); the
@@ -49,6 +57,7 @@ pub mod arch;
 pub mod coordinator;
 pub mod golden;
 pub mod model;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;

@@ -14,6 +14,7 @@
 //! trim serve [--backend auto|pjrt|sim] [--engines N] [--artifacts DIR]
 //!            [--requests N] [--max-batch B] [--fidelity fast|register]
 //!            [--farms F] [--shard filter|pipeline|spatial|hybrid|auto]
+//!            [--canary RATE] [--metrics-out PATH]
 //!                               e2e batched inference. Backends:
 //!                                 pjrt — compiled XLA artifacts (needs
 //!                                        `make artifacts` + the `pjrt`
@@ -41,7 +42,15 @@
 //!                               merged metrics. Sim-backed serving also reports
 //!                               the simulated cost per snapshot: cycles,
 //!                               off-/on-chip accesses, joules, GOPS and
-//!                               the per-layer cost breakdown table
+//!                               the per-layer cost breakdown table.
+//!                               --canary RATE shadow-executes that
+//!                               fraction of fast-tier shards on a
+//!                               register-fidelity oracle off the hot
+//!                               path and reports bit/counter divergence
+//!                               in the metrics (0 = off, the default).
+//!                               --metrics-out PATH writes the final
+//!                               merged snapshot as Prometheus text
+//!                               (PATH `-` prints it to stdout)
 //! trim farm [--engines N] [--net vgg16|alexnet] [--batch B]
 //!           [--shard filter|pipeline|spatial|hybrid|auto]
 //!           [--fidelity fast|register]
@@ -53,7 +62,17 @@
 //!                               as a legacy alias of --shard.
 //!                               pipeline mode streams a batch of B images
 //!                               through the serving chain instead of
-//!                               --net (real CNNs pool between CLs)
+//!                               --net (real CNNs pool between CLs).
+//!                               --canary RATE shadow-checks sharded
+//!                               layers against the register oracle;
+//!                               --metrics-out PATH dumps the farm's
+//!                               telemetry registry as Prometheus text
+//! trim trace [--requests N] [--engines N] [--canary RATE]
+//!                               run a small sim serving workload and
+//!                               export the trace ring (serve.request /
+//!                               serve.batch / batch.formed /
+//!                               router.dispatch / farm.* / canary.*
+//!                               spans and events) as JSON lines
 //! ```
 
 use std::collections::HashMap;
@@ -67,8 +86,9 @@ use trim_sa::coordinator::{
 };
 use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer, Network};
+use trim_sa::obs;
 use trim_sa::report::{render_fig1, render_fig7, render_table1_or_2, render_table3};
-use trim_sa::scheduler::{EngineFarm, FarmConfig, PipelineStage, ShardMode};
+use trim_sa::scheduler::{CanaryConfig, EngineFarm, FarmConfig, PipelineStage, ShardMode};
 use trim_sa::util::SplitMix64;
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
@@ -207,6 +227,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some(s) => s.parse()?,
         None => ShardMode::Auto,
     };
+    let canary: f64 = flags.get("canary").and_then(|v| v.parse().ok()).unwrap_or(0.0);
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: std::time::Duration::from_millis(2) },
     };
@@ -215,7 +236,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let coordinators: Vec<Coordinator> = (0..farms)
         .map(|_| {
             let d = dir.clone();
-            Coordinator::start_with(move || make_backend(kind, &d, engines, fidelity, shard), cfg)
+            Coordinator::start_with(
+                move || make_backend(kind, &d, engines, fidelity, shard, canary),
+                cfg,
+            )
         })
         .collect::<anyhow::Result<_>>()?;
     let router = Router::new(coordinators)?;
@@ -242,7 +266,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let m = router.metrics();
     println!("requests  : {}", m.requests);
     println!("batches   : {} (mean batch {:.1})", m.batches, m.mean_batch);
-    println!("latency   : p50 {:?}  p95 {:?}  max {:?}", m.p50_latency, m.p95_latency, m.max_latency);
+    println!(
+        "latency   : p50 {:?}  p95 {:?}  p99 {:?}  max {:?}",
+        m.p50_latency, m.p95_latency, m.p99_latency, m.max_latency
+    );
+    println!(
+        "queue/svc : wait mean {:.0} µs ({} samples)  service mean {:.0} µs ({} batches)",
+        m.queue_wait.mean(),
+        m.queue_wait.count,
+        m.service.mean(),
+        m.service.count
+    );
     println!("throughput: {:.1} req/s", m.throughput_rps);
     if m.sim_batches > 0 {
         println!(
@@ -256,7 +290,30 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         );
         print_per_layer_costs(&m.sim_per_layer);
     }
+    if m.canary.sampled > 0 || canary > 0.0 {
+        println!(
+            "canary    : {} shards shadow-checked  bit divergence {}  counter divergence {}{}",
+            m.canary.sampled,
+            m.canary.bit_divergence,
+            m.canary.counter_divergence,
+            if m.canary.is_clean() { "  (clean)" } else { "  (DIVERGED)" }
+        );
+    }
     println!("class histogram: {classes:?}");
+    if let Some(path) = flags.get("metrics-out") {
+        write_metrics_out(path, &m.render_prometheus())?;
+    }
+    Ok(())
+}
+
+/// Write Prometheus exposition text to `path` (`-` = stdout).
+fn write_metrics_out(path: &str, text: &str) -> anyhow::Result<()> {
+    if path == "-" {
+        print!("{text}");
+    } else {
+        std::fs::write(path, text)?;
+        println!("metrics written to {path}");
+    }
     Ok(())
 }
 
@@ -288,6 +345,7 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some(s) => s.parse()?,
         None => ExecFidelity::Fast,
     };
+    let canary: f64 = flags.get("canary").and_then(|v| v.parse().ok()).unwrap_or(0.0);
     let arch = ArchConfig::small(3, 2, 2);
     match mode {
         ShardMode::FilterShards | ShardMode::Spatial | ShardMode::Hybrid | ShardMode::Auto => {
@@ -296,7 +354,10 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 "engine farm: {engines} engines of P_N={} x P_M={} (scaled-down {} layers, {mode} shard mode, {fidelity} fidelity)",
                 arch.p_n, arch.p_m, net.name
             );
-            let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
+            let farm = EngineFarm::new(
+                FarmConfig::with_fidelity(engines, arch, fidelity)
+                    .with_canary(CanaryConfig::sampled(canary)),
+            );
             let single = EngineSim::with_fidelity(arch, fidelity);
             let mut rng = SplitMix64::new(2024);
             let (mut tot_single, mut tot_farm) = (0u64, 0u64);
@@ -348,6 +409,43 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 cost.gops
             );
             print_per_layer_costs(&cost.per_layer);
+            // Exact per-layer farm-cycle quantiles (nearest-rank).
+            let mut layer_cycles: Vec<u64> = cost.per_layer.iter().map(|l| l.cycles).collect();
+            layer_cycles.sort_unstable();
+            println!(
+                "layer cyc : p50 {}  p95 {}  p99 {}",
+                obs::percentile_u64(&layer_cycles, 0.50),
+                obs::percentile_u64(&layer_cycles, 0.95),
+                obs::percentile_u64(&layer_cycles, 0.99)
+            );
+            // Per-engine telemetry from the farm's metrics registry.
+            let reg = farm.registry();
+            let jobs: Vec<u64> =
+                (0..engines).map(|i| reg.counter_value(&format!("engine{i}.jobs"))).collect();
+            let steals: Vec<u64> =
+                (0..engines).map(|i| reg.counter_value(&format!("engine{i}.steals"))).collect();
+            println!(
+                "telemetry : jobs/engine {jobs:?}  steals/engine {steals:?}  scratch fills {} hits {}  microkernel k3/unit/strided {}/{}/{}",
+                reg.counter_value("scratch.fills"),
+                reg.counter_value("scratch.hits"),
+                reg.counter_value("microkernel.k3"),
+                reg.counter_value("microkernel.unit"),
+                reg.counter_value("microkernel.strided")
+            );
+            if farm.canary_enabled() {
+                farm.canary_drain();
+                let c = farm.canary_report();
+                println!(
+                    "canary    : {} shards shadow-checked  bit divergence {}  counter divergence {}{}",
+                    c.sampled,
+                    c.bit_divergence,
+                    c.counter_divergence,
+                    if c.is_clean() { "  (clean)" } else { "  (DIVERGED)" }
+                );
+            }
+            if let Some(path) = flags.get("metrics-out") {
+                write_metrics_out(path, &farm.registry().render_prometheus())?;
+            }
         }
         ShardMode::LayerPipeline => {
             // Real CNNs interleave pooling between CLs (out of scope, §IV),
@@ -412,6 +510,49 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `trim trace`: run a small sim serving workload end to end, then export
+/// the process-global trace ring as JSON lines on stdout. Every stage of
+/// the stack contributes: `serve.request` spans from admission,
+/// `batch.formed` events from the batcher, `serve.batch` spans from the
+/// engine loop, `router.dispatch` events from the front door, and
+/// `farm.layer`/`farm.shard` (plus `canary.shard` when `--canary` is set)
+/// spans from the farm workers.
+fn cmd_trace(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let n_req: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let engines: usize = flags.get("engines").and_then(|v| v.parse().ok()).unwrap_or(2);
+    let canary: f64 = flags.get("canary").and_then(|v| v.parse().ok()).unwrap_or(0.0);
+    let cfg = CoordinatorConfig::default();
+    let coordinator = Coordinator::start_with(
+        move || {
+            make_backend(
+                BackendKind::Sim,
+                "artifacts",
+                engines,
+                ExecFidelity::Fast,
+                ShardMode::Auto,
+                canary,
+            )
+        },
+        cfg,
+    )?;
+    let router = Router::new(vec![coordinator])?;
+    let len = router.input_len();
+    let pending: Vec<_> = (0..n_req)
+        .map(|i| {
+            let img: Vec<i32> = (0..len).map(|j| ((i * 7919 + j * 31) % 256) as i32).collect();
+            router.submit(img)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    for mut rx in pending {
+        rx.recv()?;
+    }
+    drop(router); // join the engine thread so every span is finished
+    let t = obs::tracer();
+    print!("{}", t.export_json_lines());
+    eprintln!("# {} trace events exported ({} dropped by the ring)", t.len(), t.dropped());
+    Ok(())
+}
+
 /// The per-layer cost breakdown table (ROADMAP §Serving: the 2408.01254
 /// companion's per-layer accounting, at the CLI).
 fn print_per_layer_costs(per_layer: &[LayerCost]) {
@@ -449,8 +590,9 @@ fn main() -> anyhow::Result<()> {
         "validate" => cmd_validate(),
         "serve" => cmd_serve(&flags)?,
         "farm" => cmd_farm(&flags)?,
+        "trace" => cmd_trace(&flags)?,
         _ => {
-            println!("usage: trim <fig1|sweep|table|table3|analyze|sim|validate|serve|farm> [--flags]");
+            println!("usage: trim <fig1|sweep|table|table3|analyze|sim|validate|serve|farm|trace> [--flags]");
             println!("see rust/src/main.rs docs for details");
         }
     }

@@ -1,0 +1,725 @@
+//! `obs` — std-only observability primitives for the serving stack.
+//!
+//! Two halves, both allocation-light and lock-cheap enough for the farm
+//! hot path:
+//!
+//! * **Tracer** — a span/event tracer with monotonic microsecond
+//!   timestamps (relative to the tracer's epoch), parent-linked span IDs
+//!   allocated from one atomic, a bounded ring-buffer sink (oldest
+//!   events are dropped and counted, never blocking the producer) and a
+//!   JSON-lines export (`trim trace`). A process-global instance is
+//!   available via [`tracer()`]; unit tests construct their own.
+//! * **Metrics registry** — saturating [`Counter`]s, [`Gauge`]s and
+//!   log₂-bucketed [`Histogram`]s, optionally grouped in a name-keyed
+//!   [`Registry`] with get-or-create semantics so hot paths resolve an
+//!   `Arc` handle once and never touch the map again.
+//!   [`crate::coordinator::ServeMetrics`] builds on these types instead
+//!   of keeping its own ad-hoc `u64` fields.
+//!
+//! Everything here is `std`-only (the crate builds offline) and every
+//! accumulation saturates — a soak run must degrade to a pegged counter,
+//! not a wrap or a debug-build panic.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Counters / gauges / histograms
+// ---------------------------------------------------------------------------
+
+/// Monotonic saturating counter (never wraps, even at `u64::MAX`).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    /// Add `n`, saturating at `u64::MAX`.
+    pub fn add(&self, n: u64) {
+        // `fetch_update` with a total closure never yields `Err`.
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_add(n))
+            });
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed gauge (queue depths, in-flight counts).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self(AtomicI64::new(0))
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Add `delta` (may be negative), saturating at the i64 limits.
+    pub fn add(&self, delta: i64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_add(delta))
+            });
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of histogram buckets: bucket `0` holds the value `0`, bucket
+/// `i ≥ 1` holds values `v` with `floor(log2(v)) == i - 1`, i.e.
+/// `v ∈ [2^(i-1), 2^i - 1]`. Bucket 64 holds `v ≥ 2^63`.
+pub const HISTOGRAM_BUCKETS: usize = 65;
+
+/// Bucket index for a recorded value (log₂ bucketing).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the last bucket).
+pub fn bucket_upper_bound(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Lock-free log₂-bucketed histogram of `u64` samples.
+///
+/// All fields saturate; `record` is three relaxed atomic RMWs, cheap
+/// enough for per-request and per-shard call sites.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        let _ = self
+            .count
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| {
+                Some(c.saturating_add(1))
+            });
+        let _ = self
+            .sum
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| {
+                Some(s.saturating_add(v))
+            });
+        let _ = self.buckets[bucket_index(v)].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |b| Some(b.saturating_add(1)),
+        );
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Immutable copy of a [`Histogram`], mergeable across farms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; HISTOGRAM_BUCKETS],
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            sum: 0,
+            buckets: [0; HISTOGRAM_BUCKETS],
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Bucket-wise saturating merge.
+    pub fn merge(&mut self, other: &Self) {
+        self.count = self.count.saturating_add(other.count);
+        self.sum = self.sum.saturating_add(other.sum);
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b = b.saturating_add(*o);
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing the `q`-quantile sample
+    /// (`q ∈ [0, 1]`); 0 for an empty histogram. Resolution is a factor
+    /// of 2 — use the latency reservoir for exact serving quantiles.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen = seen.saturating_add(*b);
+            if seen > rank {
+                return bucket_upper_bound(i);
+            }
+        }
+        bucket_upper_bound(HISTOGRAM_BUCKETS - 1)
+    }
+}
+
+/// Exact nearest-rank percentile over an already-sorted slice
+/// (`q ∈ [0, 1]`); 0 for an empty slice.
+pub fn percentile_u64(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct RegState {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+/// Name-keyed metric registry with get-or-create semantics.
+///
+/// Hot paths call `counter(name)` once at setup and keep the returned
+/// `Arc` handle; the map lock is never taken per event. Each
+/// [`crate::scheduler::EngineFarm`] owns one registry for its engine /
+/// injector / scratch telemetry.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<RegState>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, RegState> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            self.lock()
+                .counters
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Counter::new())),
+        )
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(
+            self.lock()
+                .gauges
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Gauge::new())),
+        )
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            self.lock()
+                .histograms
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new())),
+        )
+    }
+
+    /// Current value of a counter (0 if it was never created).
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.lock().counters.get(name).map_or(0, |c| c.get())
+    }
+
+    /// Current value of a gauge (0 if it was never created).
+    pub fn gauge_value(&self, name: &str) -> i64 {
+        self.lock().gauges.get(name).map_or(0, |g| g.get())
+    }
+
+    /// Sorted `(name, value)` pairs of every registered counter.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.lock()
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect()
+    }
+
+    /// Prometheus-style text exposition of every registered metric,
+    /// sorted by name. Names are sanitised to `[a-zA-Z0-9_:]`.
+    pub fn render_prometheus(&self) -> String {
+        let state = self.lock();
+        let mut out = String::new();
+        for (name, c) in &state.counters {
+            let n = sanitize_metric_name(name);
+            let _ = writeln!(out, "# TYPE {n} counter\n{n} {}", c.get());
+        }
+        for (name, g) in &state.gauges {
+            let n = sanitize_metric_name(name);
+            let _ = writeln!(out, "# TYPE {n} gauge\n{n} {}", g.get());
+        }
+        for (name, h) in &state.histograms {
+            let n = sanitize_metric_name(name);
+            let snap = h.snapshot();
+            let _ = writeln!(out, "# TYPE {n} histogram");
+            let mut cum = 0u64;
+            for (i, b) in snap.buckets.iter().enumerate() {
+                if *b == 0 {
+                    continue;
+                }
+                cum = cum.saturating_add(*b);
+                let _ = writeln!(out, "{n}_bucket{{le=\"{}\"}} {cum}", bucket_upper_bound(i));
+            }
+            let _ = writeln!(out, "{n}_bucket{{le=\"+Inf\"}} {}", snap.count);
+            let _ = writeln!(out, "{n}_sum {}\n{n}_count {}", snap.sum, snap.count);
+        }
+        out
+    }
+}
+
+/// Map a dotted metric name onto the Prometheus charset.
+pub fn sanitize_metric_name(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Tracer
+// ---------------------------------------------------------------------------
+
+/// One completed span or instant event in the ring buffer.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Microseconds since the tracer's epoch (span start for spans).
+    pub ts_us: u64,
+    /// `"span"` or `"event"`.
+    pub kind: &'static str,
+    pub name: &'static str,
+    /// Span id (0 for instant events, which have no identity).
+    pub id: u64,
+    /// Parent span id (0 = root).
+    pub parent: u64,
+    /// Span duration in microseconds (0 for instant events).
+    pub dur_us: u64,
+    /// Free-form `key=value` payload (may be empty).
+    pub detail: String,
+}
+
+/// An open span handle returned by [`Tracer::begin`]; pass it back to
+/// [`Tracer::finish`] (possibly from another thread — the handle is
+/// `Send`) to record the completed span.
+#[derive(Debug)]
+pub struct Span {
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    start: Instant,
+}
+
+impl Span {
+    /// Span id, for linking child spans/events.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+#[derive(Debug)]
+struct Ring {
+    buf: VecDeque<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+/// Capacity of the process-global tracer returned by [`tracer()`].
+pub const DEFAULT_TRACE_CAPACITY: usize = 4096;
+
+/// Span/event tracer with a bounded ring sink.
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    next_id: AtomicU64,
+    ring: Mutex<Ring>,
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            ring: Mutex::new(Ring {
+                buf: VecDeque::with_capacity(capacity.min(1024)),
+                cap: capacity.max(1),
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Open a span. `parent` is the id of the enclosing span (0 = root).
+    pub fn begin(&self, name: &'static str, parent: u64) -> Span {
+        Span {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            parent,
+            name,
+            start: Instant::now(),
+        }
+    }
+
+    /// Close a span with no payload.
+    pub fn finish(&self, span: Span) {
+        self.finish_with(span, String::new());
+    }
+
+    /// Close a span with a `key=value` payload.
+    pub fn finish_with(&self, span: Span, detail: String) {
+        let ev = TraceEvent {
+            ts_us: span.start.duration_since(self.epoch).as_micros() as u64,
+            kind: "span",
+            name: span.name,
+            id: span.id,
+            parent: span.parent,
+            dur_us: span.start.elapsed().as_micros() as u64,
+            detail,
+        };
+        self.push(ev);
+    }
+
+    /// Record an instant event under `parent` (0 = root).
+    pub fn event(&self, name: &'static str, parent: u64, detail: String) {
+        let ev = TraceEvent {
+            ts_us: self.epoch.elapsed().as_micros() as u64,
+            kind: "event",
+            name,
+            id: 0,
+            parent,
+            dur_us: 0,
+            detail,
+        };
+        self.push(ev);
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut ring = self.ring.lock().unwrap_or_else(PoisonError::into_inner);
+        if ring.buf.len() >= ring.cap {
+            ring.buf.pop_front();
+            ring.dropped = ring.dropped.saturating_add(1);
+        }
+        ring.buf.push_back(ev);
+    }
+
+    /// Number of buffered events.
+    pub fn len(&self) -> usize {
+        self.ring
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .buf
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted from the ring since construction / last clear.
+    pub fn dropped(&self) -> u64 {
+        self.ring
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .dropped
+    }
+
+    pub fn clear(&self) {
+        let mut ring = self.ring.lock().unwrap_or_else(PoisonError::into_inner);
+        ring.buf.clear();
+        ring.dropped = 0;
+    }
+
+    /// Copy of the buffered events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.ring
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .buf
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// One JSON object per line, oldest event first.
+    pub fn export_json_lines(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            let _ = writeln!(
+                out,
+                "{{\"ts_us\":{},\"kind\":\"{}\",\"name\":\"{}\",\"id\":{},\"parent\":{},\"dur_us\":{},\"detail\":\"{}\"}}",
+                ev.ts_us,
+                ev.kind,
+                ev.name,
+                ev.id,
+                ev.parent,
+                ev.dur_us,
+                escape_json(&ev.detail),
+            );
+        }
+        out
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new(DEFAULT_TRACE_CAPACITY)
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Process-global tracer (ring capacity [`DEFAULT_TRACE_CAPACITY`]).
+/// The serving stack records into this instance; `trim trace` exports it.
+pub fn tracer() -> &'static Tracer {
+    static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+    GLOBAL.get_or_init(Tracer::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_saturates_at_max() {
+        let c = Counter::new();
+        c.add(u64::MAX - 1);
+        c.add(5);
+        assert_eq!(c.get(), u64::MAX);
+        c.inc();
+        assert_eq!(c.get(), u64::MAX);
+    }
+
+    #[test]
+    fn gauge_tracks_depth() {
+        let g = Gauge::new();
+        g.add(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+        g.set(-7);
+        assert_eq!(g.get(), -7);
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_upper_bound(1), 1);
+        assert_eq!(bucket_upper_bound(3), 7);
+        assert_eq!(bucket_upper_bound(64), u64::MAX);
+
+        let h = Histogram::new();
+        for v in [0u64, 1, 3, 4, 100, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum, 1108);
+        assert_eq!(s.buckets[0], 1); // 0
+        assert_eq!(s.buckets[1], 1); // 1
+        assert_eq!(s.buckets[2], 1); // 3
+        assert_eq!(s.buckets[3], 1); // 4
+        assert_eq!(s.buckets[7], 1); // 100 ∈ [64,127]
+        assert_eq!(s.buckets[10], 1); // 1000 ∈ [512,1023]
+        // quantile returns bucket upper bounds
+        assert_eq!(s.quantile(0.0), 0);
+        assert_eq!(s.quantile(1.0), 1023);
+    }
+
+    #[test]
+    fn histogram_snapshot_merge_saturates() {
+        let a = Histogram::new();
+        a.record(5);
+        let mut sa = a.snapshot();
+        let mut sb = HistogramSnapshot {
+            count: u64::MAX,
+            sum: u64::MAX,
+            ..Default::default()
+        };
+        sb.buckets[bucket_index(5)] = u64::MAX;
+        sa.merge(&sb);
+        assert_eq!(sa.count, u64::MAX);
+        assert_eq!(sa.sum, u64::MAX);
+        assert_eq!(sa.buckets[bucket_index(5)], u64::MAX);
+    }
+
+    #[test]
+    fn percentile_is_exact_nearest_rank() {
+        let sorted: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_u64(&sorted, 0.0), 1);
+        assert_eq!(percentile_u64(&sorted, 0.5), 51); // round(99*0.5)=50 → idx 50
+        assert_eq!(percentile_u64(&sorted, 0.95), 95); // round(99*0.95)=94
+        assert_eq!(percentile_u64(&sorted, 0.99), 99); // round(99*0.99)=98
+        assert_eq!(percentile_u64(&sorted, 1.0), 100);
+        assert_eq!(percentile_u64(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn registry_get_or_create_returns_same_handle() {
+        let reg = Registry::new();
+        let a = reg.counter("farm.engine0.jobs");
+        let b = reg.counter("farm.engine0.jobs");
+        a.add(3);
+        b.add(4);
+        assert_eq!(reg.counter_value("farm.engine0.jobs"), 7);
+        assert_eq!(reg.counter_value("nonexistent"), 0);
+        reg.gauge("depth").set(9);
+        assert_eq!(reg.gauge_value("depth"), 9);
+    }
+
+    #[test]
+    fn registry_prometheus_rendering() {
+        let reg = Registry::new();
+        reg.counter("farm.jobs").add(12);
+        reg.gauge("injector.depth").set(3);
+        reg.histogram("busy.us").record(100);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE farm_jobs counter"));
+        assert!(text.contains("farm_jobs 12"));
+        assert!(text.contains("# TYPE injector_depth gauge"));
+        assert!(text.contains("injector_depth 3"));
+        assert!(text.contains("busy_us_count 1"));
+        assert!(text.contains("busy_us_sum 100"));
+        assert!(text.contains("busy_us_bucket{le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn tracer_links_parents_and_bounds_ring() {
+        let t = Tracer::new(4);
+        let root = t.begin("serve.request", 0);
+        let child = t.begin("serve.batch", root.id());
+        t.event("batch.formed", child.id(), "size=4".into());
+        let child_id = child.id();
+        t.finish(child);
+        t.finish_with(root, "class=3".into());
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].name, "batch.formed");
+        assert_eq!(evs[0].parent, child_id);
+        assert_eq!(evs[1].name, "serve.batch");
+        assert_eq!(evs[2].name, "serve.request");
+        assert!(evs[2].id < evs[1].id, "ids allocate monotonically");
+        // overflow the 4-slot ring
+        for _ in 0..10 {
+            t.event("tick", 0, String::new());
+        }
+        assert_eq!(t.len(), 4);
+        assert!(t.dropped() >= 9);
+        let json = t.export_json_lines();
+        assert_eq!(json.lines().count(), 4);
+        assert!(json.contains("\"name\":\"tick\""));
+        t.clear();
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn trace_timestamps_are_monotonic_and_json_escapes() {
+        let t = Tracer::new(16);
+        t.event("a", 0, "x=\"quoted\"\nnext".into());
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.event("b", 0, String::new());
+        let evs = t.events();
+        assert!(evs[1].ts_us >= evs[0].ts_us);
+        let json = t.export_json_lines();
+        assert!(json.contains("\\\"quoted\\\""));
+        assert!(json.contains("\\n"));
+    }
+
+    #[test]
+    fn global_tracer_is_a_singleton() {
+        let a = tracer() as *const Tracer;
+        let b = tracer() as *const Tracer;
+        assert_eq!(a, b);
+    }
+}

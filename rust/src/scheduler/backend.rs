@@ -18,7 +18,7 @@
 //! All produce identical logits (property-tested); they differ only in
 //! how the work is spread over the farm.
 
-use super::farm::{EngineFarm, FarmConfig, PipelineStage};
+use super::farm::{CanaryConfig, CanaryReport, EngineFarm, FarmConfig, PipelineStage};
 use super::shard::ShardMode;
 use crate::analytics::EnergyModel;
 use crate::arch::{ArchConfig, ExecFidelity, SimStats};
@@ -111,6 +111,10 @@ pub struct SimBackend {
     mode: ShardMode,
     requant: Requant,
     energy: EnergyModel,
+    /// Cumulative canary totals already attributed to earlier batches —
+    /// `infer_batch` reports per-batch *deltas* so the serving metrics
+    /// (which sum batch costs) end up with the true totals.
+    last_canary: CanaryReport,
     /// infer_batch calls observed (exposed for batching assertions).
     pub calls: u64,
 }
@@ -139,11 +143,43 @@ impl SimBackend {
         mode: ShardMode,
         fidelity: ExecFidelity,
     ) -> Self {
+        Self::with_canary(engines, arch, spec, mode, fidelity, CanaryConfig::default())
+    }
+
+    /// Full control including the farm's shadow-execution canary: a
+    /// `canary.sample_rate` fraction of the sharded-path shards are
+    /// re-executed on a `Register`-fidelity oracle off the hot path, and
+    /// each batch's [`BatchCost::canary`] carries the divergence delta
+    /// observed since the previous batch. The pipeline mode never
+    /// samples (its inputs are consumed by the stage workers).
+    pub fn with_canary(
+        engines: usize,
+        arch: ArchConfig,
+        spec: SimNetSpec,
+        mode: ShardMode,
+        fidelity: ExecFidelity,
+        canary: CanaryConfig,
+    ) -> Self {
         spec.validate();
-        let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
+        let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity).with_canary(canary));
         let weights = (0..spec.layers.len()).map(|i| Arc::new(spec.layer_weights(i))).collect();
         let requant = Requant::new(spec.requant_shift, 8);
-        Self { farm, spec, weights, mode, requant, energy: EnergyModel::paper(), calls: 0 }
+        Self {
+            farm,
+            spec,
+            weights,
+            mode,
+            requant,
+            energy: EnergyModel::paper(),
+            last_canary: CanaryReport::default(),
+            calls: 0,
+        }
+    }
+
+    /// The underlying farm — its [`crate::obs::Registry`] telemetry and
+    /// canary totals are read through here (`trim farm` summary).
+    pub fn farm(&self) -> &EngineFarm {
+        &self.farm
     }
 
     pub fn mode(&self) -> ShardMode {
@@ -280,9 +316,24 @@ impl InferenceBackend for SimBackend {
                 (outputs, stats, per_layer)
             }
         };
+        // Attribute the canary activity observed since the last batch to
+        // this one. Drain first so every shard this batch submitted has
+        // been checked — the oracle is slow, but it only re-runs the
+        // sampled fraction.
+        let canary = if self.farm.canary_enabled() {
+            self.farm.canary_drain();
+            let total = self.farm.canary_report();
+            let delta = total.delta_since(&self.last_canary);
+            self.last_canary = total;
+            delta
+        } else {
+            CanaryReport::default()
+        };
         Ok(BatchReport::with_cost(
             outputs,
-            BatchCost::from_stats(stats, f_clk, &self.energy).with_per_layer(per_layer),
+            BatchCost::from_stats(stats, f_clk, &self.energy)
+                .with_per_layer(per_layer)
+                .with_canary(canary),
         ))
     }
 
@@ -422,6 +473,49 @@ mod tests {
         assert!(b.describe().contains("3 engines"));
         assert!(b.describe().contains("fast fidelity"), "got {}", b.describe());
         assert_eq!(b.engines(), 3);
+    }
+
+    #[test]
+    fn full_rate_canary_reads_zero_divergence_on_tiny() {
+        // The acceptance gate: shadow-executing *every* shard of the tiny
+        // workload on the register oracle finds no bit or counter
+        // divergence — the two tiers really are exact twins in serving.
+        let mut b = SimBackend::with_canary(
+            2,
+            ArchConfig::small(3, 2, 1),
+            SimNetSpec::tiny(),
+            ShardMode::Auto,
+            ExecFidelity::Fast,
+            CanaryConfig::sampled(1.0),
+        );
+        let len = b.input_len();
+        let imgs: Vec<Vec<i32>> = (0..2).map(|i| image(2500 + i, len)).collect();
+        let refs: Vec<&[i32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let r1 = b.infer_batch(&refs).unwrap();
+        let c1 = r1.cost.unwrap().canary;
+        assert!(c1.sampled > 0, "rate 1.0 must sample every shard");
+        assert!(c1.is_clean(), "fast tier diverged from the oracle: {c1:?}");
+        // deltas: a second batch reports only its own samples
+        let r2 = b.infer_batch(&refs).unwrap();
+        let c2 = r2.cost.unwrap().canary;
+        assert_eq!(c2.sampled, c1.sampled, "same batch shape → same per-batch sample count");
+        assert!(c2.is_clean());
+        // farm-level totals accumulate across both batches
+        assert_eq!(b.farm().canary_report().sampled, c1.sampled + c2.sampled);
+        // logits still match the golden reference with the canary on
+        let expect: Vec<Vec<i32>> = imgs.iter().map(|v| b.reference_logits(v)).collect();
+        assert_eq!(r1.outputs, expect);
+    }
+
+    #[test]
+    fn canary_off_batch_reports_are_unchanged() {
+        // canary-off costs carry an all-zero CanaryReport, so reports stay
+        // comparable across canary-on/off deployments.
+        let mut b = SimBackend::new(2);
+        let img = image(41, b.input_len());
+        let cost = b.infer_batch(&[&img]).unwrap().cost.unwrap();
+        assert_eq!(cost.canary, CanaryReport::default());
+        assert!(!b.farm().canary_enabled());
     }
 
     #[test]

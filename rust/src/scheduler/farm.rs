@@ -43,6 +43,22 @@
 //! **max** (shards run concurrently); within one engine, sequential jobs
 //! add their cycles. Both reductions reuse [`SimStats::merge`] /
 //! [`SimStats::merge_sequential`].
+//!
+//! **Observability.** Every farm owns an [`crate::obs::Registry`]
+//! ([`EngineFarm::registry`]): per-engine job/busy/idle/steal counters,
+//! an injector queue-depth gauge, and farm-wide scratch fill/hit and
+//! per-microkernel-arm invocation totals harvested from each engine
+//! after every job. Layer runs and per-shard executions record
+//! parent-linked spans into the global [`crate::obs::tracer`].
+//!
+//! **Shadow-execution canary.** With [`CanaryConfig::sample_rate`] > 0
+//! the farm keeps one extra `Register`-fidelity engine off the hot path
+//! and re-executes a deterministic sample of completed shards on it,
+//! comparing the fast tier's ofmaps (bit-exactness) and [`SimStats`]
+//! (counter-exactness) against the cycle-accurate oracle. Divergence is
+//! *published as a metric* ([`EngineFarm::canary_report`], flowing into
+//! `MetricsSnapshot` and merged across farms by the Router) instead of
+//! failing a test — production canarying of the simulator itself.
 
 use super::shard::{plan_shards, ShardMode, ShardPlan};
 use crate::arch::engine::EngineRunResult;
@@ -50,12 +66,88 @@ use crate::arch::{ArchConfig, EngineSim, ExecFidelity, SimStats};
 use crate::golden::Tensor3;
 use crate::model::quant::Requant;
 use crate::model::ConvLayer;
+use crate::obs::{self, Counter, Gauge, Registry};
+use crate::util::SplitMix64;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::mpsc::{self, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Shadow-execution canary configuration: re-run a sampled fraction of
+/// completed shards on a `Register`-fidelity engine off the hot path and
+/// publish bit/counter divergence as metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct CanaryConfig {
+    /// Fraction of completed shards to shadow-execute (`0.0` disables
+    /// the canary entirely — no thread, no overhead; `1.0` samples every
+    /// shard deterministically).
+    pub sample_rate: f64,
+    /// Seed of the deterministic sampling PRNG (rates strictly between
+    /// 0 and 1 draw one uniform per shard).
+    pub seed: u64,
+    /// Test hook: flip the low bit of the first ofmap element of the
+    /// *copy fed to the canary* (served results are untouched), so tests
+    /// can prove a diverging fast tier is caught and counted.
+    #[doc(hidden)]
+    pub perturb: bool,
+}
+
+impl CanaryConfig {
+    /// Canary at `sample_rate`, default seed, no perturbation.
+    pub fn sampled(sample_rate: f64) -> Self {
+        Self { sample_rate, ..Default::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sample_rate > 0.0
+    }
+}
+
+impl Default for CanaryConfig {
+    fn default() -> Self {
+        Self { sample_rate: 0.0, seed: 0x5EED_CA9A, perturb: false }
+    }
+}
+
+/// Cumulative canary totals (all saturating). `Default` is all-zero,
+/// which is also what a canary-less farm reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CanaryReport {
+    /// Shards shadow-executed on the register oracle.
+    pub sampled: u64,
+    /// Samples whose ofmaps were not bit-identical to the oracle's.
+    pub bit_divergence: u64,
+    /// Samples whose [`SimStats`] differed from the oracle's.
+    pub counter_divergence: u64,
+}
+
+impl CanaryReport {
+    /// Saturating element-wise accumulation (Router-side merge).
+    pub fn merge(&mut self, other: &Self) {
+        self.sampled = self.sampled.saturating_add(other.sampled);
+        self.bit_divergence = self.bit_divergence.saturating_add(other.bit_divergence);
+        self.counter_divergence = self.counter_divergence.saturating_add(other.counter_divergence);
+    }
+
+    /// Element-wise `self - prev` (saturating), for per-batch deltas
+    /// against a cumulative report.
+    pub fn delta_since(&self, prev: &Self) -> Self {
+        Self {
+            sampled: self.sampled.saturating_sub(prev.sampled),
+            bit_divergence: self.bit_divergence.saturating_sub(prev.bit_divergence),
+            counter_divergence: self.counter_divergence.saturating_sub(prev.counter_divergence),
+        }
+    }
+
+    /// No divergence observed (vacuously true with zero samples).
+    pub fn is_clean(&self) -> bool {
+        self.bit_divergence == 0 && self.counter_divergence == 0
+    }
+}
 
 /// Farm-level configuration.
 #[derive(Debug, Clone, Copy)]
@@ -69,15 +161,23 @@ pub struct FarmConfig {
     /// counter-exact stats), orders of magnitude more layer throughput;
     /// pick [`ExecFidelity::Register`] to run the cycle-accurate oracle.
     pub fidelity: ExecFidelity,
+    /// Shadow-execution canary (off by default).
+    pub canary: CanaryConfig,
 }
 
 impl FarmConfig {
     pub fn new(engines: usize, arch: ArchConfig) -> Self {
-        Self { engines, arch, fidelity: ExecFidelity::Fast }
+        Self { engines, arch, fidelity: ExecFidelity::Fast, canary: CanaryConfig::default() }
     }
 
     pub fn with_fidelity(engines: usize, arch: ArchConfig, fidelity: ExecFidelity) -> Self {
-        Self { engines, arch, fidelity }
+        Self { engines, arch, fidelity, canary: CanaryConfig::default() }
+    }
+
+    /// Builder: enable the shadow-execution canary.
+    pub fn with_canary(mut self, canary: CanaryConfig) -> Self {
+        self.canary = canary;
+        self
     }
 }
 
@@ -100,6 +200,9 @@ struct Job {
     rows: Range<usize>,
     requant: Option<Requant>,
     tag: u64,
+    /// Span id of the dispatching layer/pipeline run (0 = root), so the
+    /// worker's per-shard span links back across the thread boundary.
+    trace_parent: u64,
     reply: Sender<JobDone>,
 }
 
@@ -120,6 +223,9 @@ struct JobDone {
 struct Injector {
     state: Mutex<InjectorState>,
     ready: Condvar,
+    /// Live queue-depth gauge (`injector.depth` in the farm registry),
+    /// updated under the state lock on every push/pop.
+    depth: Arc<Gauge>,
 }
 
 #[derive(Default)]
@@ -129,8 +235,8 @@ struct InjectorState {
 }
 
 impl Injector {
-    fn new() -> Self {
-        Self { state: Mutex::new(InjectorState::default()), ready: Condvar::new() }
+    fn new(depth: Arc<Gauge>) -> Self {
+        Self { state: Mutex::new(InjectorState::default()), ready: Condvar::new(), depth }
     }
 
     /// Jobs run *outside* the lock (the guard is dropped before the
@@ -145,6 +251,7 @@ impl Injector {
         let before = st.jobs.len();
         st.jobs.extend(jobs);
         let added = st.jobs.len() - before;
+        self.depth.set(st.jobs.len() as i64);
         drop(st);
         // Wake only as many workers as there is new work for — the
         // pipeline path pushes one job per stage completion, and waking
@@ -158,16 +265,21 @@ impl Injector {
 
     /// Block until a job is available (steal it) or the farm shuts down
     /// (`None`). The queue drains before shutdown takes effect, so
-    /// already-dispatched work always gets a reply.
-    fn next_job(&self) -> Option<Job> {
+    /// already-dispatched work always gets a reply. The returned flag is
+    /// true when the job was already queued on arrival (a "steal" — the
+    /// worker never parked for it).
+    fn next_job(&self) -> Option<(Job, bool)> {
         let mut st = self.lock();
+        let mut waited = false;
         loop {
             if let Some(job) = st.jobs.pop_front() {
-                return Some(job);
+                self.depth.set(st.jobs.len() as i64);
+                return Some((job, !waited));
             }
             if st.shutdown {
                 return None;
             }
+            waited = true;
             st = self.ready.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
     }
@@ -189,8 +301,36 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-fn worker_loop(id: usize, engine: EngineSim, injector: Arc<Injector>) {
-    while let Some(job) = injector.next_job() {
+/// Per-worker metric handles, resolved once from the farm registry at
+/// spawn time so the hot loop never touches the registry map. Job/busy/
+/// idle/steal counters are per-engine; scratch and microkernel totals
+/// are farm-wide (every worker adds its deltas to the shared counters).
+struct WorkerTelemetry {
+    jobs: Arc<Counter>,
+    busy_us: Arc<Counter>,
+    idle_us: Arc<Counter>,
+    steals: Arc<Counter>,
+    scratch_fills: Arc<Counter>,
+    scratch_hits: Arc<Counter>,
+    mk_k3: Arc<Counter>,
+    mk_unit: Arc<Counter>,
+    mk_strided: Arc<Counter>,
+}
+
+fn worker_loop(id: usize, engine: EngineSim, injector: Arc<Injector>, tel: WorkerTelemetry) {
+    // The engine's scratch/microkernel counters are cumulative over its
+    // lifetime; publish per-job deltas into the farm-wide counters.
+    let (mut prev_fills, mut prev_hits, _) = engine.scratch_stats();
+    let mut prev_arms = engine.microkernel_arms();
+    loop {
+        let parked = Instant::now();
+        let Some((job, stolen)) = injector.next_job() else { break };
+        tel.idle_us.add(parked.elapsed().as_micros() as u64);
+        if stolen {
+            tel.steals.inc();
+        }
+        let span = obs::tracer().begin("farm.shard", job.trace_parent);
+        let started = Instant::now();
         // Catch panics so a poisoned job (bad geometry, corrupt weights)
         // surfaces as a named-engine error at the dispatch site instead
         // of silently dropping the reply sender and stranding the caller;
@@ -214,7 +354,22 @@ fn worker_loop(id: usize, engine: EngineSim, injector: Arc<Injector>) {
             }
             result
         }));
+        tel.busy_us.add(started.elapsed().as_micros() as u64);
+        tel.jobs.inc();
+        let (fills, hits, _) = engine.scratch_stats();
+        tel.scratch_fills.add(fills.saturating_sub(prev_fills));
+        tel.scratch_hits.add(hits.saturating_sub(prev_hits));
+        (prev_fills, prev_hits) = (fills, hits);
+        let arms = engine.microkernel_arms();
+        tel.mk_k3.add(arms[0].saturating_sub(prev_arms[0]));
+        tel.mk_unit.add(arms[1].saturating_sub(prev_arms[1]));
+        tel.mk_strided.add(arms[2].saturating_sub(prev_arms[2]));
+        prev_arms = arms;
         let result = outcome.map_err(|p| panic_message(p.as_ref()));
+        obs::tracer().finish_with(
+            span,
+            format!("engine={id} tag={} ok={}", job.tag, result.is_ok()),
+        );
         // Receiver may have given up (caller bailed on an earlier
         // failure, or the farm dropped mid-run) — ignore.
         let _ = job.reply.send(JobDone {
@@ -224,6 +379,101 @@ fn worker_loop(id: usize, engine: EngineSim, injector: Arc<Injector>) {
             rows: job.rows.clone(),
             result,
         });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shadow-execution canary
+// ---------------------------------------------------------------------------
+
+/// A completed fast-tier shard queued for shadow re-execution.
+struct CanaryJob {
+    layer: ConvLayer,
+    input: Arc<Tensor3>,
+    weights: Arc<Vec<i32>>,
+    filters: Range<usize>,
+    rows: Range<usize>,
+    /// The fast tier's result as served (or deliberately perturbed by
+    /// the test hook) — what the oracle's re-execution is compared to.
+    fast_ofmaps: Tensor3,
+    fast_stats: SimStats,
+}
+
+#[derive(Clone)]
+struct CanaryCounters {
+    sampled: Arc<Counter>,
+    bit_divergence: Arc<Counter>,
+    counter_divergence: Arc<Counter>,
+    /// Jobs submitted but not yet judged — lets tests and shutdown wait
+    /// for the (asynchronous, off-hot-path) canary to catch up.
+    pending: Arc<AtomicU64>,
+}
+
+struct Canary {
+    cfg: CanaryConfig,
+    tx: Sender<CanaryJob>,
+    rng: Mutex<SplitMix64>,
+    counters: CanaryCounters,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Canary {
+    /// Deterministic sampling decision: rate ≥ 1 samples everything
+    /// without consuming randomness; otherwise draw one uniform in
+    /// [0, 1) from the seeded PRNG.
+    fn should_sample(&self) -> bool {
+        if self.cfg.sample_rate >= 1.0 {
+            return true;
+        }
+        let mut rng = self.rng.lock().unwrap_or_else(PoisonError::into_inner);
+        let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        u < self.cfg.sample_rate
+    }
+
+    fn submit(&self, job: CanaryJob) {
+        self.counters.pending.fetch_add(1, Ordering::AcqRel);
+        if self.tx.send(job).is_err() {
+            // Canary thread is gone; don't leave drain() waiting.
+            self.counters.pending.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// The canary thread: re-run each sampled shard on the `Register`
+/// oracle and count bit/counter divergence from the served fast result.
+fn canary_loop(engine: EngineSim, rx: Receiver<CanaryJob>, counters: CanaryCounters) {
+    while let Ok(job) = rx.recv() {
+        let span = obs::tracer().begin("canary.shard", 0);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.run_shard_shared(
+                &job.layer,
+                &job.input,
+                &job.weights,
+                job.filters.clone(),
+                job.rows.clone(),
+            )
+        }));
+        counters.sampled.inc();
+        let (bit_div, counter_div) = match outcome {
+            Ok(oracle) => (
+                oracle.ofmaps != job.fast_ofmaps,
+                oracle.stats != job.fast_stats,
+            ),
+            // The oracle panicked where the fast tier succeeded: that is
+            // maximal divergence, not an error to swallow.
+            Err(_) => (true, true),
+        };
+        if bit_div {
+            counters.bit_divergence.inc();
+        }
+        if counter_div {
+            counters.counter_divergence.inc();
+        }
+        obs::tracer().finish_with(
+            span,
+            format!("bit_div={bit_div} counter_div={counter_div}"),
+        );
+        counters.pending.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -297,25 +547,65 @@ pub struct EngineFarm {
     cfg: FarmConfig,
     injector: Arc<Injector>,
     workers: Vec<JoinHandle<()>>,
+    registry: Arc<Registry>,
+    canary: Option<Canary>,
 }
 
 impl EngineFarm {
     /// Spawn `cfg.engines` worker threads, each owning one [`EngineSim`],
-    /// all stealing from one shared injector queue.
+    /// all stealing from one shared injector queue; plus, when the
+    /// canary is enabled, one `Register`-fidelity shadow engine on its
+    /// own thread.
     pub fn new(cfg: FarmConfig) -> Self {
         assert!(cfg.engines >= 1, "farm needs at least one engine");
-        let injector = Arc::new(Injector::new());
+        let registry = Arc::new(Registry::new());
+        let injector = Arc::new(Injector::new(registry.gauge("injector.depth")));
         let mut workers = Vec::with_capacity(cfg.engines);
         for i in 0..cfg.engines {
             let engine = EngineSim::with_fidelity(cfg.arch, cfg.fidelity);
             let inj = Arc::clone(&injector);
+            let tel = WorkerTelemetry {
+                jobs: registry.counter(&format!("engine{i}.jobs")),
+                busy_us: registry.counter(&format!("engine{i}.busy_us")),
+                idle_us: registry.counter(&format!("engine{i}.idle_us")),
+                steals: registry.counter(&format!("engine{i}.steals")),
+                scratch_fills: registry.counter("scratch.fills"),
+                scratch_hits: registry.counter("scratch.hits"),
+                mk_k3: registry.counter("microkernel.k3"),
+                mk_unit: registry.counter("microkernel.unit"),
+                mk_strided: registry.counter("microkernel.strided"),
+            };
             let handle = std::thread::Builder::new()
                 .name(format!("trim-farm-{i}"))
-                .spawn(move || worker_loop(i, engine, inj))
+                .spawn(move || worker_loop(i, engine, inj, tel))
                 .expect("spawning farm worker");
             workers.push(handle);
         }
-        Self { cfg, injector, workers }
+        let canary = if cfg.canary.enabled() {
+            let (tx, rx) = mpsc::channel::<CanaryJob>();
+            let counters = CanaryCounters {
+                sampled: registry.counter("canary.sampled"),
+                bit_divergence: registry.counter("canary.bit_divergence"),
+                counter_divergence: registry.counter("canary.counter_divergence"),
+                pending: Arc::new(AtomicU64::new(0)),
+            };
+            let oracle = EngineSim::with_fidelity(cfg.arch, ExecFidelity::Register);
+            let loop_counters = counters.clone();
+            let worker = std::thread::Builder::new()
+                .name("trim-canary".to_string())
+                .spawn(move || canary_loop(oracle, rx, loop_counters))
+                .expect("spawning canary worker");
+            Some(Canary {
+                cfg: cfg.canary,
+                tx,
+                rng: Mutex::new(SplitMix64::new(cfg.canary.seed)),
+                counters,
+                worker: Some(worker),
+            })
+        } else {
+            None
+        };
+        Self { cfg, injector, workers, registry, canary }
     }
 
     pub fn engines(&self) -> usize {
@@ -328,6 +618,45 @@ impl EngineFarm {
 
     pub fn fidelity(&self) -> ExecFidelity {
         self.cfg.fidelity
+    }
+
+    /// The farm's metric registry: per-engine `engine{i}.jobs` /
+    /// `engine{i}.busy_us` / `engine{i}.idle_us` / `engine{i}.steals`
+    /// counters, the `injector.depth` gauge, farm-wide `scratch.fills` /
+    /// `scratch.hits` and `microkernel.{k3,unit,strided}` totals, and —
+    /// when enabled — the `canary.*` divergence counters.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Whether the shadow-execution canary is running.
+    pub fn canary_enabled(&self) -> bool {
+        self.canary.is_some()
+    }
+
+    /// Cumulative canary totals (all zero when the canary is disabled).
+    /// The canary judges asynchronously; call [`EngineFarm::canary_drain`]
+    /// first if the report must cover every submitted sample.
+    pub fn canary_report(&self) -> CanaryReport {
+        match &self.canary {
+            Some(c) => CanaryReport {
+                sampled: c.counters.sampled.get(),
+                bit_divergence: c.counters.bit_divergence.get(),
+                counter_divergence: c.counters.counter_divergence.get(),
+            },
+            None => CanaryReport::default(),
+        }
+    }
+
+    /// Block until the canary has judged every submitted sample (no-op
+    /// when disabled; bounded at 60 s as a safety valve).
+    pub fn canary_drain(&self) {
+        if let Some(c) = &self.canary {
+            let deadline = Instant::now() + Duration::from_secs(60);
+            while c.counters.pending.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
     }
 
     /// Run one layer sharded across the farm in filter-shard mode and
@@ -374,6 +703,8 @@ impl EngineFarm {
     ) -> Result<FarmRunResult> {
         assert!(mode != ShardMode::LayerPipeline, "pipeline mode goes through run_pipeline");
         let plan = plan_shards(&self.cfg.arch, layer, self.engines(), mode);
+        let span = obs::tracer().begin("farm.layer", 0);
+        let trace_parent = span.id();
         let (reply, done_rx) = mpsc::channel::<JobDone>();
         let jobs: Vec<Job> = plan
             .shards
@@ -386,6 +717,7 @@ impl EngineFarm {
                 rows: shard.rows.clone(),
                 requant: None,
                 tag: shard.index as u64,
+                trace_parent,
                 reply: reply.clone(),
             })
             .collect();
@@ -405,6 +737,24 @@ impl EngineFarm {
             received += 1;
             match done.result {
                 Ok(result) => {
+                    // Shadow-execution canary: off the hot path, the only
+                    // per-shard cost when sampled is cloning the fast
+                    // result for the oracle comparison.
+                    if let Some(c) = self.canary.as_ref().filter(|c| c.should_sample()) {
+                        let mut fast_ofmaps = result.ofmaps.clone();
+                        if c.cfg.perturb && !fast_ofmaps.data.is_empty() {
+                            fast_ofmaps.data[0] = fast_ofmaps.data[0].wrapping_add(1);
+                        }
+                        c.submit(CanaryJob {
+                            layer: layer.clone(),
+                            input: Arc::clone(&input),
+                            weights: Arc::clone(&weights),
+                            filters: done.filters.clone(),
+                            rows: done.rows.clone(),
+                            fast_ofmaps,
+                            fast_stats: result.stats,
+                        });
+                    }
                     stitch(&mut ofmaps.data, &result.ofmaps.data, &done.filters, &done.rows, h_o, w_o);
                     stats.merge(&result.stats); // parallel: cycles max, counters sum
                     per_shard[done.tag as usize] = result.stats;
@@ -423,6 +773,16 @@ impl EngineFarm {
                 }
             }
         }
+        obs::tracer().finish_with(
+            span,
+            format!(
+                "layer={} axis={:?} shards={} received={received} ok={}",
+                layer.name,
+                plan.axis,
+                plan.shards.len(),
+                failure.is_none()
+            ),
+        );
         if let Some(e) = failure {
             return Err(e);
         }
@@ -451,6 +811,8 @@ impl EngineFarm {
         }
         let n_img = inputs.len();
         let n_stage = stages.len();
+        let span = obs::tracer().begin("farm.pipeline", 0);
+        let trace_parent = span.id();
         let (reply, done_rx) = mpsc::channel::<JobDone>();
         let submit = |img: usize, stage: usize, input: Arc<Tensor3>| {
             let s = &stages[stage];
@@ -462,6 +824,7 @@ impl EngineFarm {
                 rows: 0..s.layer.h_o(),
                 requant: s.requant,
                 tag: (img * n_stage + stage) as u64,
+                trace_parent,
                 reply: reply.clone(),
             }]);
         };
@@ -511,6 +874,7 @@ impl EngineFarm {
             stats.merge(e); // virtual engines run in parallel: cycles max, counters sum
         }
         let outputs = outputs.into_iter().map(|o| o.expect("image lost in pipeline")).collect();
+        obs::tracer().finish_with(span, format!("images={n_img} stages={n_stage}"));
         Ok(PipelineRunResult { outputs, stats, per_engine, per_stage })
     }
 }
@@ -522,6 +886,15 @@ impl Drop for EngineFarm {
         self.injector.shutdown();
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+        // Closing the canary's sender ends its recv loop after the
+        // channel drains, so every submitted sample still gets judged.
+        if let Some(mut canary) = self.canary.take() {
+            let worker = canary.worker.take();
+            drop(canary);
+            if let Some(h) = worker {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -767,5 +1140,94 @@ mod tests {
         let err = farm.run_pipeline(&stages, images).expect_err("must error, not hang");
         let msg = format!("{err:#}");
         assert!(msg.contains("trim-farm-") && msg.contains("stage 0"), "named error: {msg}");
+    }
+
+    #[test]
+    fn canary_full_sample_reads_zero_divergence() {
+        // Fast tier ≡ register oracle, so a rate-1.0 canary must judge
+        // every shard and count no divergence of either kind.
+        let mut rng = SplitMix64::new(61);
+        let layer = ConvLayer::new("cny", 10, 3, 4, 6, 1, 1);
+        let input = rand_tensor(&mut rng, 4, 10, 10);
+        let weights = rng.vec_i32(6 * 4 * 9, -8, 8);
+        let farm = EngineFarm::new(
+            FarmConfig::new(2, ArchConfig::small(3, 2, 2)).with_canary(CanaryConfig::sampled(1.0)),
+        );
+        assert!(farm.canary_enabled());
+        let r = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Auto).unwrap();
+        farm.canary_drain();
+        let rep = farm.canary_report();
+        assert_eq!(rep.sampled, r.plan.shards.len() as u64, "rate 1.0 samples every shard");
+        assert_eq!(rep.bit_divergence, 0, "fast ofmaps are bit-exact vs the oracle");
+        assert_eq!(rep.counter_divergence, 0, "fast stats are counter-exact vs the oracle");
+        assert!(rep.is_clean());
+        // ... and the same totals are visible through the farm registry.
+        assert_eq!(farm.registry().counter_value("canary.sampled"), rep.sampled);
+    }
+
+    #[test]
+    fn canary_catches_perturbed_fast_results() {
+        // The perturb hook corrupts only the copy fed to the canary —
+        // served ofmaps stay correct — and every perturbed sample must
+        // be caught as bit divergence (stats are untouched).
+        let mut rng = SplitMix64::new(67);
+        let layer = ConvLayer::new("prt", 9, 3, 3, 4, 1, 1);
+        let input = rand_tensor(&mut rng, 3, 9, 9);
+        let weights = rng.vec_i32(4 * 3 * 9, -8, 8);
+        let canary = CanaryConfig { perturb: true, ..CanaryConfig::sampled(1.0) };
+        let farm = EngineFarm::new(FarmConfig::new(2, ArchConfig::small(3, 2, 2)).with_canary(canary));
+        let r = farm.run_layer(&layer, &input, &weights).unwrap();
+        assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 4, 3, 1, 1), "serving is unaffected");
+        farm.canary_drain();
+        let rep = farm.canary_report();
+        assert!(rep.sampled > 0);
+        assert_eq!(rep.bit_divergence, rep.sampled, "every perturbed sample is caught");
+        assert_eq!(rep.counter_divergence, 0, "stats were not perturbed");
+        assert!(!rep.is_clean());
+    }
+
+    #[test]
+    fn canary_disabled_is_free_and_reports_zero() {
+        let farm = EngineFarm::new(FarmConfig::new(2, ArchConfig::small(3, 2, 2)));
+        assert!(!farm.canary_enabled());
+        farm.canary_drain(); // no-op
+        assert_eq!(farm.canary_report(), CanaryReport::default());
+    }
+
+    #[test]
+    fn canary_report_merge_and_delta() {
+        let mut a = CanaryReport { sampled: 10, bit_divergence: 1, counter_divergence: 0 };
+        let b = CanaryReport { sampled: u64::MAX, bit_divergence: 2, counter_divergence: 3 };
+        a.merge(&b);
+        assert_eq!(a.sampled, u64::MAX, "merge saturates");
+        assert_eq!(a.bit_divergence, 3);
+        let d = b.delta_since(&CanaryReport { sampled: 5, bit_divergence: 2, counter_divergence: 9 });
+        assert_eq!(d.bit_divergence, 0);
+        assert_eq!(d.counter_divergence, 0, "delta saturates at zero");
+    }
+
+    #[test]
+    fn farm_registry_tracks_jobs_depth_and_microkernels() {
+        let mut rng = SplitMix64::new(71);
+        let layer = ConvLayer::new("tel", 10, 3, 4, 6, 1, 1);
+        let input = rand_tensor(&mut rng, 4, 10, 10);
+        let weights = rng.vec_i32(6 * 4 * 9, -8, 8);
+        let farm = EngineFarm::new(FarmConfig::new(2, ArchConfig::small(3, 2, 2)));
+        let r = farm.run_layer(&layer, &input, &weights).unwrap();
+        let reg = farm.registry();
+        let jobs: u64 = (0..farm.engines())
+            .map(|i| reg.counter_value(&format!("engine{i}.jobs")))
+            .sum();
+        assert_eq!(jobs, r.plan.shards.len() as u64, "every shard is counted on some engine");
+        assert_eq!(reg.gauge_value("injector.depth"), 0, "queue drained");
+        assert!(reg.counter_value("scratch.fills") > 0, "fast tier padded at least once");
+        assert!(
+            reg.counter_value("microkernel.k3") > 0,
+            "3×3 stride-1 layer dispatches the fused K=3 arm"
+        );
+        assert_eq!(reg.counter_value("microkernel.strided"), 0);
+        let prom = reg.render_prometheus();
+        assert!(prom.contains("# TYPE injector_depth gauge"));
+        assert!(prom.contains("engine0_jobs"));
     }
 }

@@ -30,7 +30,10 @@ pub mod farm;
 pub mod shard;
 
 pub use backend::{SimBackend, SimNetSpec};
-pub use farm::{EngineFarm, FarmConfig, FarmRunResult, PipelineRunResult, PipelineStage};
+pub use farm::{
+    CanaryConfig, CanaryReport, EngineFarm, FarmConfig, FarmRunResult, PipelineRunResult,
+    PipelineStage,
+};
 pub use shard::{
     plan_filter_shards, plan_hybrid_shards, plan_row_shards, plan_shards, Shard, ShardAxis,
     ShardMode, ShardPlan,
