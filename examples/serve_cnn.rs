@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
     for max_batch in [1usize, 8] {
         let cfg = CoordinatorConfig {
             batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+            ..Default::default()
         };
         let d = dir.clone();
         let c = Coordinator::start_with(
@@ -58,6 +59,7 @@ fn main() -> anyhow::Result<()> {
                     sim_engines,
                     trim_sa::arch::ExecFidelity::Fast,
                     trim_sa::scheduler::ShardMode::Auto,
+                    0.0, // no shadow canary in the example
                 )
             },
             cfg,
@@ -75,7 +77,7 @@ fn main() -> anyhow::Result<()> {
             })
             .collect();
         for rx in pending {
-            rx.recv()?;
+            rx.recv()??;
         }
         let wall = t0.elapsed();
         let m = c.metrics();

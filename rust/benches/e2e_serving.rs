@@ -10,36 +10,96 @@
 //! ```text
 //! JSON {"bench":"e2e_serving","farms":1,"max_batch":8,"rps":...,"sim_gops":...}
 //! ```
+//!
+//! The overload sweep floods a bounded-ingress router past its admission
+//! budget (offered load × queue cap) and emits
+//! `{"kind":"overload",...,"shed_rate":...,"p99_us":...}` rows — the
+//! robustness trajectory: shed rate should rise as the cap tightens while
+//! the served tail latency stays bounded.
 #[path = "bench_harness.rs"]
 mod harness;
 use harness::header;
 use std::time::{Duration, Instant};
 use trim_sa::arch::ArchConfig;
 use trim_sa::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend, PjrtBackend, Router,
+    AdmissionConfig, BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend, PjrtBackend,
+    Router, ServeError,
 };
 use trim_sa::scheduler::{ShardMode, SimBackend, SimNetSpec};
+
+fn sim_backend() -> Box<dyn InferenceBackend> {
+    Box::new(SimBackend::with_spec(
+        2,
+        ArchConfig::small(3, 2, 1),
+        SimNetSpec::tiny(),
+        ShardMode::FilterShards,
+    ))
+}
 
 fn sim_router(farms: usize, max_batch: usize) -> anyhow::Result<Router> {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+        ..Default::default()
     };
     let coordinators: Vec<Coordinator> = (0..farms)
-        .map(|_| {
-            Coordinator::start_with(
-                move || {
-                    Ok(Box::new(SimBackend::with_spec(
-                        2,
-                        ArchConfig::small(3, 2, 1),
-                        SimNetSpec::tiny(),
-                        ShardMode::FilterShards,
-                    )) as Box<dyn InferenceBackend>)
-                },
-                cfg,
-            )
-        })
+        .map(|_| Coordinator::start_with(|| Ok(sim_backend()), cfg))
         .collect::<anyhow::Result<_>>()?;
     Router::new(coordinators)
+}
+
+/// Flood one bounded-ingress farm with `offered` back-to-back submits and
+/// report what admission shed, what resolved, and the served-tail p99.
+fn overload_config(
+    queue_cap: usize,
+    offered: usize,
+    json_lines: &mut Vec<String>,
+) -> anyhow::Result<()> {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+        admission: AdmissionConfig { queue_cap, budget_cycles: None },
+    };
+    let c = Coordinator::start_with(|| Ok(sim_backend()), cfg)?;
+    let router = Router::new(vec![c])?;
+    let len = router.input_len();
+    let t0 = Instant::now();
+    let mut shed_at_submit = 0usize;
+    let mut pending = Vec::new();
+    for i in 0..offered {
+        let img: Vec<i32> = (0..len).map(|j| ((i * 31 + j) % 256) as i32).collect();
+        match router.submit(img) {
+            Ok(r) => pending.push(r),
+            Err(e) if e.downcast_ref::<ServeError>().is_some() => shed_at_submit += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    let mut served = 0usize;
+    let mut failed = 0usize;
+    for mut r in pending {
+        match r.recv() {
+            Ok(_) => served += 1,
+            Err(e) if e.downcast_ref::<ServeError>().is_some() => failed += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    let wall = t0.elapsed();
+    let m = router.drain(Duration::from_secs(5));
+    let shed_rate = m.shed as f64 / offered as f64;
+    println!(
+        "overload queue_cap={queue_cap:<4} offered={offered:<4} shed {:>4} ({shed_rate:>5.1}% of offered)  served {served}  failed {failed}  p99 {:>9.3?}  wall {wall:>9.3?}",
+        m.shed,
+        m.p99_latency,
+        shed_rate = shed_rate * 100.0
+    );
+    json_lines.push(format!(
+        "JSON {{\"bench\":\"e2e_serving\",\"kind\":\"overload\",\"queue_cap\":{queue_cap},\
+         \"offered\":{offered},\"shed\":{},\"shed_at_submit\":{shed_at_submit},\
+         \"served\":{served},\"failed\":{failed},\"shed_rate\":{shed_rate:.4},\
+         \"p99_us\":{},\"queue_wait_p99_us_est\":{}}}",
+        m.shed,
+        m.p99_latency.as_micros(),
+        m.queue_wait.quantile(0.99)
+    ));
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -96,6 +156,12 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Overload sweep: offered load × admission budget. Tight caps must
+    // shed (nonzero shed_rate) while the served tail stays bounded.
+    for (queue_cap, offered) in [(4usize, 96usize), (16, 96), (64, 96)] {
+        overload_config(queue_cap, offered, &mut json_lines)?;
+    }
+
     // Optional PJRT sweep (the original e2e path) — skipped without
     // artifacts or with PJRT support compiled out.
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -103,6 +169,7 @@ fn main() -> anyhow::Result<()> {
         'pjrt: for max_batch in [1usize, 16] {
             let cfg = CoordinatorConfig {
                 batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+                ..Default::default()
             };
             let d = dir.clone();
             let c = match Coordinator::start_with(
@@ -121,7 +188,7 @@ fn main() -> anyhow::Result<()> {
                 .map(|i| c.submit((0..len).map(|j| ((i * 31 + j) % 256) as i32).collect()).unwrap())
                 .collect();
             for rx in rxs {
-                rx.recv()?;
+                rx.recv()??;
             }
             let rps = n_req as f64 / t0.elapsed().as_secs_f64();
             let m = c.metrics();

@@ -47,6 +47,7 @@ fn run_config(
 ) -> anyhow::Result<()> {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+        ..Default::default()
     };
     let spec = spec.clone();
     let c = Coordinator::start_with(
@@ -70,7 +71,7 @@ fn run_config(
         })
         .collect();
     for rx in pending {
-        rx.recv()?;
+        rx.recv()??;
     }
     let wall = t0.elapsed();
     let m = c.metrics();

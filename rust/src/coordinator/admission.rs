@@ -1,0 +1,311 @@
+//! Admission control: the token/cost-based policy behind the bounded
+//! ingress.
+//!
+//! The TrIM analytical cost model (the closed-form eq. (2) cycles the
+//! fast tier synthesizes per batch) gives the serving layer something a
+//! production front door rarely has: an *exact* per-request cost signal.
+//! [`AdmissionControl`] keeps an EWMA of that signal (simulated cycles
+//! per request, the same statistic the router's dispatch EWMA tracks) and
+//! an EWMA of the wall-clock service time per batch, and admits a request
+//! only while
+//!
+//! ```text
+//! depth < queue_cap                       (bounded ingress)
+//! (depth + 1) × ewma_cycles ≤ budget      (cost budget, when configured)
+//! ```
+//!
+//! where `depth` is the number of admitted-but-not-yet-executing
+//! requests. Past either bound the request is shed with
+//! [`ServeError::Overloaded`] carrying a `retry_after` hint of
+//! `depth × EWMA service time` — the expected time for the queue ahead to
+//! clear. Shedding is **synchronous** at submit: the caller learns
+//! immediately, nothing unbounded queues behind the scenes.
+//!
+//! The same struct carries the drain state ([`AdmissionControl::begin_drain`]):
+//! draining closes admission (submits fail with [`ServeError::Shutdown`])
+//! and arms a deadline after which the engine loop rejects, rather than
+//! executes, whatever is still queued.
+
+use super::error::ServeError;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// EWMA smoothing factor (`new = old + α·(x − old)`) shared by the
+/// admission cost/service estimators and the router's dispatch EWMA:
+/// small enough to ride out batch-size noise, large enough that the
+/// first few observations dominate a cold start.
+pub const EWMA_ALPHA: f64 = 0.25;
+
+/// Lock-free EWMA of a nonnegative signal; the f64 is stored as bits,
+/// `None` until the first observation. [`Ewma::reset`] returns it to the
+/// unobserved state — the router uses this to mark a failing farm cold.
+#[derive(Debug, Default)]
+pub struct Ewma(AtomicU64);
+
+impl Ewma {
+    const UNSET: u64 = 0;
+
+    pub fn get(&self) -> Option<f64> {
+        match self.0.load(Ordering::Acquire) {
+            Self::UNSET => None,
+            bits => Some(f64::from_bits(bits)),
+        }
+    }
+
+    /// Fold one observation in. Races between concurrent observers may
+    /// drop an update; the EWMA is a heuristic, so last-writer-wins is
+    /// fine. Samples clamp at ≥ 1 so the stored bits never collide with
+    /// the `UNSET` sentinel.
+    pub fn observe(&self, sample: f64) {
+        let next = match self.get() {
+            None => sample,
+            Some(old) => old + EWMA_ALPHA * (sample - old),
+        };
+        self.0.store(f64::to_bits(next.max(1.0)), Ordering::Release);
+    }
+
+    /// Forget everything: back to the unobserved state.
+    pub fn reset(&self) {
+        self.0.store(Self::UNSET, Ordering::Release);
+    }
+}
+
+/// Admission policy knobs (`trim serve --queue-cap N --budget-cycles X`).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Maximum admitted-but-not-executing requests — the bounded ingress
+    /// queue depth. Submits past this shed with `Overloaded`.
+    pub queue_cap: usize,
+    /// Cost budget in simulated cycles: shed when `(depth + 1) × EWMA
+    /// per-request cycles` would exceed it. `None` disables the cost
+    /// term (the queue cap still bounds the ingress). Only
+    /// cost-reporting backends (the sim farm) feed the EWMA; against
+    /// PJRT/mock backends the term never triggers.
+    pub budget_cycles: Option<f64>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self { queue_cap: 256, budget_cycles: None }
+    }
+}
+
+/// Shared admission + drain state between the submit side (any caller
+/// thread) and the engine loop (which feeds the estimators back).
+#[derive(Debug, Default)]
+pub struct AdmissionControl {
+    cfg: AdmissionConfig,
+    /// Admitted requests not yet pulled into an executing batch.
+    depth: AtomicUsize,
+    /// EWMA of simulated cycles per request (from reported batch costs).
+    cost_cycles: Ewma,
+    /// EWMA of wall-clock backend service time per batch, µs.
+    service_us: Ewma,
+    /// Drain flag: set once, never cleared — admission stays closed.
+    draining: AtomicBool,
+    /// Instant after which the engine loop stops executing queued work
+    /// and rejects it with `Shutdown` instead.
+    drain_deadline: Mutex<Option<Instant>>,
+}
+
+impl AdmissionControl {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        Self { cfg, ..Self::default() }
+    }
+
+    pub fn config(&self) -> AdmissionConfig {
+        self.cfg
+    }
+
+    /// Currently admitted-but-not-executing requests.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    /// Admit one request or shed it. On `Ok` the queue depth slot is
+    /// held until the engine loop pulls the request
+    /// ([`AdmissionControl::release`]); a caller whose enqueue fails
+    /// after admission must release the slot itself.
+    pub fn try_admit(&self) -> Result<(), ServeError> {
+        if self.draining.load(Ordering::Acquire) {
+            return Err(ServeError::Shutdown);
+        }
+        let prev = self.depth.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.cfg.queue_cap {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            return Err(ServeError::Overloaded { retry_after: self.retry_after() });
+        }
+        if let (Some(budget), Some(cost)) = (self.cfg.budget_cycles, self.cost_cycles.get()) {
+            if (prev + 1) as f64 * cost > budget {
+                self.depth.fetch_sub(1, Ordering::AcqRel);
+                return Err(ServeError::Overloaded { retry_after: self.retry_after() });
+            }
+        }
+        Ok(())
+    }
+
+    /// Release `n` queue slots (requests pulled into a batch, or a
+    /// failed enqueue after `try_admit`).
+    pub fn release(&self, n: usize) {
+        // Saturating: a release can never underflow below zero even if
+        // racing with a concurrent failed-admit rollback.
+        let mut cur = self.depth.load(Ordering::Acquire);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self.depth.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return,
+                Err(observed) => cur = observed,
+            }
+        }
+    }
+
+    /// Feed the estimators from one executed batch: the batch's reported
+    /// simulated cycles (when the backend measures them) and its
+    /// wall-clock service time.
+    pub fn observe_batch(&self, batch_size: usize, sim_cycles: Option<u64>, service: Duration) {
+        let n = batch_size.max(1) as f64;
+        if let Some(c) = sim_cycles {
+            self.cost_cycles.observe(c as f64 / n);
+        }
+        self.service_us.observe(service.as_micros() as f64);
+    }
+
+    /// EWMA of simulated cycles per request (`None` until a
+    /// cost-reporting backend has executed a batch).
+    pub fn cost_estimate(&self) -> Option<f64> {
+        self.cost_cycles.get()
+    }
+
+    /// EWMA of wall-clock service time per batch — the deadline-aware
+    /// batcher's estimate of "how long will the next batch take".
+    pub fn service_estimate(&self) -> Duration {
+        Duration::from_micros(self.service_us.get().unwrap_or(0.0) as u64)
+    }
+
+    /// Retry hint for a shed request: the expected time for the queue
+    /// ahead to clear (`depth × EWMA service time per batch`, floored at
+    /// 1 ms when no estimate exists yet).
+    pub fn retry_after(&self) -> Duration {
+        let per_batch = self.service_us.get().unwrap_or(1_000.0);
+        let est = self.depth() as f64 * per_batch;
+        Duration::from_micros(est.max(1_000.0) as u64)
+    }
+
+    /// Close admission and arm the drain deadline. Idempotent: the
+    /// earliest deadline wins so a `Router::drain` after a
+    /// `Coordinator::shutdown` cannot extend the window.
+    pub fn begin_drain(&self, by: Instant) {
+        self.draining.store(true, Ordering::Release);
+        let mut g = self.drain_deadline.lock().unwrap();
+        *g = Some(match *g {
+            Some(existing) => existing.min(by),
+            None => by,
+        });
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// True once draining *and* past the drain deadline — the engine
+    /// loop rejects queued batches with `Shutdown` from here on.
+    pub fn drain_expired(&self) -> bool {
+        if !self.is_draining() {
+            return false;
+        }
+        match *self.drain_deadline.lock().unwrap() {
+            Some(by) => Instant::now() >= by,
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_follows_observations_and_resets() {
+        let e = Ewma::default();
+        assert_eq!(e.get(), None);
+        e.observe(100.0);
+        assert_eq!(e.get(), Some(100.0));
+        e.observe(200.0);
+        let v = e.get().unwrap();
+        assert!((v - (100.0 + EWMA_ALPHA * 100.0)).abs() < 1e-9);
+        e.reset();
+        assert_eq!(e.get(), None, "reset returns to the unobserved state");
+        e.observe(0.0);
+        assert_eq!(e.get(), Some(1.0), "samples clamp at 1 — never the UNSET bits");
+    }
+
+    #[test]
+    fn queue_cap_bounds_admission() {
+        let a = AdmissionControl::new(AdmissionConfig { queue_cap: 2, budget_cycles: None });
+        assert!(a.try_admit().is_ok());
+        assert!(a.try_admit().is_ok());
+        let e = a.try_admit().unwrap_err();
+        assert!(matches!(e, ServeError::Overloaded { .. }), "past the cap sheds, got {e:?}");
+        assert_eq!(a.depth(), 2, "failed admit must not leak a slot");
+        a.release(1);
+        assert!(a.try_admit().is_ok(), "released slot admits again");
+    }
+
+    #[test]
+    fn cost_budget_sheds_before_the_cap() {
+        let a = AdmissionControl::new(AdmissionConfig {
+            queue_cap: 1000,
+            budget_cycles: Some(250.0),
+        });
+        // No cost observed yet: the budget term can't trigger.
+        assert!(a.try_admit().is_ok());
+        a.release(1);
+        // 100 cycles/request EWMA → 3rd concurrent request would be
+        // (2+1)×100 = 300 > 250 → shed.
+        a.observe_batch(1, Some(100), Duration::from_micros(500));
+        assert!(a.try_admit().is_ok());
+        assert!(a.try_admit().is_ok());
+        assert!(matches!(a.try_admit(), Err(ServeError::Overloaded { .. })));
+        assert_eq!(a.depth(), 2);
+    }
+
+    #[test]
+    fn retry_after_scales_with_queue_depth() {
+        let a = AdmissionControl::new(AdmissionConfig { queue_cap: 100, budget_cycles: None });
+        let base = a.retry_after();
+        assert!(base >= Duration::from_millis(1), "floor with no estimate");
+        a.observe_batch(4, None, Duration::from_millis(10));
+        for _ in 0..10 {
+            a.try_admit().unwrap();
+        }
+        let loaded = a.retry_after();
+        assert!(loaded >= Duration::from_millis(100), "10 × 10 ms queue ahead, got {loaded:?}");
+    }
+
+    #[test]
+    fn release_saturates_at_zero() {
+        let a = AdmissionControl::new(AdmissionConfig::default());
+        a.try_admit().unwrap();
+        a.release(100);
+        assert_eq!(a.depth(), 0);
+        assert!(a.try_admit().is_ok());
+    }
+
+    #[test]
+    fn drain_closes_admission_and_earliest_deadline_wins() {
+        let a = AdmissionControl::new(AdmissionConfig::default());
+        assert!(!a.is_draining() && !a.drain_expired());
+        let now = Instant::now();
+        a.begin_drain(now + Duration::from_secs(60));
+        assert!(a.is_draining());
+        assert!(!a.drain_expired(), "deadline is in the future");
+        assert!(matches!(a.try_admit(), Err(ServeError::Shutdown)));
+        // A second, earlier drain tightens the deadline.
+        a.begin_drain(now);
+        assert!(a.drain_expired());
+        // ... and a later one cannot loosen it back.
+        a.begin_drain(now + Duration::from_secs(60));
+        assert!(a.drain_expired());
+    }
+}

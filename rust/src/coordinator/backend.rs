@@ -384,6 +384,64 @@ impl InferenceBackend for MockBackend {
     }
 }
 
+/// Fault-injecting test double: serves [`MockBackend`] logits but fails
+/// (or panics on) every `fail_every`-th `infer_batch` call. Pins the
+/// retry/backoff, error-taxonomy and drain-under-failure behaviour of the
+/// coordinator and router without needing a real flaky backend.
+pub struct FaultInjectingBackend {
+    inner: MockBackend,
+    /// Every `fail_every`-th call (1-based) is faulted; `0` disables
+    /// injection entirely. `1` faults every call.
+    pub fail_every: u64,
+    /// Panic on the faulted calls instead of returning `Err` — exercises
+    /// the engine loop's `catch_unwind` containment.
+    pub panic_instead: bool,
+}
+
+impl FaultInjectingBackend {
+    pub fn new(input_len: usize, classes: usize, fail_every: u64) -> Self {
+        Self { inner: MockBackend::new(input_len, classes), fail_every, panic_instead: false }
+    }
+
+    /// Builder: make the injected faults panics rather than `Err`s.
+    pub fn panicking(mut self) -> Self {
+        self.panic_instead = true;
+        self
+    }
+
+    /// The logits a non-faulted call produces (exposed for assertions).
+    pub fn expected_logits(&self, image: &[i32]) -> Vec<i32> {
+        self.inner.expected_logits(image)
+    }
+}
+
+impl InferenceBackend for FaultInjectingBackend {
+    fn input_len(&self) -> usize {
+        self.inner.input_len
+    }
+
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchReport> {
+        self.inner.calls += 1;
+        if self.fail_every > 0 && self.inner.calls % self.fail_every == 0 {
+            if self.panic_instead {
+                panic!("injected panic on call {}", self.inner.calls);
+            }
+            anyhow::bail!("injected fault on call {}", self.inner.calls);
+        }
+        if !self.inner.delay.is_zero() {
+            std::thread::sleep(self.inner.delay * images.len() as u32);
+        }
+        Ok(BatchReport::functional(
+            images.iter().map(|img| self.inner.expected_logits(img)).collect(),
+        ))
+    }
+
+    fn describe(&self) -> String {
+        let mode = if self.panic_instead { "panic" } else { "err" };
+        format!("fault-injecting[every={} mode={mode}]", self.fail_every)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -453,6 +511,32 @@ mod tests {
         assert_eq!(r.outputs[1], b.expected_logits(&i2));
         assert!(r.cost.is_none(), "mock has no cost model");
         assert_eq!(b.calls, 1);
+    }
+
+    #[test]
+    fn fault_injection_faults_every_nth_call() {
+        let mut b = FaultInjectingBackend::new(4, 3, 2);
+        let img = vec![1, 2, 3, 4];
+        let ok = b.infer_batch(&[&img]).unwrap();
+        assert_eq!(ok.outputs[0], b.expected_logits(&img));
+        let err = b.infer_batch(&[&img]).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "got {err:#}");
+        assert!(b.infer_batch(&[&img]).is_ok(), "call 3 recovers");
+        assert!(b.infer_batch(&[&img]).is_err(), "call 4 faults again");
+        // fail_every = 0 disables injection
+        let mut never = FaultInjectingBackend::new(4, 3, 0);
+        for _ in 0..8 {
+            assert!(never.infer_batch(&[&img]).is_ok());
+        }
+    }
+
+    #[test]
+    fn fault_injection_can_panic_instead() {
+        let mut b = FaultInjectingBackend::new(4, 3, 1).panicking();
+        assert!(b.describe().contains("panic"));
+        let img = vec![0, 0, 0, 0];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.infer_batch(&[&img])));
+        assert!(r.is_err(), "injected panic must unwind");
     }
 
     #[test]

@@ -1,15 +1,36 @@
-//! Dynamic batcher: time-or-size batching over the ingress queue.
+//! Deadline-aware continuous batcher over the bounded ingress queue.
 //!
-//! Policy (the standard serving trade-off): a batch closes when it reaches
-//! `max_batch` requests OR `max_wait` has elapsed since its first request
-//! arrived — small batches under low load (latency), full batches under
-//! high load (throughput). The TrIM engine analogy: a batch is the set of
-//! ifmaps sharing one weight-resident pass, like the paper's batch-3/4
-//! normalisation reuses loaded weights across images.
+//! Policy: a batch closes when it reaches `max_batch` requests OR its
+//! close time passes, where the close time is
+//!
+//! ```text
+//! close_by = min( first_arrival + max_wait,
+//!                 min_i (deadline_i − EWMA service time) )
+//! ```
+//!
+//! — the standard time-or-size trade-off (small batches under low load
+//! for latency, full batches under high load for throughput), tightened
+//! so that every deadline-carrying member still makes its deadline after
+//! one more estimated backend pass. Requests whose deadline cannot be met
+//! even by an immediate pass are rejected up front with
+//! [`ServeError::DeadlineExceeded`] rather than executed uselessly.
+//!
+//! The batcher is also the release point of the admission queue: pulling
+//! a request off the ingress channel frees its
+//! [`super::AdmissionControl`] depth slot, so "queue depth" always means
+//! admitted-but-not-yet-batched.
+//!
+//! The TrIM engine analogy: a batch is the set of ifmaps sharing one
+//! weight-resident pass, like the paper's batch-3/4 normalisation reuses
+//! loaded weights across images.
 
+use super::admission::AdmissionControl;
+use super::error::ServeError;
+use super::metrics::ServeMetrics;
 use super::request::InferenceRequest;
 use crate::obs;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batching policy knobs.
@@ -29,66 +50,174 @@ impl Default for BatcherConfig {
 pub struct Batcher {
     cfg: BatcherConfig,
     rx: Receiver<InferenceRequest>,
+    admission: Arc<AdmissionControl>,
+    metrics: Arc<ServeMetrics>,
 }
 
 impl Batcher {
-    pub fn new(cfg: BatcherConfig, rx: Receiver<InferenceRequest>) -> Self {
+    pub fn new(
+        cfg: BatcherConfig,
+        rx: Receiver<InferenceRequest>,
+        admission: Arc<AdmissionControl>,
+        metrics: Arc<ServeMetrics>,
+    ) -> Self {
         assert!(cfg.max_batch >= 1);
-        Self { cfg, rx }
+        Self { cfg, rx, admission, metrics }
     }
 
-    /// Block for the next batch. Returns `None` when the ingress channel
-    /// is closed and drained (shutdown). Each formed batch emits a
-    /// `batch.formed` trace event naming which bound closed it (`size`,
-    /// `deadline` or `shutdown`).
-    pub fn next_batch(&self) -> Option<Vec<InferenceRequest>> {
-        // Block indefinitely for the first request of the batch.
-        let first = self.rx.recv().ok()?;
-        let deadline = Instant::now() + self.cfg.max_wait;
-        let mut batch = vec![first];
-        let mut cause = "size";
-        while batch.len() < self.cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                cause = "deadline";
-                break;
-            }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(req) => batch.push(req),
-                Err(RecvTimeoutError::Timeout) => {
-                    cause = "deadline";
-                    break;
-                }
-                Err(RecvTimeoutError::Disconnected) => {
-                    cause = "shutdown";
-                    break;
-                }
-            }
+    /// Reject a request whose deadline cannot be met even by an immediate
+    /// backend pass (`now + estimated service > deadline`); returns the
+    /// request when it is still viable. Rejection resolves the caller
+    /// with `DeadlineExceeded` and finishes the request span.
+    fn screen(&self, req: InferenceRequest, est_service: Duration) -> Option<InferenceRequest> {
+        let Some(deadline) = req.deadline else { return Some(req) };
+        let projected = Instant::now() + est_service;
+        if projected <= deadline {
+            return Some(req);
         }
-        obs::tracer().event("batch.formed", 0, format!("n={} cause={cause}", batch.len()));
-        Some(batch)
+        let missed_by = projected.saturating_duration_since(deadline);
+        self.metrics.record_deadline_expired();
+        let InferenceRequest { id, span, reply, .. } = req;
+        let _ = reply.send(Err(ServeError::DeadlineExceeded { missed_by }));
+        obs::tracer().finish_with(
+            span,
+            format!("id={id} err=deadline_exceeded missed_by_us={}", missed_by.as_micros()),
+        );
+        None
+    }
+
+    /// Block for the next non-empty batch. Returns `None` when the
+    /// ingress channel is closed and drained (shutdown). Each formed
+    /// batch emits a `batch.formed` trace event naming which bound closed
+    /// it (`size`, `wait`, `deadline-budget`, `drain` or `shutdown`).
+    pub fn next_batch(&self) -> Option<Vec<InferenceRequest>> {
+        'outer: loop {
+            // Block indefinitely for the first request of the batch; its
+            // depth slot is released the moment it leaves the queue.
+            let first = self.rx.recv().ok()?;
+            self.admission.release(1);
+            let est_service = self.admission.service_estimate();
+            let Some(first) = self.screen(first, est_service) else {
+                // The whole prospective batch expired before it began —
+                // go back to blocking for a fresh first request.
+                continue 'outer;
+            };
+            let arrival = Instant::now();
+            let mut close_by = arrival + self.cfg.max_wait;
+            let mut tightened = false;
+            let mut batch = Vec::with_capacity(self.cfg.max_batch);
+            // Tighten the close time so this member still makes its
+            // deadline after one more estimated backend pass.
+            fn push(
+                batch: &mut Vec<InferenceRequest>,
+                req: InferenceRequest,
+                est_service: Duration,
+                close_by: &mut Instant,
+                tightened: &mut bool,
+            ) {
+                if let Some(t) = req.deadline.and_then(|d| d.checked_sub(est_service)) {
+                    if t < *close_by {
+                        *close_by = t;
+                        *tightened = true;
+                    }
+                }
+                batch.push(req);
+            }
+            push(&mut batch, first, est_service, &mut close_by, &mut tightened);
+            let mut cause = "size";
+            while batch.len() < self.cfg.max_batch {
+                if self.admission.is_draining() {
+                    // Drain flush: take whatever is already queued, never
+                    // wait for more load that admission no longer accepts.
+                    match self.rx.try_recv() {
+                        Ok(req) => {
+                            self.admission.release(1);
+                            if let Some(req) = self.screen(req, est_service) {
+                                push(&mut batch, req, est_service, &mut close_by, &mut tightened);
+                            }
+                        }
+                        Err(TryRecvError::Empty) => {
+                            cause = "drain";
+                            break;
+                        }
+                        Err(TryRecvError::Disconnected) => {
+                            cause = "shutdown";
+                            break;
+                        }
+                    }
+                    continue;
+                }
+                let now = Instant::now();
+                if now >= close_by {
+                    cause = if tightened { "deadline-budget" } else { "wait" };
+                    break;
+                }
+                match self.rx.recv_timeout(close_by - now) {
+                    Ok(req) => {
+                        self.admission.release(1);
+                        if let Some(req) = self.screen(req, est_service) {
+                            push(&mut batch, req, est_service, &mut close_by, &mut tightened);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        cause = if tightened { "deadline-budget" } else { "wait" };
+                        break;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        cause = "shutdown";
+                        break;
+                    }
+                }
+            }
+            if batch.is_empty() {
+                // Everything pulled this round expired. Either the channel
+                // is gone (shutdown) or we go back for a fresh first.
+                if cause == "shutdown" {
+                    return None;
+                }
+                continue 'outer;
+            }
+            obs::tracer().event("batch.formed", 0, format!("n={} cause={cause}", batch.len()));
+            return Some(batch);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::error::ServeResult;
     use std::sync::mpsc;
     use std::time::Instant;
 
-    fn req(id: u64) -> (InferenceRequest, mpsc::Receiver<super::super::request::InferenceResponse>) {
+    fn harness(cfg: BatcherConfig) -> (mpsc::Sender<InferenceRequest>, Batcher, Arc<AdmissionControl>) {
+        let (tx, rx) = mpsc::channel();
+        let admission = Arc::new(AdmissionControl::default());
+        let b = Batcher::new(cfg, rx, admission.clone(), Arc::new(ServeMetrics::new()));
+        (tx, b, admission)
+    }
+
+    fn req(id: u64, deadline: Option<Instant>) -> (InferenceRequest, mpsc::Receiver<ServeResult>) {
         let (tx, rx) = mpsc::channel();
         let span = obs::tracer().begin("serve.request", 0);
-        (InferenceRequest { id, image: vec![], enqueued_at: Instant::now(), span, reply: tx }, rx)
+        let r = InferenceRequest {
+            id,
+            image: vec![],
+            enqueued_at: Instant::now(),
+            deadline,
+            span,
+            reply: tx,
+        };
+        (r, rx)
     }
 
     #[test]
     fn size_bound_closes_batch() {
-        let (tx, rx) = mpsc::channel();
-        let b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(5) }, rx);
+        let (tx, b, _) =
+            harness(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(5) });
         let keep: Vec<_> = (0..5)
             .map(|i| {
-                let (r, rv) = req(i);
+                let (r, rv) = req(i, None);
                 tx.send(r).unwrap();
                 rv
             })
@@ -103,9 +232,9 @@ mod tests {
 
     #[test]
     fn time_bound_closes_batch() {
-        let (tx, rx) = mpsc::channel();
-        let b = Batcher::new(BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(10) }, rx);
-        let (r, _rv) = req(7);
+        let (tx, b, _) =
+            harness(BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(10) });
+        let (r, _rv) = req(7, None);
         tx.send(r).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
@@ -115,9 +244,77 @@ mod tests {
 
     #[test]
     fn shutdown_returns_none() {
-        let (tx, rx) = mpsc::channel::<InferenceRequest>();
-        let b = Batcher::new(BatcherConfig::default(), rx);
+        let (tx, b, _) = harness(BatcherConfig::default());
         drop(tx);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn pulling_requests_releases_admission_slots() {
+        let (tx, b, admission) =
+            harness(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            admission.try_admit().unwrap();
+            let (r, rv) = req(i, None);
+            tx.send(r).unwrap();
+            keep.push(rv);
+        }
+        assert_eq!(admission.depth(), 3);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(admission.depth(), 0, "batched requests freed their queue slots");
+        drop(keep);
+    }
+
+    #[test]
+    fn expired_request_rejected_up_front() {
+        let (tx, b, _) =
+            harness(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) });
+        let (dead, dead_rx) = req(0, Some(Instant::now()));
+        let (live, _live_rx) = req(1, Some(Instant::now() + Duration::from_secs(60)));
+        std::thread::sleep(Duration::from_millis(2)); // let the deadline lapse
+        tx.send(dead).unwrap();
+        tx.send(live).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        match dead_rx.recv().unwrap() {
+            Err(ServeError::DeadlineExceeded { .. }) => {}
+            other => panic!("expired request must resolve DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_tightens_the_close_time() {
+        let (tx, b, _) =
+            harness(BatcherConfig { max_batch: 100, max_wait: Duration::from_secs(30) });
+        let (r, _rv) = req(0, Some(Instant::now() + Duration::from_millis(20)));
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "a 20 ms deadline must close the batch long before max_wait"
+        );
+    }
+
+    #[test]
+    fn drain_flushes_queued_requests_without_waiting() {
+        let (tx, b, admission) =
+            harness(BatcherConfig { max_batch: 100, max_wait: Duration::from_secs(30) });
+        admission.begin_drain(Instant::now() + Duration::from_secs(60));
+        let keep: Vec<_> = (0..2)
+            .map(|i| {
+                let (r, rv) = req(i, None);
+                tx.send(r).unwrap();
+                rv
+            })
+            .collect();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2, "drain flush takes everything queued");
+        assert!(t0.elapsed() < Duration::from_secs(5), "drain must not wait out max_wait");
+        drop(keep);
     }
 }

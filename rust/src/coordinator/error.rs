@@ -1,0 +1,111 @@
+//! Typed serving errors — the front door's error taxonomy.
+//!
+//! Every request submitted to the serving stack resolves with either an
+//! [`super::InferenceResponse`] or one of these variants; the old
+//! empty-logits failure sentinel is gone. The variants map one-to-one
+//! onto the production failure modes of the request path:
+//!
+//! * [`ServeError::Overloaded`] — admission control shed the request
+//!   before it entered the queue (bounded ingress full, or queue depth ×
+//!   EWMA cost past the configured budget). Carries a `retry_after` hint
+//!   derived from the current queue depth and the EWMA service time.
+//! * [`ServeError::DeadlineExceeded`] — the request's deadline budget
+//!   cannot be met: either it was already expired at submit, or the
+//!   deadline-aware batcher determined at batch formation that even an
+//!   immediate execution would miss it.
+//! * [`ServeError::EngineFailed`] — the backend failed (or panicked on)
+//!   the batch this request rode in. The [`super::Router`] retries these
+//!   on the next-cheapest farm with capped exponential backoff.
+//! * [`ServeError::Shutdown`] — the coordinator is draining; admission
+//!   is closed and queued requests past the drain deadline are rejected.
+//!
+//! `ServeError` implements [`std::error::Error`], so it travels inside
+//! [`anyhow::Error`] and callers recover the typed variant with
+//! `err.downcast_ref::<ServeError>()`.
+
+use std::time::Duration;
+
+/// Per-request result type flowing back over the reply channel.
+pub type ServeResult = Result<super::InferenceResponse, ServeError>;
+
+/// Why a request could not be served (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control shed the request; retry after the hint.
+    Overloaded { retry_after: Duration },
+    /// The request's deadline budget cannot be met; `missed_by` is the
+    /// estimated overshoot at the point of rejection.
+    DeadlineExceeded { missed_by: Duration },
+    /// The backend failed or panicked on this request's batch.
+    EngineFailed { reason: String },
+    /// The coordinator is draining / shut down; admission is closed.
+    Shutdown,
+}
+
+impl ServeError {
+    /// Stable short name, used in metrics details and HTTP error bodies.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Self::Overloaded { .. } => "overloaded",
+            Self::DeadlineExceeded { .. } => "deadline_exceeded",
+            Self::EngineFailed { .. } => "engine_failed",
+            Self::Shutdown => "shutdown",
+        }
+    }
+
+    /// True when a retry (possibly on another farm) may succeed — the
+    /// router's retry loop only acts on these.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Self::EngineFailed { .. })
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Overloaded { retry_after } => {
+                write!(f, "overloaded: admission shed the request (retry after {retry_after:?})")
+            }
+            Self::DeadlineExceeded { missed_by } => {
+                write!(f, "deadline exceeded: would miss the budget by ≈{missed_by:?}")
+            }
+            Self::EngineFailed { reason } => write!(f, "engine failed: {reason}"),
+            Self::Shutdown => write!(f, "shutting down: admission is closed"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_and_display_are_stable() {
+        let o = ServeError::Overloaded { retry_after: Duration::from_millis(5) };
+        assert_eq!(o.kind(), "overloaded");
+        assert!(o.to_string().contains("retry after"));
+        let d = ServeError::DeadlineExceeded { missed_by: Duration::from_micros(10) };
+        assert_eq!(d.kind(), "deadline_exceeded");
+        let e = ServeError::EngineFailed { reason: "boom".into() };
+        assert_eq!(e.kind(), "engine_failed");
+        assert!(e.to_string().contains("boom"));
+        assert_eq!(ServeError::Shutdown.kind(), "shutdown");
+    }
+
+    #[test]
+    fn only_engine_failures_are_retryable() {
+        assert!(ServeError::EngineFailed { reason: String::new() }.is_retryable());
+        assert!(!ServeError::Shutdown.is_retryable());
+        assert!(!ServeError::Overloaded { retry_after: Duration::ZERO }.is_retryable());
+        assert!(!ServeError::DeadlineExceeded { missed_by: Duration::ZERO }.is_retryable());
+    }
+
+    #[test]
+    fn travels_through_anyhow_and_downcasts() {
+        let err: anyhow::Error = ServeError::Overloaded { retry_after: Duration::ZERO }.into();
+        let back = err.downcast_ref::<ServeError>().expect("typed error must downcast");
+        assert_eq!(back.kind(), "overloaded");
+    }
+}

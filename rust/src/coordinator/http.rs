@@ -1,0 +1,435 @@
+//! Thin std-only HTTP/JSON ingress over the [`Router`] — the production
+//! front door's network face, hand-rolled on `std::net::TcpListener` so
+//! serving needs **zero** new dependencies.
+//!
+//! Endpoints (`trim serve --http PORT`):
+//!
+//! * `POST /infer` — body `{"image":[i32,…],"deadline_ms":N}`
+//!   (`deadline_ms` optional). Replies `200` with
+//!   `{"id","class","logits","latency_us","batch_size","deadline_slack_us"}`,
+//!   or the typed [`ServeError`] mapped onto HTTP: `429 Too Many
+//!   Requests` + `Retry-After` for `Overloaded`, `504` for
+//!   `DeadlineExceeded`, `500` for `EngineFailed`, `503` for `Shutdown`.
+//! * `GET /metrics` — the Prometheus text exposition of the merged
+//!   [`MetricsSnapshot`](super::MetricsSnapshot).
+//! * `GET /healthz` — `200 ok` while admitting, `503 draining` once a
+//!   drain has begun (load balancers stop sending traffic before the
+//!   drain deadline rejects it).
+//!
+//! Deliberately minimal: HTTP/1.1 with `Connection: close`, one request
+//! per connection, a detached thread per connection (connections are
+//! short-lived and bounded by a read timeout), and a hand-rolled JSON
+//! field scanner rather than a parser — enough for the serving API and
+//! for `curl`, not a general web server.
+
+use super::error::ServeError;
+use super::router::Router;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Largest accepted request body (a flat int32 image as JSON text).
+const MAX_BODY_BYTES: usize = 4 << 20;
+/// Per-connection read timeout: a stalled client frees its thread.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The running HTTP ingress; dropping it (or calling
+/// [`HttpServer::stop`]) stops accepting. In-flight connection threads
+/// finish their one request on their own.
+pub struct HttpServer {
+    addr: SocketAddr,
+    running: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `127.0.0.1:port` (`port` 0 picks a free port — see
+    /// [`HttpServer::local_addr`]) and start the accept thread.
+    pub fn start(port: u16, router: Arc<Router>) -> Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding HTTP ingress on 127.0.0.1:{port}"))?;
+        let addr = listener.local_addr()?;
+        let running = Arc::new(AtomicBool::new(true));
+        let accept_running = running.clone();
+        let accept = std::thread::Builder::new()
+            .name("trim-http".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if !accept_running.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let router = router.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("trim-http-conn".into())
+                        .spawn(move || handle_connection(stream, &router));
+                }
+            })
+            .expect("spawning HTTP accept thread");
+        Ok(Self { addr, running, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and join the accept thread
+    /// (idempotent). Does not touch the router — pair with
+    /// [`Router::drain`] for a full graceful shutdown.
+    pub fn stop(&mut self) {
+        if !self.running.swap(false, Ordering::AcqRel) {
+            return;
+        }
+        // Poke the blocking accept() awake so the loop observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn handle_connection(stream: TcpStream, router: &Router) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let mut reader = BufReader::new(stream);
+    let (status, content_type, extra_header, body) = match read_request(&mut reader) {
+        Ok(req) => route(router, &req),
+        Err(e) => (400, "application/json", None, json_error("bad_request", &format!("{e:#}"))),
+    };
+    let mut stream = reader.into_inner();
+    let _ = write_response(&mut stream, status, content_type, extra_header.as_deref(), &body);
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request> {
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_string();
+    let path = parts.next().context("request line missing path")?.to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("reading header")?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().context("bad Content-Length")?;
+        }
+    }
+    anyhow::ensure!(content_length <= MAX_BODY_BYTES, "body too large ({content_length} bytes)");
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("reading body")?;
+    Ok(Request { method, path, body })
+}
+
+fn route(router: &Router, req: &Request) -> (u16, &'static str, Option<String>, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            if router.is_draining() {
+                (503, "text/plain", None, "draining\n".into())
+            } else {
+                (200, "text/plain", None, "ok\n".into())
+            }
+        }
+        ("GET", "/metrics") => {
+            (200, "text/plain; version=0.0.4", None, router.metrics().render_prometheus())
+        }
+        ("POST", "/infer") => infer(router, &req.body),
+        ("GET" | "PUT" | "DELETE" | "HEAD", "/infer") => (
+            405,
+            "application/json",
+            None,
+            json_error("method_not_allowed", "use POST /infer"),
+        ),
+        _ => (404, "application/json", None, json_error("not_found", &req.path)),
+    }
+}
+
+fn infer(router: &Router, body: &[u8]) -> (u16, &'static str, Option<String>, String) {
+    let bad = |detail: &str| (400, "application/json", None, json_error("bad_request", detail));
+    let Ok(text) = std::str::from_utf8(body) else { return bad("body is not UTF-8") };
+    let (image, deadline_ms) = match parse_infer_body(text) {
+        Ok(p) => p,
+        Err(e) => return bad(&format!("{e:#}")),
+    };
+    let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+    match router.submit_with(image, deadline).and_then(|mut r| r.recv()) {
+        Ok(resp) => {
+            let logits =
+                resp.logits.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",");
+            let class = resp.class.map_or("null".to_string(), |c| c.to_string());
+            let slack = resp
+                .deadline_slack
+                .map_or("null".to_string(), |s| s.as_micros().to_string());
+            (
+                200,
+                "application/json",
+                None,
+                format!(
+                    "{{\"id\":{},\"class\":{class},\"logits\":[{logits}],\"latency_us\":{},\
+                     \"batch_size\":{},\"deadline_slack_us\":{slack}}}\n",
+                    resp.id,
+                    resp.latency.as_micros(),
+                    resp.batch_size,
+                ),
+            )
+        }
+        Err(e) => match e.downcast_ref::<ServeError>() {
+            Some(se @ ServeError::Overloaded { retry_after }) => {
+                let secs = retry_after.as_secs_f64().ceil().max(1.0) as u64;
+                (
+                    429,
+                    "application/json",
+                    Some(format!("Retry-After: {secs}")),
+                    json_error(se.kind(), &se.to_string()),
+                )
+            }
+            Some(se @ ServeError::DeadlineExceeded { .. }) => {
+                (504, "application/json", None, json_error(se.kind(), &se.to_string()))
+            }
+            Some(se @ ServeError::Shutdown) => {
+                (503, "application/json", None, json_error(se.kind(), &se.to_string()))
+            }
+            Some(se @ ServeError::EngineFailed { .. }) => {
+                (500, "application/json", None, json_error(se.kind(), &se.to_string()))
+            }
+            // Untyped errors are submit-side validation (wrong image size).
+            None => bad(&format!("{e:#}")),
+        },
+    }
+}
+
+/// Scan the two fields the ingress accepts out of a JSON body:
+/// `"image":[i32,…]` (required) and `"deadline_ms":N` (optional).
+fn parse_infer_body(s: &str) -> Result<(Vec<i32>, Option<u64>)> {
+    let key = "\"image\"";
+    let at = s.find(key).context("missing \"image\" field")?;
+    let rest = &s[at + key.len()..];
+    let open = rest.find('[').context("\"image\" is not an array")?;
+    let close = rest[open..].find(']').context("unterminated \"image\" array")? + open;
+    let mut image = Vec::new();
+    for tok in rest[open + 1..close].split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        image.push(tok.parse::<i32>().with_context(|| format!("bad image element {tok:?}"))?);
+    }
+    let deadline_ms = match s.find("\"deadline_ms\"") {
+        None => None,
+        Some(at) => {
+            let rest = &s[at + "\"deadline_ms\"".len()..];
+            let colon = rest.find(':').context("malformed \"deadline_ms\"")?;
+            let num: String = rest[colon + 1..]
+                .chars()
+                .skip_while(|c| c.is_whitespace())
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            anyhow::ensure!(!num.is_empty(), "\"deadline_ms\" is not a nonnegative integer");
+            Some(num.parse::<u64>().context("\"deadline_ms\" out of range")?)
+        }
+    };
+    Ok((image, deadline_ms))
+}
+
+fn json_error(kind: &str, detail: &str) -> String {
+    format!("{{\"error\":\"{kind}\",\"detail\":\"{}\"}}\n", json_escape(detail))
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push(' '),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    extra_header: Option<&str>,
+    body: &str,
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    };
+    let extra = extra_header.map(|h| format!("{h}\r\n")).unwrap_or_default();
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n{extra}\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{InferenceBackend, MockBackend};
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::coordinator::{Coordinator, CoordinatorConfig};
+
+    fn mock_router() -> Arc<Router> {
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ..Default::default()
+        };
+        let c = Coordinator::start_with(
+            || Ok(Box::new(MockBackend::new(4, 3)) as Box<dyn InferenceBackend>),
+            cfg,
+        )
+        .unwrap();
+        Arc::new(Router::new(vec![c]).unwrap())
+    }
+
+    /// Fire one raw HTTP request and return the full response text
+    /// (the server closes the connection after one exchange).
+    fn send(addr: SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn post_infer(addr: SocketAddr, body: &str) -> String {
+        send(
+            addr,
+            &format!(
+                "POST /infer HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            ),
+        )
+    }
+
+    fn status_of(resp: &str) -> u16 {
+        resp.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0)
+    }
+
+    #[test]
+    fn serves_healthz_metrics_and_infer() {
+        let router = mock_router();
+        let server = HttpServer::start(0, router.clone()).unwrap();
+        let addr = server.local_addr();
+
+        let health = send(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status_of(&health), 200);
+        assert!(health.contains("ok"), "got {health}");
+
+        let probe = MockBackend::new(4, 3);
+        let infer = post_infer(addr, "{\"image\":[1,2,3,4]}");
+        assert_eq!(status_of(&infer), 200, "got {infer}");
+        let want = probe.expected_logits(&[1, 2, 3, 4]);
+        let want_logits = format!(
+            "\"logits\":[{}]",
+            want.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+        );
+        assert!(infer.contains(&want_logits), "got {infer}, want {want_logits}");
+        assert!(infer.contains("\"class\":"), "got {infer}");
+
+        let metrics = send(addr, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status_of(&metrics), 200);
+        assert!(metrics.contains("trim_requests_total"), "got {metrics}");
+        assert!(metrics.contains("trim_shed_total"), "new shed counter exposed: {metrics}");
+    }
+
+    #[test]
+    fn maps_client_errors_onto_http_statuses() {
+        let router = mock_router();
+        let server = HttpServer::start(0, router.clone()).unwrap();
+        let addr = server.local_addr();
+
+        let missing = send(addr, "GET /nope HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status_of(&missing), 404);
+
+        let wrong_method = send(addr, "GET /infer HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status_of(&wrong_method), 405);
+
+        let bad_json = post_infer(addr, "{\"picture\":[1]}");
+        assert_eq!(status_of(&bad_json), 400, "got {bad_json}");
+        assert!(bad_json.contains("image"), "names the missing field: {bad_json}");
+
+        let wrong_len = post_infer(addr, "{\"image\":[1,2]}");
+        assert_eq!(status_of(&wrong_len), 400, "got {wrong_len}");
+
+        // A deadline of zero is expired on arrival → typed 504.
+        let expired = post_infer(addr, "{\"image\":[1,2,3,4],\"deadline_ms\":0}");
+        assert_eq!(status_of(&expired), 504, "got {expired}");
+        assert!(expired.contains("deadline_exceeded"), "got {expired}");
+    }
+
+    #[test]
+    fn drain_surfaces_as_unhealthy_and_shutdown() {
+        let router = mock_router();
+        let server = HttpServer::start(0, router.clone()).unwrap();
+        let addr = server.local_addr();
+        router.drain(Duration::from_secs(1));
+
+        let health = send(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status_of(&health), 503);
+        assert!(health.contains("draining"), "got {health}");
+
+        let infer = post_infer(addr, "{\"image\":[1,2,3,4]}");
+        assert_eq!(status_of(&infer), 503, "got {infer}");
+        assert!(infer.contains("shutdown"), "got {infer}");
+    }
+
+    #[test]
+    fn stop_is_idempotent_and_drops_cleanly() {
+        let router = mock_router();
+        let mut server = HttpServer::start(0, router).unwrap();
+        server.stop();
+        server.stop();
+        drop(server); // second stop via Drop must not hang or panic
+    }
+
+    #[test]
+    fn body_scanner_parses_and_rejects() {
+        let (img, dl) = parse_infer_body("{\"image\":[1, -2,3],\"deadline_ms\": 250}").unwrap();
+        assert_eq!(img, vec![1, -2, 3]);
+        assert_eq!(dl, Some(250));
+        let (img, dl) = parse_infer_body("{\"image\":[]}").unwrap();
+        assert!(img.is_empty() && dl.is_none());
+        assert!(parse_infer_body("{}").is_err(), "missing image");
+        assert!(parse_infer_body("{\"image\":[1,x]}").is_err(), "non-integer element");
+        assert!(parse_infer_body("{\"image\":[1],\"deadline_ms\":-5}").is_err(), "negative ms");
+        assert!(parse_infer_body("{\"image\":[1").is_err(), "unterminated array");
+    }
+}

@@ -54,6 +54,22 @@ pub struct MetricsSnapshot {
     pub p99_latency: Duration,
     pub max_latency: Duration,
     pub throughput_rps: f64,
+    /// Requests shed by admission control (`ServeError::Overloaded`):
+    /// bounded ingress full or queue depth × EWMA cost past the budget.
+    pub shed: u64,
+    /// Requests rejected because their deadline budget could not be met
+    /// (`ServeError::DeadlineExceeded`), at submit or at batch formation.
+    pub deadline_expired: u64,
+    /// Requests that resolved with `ServeError::EngineFailed` (backend
+    /// error or panic on their batch).
+    pub engine_failed: u64,
+    /// Requests rejected with `ServeError::Shutdown` past the drain
+    /// deadline.
+    pub drain_rejected: u64,
+    /// Router-level retry attempts (re-dispatch of an `EngineFailed`
+    /// request to another farm). Always 0 on per-coordinator snapshots;
+    /// the router adds its own count into the merged view.
+    pub retries: u64,
     /// Batches that carried a simulated [`BatchCost`] (0 for PJRT/mock
     /// backends — all `sim_*` fields stay zero then).
     pub sim_batches: u64,
@@ -110,6 +126,11 @@ impl MetricsSnapshot {
         self.p99_latency = self.p99_latency.max(other.p99_latency);
         self.max_latency = self.max_latency.max(other.max_latency);
         self.throughput_rps += other.throughput_rps;
+        self.shed = self.shed.saturating_add(other.shed);
+        self.deadline_expired = self.deadline_expired.saturating_add(other.deadline_expired);
+        self.engine_failed = self.engine_failed.saturating_add(other.engine_failed);
+        self.drain_rejected = self.drain_rejected.saturating_add(other.drain_rejected);
+        self.retries = self.retries.saturating_add(other.retries);
         self.sim_batches = self.sim_batches.saturating_add(other.sim_batches);
         self.sim_cycles = self.sim_cycles.saturating_add(other.sim_cycles);
         self.sim_off_chip_accesses =
@@ -143,6 +164,11 @@ impl MetricsSnapshot {
         };
         counter("trim_requests_total", self.requests);
         counter("trim_batches_total", self.batches);
+        counter("trim_shed_total", self.shed);
+        counter("trim_deadline_expired_total", self.deadline_expired);
+        counter("trim_engine_failed_total", self.engine_failed);
+        counter("trim_drain_rejected_total", self.drain_rejected);
+        counter("trim_retries_total", self.retries);
         counter("trim_sim_batches_total", self.sim_batches);
         counter("trim_sim_cycles_total", self.sim_cycles);
         counter("trim_sim_off_chip_accesses_total", self.sim_off_chip_accesses);
@@ -209,7 +235,10 @@ impl MetricsSnapshot {
             s,
             "{{\"requests\":{},\"batches\":{},\"mean_batch\":{:.3},\
              \"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"max_us\":{},\
-             \"throughput_rps\":{:.1},\"sim_batches\":{},\"sim_cycles\":{},\
+             \"throughput_rps\":{:.1},\
+             \"shed\":{},\"deadline_expired\":{},\"engine_failed\":{},\
+             \"drain_rejected\":{},\"retries\":{},\
+             \"sim_batches\":{},\"sim_cycles\":{},\
              \"sim_off_chip\":{},\"sim_on_chip\":{},\"sim_macs\":{},\
              \"sim_joules\":{:.6e},\"sim_gops\":{:.2},\
              \"canary_sampled\":{},\"canary_bit_div\":{},\"canary_counter_div\":{},\
@@ -224,6 +253,11 @@ impl MetricsSnapshot {
             self.p99_latency.as_micros(),
             self.max_latency.as_micros(),
             self.throughput_rps,
+            self.shed,
+            self.deadline_expired,
+            self.engine_failed,
+            self.drain_rejected,
+            self.retries,
             self.sim_batches,
             self.sim_cycles,
             self.sim_off_chip_accesses,
@@ -321,6 +355,10 @@ impl Inner {
 pub struct ServeMetrics {
     requests: Counter,
     batches: Counter,
+    shed: Counter,
+    deadline_expired: Counter,
+    engine_failed: Counter,
+    drain_rejected: Counter,
     sim_batches: Counter,
     sim_cycles: Counter,
     sim_off_chip: Counter,
@@ -370,6 +408,28 @@ impl ServeMetrics {
         }
     }
 
+    /// Record one request shed by admission control (`Overloaded`).
+    pub fn record_shed(&self) {
+        self.shed.inc();
+    }
+
+    /// Record one request rejected for a missed deadline budget.
+    pub fn record_deadline_expired(&self) {
+        self.deadline_expired.inc();
+    }
+
+    /// Record `n` requests that resolved with `EngineFailed` (their
+    /// batch's backend call errored or panicked).
+    pub fn record_engine_failed(&self, n: u64) {
+        self.engine_failed.add(n);
+    }
+
+    /// Record `n` requests rejected with `Shutdown` past the drain
+    /// deadline.
+    pub fn record_drain_rejected(&self, n: u64) {
+        self.drain_rejected.add(n);
+    }
+
     /// Record batch-formation timing from the engine loop: each
     /// request's admission→batch-start wait, and the batch's backend
     /// service time. Lock-free (histograms are atomic).
@@ -409,6 +469,11 @@ impl ServeMetrics {
             p99_latency: Self::pct(&lats, 0.99),
             max_latency: if g.lat_seen == 0 { Duration::ZERO } else { Duration::from_micros(g.max_us) },
             throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
+            shed: self.shed.get(),
+            deadline_expired: self.deadline_expired.get(),
+            engine_failed: self.engine_failed.get(),
+            drain_rejected: self.drain_rejected.get(),
+            retries: 0,
             sim_batches: self.sim_batches.get(),
             sim_cycles: self.sim_cycles.get(),
             sim_off_chip_accesses: self.sim_off_chip.get(),

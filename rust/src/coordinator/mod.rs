@@ -22,7 +22,22 @@
 //!
 //! Scale-out is the [`Router`]: one `submit`/`infer`/`metrics` ingress
 //! over N coordinators (each its own farm, possibly heterogeneous), with
-//! least-outstanding-requests dispatch and a merged metrics snapshot.
+//! cost-aware dispatch, retry-with-backoff across farms, and a merged
+//! metrics snapshot.
+//!
+//! Robustness is the production front door (ISSUE 7): ingress is a
+//! **bounded** queue guarded by [`AdmissionControl`] (shed with
+//! [`ServeError::Overloaded`] past `queue_cap` or the EWMA-cost budget),
+//! the batcher is deadline-aware (requests carry a deadline budget;
+//! batches close by earliest-deadline − estimated service cost; hopeless
+//! requests reject up front as [`ServeError::DeadlineExceeded`]), failed
+//! or panicked batches resolve as typed [`ServeError::EngineFailed`]
+//! (retried by the router on the next-cheapest farm), and
+//! [`Coordinator::shutdown`] / [`Router::drain`] provide graceful drain —
+//! admission closes, in-flight work flushes, the post-deadline backlog
+//! rejects as [`ServeError::Shutdown`], engine threads join. The
+//! [`http::HttpServer`] puts a std-only HTTP/JSON face (`/infer`,
+//! `/metrics`, `/healthz`) on all of it.
 //!
 //! Observability rides on [`crate::obs`]: every admission opens a
 //! `serve.request` span (finished when the reply is sent), each executed
@@ -38,21 +53,27 @@
 //! runtime; the blocking batcher with a deadline performs the same
 //! time-or-size batching policy a tokio select-loop would.
 
+pub mod admission;
 pub mod backend;
 pub mod batcher;
 pub mod coordinator;
+pub mod error;
+pub mod http;
 pub mod metrics;
 pub mod request;
 pub mod router;
 
+pub use admission::{AdmissionConfig, AdmissionControl, Ewma, EWMA_ALPHA};
 pub use backend::{
-    make_backend, BackendKind, BatchCost, BatchReport, InferenceBackend, LayerCost, MockBackend,
-    PjrtBackend, SimCost,
+    make_backend, BackendKind, BatchCost, BatchReport, FaultInjectingBackend, InferenceBackend,
+    LayerCost, MockBackend, PjrtBackend, SimCost,
 };
 pub use crate::obs::HistogramSnapshot;
 pub use crate::scheduler::{CanaryConfig, CanaryReport, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
 pub use coordinator::{Coordinator, CoordinatorConfig};
+pub use error::{ServeError, ServeResult};
+pub use http::HttpServer;
 pub use metrics::{MetricsSnapshot, ServeMetrics, LATENCY_RESERVOIR};
 pub use request::{InferenceRequest, InferenceResponse};
-pub use router::{Router, RouterReply};
+pub use router::{RetryConfig, Router, RouterReply};

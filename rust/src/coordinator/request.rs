@@ -1,9 +1,10 @@
 //! Request/response types flowing through the coordinator.
 
 use super::backend::SimCost;
+use super::error::ServeResult;
 use crate::obs;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A single inference request (one image).
 #[derive(Debug)]
@@ -13,27 +14,47 @@ pub struct InferenceRequest {
     pub image: Vec<i32>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued_at: Instant,
+    /// Absolute deadline by which the response must be produced; `None`
+    /// means best-effort. The deadline-aware batcher rejects requests
+    /// whose deadline cannot be met (`ServeError::DeadlineExceeded`) and
+    /// closes batches early enough that the members it keeps still make
+    /// theirs.
+    pub deadline: Option<Instant>,
     /// The request's `serve.request` trace span, opened at admission and
-    /// finished by the engine loop when the reply is sent — its duration
-    /// is the request's end-to-end time inside the coordinator.
+    /// finished when the reply (or typed rejection) is sent — its
+    /// duration is the request's end-to-end time inside the coordinator.
     pub span: obs::Span,
-    /// Where the response goes.
-    pub reply: mpsc::Sender<InferenceResponse>,
+    /// Where the response goes: the logits, or a typed [`super::ServeError`].
+    pub reply: mpsc::Sender<ServeResult>,
+}
+
+impl InferenceRequest {
+    /// Remaining deadline budget at `now` (`None` = no deadline;
+    /// `Some(ZERO)` = already expired).
+    pub fn remaining_budget(&self, now: Instant) -> Option<Duration> {
+        self.deadline.map(|d| d.saturating_duration_since(now))
+    }
 }
 
 /// The completed inference.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
-    /// Classifier logits. Empty when the backend failed the batch.
+    /// Classifier logits (always non-empty: failures resolve as typed
+    /// [`super::ServeError`]s now, never as an empty-logits sentinel).
     pub logits: Vec<i32>,
-    /// argmax of the logits; `None` when there are no logits (failed
-    /// batch), so failure is never mistaken for class 0.
+    /// argmax of the logits; `None` only for degenerate zero-class
+    /// models, so failure is never mistaken for class 0.
     pub class: Option<usize>,
     /// Queue + execution latency.
     pub latency: std::time::Duration,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
+    /// Deadline slack when the reply was produced: how much budget was
+    /// left (`None` when the request carried no deadline). Zero means
+    /// the response landed exactly at — or technically past — the
+    /// deadline but was already executing and so was delivered.
+    pub deadline_slack: Option<Duration>,
     /// This request's attributed share of the batch's simulated execution
     /// cost; `None` for backends with no cost model (PJRT, mock).
     pub cost: Option<SimCost>,
@@ -44,6 +65,7 @@ impl InferenceResponse {
         id: u64,
         logits: Vec<i32>,
         enqueued_at: Instant,
+        deadline: Option<Instant>,
         batch_size: usize,
         cost: Option<SimCost>,
     ) -> Self {
@@ -54,7 +76,16 @@ impl InferenceResponse {
                 class = Some(i);
             }
         }
-        Self { id, logits, class, latency: enqueued_at.elapsed(), batch_size, cost }
+        let now = Instant::now();
+        Self {
+            id,
+            logits,
+            class,
+            latency: now.saturating_duration_since(enqueued_at),
+            batch_size,
+            deadline_slack: deadline.map(|d| d.saturating_duration_since(now)),
+            cost,
+        }
     }
 }
 
@@ -64,21 +95,55 @@ mod tests {
 
     #[test]
     fn argmax_class() {
-        let r = InferenceResponse::from_logits(1, vec![3, 9, -2, 9], Instant::now(), 4, None);
+        let r = InferenceResponse::from_logits(1, vec![3, 9, -2, 9], Instant::now(), None, 4, None);
         assert_eq!(r.class, Some(1)); // first max wins
         assert_eq!(r.batch_size, 4);
         assert!(r.cost.is_none());
+        assert!(r.deadline_slack.is_none(), "no deadline → no slack");
     }
 
     #[test]
     fn empty_logits_have_no_class() {
-        let r = InferenceResponse::from_logits(1, vec![], Instant::now(), 1, None);
+        let r = InferenceResponse::from_logits(1, vec![], Instant::now(), None, 1, None);
         assert_eq!(r.class, None);
     }
 
     #[test]
     fn single_logit_is_class_zero() {
-        let r = InferenceResponse::from_logits(1, vec![-7], Instant::now(), 1, None);
+        let r = InferenceResponse::from_logits(1, vec![-7], Instant::now(), None, 1, None);
         assert_eq!(r.class, Some(0));
+    }
+
+    #[test]
+    fn deadline_slack_propagates() {
+        let soon = Instant::now() + Duration::from_secs(60);
+        let r = InferenceResponse::from_logits(1, vec![1], Instant::now(), Some(soon), 1, None);
+        let slack = r.deadline_slack.expect("deadline carried through");
+        assert!(slack > Duration::from_secs(50), "fresh response keeps most of the budget");
+        // an already-expired deadline saturates at zero, never panics
+        let past = Instant::now() - Duration::from_secs(1);
+        let r = InferenceResponse::from_logits(1, vec![1], Instant::now(), Some(past), 1, None);
+        assert_eq!(r.deadline_slack, Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn remaining_budget_saturates() {
+        let (tx, _rx) = mpsc::channel();
+        let now = Instant::now();
+        let req = InferenceRequest {
+            id: 0,
+            image: vec![],
+            enqueued_at: now,
+            deadline: Some(now + Duration::from_millis(5)),
+            span: obs::tracer().begin("serve.request", 0),
+            reply: tx,
+        };
+        assert!(req.remaining_budget(now).unwrap() > Duration::ZERO);
+        assert_eq!(
+            req.remaining_budget(now + Duration::from_secs(1)),
+            Some(Duration::ZERO),
+            "expired budget saturates at zero"
+        );
+        obs::tracer().finish(req.span);
     }
 }

@@ -14,100 +14,203 @@
 //! ([`crate::coordinator::SimCost::batch_cycles`] divided by the batch
 //! size, so the estimate measures the farm rather than how full the
 //! batcher ran), and every submit goes to the farm minimising
-//! `EWMA cycles × (outstanding + 1)` — the expected simulated cost of its
-//! queue with this request appended. Farms that have not yet reported a
-//! cost are scored optimistically with the cheapest EWMA observed in the
-//! fleet (they win ties at equal queue depth, so cold farms get probed,
-//! but still pay for their queue — a backend that never reports, like
-//! PJRT or the mock, competes on load instead of monopolising dispatch);
-//! with no cost reported anywhere dispatch degenerates to plain
-//! **least-outstanding-requests**, the pre-cost-aware behaviour. Either
-//! way the in-flight count is decremented when the reply is received (or
-//! the [`RouterReply`] dropped), not when the request is enqueued.
+//! `EWMA cycles × (outstanding + 1) × (1 + consecutive failures)` — the
+//! expected simulated cost of its queue with this request appended,
+//! penalised while the farm is failing. Farms that have not yet reported
+//! a cost are scored optimistically with the cheapest EWMA observed in
+//! the fleet (they win ties at equal queue depth, so cold farms get
+//! probed, but still pay for their queue — a backend that never reports,
+//! like PJRT or the mock, competes on load instead of monopolising
+//! dispatch); with no cost reported anywhere dispatch degenerates to
+//! plain **least-outstanding-requests**, the pre-cost-aware behaviour.
+//! Either way the in-flight count is decremented when the reply is
+//! received (or the [`RouterReply`] dropped), not when the request is
+//! enqueued.
+//!
+//! The router is also the **retry layer**: when a farm's batch fails or
+//! panics ([`ServeError::EngineFailed`]), [`RouterReply::recv`] marks the
+//! farm cold (EWMA reset + failure penalty) and resubmits to the
+//! next-cheapest farm with capped exponential backoff, up to
+//! [`RetryConfig::max_attempts`] total attempts. Admission rejections
+//! (`Overloaded`/`Shutdown`) from one farm fall through to the next at
+//! submit time; only when every farm rejects does the caller see a typed
+//! error (preferring `Overloaded` with the smallest `retry_after` hint).
+//! [`Router::drain`] shuts the whole fleet down gracefully: admission
+//! closes everywhere first, then every engine thread is joined — every
+//! in-flight request resolves before it returns.
 
+use super::admission::Ewma;
 use super::coordinator::Coordinator;
+use super::error::{ServeError, ServeResult};
 use super::metrics::MetricsSnapshot;
 use super::request::InferenceResponse;
 use crate::obs;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
-/// EWMA smoothing factor for reported batch cycles (`new = old + α·(x −
-/// old)`); small enough to ride out batch-size noise, large enough that a
-/// farm's first few reports dominate its cold-start estimate.
-const COST_EWMA_ALPHA: f64 = 0.25;
+/// Retry policy for failed/panicked farm batches.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryConfig {
+    /// Total submission attempts per request, including the first
+    /// (`3` = one submit + up to two retries). `1` disables retries.
+    pub max_attempts: u32,
+    /// Backoff before retry k (0-based) is `base_backoff × 2^k`, capped
+    /// at `max_backoff`.
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+}
 
-/// Lock-free EWMA of a farm's reported simulated batch cycles; the f64 is
-/// stored as bits, `None` until the first report.
-#[derive(Default)]
-struct CostEwma(AtomicU64);
-
-impl CostEwma {
-    const UNSET: u64 = 0;
-
-    fn get(&self) -> Option<f64> {
-        match self.0.load(Ordering::Acquire) {
-            Self::UNSET => None,
-            bits => Some(f64::from_bits(bits)),
+impl Default for RetryConfig {
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(20),
         }
     }
+}
 
-    fn observe(&self, sample: f64) {
-        // Races between concurrent receivers may drop an update; the EWMA
-        // is a dispatch heuristic, so last-writer-wins is fine.
-        let next = match self.get() {
-            None => sample,
-            Some(old) => old + COST_EWMA_ALPHA * (sample - old),
-        };
-        // `max(1)`: cycles are ≥ 1 in practice; never store the UNSET bits.
-        self.0.store(f64::to_bits(next.max(1.0)), Ordering::Release);
+impl RetryConfig {
+    /// Capped exponential backoff before 0-based retry `k`.
+    fn backoff(&self, k: u32) -> Duration {
+        let mult = 1u32.checked_shl(k).unwrap_or(u32::MAX);
+        self.base_backoff.checked_mul(mult).unwrap_or(self.max_backoff).min(self.max_backoff)
     }
 }
 
 struct RoutedFarm {
     coordinator: Coordinator,
     /// Requests submitted to this farm whose replies are still pending.
-    outstanding: Arc<AtomicUsize>,
+    outstanding: AtomicUsize,
     /// EWMA of the simulated per-request cycles this farm's responses
-    /// report (batch cycles normalised by batch size).
-    cost: Arc<CostEwma>,
+    /// report (batch cycles normalised by batch size). Reset — marked
+    /// cold — when a batch fails, so the farm re-earns its estimate.
+    cost: Ewma,
+    /// Consecutive failed batches; scores the failure penalty in
+    /// dispatch, cleared by the first successful reply.
+    failures: AtomicUsize,
+}
+
+/// Shared state behind [`Router`] and its in-flight [`RouterReply`]s
+/// (replies need it to resubmit on retry).
+struct RouterInner {
+    farms: Vec<RoutedFarm>,
+    input_len: usize,
+    retry: RetryConfig,
+    /// Cross-farm resubmissions performed (`trim_retries_total`).
+    retries: AtomicU64,
 }
 
 /// One ingress over many coordinators (one farm each).
 pub struct Router {
-    farms: Vec<RoutedFarm>,
-    input_len: usize,
+    inner: Arc<RouterInner>,
 }
 
 /// Pending reply to a routed request. Receiving the response — or
 /// dropping the handle — releases the request's slot in the owning farm's
 /// outstanding count; a received response carrying a simulated cost also
-/// feeds the farm's dispatch EWMA.
+/// feeds the farm's dispatch EWMA, and a failed batch triggers the
+/// retry-with-backoff path (see module docs).
 pub struct RouterReply {
-    rx: mpsc::Receiver<InferenceResponse>,
-    outstanding: Arc<AtomicUsize>,
-    cost: Arc<CostEwma>,
+    inner: Arc<RouterInner>,
+    rx: mpsc::Receiver<ServeResult>,
     farm: usize,
+    /// Kept for resubmission on retry.
+    image: Vec<i32>,
+    deadline: Option<Instant>,
+    /// Submission attempts made so far (≥ 1).
+    attempts: u32,
     settled: bool,
 }
 
 impl RouterReply {
-    /// Block for the response.
+    /// Block for the response, retrying failed batches on the
+    /// next-cheapest farm with capped exponential backoff. Non-retryable
+    /// typed errors ([`ServeError::DeadlineExceeded`],
+    /// [`ServeError::Shutdown`], …) pass straight through inside the
+    /// returned `anyhow::Error` (downcastable to [`ServeError`]).
     pub fn recv(&mut self) -> Result<InferenceResponse> {
-        let resp = self.rx.recv()?;
-        if let Some(c) = &resp.cost {
-            // Normalise per request: `batch_cycles` is the whole batch's
-            // simulated wall-clock (shared, not divided), so dividing by
-            // the batch size measures the farm's per-request cost rather
-            // than how full the batcher happened to run.
-            self.cost.observe(c.batch_cycles as f64 / resp.batch_size.max(1) as f64);
+        loop {
+            let received = match self.rx.recv() {
+                Ok(Ok(resp)) => Ok(resp),
+                Ok(Err(e)) => Err(Some(e)),
+                // Reply channel dropped without an answer: the engine
+                // thread died harder than the catch_unwind containment.
+                Err(_) => Err(None),
+            };
+            let failed_reason = match received {
+                Ok(resp) => {
+                    let farm = &self.inner.farms[self.farm];
+                    if let Some(c) = &resp.cost {
+                        // Normalise per request: `batch_cycles` is the whole
+                        // batch's simulated wall-clock (shared, not divided),
+                        // so dividing by the batch size measures the farm
+                        // rather than how full the batcher happened to run.
+                        farm.cost.observe(c.batch_cycles as f64 / resp.batch_size.max(1) as f64);
+                    }
+                    farm.failures.store(0, Ordering::Release);
+                    self.settle();
+                    return Ok(resp);
+                }
+                Err(Some(ServeError::EngineFailed { reason })) => reason,
+                Err(Some(other)) => {
+                    self.settle();
+                    return Err(other.into());
+                }
+                Err(None) => "engine reply channel dropped".to_string(),
+            };
+            // Retryable failure: mark the farm cold, penalise it, and —
+            // budget permitting — resubmit elsewhere after a backoff.
+            self.settle();
+            let failed = self.farm;
+            let farm = &self.inner.farms[failed];
+            farm.cost.reset();
+            farm.failures.fetch_add(1, Ordering::AcqRel);
+            let err = ServeError::EngineFailed { reason: failed_reason };
+            if self.attempts >= self.inner.retry.max_attempts {
+                obs::tracer().event(
+                    "router.retry",
+                    0,
+                    format!("farm={failed} attempts={} verdict=exhausted", self.attempts),
+                );
+                return Err(err.into());
+            }
+            if let Some(d) = self.deadline {
+                // No point retrying a request whose deadline already passed.
+                let now = Instant::now();
+                if now >= d {
+                    return Err(ServeError::DeadlineExceeded {
+                        missed_by: now.saturating_duration_since(d),
+                    }
+                    .into());
+                }
+            }
+            let backoff = self.inner.retry.backoff(self.attempts - 1);
+            std::thread::sleep(backoff);
+            self.attempts += 1;
+            self.inner.retries.fetch_add(1, Ordering::AcqRel);
+            obs::tracer().event(
+                "router.retry",
+                0,
+                format!("farm={failed} attempt={} backoff_us={}", self.attempts, backoff.as_micros()),
+            );
+            // Exclude the failed farm when the fleet has alternatives; a
+            // single farm retries in place (transient faults recover).
+            let exclude = (self.inner.farms.len() > 1).then_some(failed);
+            match self.inner.submit_at(self.image.clone(), self.deadline, exclude) {
+                Ok((idx, rx)) => {
+                    self.farm = idx;
+                    self.rx = rx;
+                    self.settled = false;
+                }
+                Err(e) => return Err(e),
+            }
         }
-        self.settle();
-        Ok(resp)
     }
 
-    /// Index of the farm this request was dispatched to.
+    /// Index of the farm this request was (last) dispatched to.
     pub fn farm(&self) -> usize {
         self.farm
     }
@@ -115,7 +218,7 @@ impl RouterReply {
     fn settle(&mut self) {
         if !self.settled {
             self.settled = true;
-            self.outstanding.fetch_sub(1, Ordering::AcqRel);
+            self.inner.farms[self.farm].outstanding.fetch_sub(1, Ordering::AcqRel);
         }
     }
 }
@@ -126,10 +229,137 @@ impl Drop for RouterReply {
     }
 }
 
+impl RouterInner {
+    /// Pick the dispatch target among the non-`excluded` farms: minimise
+    /// the expected simulated queue cost `EWMA cycles × (outstanding + 1)
+    /// × (1 + failures)`. Farms that have not yet reported a cost are
+    /// scored **optimistically** with the cheapest EWMA observed anywhere
+    /// in the candidate set — at equal queue depth they win ties against
+    /// sampled farms (so a cold farm gets probed) but they still pay for
+    /// their outstanding queue, so a backend that *never* reports cost
+    /// (PJRT/mock) competes on load like everyone else instead of
+    /// monopolising dispatch. With no cost reported anywhere this
+    /// degenerates to plain least-outstanding (failure count breaking
+    /// ties). First farm wins remaining ties. `None` when every farm is
+    /// excluded.
+    fn pick_farm(&self, excluded: &[bool]) -> Option<usize> {
+        let snaps: Vec<(usize, usize, Option<f64>, usize)> = self
+            .farms
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !excluded[*i])
+            .map(|(i, f)| {
+                (
+                    i,
+                    f.outstanding.load(Ordering::Acquire),
+                    f.cost.get(),
+                    f.failures.load(Ordering::Acquire),
+                )
+            })
+            .collect();
+        if snaps.is_empty() {
+            return None;
+        }
+        let min_ewma = snaps.iter().filter_map(|(_, _, e, _)| *e).fold(f64::INFINITY, f64::min);
+        let idx = if min_ewma.is_infinite() {
+            // no candidate has reported yet: least-outstanding, failing
+            // farms losing ties at equal depth
+            snaps
+                .iter()
+                .min_by_key(|(_, out, _, fails)| (*out, *fails))
+                .map(|(i, _, _, _)| *i)
+                .expect("candidate set is nonempty")
+        } else {
+            snaps
+                .iter()
+                .min_by(|(_, oa, ea, fa), (_, ob, eb, fb)| {
+                    let sa = ea.unwrap_or(min_ewma) * (oa + 1) as f64 * (fa + 1) as f64;
+                    let sb = eb.unwrap_or(min_ewma) * (ob + 1) as f64 * (fb + 1) as f64;
+                    sa.partial_cmp(&sb)
+                        .expect("queue scores are finite")
+                        // Equal expected cost: probe the farm with no sample
+                        // yet (`false < true`, so `None`-cost farms win — the
+                        // documented cold-farm guarantee; min_by alone would
+                        // keep the lowest index and never sample a cold farm
+                        // listed after the current cheapest).
+                        .then_with(|| ea.is_some().cmp(&eb.is_some()))
+                })
+                .map(|(i, _, _, _)| *i)
+                .expect("candidate set is nonempty")
+        };
+        // Publish the dispatch decision: chosen farm, its queue depth and
+        // its EWMA score (the expected-cost term the comparison ran on).
+        let &(_, out, ewma, _) = snaps.iter().find(|(i, ..)| *i == idx).expect("picked from snaps");
+        obs::tracer().event(
+            "router.dispatch",
+            0,
+            match ewma {
+                Some(e) => format!("farm={idx} outstanding={out} ewma_cycles={e:.1}"),
+                None => format!("farm={idx} outstanding={out} ewma_cycles=cold"),
+            },
+        );
+        Some(idx)
+    }
+
+    /// Submit to the best candidate farm, falling through admission
+    /// rejections (`Overloaded`/`Shutdown`) to the next-best until one
+    /// accepts or every farm has rejected. Non-admission errors (wrong
+    /// image size, dead engine) propagate immediately.
+    fn submit_at(
+        &self,
+        image: Vec<i32>,
+        deadline: Option<Instant>,
+        exclude: Option<usize>,
+    ) -> Result<(usize, mpsc::Receiver<ServeResult>)> {
+        let mut excluded = vec![false; self.farms.len()];
+        if let Some(x) = exclude {
+            excluded[x] = true;
+        }
+        let mut min_retry_after: Option<Duration> = None;
+        while let Some(idx) = self.pick_farm(&excluded) {
+            let farm = &self.farms[idx];
+            farm.outstanding.fetch_add(1, Ordering::AcqRel);
+            match farm.coordinator.submit_with(image.clone(), deadline) {
+                Ok(rx) => return Ok((idx, rx)),
+                Err(e) => {
+                    farm.outstanding.fetch_sub(1, Ordering::AcqRel);
+                    match e.downcast::<ServeError>() {
+                        Ok(ServeError::Overloaded { retry_after }) => {
+                            min_retry_after = Some(match min_retry_after {
+                                Some(cur) => cur.min(retry_after),
+                                None => retry_after,
+                            });
+                            excluded[idx] = true;
+                        }
+                        Ok(ServeError::Shutdown) => {
+                            excluded[idx] = true;
+                        }
+                        Ok(other) => return Err(other.into()),
+                        Err(orig) => return Err(orig),
+                    }
+                }
+            }
+        }
+        // Every candidate rejected: report Overloaded (with the most
+        // optimistic retry hint) over Shutdown — as long as one farm is
+        // merely overloaded the fleet is alive and worth retrying.
+        match min_retry_after {
+            Some(retry_after) => Err(ServeError::Overloaded { retry_after }.into()),
+            None => Err(ServeError::Shutdown.into()),
+        }
+    }
+}
+
 impl Router {
-    /// Front a fleet of running coordinators. Fails on an empty fleet or
-    /// when the farms disagree on the model's input length.
+    /// Front a fleet of running coordinators (default [`RetryConfig`]).
+    /// Fails on an empty fleet or when the farms disagree on the model's
+    /// input length.
     pub fn new(coordinators: Vec<Coordinator>) -> Result<Self> {
+        Self::with_retry(coordinators, RetryConfig::default())
+    }
+
+    /// [`Router::new`] with an explicit retry policy.
+    pub fn with_retry(coordinators: Vec<Coordinator>, retry: RetryConfig) -> Result<Self> {
         let Some(first) = coordinators.first() else {
             bail!("router needs at least one farm");
         };
@@ -147,109 +377,60 @@ impl Router {
             .into_iter()
             .map(|coordinator| RoutedFarm {
                 coordinator,
-                outstanding: Arc::new(AtomicUsize::new(0)),
-                cost: Arc::new(CostEwma::default()),
+                outstanding: AtomicUsize::new(0),
+                cost: Ewma::default(),
+                failures: AtomicUsize::new(0),
             })
             .collect();
-        Ok(Self { farms, input_len })
+        Ok(Self {
+            inner: Arc::new(RouterInner { farms, input_len, retry, retries: AtomicU64::new(0) }),
+        })
     }
 
     pub fn farms(&self) -> usize {
-        self.farms.len()
+        self.inner.farms.len()
     }
 
     pub fn input_len(&self) -> usize {
-        self.input_len
+        self.inner.input_len
     }
 
     /// Descriptions of every farm's backend, in dispatch-index order.
     pub fn backend_descriptions(&self) -> Vec<String> {
-        self.farms.iter().map(|f| f.coordinator.backend_description().to_string()).collect()
-    }
-
-    /// Pick the dispatch target: minimise the expected simulated queue
-    /// cost `EWMA cycles × (outstanding + 1)`. Farms that have not yet
-    /// reported a cost are scored **optimistically** with the cheapest
-    /// EWMA observed anywhere in the fleet — at equal queue depth they win
-    /// ties against sampled farms (so a cold farm gets probed) but they
-    /// still pay for their outstanding queue, so a backend that *never*
-    /// reports cost (PJRT/mock) competes on load like everyone else
-    /// instead of monopolising dispatch. With no cost reported anywhere
-    /// this degenerates to plain least-outstanding. First farm wins ties.
-    fn pick_farm(&self) -> usize {
-        let snaps: Vec<(usize, Option<f64>)> = self
+        self.inner
             .farms
             .iter()
-            .map(|f| (f.outstanding.load(Ordering::Acquire), f.cost.get()))
-            .collect();
-        let min_ewma = snaps.iter().filter_map(|(_, e)| *e).fold(f64::INFINITY, f64::min);
-        let idx = if min_ewma.is_infinite() {
-            // no farm has reported yet: least-outstanding
-            snaps
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, (out, _))| *out)
-                .map(|(i, _)| i)
-                .expect("router has at least one farm")
-        } else {
-            snaps
-                .iter()
-                .enumerate()
-                .min_by(|(_, (oa, ea)), (_, (ob, eb))| {
-                    let sa = ea.unwrap_or(min_ewma) * (oa + 1) as f64;
-                    let sb = eb.unwrap_or(min_ewma) * (ob + 1) as f64;
-                    sa.partial_cmp(&sb)
-                        .expect("queue scores are finite")
-                        // Equal expected cost: probe the farm with no sample
-                        // yet (`false < true`, so `None`-cost farms win — the
-                        // documented cold-farm guarantee; min_by alone would
-                        // keep the lowest index and never sample a cold farm
-                        // listed after the current cheapest).
-                        .then_with(|| ea.is_some().cmp(&eb.is_some()))
-                })
-                .map(|(i, _)| i)
-                .expect("router has at least one farm")
-        };
-        // Publish the dispatch decision: chosen farm, its queue depth and
-        // its EWMA score (the expected-cost term the comparison ran on).
-        let (out, ewma) = snaps[idx];
-        obs::tracer().event(
-            "router.dispatch",
-            0,
-            match ewma {
-                Some(e) => format!("farm={idx} outstanding={out} ewma_cycles={e:.1}"),
-                None => format!("farm={idx} outstanding={out} ewma_cycles=cold"),
-            },
-        );
-        idx
+            .map(|f| f.coordinator.backend_description().to_string())
+            .collect()
     }
 
     /// Per-farm dispatch cost estimates (EWMA of reported simulated
     /// **per-request** cycles — batch cycles normalised by batch size),
     /// in dispatch-index order; `None` until a farm's first cost-carrying
-    /// response.
+    /// response (or after a failure reset it to cold).
     pub fn farm_cost_estimates(&self) -> Vec<Option<f64>> {
-        self.farms.iter().map(|f| f.cost.get()).collect()
+        self.inner.farms.iter().map(|f| f.cost.get()).collect()
     }
 
-    /// Submit one image to the farm [`Router::pick_farm`] selects.
+    /// Submit one image (best-effort, no deadline) to the best farm.
     pub fn submit(&self, image: Vec<i32>) -> Result<RouterReply> {
-        let idx = self.pick_farm();
-        let farm = &self.farms[idx];
-        farm.outstanding.fetch_add(1, Ordering::AcqRel);
-        match farm.coordinator.submit(image) {
-            Ok(rx) => Ok(RouterReply {
-                rx,
-                outstanding: Arc::clone(&farm.outstanding),
-                cost: Arc::clone(&farm.cost),
-                farm: idx,
-                settled: false,
-            }),
-            Err(e) => {
-                farm.outstanding.fetch_sub(1, Ordering::AcqRel);
-                Err(e)
-            }
-        }
+        self.submit_with(image, None)
+    }
+
+    /// Submit one image with an optional absolute deadline. Admission
+    /// rejections fall through to the next-best farm; the returned error
+    /// is typed (`downcast_ref::<ServeError>()`) when every farm rejects.
+    pub fn submit_with(&self, image: Vec<i32>, deadline: Option<Instant>) -> Result<RouterReply> {
+        let (farm, rx) = self.inner.submit_at(image.clone(), deadline, None)?;
+        Ok(RouterReply {
+            inner: Arc::clone(&self.inner),
+            rx,
+            farm,
+            image,
+            deadline,
+            attempts: 1,
+            settled: false,
+        })
     }
 
     /// Submit and block for the result.
@@ -257,18 +438,42 @@ impl Router {
         self.submit(image)?.recv()
     }
 
-    /// Merged snapshot across every farm (see [`MetricsSnapshot::merge`]).
+    /// Merged snapshot across every farm (see [`MetricsSnapshot::merge`]),
+    /// plus the router-level retry counter.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut merged = MetricsSnapshot::default();
-        for f in &self.farms {
+        for f in &self.inner.farms {
             merged.merge(&f.coordinator.metrics());
         }
+        merged.retries = merged.retries.saturating_add(self.inner.retries.load(Ordering::Acquire));
         merged
     }
 
     /// Per-farm snapshots, in dispatch-index order.
     pub fn farm_metrics(&self) -> Vec<MetricsSnapshot> {
-        self.farms.iter().map(|f| f.coordinator.metrics()).collect()
+        self.inner.farms.iter().map(|f| f.coordinator.metrics()).collect()
+    }
+
+    /// True once a drain has begun anywhere in the fleet.
+    pub fn is_draining(&self) -> bool {
+        self.inner.farms.iter().any(|f| f.coordinator.is_draining())
+    }
+
+    /// Graceful fleet drain: close admission on **every** farm first
+    /// (so nothing re-routes into a farm that is about to stop), let
+    /// queued work flush within `grace`, reject the remainder as
+    /// [`ServeError::Shutdown`], join all engine threads, and return the
+    /// final merged snapshot. Every in-flight request has resolved — with
+    /// logits or a typed error — by the time this returns.
+    pub fn drain(&self, grace: Duration) -> MetricsSnapshot {
+        let by = Instant::now() + grace;
+        for f in &self.inner.farms {
+            f.coordinator.begin_drain(by);
+        }
+        for f in &self.inner.farms {
+            f.coordinator.join_engine();
+        }
+        self.metrics()
     }
 }
 
@@ -277,7 +482,9 @@ mod tests {
     use super::*;
     use crate::analytics::EnergyModel;
     use crate::arch::SimStats;
-    use crate::coordinator::backend::{BatchCost, BatchReport, InferenceBackend, MockBackend};
+    use crate::coordinator::backend::{
+        BatchCost, BatchReport, FaultInjectingBackend, InferenceBackend, MockBackend,
+    };
     use crate::coordinator::batcher::BatcherConfig;
     use crate::coordinator::coordinator::CoordinatorConfig;
     use std::time::Duration;
@@ -285,6 +492,7 @@ mod tests {
     fn mock_coordinator(input_len: usize) -> Coordinator {
         let cfg = CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ..Default::default()
         };
         Coordinator::start_with(
             move || Ok(Box::new(MockBackend::new(input_len, 3)) as Box<dyn InferenceBackend>),
@@ -336,9 +544,26 @@ mod tests {
     fn fixed_cost_coordinator(cycles: u64) -> Coordinator {
         let cfg = CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ..Default::default()
         };
         Coordinator::start_with(
             move || Ok(Box::new(FixedCostBackend { input_len: 4, cycles }) as Box<dyn InferenceBackend>),
+            cfg,
+        )
+        .unwrap()
+    }
+
+    fn faulty_coordinator(fail_every: u64, panic_instead: bool) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ..Default::default()
+        };
+        Coordinator::start_with(
+            move || {
+                let b = FaultInjectingBackend::new(4, 3, fail_every);
+                let b = if panic_instead { b.panicking() } else { b };
+                Ok(Box::new(b) as Box<dyn InferenceBackend>)
+            },
             cfg,
         )
         .unwrap()
@@ -502,5 +727,94 @@ mod tests {
         let mut ok = router.submit(vec![0; 4]).unwrap();
         ok.recv().unwrap();
         assert_eq!(router.metrics().requests, 1);
+    }
+
+    #[test]
+    fn failed_batch_retries_on_the_other_farm() {
+        // Farm 0 fails every batch; farm 1 is healthy. The cold-start
+        // least-outstanding pick sends the first request to farm 0, whose
+        // failure must transparently retry onto farm 1 and succeed.
+        let router =
+            Router::new(vec![faulty_coordinator(1, false), mock_coordinator(4)]).unwrap();
+        let probe = MockBackend::new(4, 3);
+        let img = vec![1, 2, 3, 4];
+        let mut reply = router.submit(img.clone()).unwrap();
+        assert_eq!(reply.farm(), 0, "cold start dispatches to the (failing) first farm");
+        let resp = reply.recv().expect("retry on the healthy farm must succeed");
+        assert_eq!(resp.logits, probe.expected_logits(&img));
+        assert_eq!(reply.farm(), 1, "reply records the farm that actually answered");
+        let m = router.metrics();
+        assert!(m.retries >= 1, "retry counter flows into the merged snapshot");
+        assert!(m.engine_failed >= 1, "the failed attempt is accounted");
+        // The failing farm is penalised: at equal depth, dispatch now
+        // prefers the healthy farm instead of alternating.
+        let mut r2 = router.submit(img.clone()).unwrap();
+        assert_eq!(r2.farm(), 1, "failure penalty steers dispatch away from the flaky farm");
+        r2.recv().unwrap();
+    }
+
+    #[test]
+    fn single_farm_retries_in_place_and_recovers_from_transient_faults() {
+        // fail_every=2: calls 2, 4, … fault. The first infer succeeds
+        // (call 1); the second hits the injected fault (call 2) and must
+        // recover by retrying on the same — only — farm (call 3).
+        let router = Router::new(vec![faulty_coordinator(2, false)]).unwrap();
+        router.infer(vec![0; 4]).expect("call 1 is clean");
+        router.infer(vec![0; 4]).expect("transient fault must be retried in place");
+        assert_eq!(router.metrics().retries, 1);
+    }
+
+    #[test]
+    fn retries_exhaust_into_a_typed_engine_error() {
+        let retry = RetryConfig {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(100),
+            max_backoff: Duration::from_millis(1),
+        };
+        let router = Router::with_retry(vec![faulty_coordinator(1, false)], retry).unwrap();
+        let err = router.infer(vec![0; 4]).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::EngineFailed { reason }) => {
+                assert!(reason.contains("injected fault"), "got {reason}")
+            }
+            other => panic!("expected typed EngineFailed, got {other:?}"),
+        }
+        assert_eq!(router.metrics().retries, 2, "max_attempts=3 → two retries then give up");
+    }
+
+    #[test]
+    fn drain_completes_with_a_panicking_farm_and_resolves_everything() {
+        // Regression: a farm whose backend panics mid-drain must not wedge
+        // Router::drain() — the catch_unwind containment keeps its engine
+        // loop alive to flush (fail) the backlog, and every submitted
+        // request still resolves with logits or a typed error.
+        let retry = RetryConfig {
+            max_attempts: 2,
+            base_backoff: Duration::from_micros(100),
+            max_backoff: Duration::from_millis(1),
+        };
+        let router = Router::with_retry(
+            vec![mock_coordinator(4), faulty_coordinator(1, true)],
+            retry,
+        )
+        .unwrap();
+        let mut pending: Vec<_> =
+            (0..8).map(|i| router.submit(vec![i, 0, 0, 0]).unwrap()).collect();
+        let t0 = Instant::now();
+        let snap = router.drain(Duration::from_secs(30));
+        assert!(t0.elapsed() < Duration::from_secs(20), "drain must terminate");
+        assert!(router.is_draining());
+        for p in pending.iter_mut() {
+            match p.recv() {
+                Ok(resp) => assert!(!resp.logits.is_empty(), "no empty-logits sentinels"),
+                Err(e) => {
+                    assert!(e.downcast_ref::<ServeError>().is_some(), "typed failure: {e:#}")
+                }
+            }
+        }
+        assert!(snap.requests > 0);
+        // After drain, new submits are rejected with a typed Shutdown.
+        let err = router.submit(vec![0; 4]).unwrap_err();
+        assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::Shutdown));
     }
 }

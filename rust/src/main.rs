@@ -15,6 +15,8 @@
 //!            [--requests N] [--max-batch B] [--fidelity fast|register]
 //!            [--farms F] [--shard filter|pipeline|spatial|hybrid|auto]
 //!            [--canary RATE] [--metrics-out PATH]
+//!            [--queue-cap N] [--budget-cycles C] [--deadline-ms D]
+//!            [--drain-ms G] [--http PORT] [--http-secs S]
 //!                               e2e batched inference. Backends:
 //!                                 pjrt — compiled XLA artifacts (needs
 //!                                        `make artifacts` + the `pjrt`
@@ -51,6 +53,24 @@
 //!                               --metrics-out PATH writes the final
 //!                               merged snapshot as Prometheus text
 //!                               (PATH `-` prints it to stdout)
+//!                               Robustness knobs (ISSUE 7): --queue-cap
+//!                               bounds each farm's ingress queue
+//!                               (default 256; admission sheds with
+//!                               Overloaded past it), --budget-cycles
+//!                               sheds once queued simulated work
+//!                               (depth × EWMA cycles/request) exceeds C,
+//!                               --deadline-ms gives every synthetic
+//!                               request a deadline budget (hopeless ones
+//!                               reject as DeadlineExceeded), --drain-ms
+//!                               is the graceful-drain grace period
+//!                               (default 2000; the backlog past it
+//!                               rejects as Shutdown), and --http PORT
+//!                               serves POST /infer, GET /metrics and
+//!                               GET /healthz on 127.0.0.1:PORT for
+//!                               --http-secs seconds (default 30; the
+//!                               timer is the stand-in for SIGINT — when
+//!                               it fires the server stops accepting and
+//!                               the fleet drains gracefully)
 //! trim farm [--engines N] [--net vgg16|alexnet] [--batch B]
 //!           [--shard filter|pipeline|spatial|hybrid|auto]
 //!           [--fidelity fast|register]
@@ -76,13 +96,15 @@
 //! ```
 
 use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use trim_sa::analytics::EnergyModel;
 use trim_sa::arch::control::plan_layer;
 use trim_sa::arch::{ArchConfig, EngineSim, ExecFidelity, SimStats, SliceSim};
 use trim_sa::coordinator::{
-    make_backend, BackendKind, BatchCost, BatcherConfig, Coordinator, CoordinatorConfig, LayerCost,
-    Router,
+    make_backend, AdmissionConfig, BackendKind, BatchCost, BatcherConfig, Coordinator,
+    CoordinatorConfig, HttpServer, LayerCost, Router, ServeError,
 };
 use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer, Network};
@@ -228,8 +250,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         None => ShardMode::Auto,
     };
     let canary: f64 = flags.get("canary").and_then(|v| v.parse().ok()).unwrap_or(0.0);
+    let queue_cap: usize = flags.get("queue-cap").and_then(|v| v.parse().ok()).unwrap_or(256);
+    let budget_cycles: Option<f64> = flags.get("budget-cycles").and_then(|v| v.parse().ok());
+    let deadline_ms: Option<u64> = flags.get("deadline-ms").and_then(|v| v.parse().ok());
+    let drain_ms: u64 = flags.get("drain-ms").and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let http_port: Option<u16> = flags.get("http").and_then(|v| v.parse().ok());
+    let http_secs: u64 = flags.get("http-secs").and_then(|v| v.parse().ok()).unwrap_or(30);
     let cfg = CoordinatorConfig {
-        batcher: BatcherConfig { max_batch, max_wait: std::time::Duration::from_millis(2) },
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+        admission: AdmissionConfig { queue_cap, budget_cycles },
     };
     // One ingress, `farms` farms: a single-farm router degenerates to the
     // plain coordinator, so serve always goes through the front door.
@@ -242,28 +271,69 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             )
         })
         .collect::<anyhow::Result<_>>()?;
-    let router = Router::new(coordinators)?;
+    let router = Arc::new(Router::new(coordinators)?);
     for (i, desc) in router.backend_descriptions().iter().enumerate() {
         println!("farm {i}: {desc} ({} int32 inputs per request)", router.input_len());
     }
+    let http = match http_port {
+        Some(port) => {
+            let server = HttpServer::start(port, Arc::clone(&router))?;
+            println!(
+                "http ingress: http://{} (POST /infer, GET /metrics, GET /healthz) for {http_secs}s",
+                server.local_addr()
+            );
+            Some(server)
+        }
+        None => None,
+    };
 
+    // Synthetic load. Admission may shed (Overloaded) and deadlines may
+    // expire (DeadlineExceeded) — typed rejections are counted, not fatal.
     let len = router.input_len();
-    let pending: Vec<_> = (0..n_req)
-        .map(|i| {
-            let img: Vec<i32> = (0..len).map(|j| ((i * 7919 + j * 31) % 256) as i32).collect();
-            router.submit(img).unwrap()
-        })
-        .collect();
-    let mut classes = vec![0usize; 10];
-    for mut rx in pending {
-        let resp = rx.recv()?;
-        if let Some(class) = resp.class {
-            if class < classes.len() {
-                classes[class] += 1;
-            }
+    let mut pending = Vec::new();
+    let mut submit_rejected = 0usize;
+    for i in 0..n_req {
+        let img: Vec<i32> = (0..len).map(|j| ((i * 7919 + j * 31) % 256) as i32).collect();
+        let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        match router.submit_with(img, deadline) {
+            Ok(r) => pending.push(r),
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(se) => {
+                    submit_rejected += 1;
+                    if submit_rejected <= 3 {
+                        println!("submit rejected: {se}");
+                    }
+                }
+                None => return Err(e),
+            },
         }
     }
-    let m = router.metrics();
+    let mut classes = vec![0usize; 10];
+    let mut reply_failed = 0usize;
+    for mut rx in pending {
+        match rx.recv() {
+            Ok(resp) => {
+                if let Some(class) = resp.class {
+                    if class < classes.len() {
+                        classes[class] += 1;
+                    }
+                }
+            }
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(_) => reply_failed += 1,
+                None => return Err(e),
+            },
+        }
+    }
+
+    // The --http-secs timer is the SIGINT stand-in: when it fires, stop
+    // accepting, then drain the fleet gracefully.
+    if let Some(mut server) = http {
+        std::thread::sleep(Duration::from_secs(http_secs));
+        println!("http window over: stopping ingress, draining fleet");
+        server.stop();
+    }
+    let m = router.drain(Duration::from_millis(drain_ms));
     println!("requests  : {}", m.requests);
     println!("batches   : {} (mean batch {:.1})", m.batches, m.mean_batch);
     println!(
@@ -278,6 +348,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         m.service.count
     );
     println!("throughput: {:.1} req/s", m.throughput_rps);
+    println!(
+        "robustness: shed {}  deadline-expired {}  engine-failed {}  drain-rejected {}  retries {}",
+        m.shed, m.deadline_expired, m.engine_failed, m.drain_rejected, m.retries
+    );
     if m.sim_batches > 0 {
         println!(
             "sim cost  : {} cycles  {} off-chip + {} on-chip accesses  {:.3} mJ  {:.2} GOPs/s @ {:.0} MHz",
@@ -299,7 +373,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             if m.canary.is_clean() { "  (clean)" } else { "  (DIVERGED)" }
         );
     }
-    println!("class histogram: {classes:?}");
+    println!(
+        "class histogram: {classes:?} ({submit_rejected} rejected at submit, {reply_failed} failed typed)"
+    );
     if let Some(path) = flags.get("metrics-out") {
         write_metrics_out(path, &m.render_prometheus())?;
     }

@@ -14,6 +14,7 @@ use trim_sa::util::SplitMix64;
 fn start(max_batch: usize, wait_ms: u64, delay_us: u64) -> Coordinator {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(wait_ms) },
+        ..Default::default()
     };
     Coordinator::start_with(
         move || {
@@ -56,7 +57,7 @@ fn throughput_improves_with_batching_when_backend_amortises() {
     let pending: Vec<_> = (0..64).map(|i| c.submit(vec![i; 16]).unwrap()).collect();
     let mut seen_batched = false;
     for rx in pending {
-        if rx.recv().unwrap().batch_size > 1 {
+        if rx.recv().unwrap().unwrap().batch_size > 1 {
             seen_batched = true;
         }
     }
@@ -71,7 +72,7 @@ fn latency_percentiles_are_ordered() {
     let c = start(4, 1, 50);
     let pending: Vec<_> = (0..40).map(|i| c.submit(vec![i; 16]).unwrap()).collect();
     for rx in pending {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     let m = c.metrics();
     assert!(m.p50_latency <= m.p95_latency);
@@ -95,7 +96,7 @@ fn responses_preserve_request_identity() {
     let rxs: Vec<_> = (0..30).map(|i| c.submit(vec![i; 16]).unwrap()).collect();
     let probe = MockBackend::new(16, 10);
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.logits, probe.expected_logits(&vec![i as i32; 16]));
     }
 }
@@ -103,6 +104,7 @@ fn responses_preserve_request_identity() {
 fn sim_coordinator(engines: usize, max_batch: usize) -> Coordinator {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(5) },
+        ..Default::default()
     };
     Coordinator::start_with(
         move || Ok(Box::new(SimBackend::new(engines)) as Box<dyn InferenceBackend>),
@@ -124,7 +126,7 @@ fn sim_backed_serving_reports_cost_telemetry() {
         .collect();
     let mut joules_sum = 0.0f64;
     for rx in pending {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         let cost = resp.cost.expect("sim responses carry an attributed cost");
         assert!(cost.batch_cycles > 0);
         assert!(cost.off_chip_accesses > 0.0 && cost.on_chip_accesses > 0.0);

@@ -80,12 +80,13 @@ fn coordinator_serves_pjrt_backend() {
 
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(5) },
+        ..Default::default()
     };
     let d = dir.clone();
     let c = Coordinator::start_with(move || Ok(Box::new(PjrtBackend::load(&d)?) as _), cfg).unwrap();
     let rxs: Vec<_> = images.iter().map(|img| c.submit(img.clone()).unwrap()).collect();
     for (rx, exp) in rxs.into_iter().zip(&expected) {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(&resp.logits, exp);
     }
     assert_eq!(c.metrics().requests, 6);

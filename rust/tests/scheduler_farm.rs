@@ -679,6 +679,7 @@ fn serve_workload(mode: ShardMode) {
     let n_req = 96usize;
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(20) },
+        ..Default::default()
     };
     let probe = SimBackend::with_spec(1, ArchConfig::small(3, 2, 1), SimNetSpec::tiny(), mode);
     let c = Coordinator::start_with(
@@ -697,7 +698,7 @@ fn serve_workload(mode: ShardMode) {
     let pending: Vec<_> = images.iter().map(|img| c.submit(img.clone()).unwrap()).collect();
     let mut max_batch_seen = 0usize;
     for (img, rx) in images.iter().zip(pending) {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.logits, probe.reference_logits(img), "{mode:?}: wrong logits");
         let cost = resp.cost.expect("sim-served responses carry attributed cost");
         assert!(cost.batch_cycles > 0 && cost.joules > 0.0 && cost.gops > 0.0, "{mode:?}");
