@@ -275,6 +275,7 @@ fn conv_rows_from_padded(
 /// pass (bit-exact either way: the skipped terms are zero).
 // The indexed loop (rather than a 4-deep iterator zip) is the form LLVM
 // reliably turns into one vectorised pass over the four streams.
+// lint: hot-path
 #[allow(clippy::needless_range_loop)]
 #[inline]
 fn conv_taps_k3(a: &mut [i64], chan: &[i32], kern: &[i32], rows: Range<usize>, wp: usize, w_o: usize) {
@@ -301,6 +302,7 @@ fn conv_taps_k3(a: &mut [i64], chan: &[i32], kern: &[i32], rows: Range<usize>, w
 
 /// Generic K at stride 1: per-tap AXPY, unit-stride over the padded row
 /// with the tap's widened weight hoisted; zero taps skip their pass.
+// lint: hot-path
 #[inline]
 fn conv_taps_unit(a: &mut [i64], chan: &[i32], kern: &[i32], rows: Range<usize>, wp: usize, w_o: usize, k: usize) {
     for (by, oy) in rows.enumerate() {
@@ -323,6 +325,7 @@ fn conv_taps_unit(a: &mut [i64], chan: &[i32], kern: &[i32], rows: Range<usize>,
 
 /// Strided fallback (sweep-and-decimate geometries, e.g. AlexNet CL1):
 /// per-tap gather at `stride`-spaced columns.
+// lint: hot-path
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn conv_taps_strided(

@@ -27,8 +27,9 @@
 //! executes, whatever is still queued.
 
 use super::error::ServeError;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::util::sync::{
+    lock_unpoisoned, AtomicBool, AtomicU64, AtomicUsize, Mutex, Ordering,
+};
 use std::time::{Duration, Instant};
 
 /// EWMA smoothing factor (`new = old + α·(x − old)`) shared by the
@@ -197,7 +198,7 @@ impl AdmissionControl {
     /// `Coordinator::shutdown` cannot extend the window.
     pub fn begin_drain(&self, by: Instant) {
         self.draining.store(true, Ordering::Release);
-        let mut g = self.drain_deadline.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.drain_deadline);
         *g = Some(match *g {
             Some(existing) => existing.min(by),
             None => by,
@@ -214,7 +215,7 @@ impl AdmissionControl {
         if !self.is_draining() {
             return false;
         }
-        match *self.drain_deadline.lock().unwrap() {
+        match *lock_unpoisoned(&self.drain_deadline) {
             Some(by) => Instant::now() >= by,
             None => false,
         }

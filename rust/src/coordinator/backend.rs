@@ -424,6 +424,7 @@ impl InferenceBackend for FaultInjectingBackend {
         self.inner.calls += 1;
         if self.fail_every > 0 && self.inner.calls % self.fail_every == 0 {
             if self.panic_instead {
+                // lint: test-double — the injected panic *is* the fixture.
                 panic!("injected panic on call {}", self.inner.calls);
             }
             anyhow::bail!("injected fault on call {}", self.inner.calls);

@@ -23,10 +23,10 @@ use super::error::{ServeError, ServeResult};
 use super::metrics::{MetricsSnapshot, ServeMetrics};
 use super::request::{InferenceRequest, InferenceResponse};
 use crate::obs;
-use anyhow::{bail, Result};
+use crate::util::sync::{lock_unpoisoned, AtomicU64, Mutex, Ordering};
+use anyhow::{bail, Context as _, Result};
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -86,7 +86,7 @@ impl Coordinator {
                 };
                 Self::engine_loop(backend, cfg, rx, engine_admission, engine_metrics)
             })
-            .expect("spawning engine thread");
+            .context("spawning engine thread")?;
         match ready_rx.recv() {
             Ok(Ok((input_len, backend_desc))) => Ok(Self {
                 tx: Mutex::new(Some(tx)),
@@ -200,11 +200,13 @@ impl Coordinator {
     /// draining, engine gone) come back as an `anyhow::Error` wrapping a
     /// [`ServeError`] — recover the variant with
     /// `err.downcast_ref::<ServeError>()`.
+    #[must_use = "the receiver resolves the request — dropping it loses the reply"]
     pub fn submit(&self, image: Vec<i32>) -> Result<mpsc::Receiver<ServeResult>> {
         self.submit_with(image, None)
     }
 
     /// Submit one image with an optional absolute deadline.
+    #[must_use = "the receiver resolves the request — dropping it loses the reply"]
     pub fn submit_with(
         &self,
         image: Vec<i32>,
@@ -224,7 +226,7 @@ impl Coordinator {
         let span = obs::tracer().begin("serve.request", 0);
         let req = InferenceRequest { id, image, enqueued_at: Instant::now(), deadline, span, reply };
         let send_result = {
-            let guard = self.tx.lock().unwrap();
+            let guard = lock_unpoisoned(&self.tx);
             match guard.as_ref() {
                 // try_send never blocks, so holding the lock here is fine.
                 Some(tx) => tx.try_send(req).map_err(|e| match e {
@@ -269,12 +271,12 @@ impl Coordinator {
         self.admission.begin_drain(by);
         // Dropping the ingress sender disconnects the batcher's channel
         // once the queue empties, which ends the engine loop.
-        self.tx.lock().unwrap().take();
+        lock_unpoisoned(&self.tx).take();
     }
 
     /// Join the engine thread (idempotent; no-op if already joined).
     pub fn join_engine(&self) {
-        let handle = self.engine.lock().unwrap().take();
+        let handle = lock_unpoisoned(&self.engine).take();
         if let Some(h) = handle {
             let _ = h.join();
         }

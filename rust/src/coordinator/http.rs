@@ -24,10 +24,10 @@
 
 use super::error::ServeError;
 use super::router::Router;
+use crate::util::sync::{AtomicBool, Ordering};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -69,7 +69,7 @@ impl HttpServer {
                         .spawn(move || handle_connection(stream, &router));
                 }
             })
-            .expect("spawning HTTP accept thread");
+            .context("spawning HTTP accept thread")?;
         Ok(Self { addr, running, accept: Some(accept) })
     }
 

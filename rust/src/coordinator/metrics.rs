@@ -22,9 +22,9 @@
 use super::backend::{BatchCost, LayerCost};
 use crate::obs::{self, Counter, Histogram, HistogramSnapshot};
 use crate::scheduler::CanaryReport;
+use crate::util::sync::{lock_unpoisoned, Mutex};
 use crate::util::SplitMix64;
 use std::fmt::Write as _;
-use std::sync::Mutex;
 use std::time::Duration;
 
 /// Reservoir capacity: enough for stable p50/p95/p99 estimates, small
@@ -383,7 +383,7 @@ impl ServeMetrics {
     pub fn record_batch(&self, latencies: &[Duration], cost: Option<&BatchCost>) {
         self.batches.inc();
         self.requests.add(latencies.len() as u64);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         g.started.get_or_insert_with(std::time::Instant::now);
         for d in latencies {
             g.record_latency(d.as_micros() as u64);
@@ -444,7 +444,7 @@ impl ServeMetrics {
     /// latency reservoir sample — `q = 0.5/0.95/0.99` are the p50/p95/p99
     /// the serve summary line prints.
     pub fn latency_quantile(&self, q: f64) -> Duration {
-        let mut lats = self.inner.lock().unwrap().lat_sample.clone();
+        let mut lats = lock_unpoisoned(&self.inner).lat_sample.clone();
         lats.sort_unstable();
         Duration::from_micros(obs::percentile_u64(&lats, q))
     }
@@ -454,7 +454,7 @@ impl ServeMetrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
+        let g = lock_unpoisoned(&self.inner);
         let mut lats = g.lat_sample.clone();
         lats.sort_unstable();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);

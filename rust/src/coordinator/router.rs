@@ -45,8 +45,8 @@ use super::error::{ServeError, ServeResult};
 use super::metrics::MetricsSnapshot;
 use super::request::InferenceResponse;
 use crate::obs;
+use crate::util::sync::{AtomicU64, AtomicUsize, Ordering};
 use anyhow::{bail, Result};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -264,19 +264,17 @@ impl RouterInner {
         let idx = if min_ewma.is_infinite() {
             // no candidate has reported yet: least-outstanding, failing
             // farms losing ties at equal depth
-            snaps
-                .iter()
-                .min_by_key(|(_, out, _, fails)| (*out, *fails))
-                .map(|(i, _, _, _)| *i)
-                .expect("candidate set is nonempty")
+            snaps.iter().min_by_key(|(_, out, _, fails)| (*out, *fails)).map(|(i, _, _, _)| *i)?
         } else {
             snaps
                 .iter()
                 .min_by(|(_, oa, ea, fa), (_, ob, eb, fb)| {
                     let sa = ea.unwrap_or(min_ewma) * (oa + 1) as f64 * (fa + 1) as f64;
                     let sb = eb.unwrap_or(min_ewma) * (ob + 1) as f64 * (fb + 1) as f64;
-                    sa.partial_cmp(&sb)
-                        .expect("queue scores are finite")
+                    // Scores are finite and nonnegative (EWMA clamps ≥ 1),
+                    // so total_cmp agrees with partial_cmp everywhere the
+                    // old comparison was defined.
+                    sa.total_cmp(&sb)
                         // Equal expected cost: probe the farm with no sample
                         // yet (`false < true`, so `None`-cost farms win — the
                         // documented cold-farm guarantee; min_by alone would
@@ -284,20 +282,20 @@ impl RouterInner {
                         // listed after the current cheapest).
                         .then_with(|| ea.is_some().cmp(&eb.is_some()))
                 })
-                .map(|(i, _, _, _)| *i)
-                .expect("candidate set is nonempty")
+                .map(|(i, _, _, _)| *i)?
         };
         // Publish the dispatch decision: chosen farm, its queue depth and
         // its EWMA score (the expected-cost term the comparison ran on).
-        let &(_, out, ewma, _) = snaps.iter().find(|(i, ..)| *i == idx).expect("picked from snaps");
-        obs::tracer().event(
-            "router.dispatch",
-            0,
-            match ewma {
-                Some(e) => format!("farm={idx} outstanding={out} ewma_cycles={e:.1}"),
-                None => format!("farm={idx} outstanding={out} ewma_cycles=cold"),
-            },
-        );
+        if let Some(&(_, out, ewma, _)) = snaps.iter().find(|(i, ..)| *i == idx) {
+            obs::tracer().event(
+                "router.dispatch",
+                0,
+                match ewma {
+                    Some(e) => format!("farm={idx} outstanding={out} ewma_cycles={e:.1}"),
+                    None => format!("farm={idx} outstanding={out} ewma_cycles=cold"),
+                },
+            );
+        }
         Some(idx)
     }
 

@@ -51,6 +51,12 @@
 //!   offline default compiles a stub and serving falls back to the farm.
 //! * [`report`] — renderers that regenerate every table and figure of the
 //!   paper's evaluation section in the paper's own row format.
+//! * [`verify`] — static invariant checker (`trim check`): proves the
+//!   shard planner and the closed-form counter model consistent over the
+//!   whole design space — exact output coverage, halo-read conservation,
+//!   cycle-bound sanity and Tables I–II counter conservation — without
+//!   running a convolution, against independently re-derived laws
+//!   ([`verify::laws`]).
 
 pub mod analytics;
 pub mod arch;
@@ -62,6 +68,7 @@ pub mod report;
 pub mod runtime;
 pub mod scheduler;
 pub mod util;
+pub mod verify;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -93,6 +93,20 @@
 //!                               serve.batch / batch.formed /
 //!                               router.dispatch / farm.* / canary.*
 //!                               spans and events) as JSON lines
+//! trim check [--sweep]          static invariant verification: prove the
+//!                               shard planner + closed-form counter
+//!                               model consistent (coverage, halo
+//!                               conservation, cycle bounds, Tables I–II
+//!                               counter conservation) over a design-
+//!                               space sweep without running any
+//!                               convolution, then corrupt a known-good
+//!                               plan to prove the checker can fail.
+//!                               --sweep runs the full CI grid (≥ 200
+//!                               layer × arch × mode × engine points);
+//!                               default is a quick subset. Exits
+//!                               nonzero with a per-violation report
+//!                               (geometry, mode, law, expected vs got)
+//!                               and emits a `JSON ` summary line.
 //! ```
 
 use std::collections::HashMap;
@@ -629,6 +643,49 @@ fn cmd_trace(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `trim check`: the static invariant checker (ISSUE 8). Sweeps the
+/// design space through [`trim_sa::verify`], reports every violation in
+/// file-able form, runs the seeded-corruption self-test, and exits
+/// nonzero if anything failed — the CI gate parses the `JSON ` line.
+fn cmd_check(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let full = flags.contains_key("sweep");
+    let t0 = Instant::now();
+    let s = trim_sa::verify::sweep_design_space(full);
+    println!(
+        "checked {} design-space points ({} law evaluations): {} violation(s)",
+        s.points,
+        s.checks,
+        s.violations.len()
+    );
+    for v in &s.violations {
+        println!("VIOLATION {v}");
+    }
+    let self_test = trim_sa::verify::self_test();
+    match &self_test {
+        Ok(()) => println!("self-test: corrupted plans rejected with named violations"),
+        Err(e) => println!("self-test FAILED: {e}"),
+    }
+    println!(
+        "JSON {{\"kind\":\"check\",\"sweep\":{},\"points\":{},\"checks\":{},\"violations\":{},\"self_test_ok\":{},\"elapsed_ms\":{}}}",
+        full,
+        s.points,
+        s.checks,
+        s.violations.len(),
+        self_test.is_ok(),
+        t0.elapsed().as_millis()
+    );
+    if full {
+        anyhow::ensure!(s.points >= 200, "full sweep covers only {} points (need ≥ 200)", s.points);
+    }
+    anyhow::ensure!(
+        s.violations.is_empty(),
+        "{} invariant violation(s) — see the VIOLATION lines above",
+        s.violations.len()
+    );
+    self_test.map_err(|e| anyhow::anyhow!("checker self-test failed: {e}"))?;
+    Ok(())
+}
+
 /// The per-layer cost breakdown table (ROADMAP §Serving: the 2408.01254
 /// companion's per-layer accounting, at the CLI).
 fn print_per_layer_costs(per_layer: &[LayerCost]) {
@@ -667,8 +724,9 @@ fn main() -> anyhow::Result<()> {
         "serve" => cmd_serve(&flags)?,
         "farm" => cmd_farm(&flags)?,
         "trace" => cmd_trace(&flags)?,
+        "check" => cmd_check(&flags)?,
         _ => {
-            println!("usage: trim <fig1|sweep|table|table3|analyze|sim|validate|serve|farm|trace> [--flags]");
+            println!("usage: trim <fig1|sweep|table|table3|analyze|sim|validate|serve|farm|trace|check> [--flags]");
             println!("see rust/src/main.rs docs for details");
         }
     }

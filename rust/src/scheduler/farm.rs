@@ -67,13 +67,15 @@ use crate::golden::Tensor3;
 use crate::model::quant::Requant;
 use crate::model::ConvLayer;
 use crate::obs::{self, Counter, Gauge, Registry};
+use crate::util::sync::{
+    lock_unpoisoned, AtomicU64, Condvar, Mutex, MutexGuard, Ordering, PoisonError,
+};
 use crate::util::SplitMix64;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -219,43 +221,53 @@ struct JobDone {
 /// The shared work-stealing injector: every worker pops from one queue,
 /// so idle engines steal whatever shard is next instead of waiting on a
 /// static per-worker assignment. std-only by design (the crate builds
-/// offline): a `Mutex<VecDeque<Job>>` plus a `Condvar` workers park on.
-struct Injector {
-    state: Mutex<InjectorState>,
+/// offline): a `Mutex<VecDeque<T>>` plus a `Condvar` workers park on —
+/// both from [`crate::util::sync`], so `--cfg loom` builds swap in
+/// loom's model-checked primitives and tests/loom_models.rs explores
+/// every push/pop/shutdown interleaving (no lost job, no double pop).
+/// Generic over the job type for exactly that reason: the farm
+/// instantiates it with [`Job`], the models with plain integers.
+pub struct Injector<T> {
+    state: Mutex<InjectorState<T>>,
     ready: Condvar,
     /// Live queue-depth gauge (`injector.depth` in the farm registry),
     /// updated under the state lock on every push/pop.
     depth: Arc<Gauge>,
 }
 
-#[derive(Default)]
-struct InjectorState {
-    jobs: VecDeque<Job>,
+struct InjectorState<T> {
+    jobs: VecDeque<T>,
     shutdown: bool,
 }
 
-impl Injector {
-    fn new(depth: Arc<Gauge>) -> Self {
-        Self { state: Mutex::new(InjectorState::default()), ready: Condvar::new(), depth }
+impl<T> Injector<T> {
+    /// New empty injector publishing its depth through `depth`.
+    pub fn new(depth: Arc<Gauge>) -> Self {
+        Self {
+            state: Mutex::new(InjectorState { jobs: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+            depth,
+        }
     }
 
     /// Jobs run *outside* the lock (the guard is dropped before the
     /// engine starts), so a panicking job cannot poison the queue — but
     /// stay robust to poisoning anyway rather than propagating it.
-    fn lock(&self) -> MutexGuard<'_, InjectorState> {
-        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    fn lock(&self) -> MutexGuard<'_, InjectorState<T>> {
+        lock_unpoisoned(&self.state)
     }
 
-    fn push(&self, jobs: impl IntoIterator<Item = Job>) {
+    /// Enqueue jobs and wake exactly as many workers as there is new
+    /// work for — the pipeline path pushes one job per stage completion,
+    /// and waking the whole pool to pop a single job is a thundering
+    /// herd.
+    pub fn push(&self, jobs: impl IntoIterator<Item = T>) {
         let mut st = self.lock();
         let before = st.jobs.len();
         st.jobs.extend(jobs);
         let added = st.jobs.len() - before;
         self.depth.set(st.jobs.len() as i64);
         drop(st);
-        // Wake only as many workers as there is new work for — the
-        // pipeline path pushes one job per stage completion, and waking
-        // the whole pool to pop a single job is a thundering herd.
         match added {
             0 => {}
             1 => self.ready.notify_one(),
@@ -268,7 +280,7 @@ impl Injector {
     /// already-dispatched work always gets a reply. The returned flag is
     /// true when the job was already queued on arrival (a "steal" — the
     /// worker never parked for it).
-    fn next_job(&self) -> Option<(Job, bool)> {
+    pub fn next_job(&self) -> Option<(T, bool)> {
         let mut st = self.lock();
         let mut waited = false;
         loop {
@@ -284,7 +296,9 @@ impl Injector {
         }
     }
 
-    fn shutdown(&self) {
+    /// Flag shutdown and wake every parked worker. Queued jobs still
+    /// drain first — `next_job` returns `None` only on an empty queue.
+    pub fn shutdown(&self) {
         self.lock().shutdown = true;
         self.ready.notify_all();
     }
@@ -317,7 +331,7 @@ struct WorkerTelemetry {
     mk_strided: Arc<Counter>,
 }
 
-fn worker_loop(id: usize, engine: EngineSim, injector: Arc<Injector>, tel: WorkerTelemetry) {
+fn worker_loop(id: usize, engine: EngineSim, injector: Arc<Injector<Job>>, tel: WorkerTelemetry) {
     // The engine's scratch/microkernel counters are cumulative over its
     // lifetime; publish per-job deltas into the farm-wide counters.
     let (mut prev_fills, mut prev_hits, _) = engine.scratch_stats();
@@ -425,7 +439,7 @@ impl Canary {
         if self.cfg.sample_rate >= 1.0 {
             return true;
         }
-        let mut rng = self.rng.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut rng = lock_unpoisoned(&self.rng);
         let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
         u < self.cfg.sample_rate
     }
@@ -545,7 +559,7 @@ pub struct PipelineRunResult {
 /// injector queue.
 pub struct EngineFarm {
     cfg: FarmConfig,
-    injector: Arc<Injector>,
+    injector: Arc<Injector<Job>>,
     workers: Vec<JoinHandle<()>>,
     registry: Arc<Registry>,
     canary: Option<Canary>,
@@ -792,6 +806,25 @@ impl EngineFarm {
             layer.name,
             plan.shards.len()
         );
+        // Merge-time conservation checks (debug builds only — release
+        // stays free): the plan must partition the layer and the merged
+        // per-shard counters must obey the same coverage / halo /
+        // counter-conservation laws `trim check` proves statically.
+        #[cfg(debug_assertions)]
+        {
+            let vp = crate::verify::check_plan(&self.cfg.arch, layer, self.engines(), &plan);
+            debug_assert!(
+                vp.is_empty(),
+                "shard plan violates coverage laws at merge: {}",
+                vp.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("; ")
+            );
+            let vs = crate::verify::check_stats(&self.cfg.arch, layer, &plan, &per_shard);
+            debug_assert!(
+                vs.is_empty(),
+                "merged shard stats violate conservation laws: {}",
+                vs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("; ")
+            );
+        }
         Ok(FarmRunResult { ofmaps, stats, per_shard, plan })
     }
 

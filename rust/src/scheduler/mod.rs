@@ -31,8 +31,8 @@ pub mod shard;
 
 pub use backend::{SimBackend, SimNetSpec};
 pub use farm::{
-    CanaryConfig, CanaryReport, EngineFarm, FarmConfig, FarmRunResult, PipelineRunResult,
-    PipelineStage,
+    CanaryConfig, CanaryReport, EngineFarm, FarmConfig, FarmRunResult, Injector,
+    PipelineRunResult, PipelineStage,
 };
 pub use shard::{
     plan_filter_shards, plan_hybrid_shards, plan_row_shards, plan_shards, Shard, ShardAxis,

@@ -1,6 +1,8 @@
 //! Small self-contained utilities (this crate builds offline, so the
 //! usual crates.io helpers are implemented in-tree).
 
+pub mod sync;
+
 /// SplitMix64 PRNG — deterministic synthetic data for tests, benches and
 /// property-based randomised testing.
 #[derive(Debug, Clone)]

@@ -1,0 +1,63 @@
+//! Synchronization facade: std primitives by default, loom's
+//! model-checked equivalents under `--cfg loom`.
+//!
+//! The concurrent kernel of the serving stack — the work-stealing
+//! injector in `scheduler/farm.rs`, the admission depth/EWMA atomics in
+//! `coordinator/admission.rs`, and the router's retry accounting —
+//! imports `Mutex`/`Condvar`/atomics from here instead of `std::sync`.
+//! A normal build re-exports std types (zero cost, zero behaviour
+//! change); compiling with `RUSTFLAGS="--cfg loom"` swaps in
+//! [loom](https://docs.rs/loom)'s permutation-exploring replacements so
+//! `tests/loom_models.rs` can exhaustively check every interleaving of
+//! those paths. Loom is not a Cargo dependency (this crate builds
+//! offline); the CI `loom` job does `cargo add loom` before
+//! setting the cfg, and nothing under `cfg(loom)` compiles without it.
+//!
+//! Scope: only `Mutex`, `Condvar`, `MutexGuard` and the three atomic
+//! types the hot structures use. `Arc`, `mpsc` and `thread` stay std —
+//! the loom models re-create those inside `loom::model` themselves.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+
+// Loom's `lock()`/`wait()` return std's `LockResult`, so poison
+// recovery is spelled identically under both cfgs.
+pub use std::sync::PoisonError;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// The serving stack treats lock poisoning as survivable everywhere: a
+/// worker that panicked mid-push has already surfaced a typed error
+/// through its result channel, and the protected state (job queues,
+/// drain deadlines, metrics) stays consistent because every critical
+/// section completes its invariant before unlocking.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_panic() {
+        let m = std::sync::Arc::new(Mutex::new(0u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        // A plain `.lock().unwrap()` would panic here; the helper
+        // recovers the guard and the data is intact.
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 1);
+    }
+}

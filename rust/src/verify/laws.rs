@@ -1,0 +1,136 @@
+//! The conservation laws themselves: Tables I–II access counters and the
+//! PR-4/PR-5 halo formula, reimplemented **from the layer geometry alone**.
+//!
+//! This file deliberately duplicates the closed forms of
+//! [`crate::arch::fastsim::analytic_stats`] instead of calling them: the
+//! checker's value is that two independently written derivations of the
+//! paper's counter model (Tables I–II of arXiv 2408.10243, the halo
+//! algebra of the row/hybrid shard axes) must agree on every point of the
+//! design space. A bug in either derivation — or in the planner geometry
+//! they both consume — surfaces as a named [`super::Violation`] instead
+//! of silently skewing the bench trajectory.
+//!
+//! Derivations (stride-1 row split into `g_r` bands, `K ≤ K_nat`):
+//! every band reads its input slab of `rows + K − 1` padded rows once per
+//! filter group, so summed band reads are
+//! `⌈N/P_N⌉ · M · W_P · (H_O + g_r·(K−1))` against the unsharded
+//! `⌈N/P_N⌉ · M · W_P · (H_O + K − 1)` — the difference is exactly
+//! `(g_r − 1)(K − 1)` duplicated halo rows. Tiled layers (`K > K_nat`)
+//! read the shifted `(H_S × W_S)` view once per filter, giving the same
+//! shape with `K_nat − 1` in place of `K − 1`. Filter splits duplicate
+//! nothing (the groups of a `P_N`-aligned split partition the group
+//! loop), which is why the halo depends only on the row-split count.
+
+use crate::arch::{ArchConfig, SimStats};
+use crate::model::{ConvLayer, KernelTiling};
+use std::ops::Range;
+
+/// Closed-form counters for the piece of `layer` covering `filters`
+/// contiguous filters × output rows `rows` — cycles excluded (timing is a
+/// bound in [`super::check_point`], not a conservation law).
+///
+/// `rows == 0..H_O` prices the whole padded ifmap (the engine
+/// short-circuits a full range to a whole-layer run); a proper band
+/// prices its slab of `(rows − 1)·stride + K` input rows, halo included.
+pub fn expected_counters(
+    arch: &ArchConfig,
+    layer: &ConvLayer,
+    filters: usize,
+    rows: &Range<usize>,
+) -> SimStats {
+    let k = layer.k;
+    let (hp, wp) = (layer.h_i + 2 * layer.pad, layer.w_i + 2 * layer.pad);
+    let h_o = layer.h_o();
+    let w_o = layer.w_o();
+    let full = *rows == (0..h_o);
+    let slab_h = if full { hp } else { (rows.len() - 1) * layer.stride + k };
+    let n_i = filters as u64;
+    let out_cells = n_i * (rows.len() * w_o) as u64;
+    // The array always walks the stride-1 sweep grid of its input slab
+    // and decimates (§V), so MACs price sweep positions, not outputs.
+    let sweep1 = ((slab_h - k + 1) * (wp - k + 1)) as u64;
+    let mut s = SimStats { output_writes: out_cells, ..SimStats::default() };
+    if k <= arch.k {
+        // Native: the slab is broadcast once per P_N-filter group.
+        let groups = filters.div_ceil(arch.p_n) as u64;
+        s.ext_input_reads = groups * (layer.m * slab_h * wp) as u64;
+        s.weight_reads = n_i * (layer.m * k * k) as u64;
+        s.macs = s.weight_reads * sweep1;
+        let m_groups = layer.m.div_ceil(arch.p_m) as u64;
+        if m_groups > 1 {
+            // Temporal accumulation: one write per channel group, one
+            // read back per group after the first, per output cell.
+            s.psum_buf_writes = m_groups * out_cells;
+            s.psum_buf_reads = (m_groups - 1) * out_cells;
+        }
+        s.peak_ext_inputs_per_cycle = (2 * k - 1) as u64;
+        s.max_rsrb_occupancy = wp as u64;
+    } else {
+        // Tiled (§V): T shifted K_nat×K_nat tasks per kernel; the
+        // shifted sub-view is read once per filter pass.
+        let k_nat = arch.k;
+        let t = KernelTiling::new(k, k_nat).num_tiles() as u64;
+        let (hs, ws) = (slab_h - k + k_nat, wp - k + k_nat);
+        s.ext_input_reads = n_i * (hs * ws) as u64;
+        s.weight_reads = n_i * layer.m as u64 * t * (k_nat * k_nat) as u64;
+        s.macs = s.weight_reads * sweep1;
+        let spills = ((layer.m - 1) / arch.p_m) as u64;
+        s.psum_buf_reads = n_i * spills * (rows.len() * w_o) as u64;
+        s.psum_buf_writes = s.psum_buf_reads;
+        s.peak_ext_inputs_per_cycle = (2 * k_nat - 1) as u64;
+        s.max_rsrb_occupancy = ws as u64;
+    }
+    s
+}
+
+/// Exact inter-band halo duplication for a stride-1 layer split into
+/// `g_r` row bands (any filter-split count): summed shard input reads
+/// minus the unsharded reads. `None` for strided layers, whose bands
+/// *skip* sweep rows between bands instead of duplicating them — there
+/// the per-shard law stays exact but the aggregate is an inequality.
+pub fn expected_halo_reads(arch: &ArchConfig, layer: &ConvLayer, g_r: usize) -> Option<u64> {
+    if layer.stride != 1 {
+        return None;
+    }
+    let wp = layer.w_i + 2 * layer.pad;
+    let dup_bands = (g_r - 1) as u64;
+    Some(if layer.k <= arch.k {
+        (layer.n.div_ceil(arch.p_n) * layer.m * wp) as u64 * dup_bands * (layer.k - 1) as u64
+    } else {
+        (layer.n * (wp - layer.k + arch.k)) as u64 * dup_bands * (arch.k - 1) as u64
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_range_matches_band_union_on_stride1() {
+        // Native stride-1: two bands' counters sum to the whole layer's
+        // plus exactly one halo seam, straight from the closed forms.
+        let arch = ArchConfig::small(3, 2, 2);
+        let l = ConvLayer::new("t", 10, 3, 4, 6, 1, 1);
+        let h_o = l.h_o();
+        let whole = expected_counters(&arch, &l, l.n, &(0..h_o));
+        let lo = expected_counters(&arch, &l, l.n, &(0..h_o / 2));
+        let hi = expected_counters(&arch, &l, l.n, &(h_o / 2..h_o));
+        assert_eq!(lo.output_writes + hi.output_writes, whole.output_writes);
+        assert_eq!(lo.macs + hi.macs, whole.macs);
+        let halo = expected_halo_reads(&arch, &l, 2).unwrap();
+        assert_eq!(lo.ext_input_reads + hi.ext_input_reads, whole.ext_input_reads + halo);
+    }
+
+    #[test]
+    fn strided_bands_never_exceed_whole_macs() {
+        let arch = ArchConfig::small(3, 2, 2);
+        let l = ConvLayer::new("s", 13, 3, 2, 3, 2, 1);
+        let h_o = l.h_o();
+        let whole = expected_counters(&arch, &l, l.n, &(0..h_o));
+        let lo = expected_counters(&arch, &l, l.n, &(0..h_o / 2));
+        let hi = expected_counters(&arch, &l, l.n, &(h_o / 2..h_o));
+        assert!(lo.macs + hi.macs <= whole.macs, "decimated bands skip sweep rows");
+        assert_eq!(lo.output_writes + hi.output_writes, whole.output_writes);
+        assert!(expected_halo_reads(&arch, &l, 2).is_none());
+    }
+}

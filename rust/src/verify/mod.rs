@@ -1,0 +1,496 @@
+//! Static invariant verification (`trim check`): prove the shard planner
+//! and the closed-form counter model consistent over the whole design
+//! space **without running a single convolution**.
+//!
+//! Four invariant families, checked per `(layer geometry × shard mode ×
+//! engine count)` point:
+//!
+//! * **Coverage** — every `(filter, output row)` cell of the layer is
+//!   owned by exactly one shard (none dropped, none double-counted);
+//!   filter splits are `P_N`-group aligned; the grid dims, group counts
+//!   and planner bookkeeping are self-consistent.
+//! * **Halo conservation** — each shard's off-chip input reads match the
+//!   independent slab formula in [`laws`], and on stride-1 layers the
+//!   shard sum equals the unsharded reads plus *exactly* the
+//!   [`laws::expected_halo_reads`] inter-band duplication.
+//! * **Cycle bound** — no shard prices more cycles than the unsharded
+//!   layer, and the plan [`ShardMode::Auto`] picks never has a worse
+//!   [`ShardPlan::speedup_bound`] than the axes it rejected.
+//! * **Counter conservation** — the fast tier's analytic counters agree
+//!   with the independently re-derived Tables I–II identities, per shard
+//!   and in aggregate (outputs partition exactly; weight reads duplicate
+//!   exactly once per row band; MACs partition on stride-1 and can only
+//!   shrink under decimation).
+//!
+//! [`check_plan`]/[`check_stats`] are also called (debug builds) at
+//! shard-merge time in `scheduler/farm.rs`, so the same laws guard the
+//! dynamic path for free. [`self_test`] corrupts a known-good plan and
+//! stats vector and demands named violations — CI proof that the checker
+//! *can* fail.
+
+pub mod laws;
+
+use crate::arch::control::plan_layer;
+use crate::arch::fastsim::{analytic_stats, analytic_stats_rows};
+use crate::arch::{ArchConfig, SimStats};
+use crate::model::ConvLayer;
+use crate::scheduler::{
+    plan_filter_shards, plan_hybrid_shards, plan_row_shards, plan_shards, Shard, ShardMode,
+    ShardPlan,
+};
+use std::fmt;
+
+/// The invariant family a [`Violation`] belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Law {
+    /// Exact-cover / alignment / planner-bookkeeping laws.
+    Coverage,
+    /// Off-chip input reads vs the slab + halo closed forms.
+    HaloConservation,
+    /// Shard cycles vs the unsharded bound; Auto plan consistency.
+    CycleBound,
+    /// Tables I–II counter identities, per shard and aggregate.
+    CounterConservation,
+}
+
+impl Law {
+    /// Stable kebab-case name (the per-violation report and JSON line).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Coverage => "coverage",
+            Self::HaloConservation => "halo-conservation",
+            Self::CycleBound => "cycle-bound",
+            Self::CounterConservation => "counter-conservation",
+        }
+    }
+}
+
+impl fmt::Display for Law {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// One failed law check, carrying everything needed to file it.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Layer + engine geometry, e.g. `cl1 12x12 k3 s1 p1 m3 n16 | P_N=2 P_M=2 K_nat=3`.
+    pub geometry: String,
+    /// Shard mode (or plan axis) the point was checked under.
+    pub mode: String,
+    /// Engine count of the point.
+    pub engines: usize,
+    /// Which invariant family failed.
+    pub law: Law,
+    /// What the law demanded.
+    pub expected: String,
+    /// What the planner/model produced.
+    pub got: String,
+    /// Which specific identity failed, and where.
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}] {} mode={} engines={}: {} — expected {}, got {}",
+            self.law, self.geometry, self.mode, self.engines, self.detail, self.expected, self.got
+        )
+    }
+}
+
+/// Render the geometry tag shared by every violation of one point.
+pub fn geometry_tag(arch: &ArchConfig, layer: &ConvLayer) -> String {
+    format!(
+        "{} {}x{} k{} s{} p{} m{} n{} | P_N={} P_M={} K_nat={}",
+        layer.name, layer.h_i, layer.w_i, layer.k, layer.stride, layer.pad, layer.m, layer.n,
+        arch.p_n, arch.p_m, arch.k
+    )
+}
+
+/// Check accumulator: counts every law evaluated, records the failures.
+struct Ctx {
+    geometry: String,
+    mode: String,
+    engines: usize,
+    checks: u64,
+    out: Vec<Violation>,
+}
+
+impl Ctx {
+    fn new(arch: &ArchConfig, layer: &ConvLayer, mode: &str, engines: usize) -> Self {
+        Self {
+            geometry: geometry_tag(arch, layer),
+            mode: mode.to_string(),
+            engines,
+            checks: 0,
+            out: Vec::new(),
+        }
+    }
+
+    fn law(
+        &mut self,
+        law: Law,
+        ok: bool,
+        expected: impl fmt::Display,
+        got: impl fmt::Display,
+        detail: impl fmt::Display,
+    ) {
+        self.checks += 1;
+        if !ok {
+            self.out.push(Violation {
+                geometry: self.geometry.clone(),
+                mode: self.mode.clone(),
+                engines: self.engines,
+                law,
+                expected: expected.to_string(),
+                got: got.to_string(),
+                detail: detail.to_string(),
+            });
+        }
+    }
+
+    fn eq_u64(&mut self, law: Law, expected: u64, got: u64, detail: impl fmt::Display) {
+        self.law(law, expected == got, expected, got, detail);
+    }
+}
+
+/// Structural Coverage laws of one [`ShardPlan`] (no counters involved).
+/// Returns the violations; empty means the plan partitions the layer.
+pub fn check_plan(
+    arch: &ArchConfig,
+    layer: &ConvLayer,
+    engines: usize,
+    plan: &ShardPlan,
+) -> Vec<Violation> {
+    let mut ctx = Ctx::new(arch, layer, plan.axis.as_str(), engines);
+    check_plan_in(&mut ctx, arch, layer, engines, plan);
+    ctx.out
+}
+
+fn check_plan_in(ctx: &mut Ctx, arch: &ArchConfig, layer: &ConvLayer, engines: usize, plan: &ShardPlan) {
+    let h_o = layer.h_o();
+    let c = Law::Coverage;
+    ctx.eq_u64(c, (plan.grid.0 * plan.grid.1) as u64, plan.shards.len() as u64, "grid dims × == shard count");
+    ctx.law(c, plan.shards.len() <= engines, format!("≤ {engines}"), plan.shards.len(), "shards within engine budget");
+    ctx.eq_u64(c, h_o as u64, plan.rows as u64, "plan.rows == H_O");
+    ctx.eq_u64(c, layer.n.div_ceil(arch.p_n) as u64, plan.filter_groups as u64, "plan.filter_groups == ⌈N/P_N⌉");
+    ctx.eq_u64(c, arch.p_n as u64, plan.p_n as u64, "plan.p_n == engine P_N");
+    let mut covered = vec![0u32; layer.n * h_o];
+    for (i, s) in plan.shards.iter().enumerate() {
+        let at = format!("shard {i}");
+        ctx.eq_u64(c, i as u64, s.index as u64, format!("{at}: index matches position"));
+        ctx.law(c, !s.filters.is_empty() && !s.rows.is_empty(), "non-empty ranges", format!("filters {:?} rows {:?}", s.filters, s.rows), format!("{at}: empty shard"));
+        ctx.law(c, s.filters.end <= layer.n && s.rows.end <= h_o, format!("within 0..{} × 0..{h_o}", layer.n), format!("filters {:?} rows {:?}", s.filters, s.rows), format!("{at}: out of bounds"));
+        let aligned = s.filters.start % arch.p_n == 0 && (s.filters.end % arch.p_n == 0 || s.filters.end == layer.n);
+        ctx.law(c, aligned, "P_N-group-aligned boundaries", format!("{:?}", s.filters), format!("{at}: filter split alignment"));
+        ctx.eq_u64(c, s.filters.len().div_ceil(arch.p_n) as u64, s.groups as u64, format!("{at}: groups == ⌈|filters|/P_N⌉"));
+        for f in s.filters.clone() {
+            for r in s.rows.clone() {
+                if let Some(cell) = covered.get_mut(f * h_o + r) {
+                    *cell += 1;
+                }
+            }
+        }
+    }
+    let dropped = covered.iter().filter(|&&v| v == 0).count();
+    let doubled = covered.iter().filter(|&&v| v > 1).count();
+    ctx.eq_u64(c, 0, dropped as u64, "output cells owned by no shard (dropped)");
+    ctx.eq_u64(c, 0, doubled as u64, "output cells owned by >1 shard (double-counted)");
+}
+
+/// The analytic per-shard counters the fast tier would report for
+/// `shard` of `layer` — the model side of [`check_stats`].
+pub fn analytic_shard_stats(arch: &ArchConfig, layer: &ConvLayer, shard: &Shard) -> SimStats {
+    let sub = ConvLayer {
+        name: format!("{}[f{}..{}]", layer.name, shard.filters.start, shard.filters.end),
+        n: shard.filters.len(),
+        ..layer.clone()
+    };
+    if shard.rows == (0..layer.h_o()) {
+        // A full row range is a whole-layer run, never priced as a band
+        // (mirrors the engine's short-circuit).
+        analytic_stats(arch, &sub, &plan_layer(arch, &sub))
+    } else {
+        analytic_stats_rows(arch, &sub, &shard.rows)
+    }
+}
+
+/// Halo + counter conservation of per-shard [`SimStats`] against the
+/// independent closed forms in [`laws`] — per shard and in aggregate.
+/// `per_shard[i]` must be the stats of `plan.shards[i]` (the farm's
+/// merge-time ordering). Cycles are not a conservation law and are
+/// ignored here; see [`check_point`] for the cycle bound.
+pub fn check_stats(
+    arch: &ArchConfig,
+    layer: &ConvLayer,
+    plan: &ShardPlan,
+    per_shard: &[SimStats],
+) -> Vec<Violation> {
+    let mut ctx = Ctx::new(arch, layer, plan.axis.as_str(), plan.shards.len());
+    check_stats_in(&mut ctx, arch, layer, plan, per_shard);
+    ctx.out
+}
+
+fn check_stats_in(
+    ctx: &mut Ctx,
+    arch: &ArchConfig,
+    layer: &ConvLayer,
+    plan: &ShardPlan,
+    per_shard: &[SimStats],
+) {
+    ctx.eq_u64(
+        Law::CounterConservation,
+        plan.shards.len() as u64,
+        per_shard.len() as u64,
+        "one stats entry per shard",
+    );
+    let mut sum = SimStats::default();
+    for (s, got) in plan.shards.iter().zip(per_shard) {
+        let exp = laws::expected_counters(arch, layer, s.filters.len(), &s.rows);
+        let at = format!("shard {} (filters {:?} rows {:?})", s.index, s.filters, s.rows);
+        ctx.eq_u64(Law::HaloConservation, exp.ext_input_reads, got.ext_input_reads, format!("{at}: slab input reads"));
+        ctx.eq_u64(Law::CounterConservation, exp.weight_reads, got.weight_reads, format!("{at}: weight reads"));
+        ctx.eq_u64(Law::CounterConservation, exp.output_writes, got.output_writes, format!("{at}: output writes"));
+        ctx.eq_u64(Law::CounterConservation, exp.macs, got.macs, format!("{at}: MACs"));
+        ctx.eq_u64(Law::CounterConservation, exp.psum_buf_reads, got.psum_buf_reads, format!("{at}: psum reads"));
+        ctx.eq_u64(Law::CounterConservation, exp.psum_buf_writes, got.psum_buf_writes, format!("{at}: psum writes"));
+        ctx.eq_u64(Law::CounterConservation, exp.peak_ext_inputs_per_cycle, got.peak_ext_inputs_per_cycle, format!("{at}: eq. (4) peak"));
+        ctx.eq_u64(Law::CounterConservation, exp.max_rsrb_occupancy, got.max_rsrb_occupancy, format!("{at}: RSRB occupancy"));
+        sum.ext_input_reads += got.ext_input_reads;
+        sum.weight_reads += got.weight_reads;
+        sum.output_writes += got.output_writes;
+        sum.macs += got.macs;
+    }
+    let whole = laws::expected_counters(arch, layer, layer.n, &(0..layer.h_o()));
+    ctx.eq_u64(Law::CounterConservation, whole.output_writes, sum.output_writes, "aggregate: output writes partition the layer exactly");
+    ctx.eq_u64(
+        Law::CounterConservation,
+        whole.weight_reads * plan.grid.1 as u64,
+        sum.weight_reads,
+        "aggregate: weights are re-read once per row band",
+    );
+    if layer.stride == 1 {
+        ctx.eq_u64(Law::CounterConservation, whole.macs, sum.macs, "aggregate: stride-1 MACs partition the layer exactly");
+    } else {
+        ctx.law(
+            Law::CounterConservation,
+            sum.macs <= whole.macs,
+            format!("≤ {}", whole.macs),
+            sum.macs,
+            "aggregate: decimated bands can only shrink the sweep",
+        );
+    }
+    if let Some(halo) = laws::expected_halo_reads(arch, layer, plan.grid.1) {
+        ctx.eq_u64(
+            Law::HaloConservation,
+            whole.ext_input_reads + halo,
+            sum.ext_input_reads,
+            "aggregate: shard reads == unsharded reads + exact halo duplication",
+        );
+    }
+}
+
+/// Result of checking one design-space point.
+#[derive(Debug, Clone)]
+pub struct PointReport {
+    /// Total law evaluations performed.
+    pub checks: u64,
+    /// The failures (empty for a healthy point).
+    pub violations: Vec<Violation>,
+}
+
+/// Verify all four invariant families for one `(layer, mode, engines)`
+/// point on `arch`, planning with the real planner and pricing shards
+/// with the real fast-tier model — no convolution executed.
+/// `mode` must be a per-layer mode (not [`ShardMode::LayerPipeline`]).
+pub fn check_point(
+    arch: &ArchConfig,
+    layer: &ConvLayer,
+    engines: usize,
+    mode: ShardMode,
+) -> PointReport {
+    let plan = plan_shards(arch, layer, engines, mode);
+    let mut ctx = Ctx::new(arch, layer, mode.as_str(), engines);
+    check_plan_in(&mut ctx, arch, layer, engines, &plan);
+    let per_shard: Vec<SimStats> =
+        plan.shards.iter().map(|s| analytic_shard_stats(arch, layer, s)).collect();
+    check_stats_in(&mut ctx, arch, layer, &plan, &per_shard);
+
+    // Cycle-bound sanity: the whole-layer analytic model bounds every
+    // shard from above (a shard is a sub-problem), and Auto never keeps
+    // a plan with a worse bound than an axis it rejected.
+    let whole = analytic_stats(arch, layer, &plan_layer(arch, layer));
+    let cycles_max = per_shard.iter().map(|s| s.cycles).max().unwrap_or(0);
+    ctx.law(
+        Law::CycleBound,
+        cycles_max <= whole.cycles,
+        format!("≤ {}", whole.cycles),
+        cycles_max,
+        "max shard cycles within the unsharded cycle count",
+    );
+    if mode == ShardMode::Auto {
+        let chosen = plan.speedup_bound();
+        let bf = plan_filter_shards(arch, layer, engines).speedup_bound();
+        let br = plan_row_shards(arch, layer, engines).speedup_bound();
+        let bh = plan_hybrid_shards(arch, layer, engines).speedup_bound();
+        // Auto takes the better pure axis, and the grid only when
+        // *strictly* better — so the chosen bound dominates both axes
+        // exactly and the grid up to the planner's strictness epsilon.
+        ctx.law(
+            Law::CycleBound,
+            chosen + 1e-6 >= bf.max(br) && chosen + 1e-6 >= bh - 1e-9,
+            format!("≥ max(filters {bf:.3}, rows {br:.3}, hybrid-ε {bh:.3})"),
+            format!("{chosen:.3}"),
+            "Auto speedup_bound consistent with the rejected axes",
+        );
+    }
+    PointReport { checks: ctx.checks, violations: ctx.out }
+}
+
+/// Summary of a design-space sweep.
+#[derive(Debug, Clone)]
+pub struct SweepSummary {
+    /// `(layer × arch × mode × engines)` points checked.
+    pub points: usize,
+    /// Total law evaluations across all points.
+    pub checks: u64,
+    /// Every violation found (empty on a healthy tree).
+    pub violations: Vec<Violation>,
+}
+
+/// The swept design space: layer geometries covering native/tiled ×
+/// unit/strided × padded/unpadded shapes, engine configs spanning the
+/// Fig. 7 parallelism grid, all four per-layer shard modes, and farm
+/// sizes from 1 to 16 engines. `full` is the CI `--sweep` grid
+/// (≥ 200 points); the quick grid is a strict subset for local runs.
+pub fn sweep_design_space(full: bool) -> SweepSummary {
+    let layers = [
+        ConvLayer::new("cl1", 24, 3, 3, 16, 1, 1),
+        ConvLayer::new("cl2", 16, 3, 8, 16, 1, 1),
+        ConvLayer::new("deep", 8, 3, 16, 32, 1, 1),
+        ConvLayer::new("k5", 14, 5, 3, 6, 1, 2),
+        ConvLayer::new("k7", 12, 7, 2, 4, 1, 0),
+        ConvLayer::new("alex", 31, 11, 2, 6, 4, 0),
+        ConvLayer::new("s2", 13, 3, 3, 5, 2, 1),
+    ];
+    let archs = [
+        ArchConfig::small(3, 2, 2),
+        ArchConfig::small(3, 4, 4),
+        ArchConfig::paper_engine(),
+    ];
+    let modes = [ShardMode::FilterShards, ShardMode::Spatial, ShardMode::Hybrid, ShardMode::Auto];
+    let engine_counts: &[usize] = if full { &[1, 2, 4, 8, 16] } else { &[1, 4, 8] };
+    let (layers, archs): (&[ConvLayer], &[ArchConfig]) =
+        if full { (&layers, &archs) } else { (&layers[..4], &archs[..1]) };
+
+    let mut summary = SweepSummary { points: 0, checks: 0, violations: Vec::new() };
+    for layer in layers {
+        for arch in archs {
+            for &mode in &modes {
+                for &engines in engine_counts {
+                    let r = check_point(arch, layer, engines, mode);
+                    summary.points += 1;
+                    summary.checks += r.checks;
+                    summary.violations.extend(r.violations);
+                }
+            }
+        }
+    }
+    summary
+}
+
+/// Corrupt a plan by dropping its last shard (a lost row band / filter
+/// split) — [`check_plan`] must report dropped Coverage cells.
+pub fn corrupt_drop_shard(plan: &mut ShardPlan) {
+    plan.shards.pop();
+}
+
+/// Corrupt a row plan by extending a band into its neighbour (the
+/// double-counted-halo failure) — [`check_plan`] must report
+/// double-counted Coverage cells.
+pub fn corrupt_overlap_rows(plan: &mut ShardPlan) {
+    if plan.shards.len() >= 2 {
+        plan.shards[0].rows.end += 1;
+    }
+}
+
+/// Prove the checker can fail: corrupt a known-good plan and stats
+/// vector in the three seeded ways and demand each is rejected with the
+/// right named law. Run by `trim check` on every invocation, so a
+/// vacuously-green checker fails CI.
+pub fn self_test() -> Result<(), String> {
+    let arch = ArchConfig::small(3, 2, 2);
+    let layer = ConvLayer::new("selftest", 16, 3, 3, 8, 1, 1);
+    let engines = 4;
+
+    let expect = |name: &str, law: Law, v: &[Violation]| -> Result<(), String> {
+        if v.iter().any(|x| x.law == law) {
+            Ok(())
+        } else {
+            Err(format!("{name}: corrupted input was NOT rejected with a {law} violation"))
+        }
+    };
+
+    let mut dropped = plan_row_shards(&arch, &layer, engines);
+    corrupt_drop_shard(&mut dropped);
+    expect("dropped row band", Law::Coverage, &check_plan(&arch, &layer, engines, &dropped))?;
+
+    let mut overlapped = plan_row_shards(&arch, &layer, engines);
+    corrupt_overlap_rows(&mut overlapped);
+    expect("overlapping bands", Law::Coverage, &check_plan(&arch, &layer, engines, &overlapped))?;
+
+    let plan = plan_row_shards(&arch, &layer, engines);
+    let mut stats: Vec<SimStats> =
+        plan.shards.iter().map(|s| analytic_shard_stats(&arch, &layer, s)).collect();
+    stats[0].ext_input_reads += 1; // a double-counted halo element
+    expect("inflated halo reads", Law::HaloConservation, &check_stats(&arch, &layer, &plan, &stats))?;
+
+    let mut stats2: Vec<SimStats> =
+        plan.shards.iter().map(|s| analytic_shard_stats(&arch, &layer, s)).collect();
+    stats2[1].macs = stats2[1].macs.wrapping_sub(1);
+    expect("skewed MAC counter", Law::CounterConservation, &check_stats(&arch, &layer, &plan, &stats2))?;
+
+    // And the uncorrupted point must be clean, or the fixtures are stale.
+    let healthy = check_point(&arch, &layer, engines, ShardMode::Auto);
+    if !healthy.violations.is_empty() {
+        return Err(format!(
+            "self-test fixture is not clean: {}",
+            healthy.violations[0]
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_is_clean() {
+        let s = sweep_design_space(false);
+        assert!(s.points >= 48, "quick grid shrank: {} points", s.points);
+        assert!(
+            s.violations.is_empty(),
+            "quick sweep found violations: {}",
+            s.violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("; ")
+        );
+    }
+
+    #[test]
+    fn self_test_catches_seeded_corruption() {
+        self_test().unwrap();
+    }
+
+    #[test]
+    fn full_sweep_covers_acceptance_floor() {
+        let s = sweep_design_space(true);
+        assert!(s.points >= 200, "full sweep has only {} points", s.points);
+        assert!(
+            s.violations.is_empty(),
+            "full sweep found violations: {}",
+            s.violations.iter().take(5).map(|v| v.to_string()).collect::<Vec<_>>().join("; ")
+        );
+    }
+}

@@ -1,0 +1,202 @@
+//! Tagged concurrency subset for Miri and ThreadSanitizer.
+//!
+//! These are plain std-thread stress tests over the same structures the
+//! loom models check exhaustively (tests/loom_models.rs): the
+//! work-stealing [`Injector`], [`AdmissionControl`] and [`Ewma`]. Loom
+//! proves every interleaving of the small models; this file lets the
+//! dynamic checkers (Miri's data-race detector, TSan) watch the *real*
+//! std primitives under load, including paths loom cannot take (poisoned
+//! locks are impossible here, but timing-dependent steal/park ratios
+//! are). CI runs it twice:
+//!
+//! ```text
+//! MIRIFLAGS=-Zmiri-disable-isolation cargo +nightly miri test --test concurrency_tagged
+//! RUSTFLAGS=-Zsanitizer=thread cargo +nightly test -Zbuild-std \
+//!     --target x86_64-unknown-linux-gnu --test concurrency_tagged --release
+//! ```
+//!
+//! Thread and iteration counts are deliberately small: Miri interprets
+//! every instruction (~100× slowdown), so the point is coverage of the
+//! synchronisation edges, not throughput.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use trim_sa::coordinator::{AdmissionConfig, AdmissionControl, ServeError};
+use trim_sa::obs::Registry;
+use trim_sa::scheduler::Injector;
+
+fn injector() -> Arc<Injector<usize>> {
+    let registry = Registry::new();
+    Arc::new(Injector::new(registry.gauge("injector.depth")))
+}
+
+/// Two producers race two stealing consumers; every job arrives exactly
+/// once and the depth gauge settles at zero.
+#[test]
+fn injector_concurrent_push_and_steal() {
+    const PRODUCERS: usize = 2;
+    const PER_PRODUCER: usize = 25;
+    let inj = injector();
+
+    let consumers: Vec<_> = (0..2)
+        .map(|_| {
+            let inj = Arc::clone(&inj);
+            thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some((job, _stolen)) = inj.next_job() {
+                    got.push(job);
+                }
+                got
+            })
+        })
+        .collect();
+
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let inj = Arc::clone(&inj);
+            thread::spawn(move || {
+                for i in 0..PER_PRODUCER {
+                    inj.push([p * PER_PRODUCER + i]);
+                }
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().expect("producer panicked");
+    }
+    inj.shutdown();
+
+    let mut all: Vec<usize> = consumers
+        .into_iter()
+        .flat_map(|c| c.join().expect("consumer panicked"))
+        .collect();
+    all.sort_unstable();
+    let expect: Vec<usize> = (0..PRODUCERS * PER_PRODUCER).collect();
+    assert_eq!(all, expect, "jobs lost or double-popped under contention");
+}
+
+/// Jobs queued before shutdown always drain; `next_job` only returns
+/// `None` on an empty queue.
+#[test]
+fn injector_shutdown_still_drains_backlog() {
+    let inj = injector();
+    inj.push(0..10usize);
+
+    let consumer = {
+        let inj = Arc::clone(&inj);
+        thread::spawn(move || {
+            let mut n = 0usize;
+            while inj.next_job().is_some() {
+                n += 1;
+            }
+            n
+        })
+    };
+    inj.shutdown();
+    assert_eq!(consumer.join().expect("consumer panicked"), 10);
+}
+
+/// Hammer `try_admit`/`release` from several threads: the number of
+/// concurrently admitted requests never exceeds `queue_cap`, and every
+/// slot is returned (final depth zero).
+#[test]
+fn admission_cap_holds_under_contention() {
+    const CAP: usize = 3;
+    const THREADS: usize = 4;
+    const ITERS: usize = 25;
+    let ac = Arc::new(AdmissionControl::new(AdmissionConfig {
+        queue_cap: CAP,
+        budget_cycles: None,
+    }));
+    let inflight = Arc::new(AtomicUsize::new(0));
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let ac = Arc::clone(&ac);
+            let inflight = Arc::clone(&inflight);
+            thread::spawn(move || {
+                let mut admitted = 0usize;
+                for _ in 0..ITERS {
+                    match ac.try_admit() {
+                        Ok(()) => {
+                            let now = inflight.fetch_add(1, Ordering::AcqRel) + 1;
+                            assert!(now <= CAP, "{now} admitted into a cap-{CAP} queue");
+                            inflight.fetch_sub(1, Ordering::AcqRel);
+                            ac.release(1);
+                            admitted += 1;
+                        }
+                        Err(ServeError::Overloaded { .. }) => {}
+                        Err(other) => panic!("unexpected shed reason: {other:?}"),
+                    }
+                }
+                admitted
+            })
+        })
+        .collect();
+
+    let total: usize = workers.into_iter().map(|w| w.join().expect("worker panicked")).sum();
+    assert!(total >= 1, "at least one admit must succeed without contention on drain");
+    assert_eq!(ac.depth(), 0, "queue slots leaked");
+    // Release on an empty queue saturates instead of underflowing.
+    ac.release(usize::MAX);
+    assert_eq!(ac.depth(), 0);
+}
+
+/// Concurrent EWMA observers: the packed-atomic update loop must stay
+/// race-free and land on a finite, clamped estimate.
+#[test]
+fn ewma_estimators_survive_concurrent_observers() {
+    let ac = Arc::new(AdmissionControl::new(AdmissionConfig::default()));
+    let workers: Vec<_> = (0..3u64)
+        .map(|t| {
+            let ac = Arc::clone(&ac);
+            thread::spawn(move || {
+                for i in 0..20u64 {
+                    ac.observe_batch(4, Some(1_000 + t * 100 + i), Duration::from_micros(250));
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("observer panicked");
+    }
+    let cost = ac.cost_estimate().expect("cost EWMA never primed");
+    assert!(cost.is_finite() && cost >= 1.0, "cost estimate {cost} out of range");
+    assert!(ac.service_estimate() >= Duration::from_micros(1));
+}
+
+/// `begin_drain` racing live submitters: whatever the interleaving,
+/// admission is closed once drain returns and later submits shed with
+/// `Shutdown`.
+#[test]
+fn drain_racing_submitters_closes_admission() {
+    let ac = Arc::new(AdmissionControl::new(AdmissionConfig {
+        queue_cap: 8,
+        budget_cycles: None,
+    }));
+    let submitters: Vec<_> = (0..2)
+        .map(|_| {
+            let ac = Arc::clone(&ac);
+            thread::spawn(move || {
+                for _ in 0..10 {
+                    if ac.try_admit().is_ok() {
+                        ac.release(1);
+                    }
+                }
+            })
+        })
+        .collect();
+    ac.begin_drain(Instant::now());
+    for s in submitters {
+        s.join().expect("submitter panicked");
+    }
+
+    assert!(ac.is_draining());
+    match ac.try_admit() {
+        Err(ServeError::Shutdown) => {}
+        other => panic!("post-drain admit must shed with Shutdown, got {other:?}"),
+    }
+}

@@ -1,0 +1,161 @@
+//! Property tests over the static invariant checker (`src/verify/`).
+//!
+//! Two directions, both required for the checker to be trustworthy:
+//!
+//! * **soundness of the planners** — every fuzzed
+//!   `(geometry, arch, engines)` point, planned by the *real*
+//!   `plan_row_shards` / `plan_hybrid_shards` / `Auto` planners and
+//!   priced by the *real* fast-tier model, passes every law
+//!   (`check_plan`, `check_stats`, `check_point`) with zero violations;
+//! * **sensitivity of the checker** — seeded corruptions of those same
+//!   plans (a dropped row band, a band extended into its neighbour, an
+//!   inflated halo read count) are rejected with the *named* law, not
+//!   just "some error". A checker that cannot fail proves nothing.
+//!
+//! Geometries are drawn with the repo's deterministic [`SplitMix64`], so
+//! a failure reproduces from the printed case description alone.
+
+use trim_sa::arch::ArchConfig;
+use trim_sa::model::ConvLayer;
+use trim_sa::scheduler::{plan_hybrid_shards, plan_row_shards, ShardMode, ShardPlan};
+use trim_sa::util::SplitMix64;
+use trim_sa::verify::{
+    analytic_shard_stats, check_plan, check_point, check_stats, corrupt_drop_shard,
+    corrupt_overlap_rows, Law,
+};
+
+/// One fuzzed design point: native and tiled kernels, unit and stride-2
+/// sweeps, padded and unpadded borders, on a spread of engine fabrics.
+fn fuzz_case(rng: &mut SplitMix64, i: usize) -> (ArchConfig, ConvLayer, usize) {
+    let k = [3usize, 5, 7][rng.range(0, 3)];
+    let h_w = rng.range(k + 1, k + 21);
+    let stride = [1usize, 2][rng.range(0, 2)];
+    let pad = rng.range(0, 3.min(k / 2 + 1));
+    let m = rng.range(1, 6);
+    let n = rng.range(1, 20);
+    let layer = ConvLayer::new(&format!("fuzz{i}"), h_w, k, m, n, stride, pad);
+    // K_nat stays 3 (the paper fabric): k ∈ {5, 7} exercises the tiled
+    // decomposition laws, k = 3 the native ones.
+    let p_m = [2usize, 4, 8][rng.range(0, 3)];
+    let p_n = [2usize, 3, 7][rng.range(0, 3)];
+    let arch = ArchConfig::small(3, p_m, p_n);
+    let engines = rng.range(1, 9);
+    (arch, layer, engines)
+}
+
+fn describe(arch: &ArchConfig, layer: &ConvLayer, engines: usize) -> String {
+    format!(
+        "{} {}x{} k{} s{} p{} m{} n{} | P_N={} P_M={} engines={engines}",
+        layer.name, layer.h_i, layer.w_i, layer.k, layer.stride, layer.pad, layer.m, layer.n,
+        arch.p_n, arch.p_m
+    )
+}
+
+/// Every fuzzed point, planned for real and priced by the real model,
+/// satisfies every law — structural coverage, halo conservation,
+/// counter conservation and the cycle bound — on all three axes.
+#[test]
+fn fuzzed_plans_pass_every_law() {
+    let mut rng = SplitMix64::new(0x5747_71C0_DE00_0001);
+    for i in 0..150 {
+        let (arch, layer, engines) = fuzz_case(&mut rng, i);
+        let case = describe(&arch, &layer, engines);
+
+        for (name, plan) in [
+            ("rows", plan_row_shards(&arch, &layer, engines)),
+            ("hybrid", plan_hybrid_shards(&arch, &layer, engines)),
+        ] {
+            let pv = check_plan(&arch, &layer, engines, &plan);
+            assert!(pv.is_empty(), "[{case}] {name} plan violates: {}", pv[0]);
+            let per_shard: Vec<_> =
+                plan.shards.iter().map(|s| analytic_shard_stats(&arch, &layer, s)).collect();
+            let sv = check_stats(&arch, &layer, &plan, &per_shard);
+            assert!(sv.is_empty(), "[{case}] {name} stats violate: {}", sv[0]);
+        }
+
+        // The full four-family point check on the planner's own pick.
+        let report = check_point(&arch, &layer, engines, ShardMode::Auto);
+        assert!(
+            report.violations.is_empty(),
+            "[{case}] Auto point violates: {}",
+            report.violations[0]
+        );
+        assert!(report.checks > 0, "[{case}] point evaluated no laws");
+    }
+}
+
+/// Seeded corruptions of fuzzed *valid* plans are rejected with the
+/// named Coverage law: a dropped band leaves orphaned output cells, an
+/// extended band double-counts (or escapes) them.
+#[test]
+fn fuzzed_corrupted_plans_are_rejected_by_name() {
+    let mut rng = SplitMix64::new(0x5747_71C0_DE00_0002);
+    let mut exercised = 0usize;
+    for i in 0..150 {
+        let (arch, layer, engines) = fuzz_case(&mut rng, i);
+        let case = describe(&arch, &layer, engines);
+        let plan = plan_row_shards(&arch, &layer, engines);
+        if plan.shards.len() < 2 {
+            continue; // single-shard plans have nothing to drop/overlap
+        }
+        exercised += 1;
+
+        let reject = |tag: &str, corrupted: &ShardPlan| {
+            let v = check_plan(&arch, &layer, engines, corrupted);
+            assert!(
+                v.iter().any(|x| x.law == Law::Coverage),
+                "[{case}] {tag}: corruption passed the checker (violations: {:?})",
+                v.iter().map(|x| x.law).collect::<Vec<_>>()
+            );
+        };
+
+        let mut dropped = plan.clone();
+        corrupt_drop_shard(&mut dropped);
+        reject("dropped row band", &dropped);
+
+        let mut overlapped = plan.clone();
+        corrupt_overlap_rows(&mut overlapped);
+        reject("overlapping bands", &overlapped);
+    }
+    assert!(exercised >= 20, "fuzz ranges too narrow: only {exercised} multi-shard plans");
+}
+
+/// Corrupted *stats* (the farm-merge side) are rejected with the named
+/// conservation law: an extra off-chip read breaks HaloConservation, a
+/// skewed MAC count breaks CounterConservation.
+#[test]
+fn fuzzed_corrupted_stats_are_rejected_by_name() {
+    let mut rng = SplitMix64::new(0x5747_71C0_DE00_0003);
+    let mut exercised = 0usize;
+    for i in 0..60 {
+        let (arch, layer, engines) = fuzz_case(&mut rng, i);
+        if layer.stride != 1 {
+            continue; // the exact halo identity is a stride-1 law
+        }
+        let case = describe(&arch, &layer, engines);
+        let plan = plan_row_shards(&arch, &layer, engines);
+        let stats: Vec<_> =
+            plan.shards.iter().map(|s| analytic_shard_stats(&arch, &layer, s)).collect();
+        exercised += 1;
+
+        let mut inflated = stats.clone();
+        inflated[0].ext_input_reads += 1;
+        let v = check_stats(&arch, &layer, &plan, &inflated);
+        assert!(
+            v.iter().any(|x| x.law == Law::HaloConservation),
+            "[{case}] inflated halo read passed: {:?}",
+            v.iter().map(|x| x.law).collect::<Vec<_>>()
+        );
+
+        let mut skewed = stats.clone();
+        let last = skewed.len() - 1;
+        skewed[last].macs = skewed[last].macs.wrapping_add(1);
+        let v = check_stats(&arch, &layer, &plan, &skewed);
+        assert!(
+            v.iter().any(|x| x.law == Law::CounterConservation),
+            "[{case}] skewed MAC counter passed: {:?}",
+            v.iter().map(|x| x.law).collect::<Vec<_>>()
+        );
+    }
+    assert!(exercised >= 20, "fuzz ranges too narrow: only {exercised} stride-1 cases");
+}

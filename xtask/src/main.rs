@@ -1,0 +1,491 @@
+//! Repo lint pass: `cargo xtask lint` (or `cargo run --manifest-path
+//! xtask/Cargo.toml -- lint`).
+//!
+//! A std-only *lexical* scanner over `rust/src` — no `syn`, no
+//! dependencies, so it runs in the offline container — enforcing three
+//! repo-specific invariants that clippy cannot express:
+//!
+//! 1. **No panics on serving paths.** Files under `coordinator/` must not
+//!    call `.unwrap()` / `.expect(` / `panic!` / `unreachable!` / `todo!`
+//!    outside `#[cfg(test)]` regions: every request must resolve with a
+//!    typed [`ServeError`] instead of tearing the engine thread down. A
+//!    `// lint: test-double` marker on the same or preceding line exempts
+//!    deliberate fault-injection fixtures.
+//! 2. **No allocation on `// lint: hot-path` functions.** The fastsim
+//!    microkernels (`conv_taps_*`) are the per-batch inner loops; a
+//!    stray `vec!`/`format!`/`.clone()` there would silently cost more
+//!    than the arithmetic. The marker comment binds to the next `fn` and
+//!    its whole body.
+//! 3. **`#[must_use]` on `ServeResult`-returning public APIs.** Dropping
+//!    the reply receiver loses the request's response; the attribute (with
+//!    a message, to stay clear of clippy's `double_must_use`) makes the
+//!    compiler say so.
+//!
+//! Output: one `LINT file:line: rule: message` line per violation,
+//! nonzero exit when any fire — wired as a required CI gate next to
+//! clippy.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut cmd: Option<&str> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "lint" => cmd = Some("lint"),
+            "--root" => root = it.next().map(PathBuf::from),
+            other => {
+                eprintln!("unknown argument {other:?}");
+                return usage();
+            }
+        }
+    }
+    let Some("lint") = cmd else { return usage() };
+    // The xtask crate lives at <repo>/xtask; the scanned tree at
+    // <repo>/rust/src.
+    let root = root.unwrap_or_else(|| {
+        Path::new(env!("CARGO_MANIFEST_DIR")).parent().map(PathBuf::from).unwrap_or_default()
+    });
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        eprintln!("lint root {} has no rust/src", root.display());
+        return ExitCode::FAILURE;
+    }
+    let mut files = Vec::new();
+    collect_rs_files(&src, &mut files);
+    files.sort();
+    let mut violations = Vec::new();
+    for f in &files {
+        match std::fs::read_to_string(f) {
+            Ok(text) => lint_file(f, &src, &text, &mut violations),
+            Err(e) => violations.push(Violation {
+                file: f.clone(),
+                line: 0,
+                rule: "io",
+                message: format!("unreadable: {e}"),
+            }),
+        }
+    }
+    for v in &violations {
+        println!("LINT {}:{}: {}: {}", v.file.display(), v.line, v.rule, v.message);
+    }
+    println!(
+        "xtask lint: {} file(s) scanned, {} violation(s)",
+        files.len(),
+        violations.len()
+    );
+    if violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn usage() -> ExitCode {
+    eprintln!("usage: xtask lint [--root REPO_ROOT]");
+    ExitCode::FAILURE
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs_files(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+struct Violation {
+    file: PathBuf,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+/// Tokens forbidden on serving paths (rule 1). `.unwrap()` is matched
+/// with its closing paren so `.unwrap_or(..)` / `.unwrap_or_else(..)` —
+/// the *correct* spellings — never fire.
+const PANIC_TOKENS: &[&str] = &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!"];
+
+/// Allocation-capable calls forbidden inside `// lint: hot-path` bodies.
+const ALLOC_TOKENS: &[&str] = &[
+    "vec!",
+    "Box::new",
+    "String::",
+    "format!",
+    ".to_vec(",
+    ".to_string(",
+    ".to_owned(",
+    "with_capacity(",
+    ".collect(",
+    ".push(",
+    ".resize(",
+    ".clone(",
+];
+
+fn lint_file(path: &Path, src_root: &Path, text: &str, out: &mut Vec<Violation>) {
+    let sanitized = sanitize(text);
+    debug_assert_eq!(sanitized.len(), text.len(), "sanitizer must preserve byte offsets");
+    let raw_lines: Vec<&str> = text.lines().collect();
+    let line_of = |byte: usize| text[..byte].bytes().filter(|&b| b == b'\n').count() + 1;
+    let test_regions = cfg_test_regions(&sanitized);
+    let in_tests = |byte: usize| test_regions.iter().any(|r| r.contains(&byte));
+    let rel = path.strip_prefix(src_root).unwrap_or(path);
+    let serving_path = rel.components().any(|c| c.as_os_str() == "coordinator");
+
+    // Rule 1: no panic-capable calls on serving paths.
+    if serving_path {
+        for tok in PANIC_TOKENS {
+            for at in find_all(&sanitized, tok) {
+                if in_tests(at) {
+                    continue;
+                }
+                let line = line_of(at);
+                if marked(&raw_lines, line, "lint: test-double") {
+                    continue;
+                }
+                out.push(Violation {
+                    file: path.to_path_buf(),
+                    line,
+                    rule: "serving-no-panic",
+                    message: format!(
+                        "{tok} on a serving path — propagate a typed ServeError instead \
+                         (or mark a deliberate fixture with `// lint: test-double`)"
+                    ),
+                });
+            }
+        }
+    }
+
+    // Rule 2: no allocation in `// lint: hot-path` functions.
+    for (idx, raw) in raw_lines.iter().enumerate() {
+        if !raw.contains("lint: hot-path") {
+            continue;
+        }
+        let marker_byte: usize = raw_lines[..idx].iter().map(|l| l.len() + 1).sum();
+        let Some(body) = next_fn_body(&sanitized, marker_byte) else {
+            out.push(Violation {
+                file: path.to_path_buf(),
+                line: idx + 1,
+                rule: "hot-path",
+                message: "`// lint: hot-path` marker with no following fn".into(),
+            });
+            continue;
+        };
+        let slice = &sanitized[body.clone()];
+        for tok in ALLOC_TOKENS {
+            for at in find_all(slice, tok) {
+                out.push(Violation {
+                    file: path.to_path_buf(),
+                    line: line_of(body.start + at),
+                    rule: "hot-path",
+                    message: format!("allocation-capable call {tok} in a hot-path function"),
+                });
+            }
+        }
+    }
+
+    // Rule 3: `#[must_use]` on public fns returning ServeResult (directly
+    // or wrapped, e.g. `Result<mpsc::Receiver<ServeResult>>`).
+    for at in find_all(&sanitized, "pub fn ") {
+        if in_tests(at) {
+            continue;
+        }
+        // Signature: from `pub fn` to the body `{` (or `;` for trait
+        // methods without bodies).
+        let sig_end = sanitized[at..]
+            .find(['{', ';'])
+            .map(|o| at + o)
+            .unwrap_or(sanitized.len());
+        let sig = &sanitized[at..sig_end];
+        let returns_serve_result =
+            sig.find("->").is_some_and(|arrow| sig[arrow..].contains("ServeResult"));
+        if !returns_serve_result {
+            continue;
+        }
+        let line = line_of(at);
+        let lookback = line.saturating_sub(8)..line;
+        let has_must_use =
+            lookback.clone().any(|l| raw_lines.get(l.wrapping_sub(1)).is_some_and(|r| r.contains("#[must_use")))
+                || raw_lines.get(line - 1).is_some_and(|r| r.contains("#[must_use"));
+        if !has_must_use {
+            out.push(Violation {
+                file: path.to_path_buf(),
+                line,
+                rule: "must-use-serve-result",
+                message: "public fn returns ServeResult without #[must_use = \"...\"] — \
+                          dropping the receiver loses the reply"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// True when `needle` appears on the violation's own line or the line
+/// above it (1-based `line`).
+fn marked(raw_lines: &[&str], line: usize, needle: &str) -> bool {
+    let same = raw_lines.get(line - 1).is_some_and(|l| l.contains(needle));
+    let above = line >= 2 && raw_lines.get(line - 2).is_some_and(|l| l.contains(needle));
+    same || above
+}
+
+fn find_all(haystack: &str, needle: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(off) = haystack[from..].find(needle) {
+        hits.push(from + off);
+        from += off + needle.len();
+    }
+    hits
+}
+
+/// Byte range of the body (including braces) of the first `fn` at or
+/// after `from` in sanitized text.
+fn next_fn_body(sanitized: &str, from: usize) -> Option<std::ops::Range<usize>> {
+    let fn_at = find_all(&sanitized[from..], "fn ").first().map(|o| from + o)?;
+    let open = sanitized[fn_at..].find('{').map(|o| fn_at + o)?;
+    let close = match_brace(sanitized, open)?;
+    Some(open..close + 1)
+}
+
+/// Byte ranges covered by `#[cfg(test)]` items (the attribute through the
+/// matching close brace of the item it decorates).
+fn cfg_test_regions(sanitized: &str) -> Vec<std::ops::Range<usize>> {
+    let mut regions = Vec::new();
+    for at in find_all(sanitized, "#[cfg(test)]") {
+        if let Some(open) = sanitized[at..].find('{').map(|o| at + o) {
+            if let Some(close) = match_brace(sanitized, open) {
+                regions.push(at..close + 1);
+            }
+        }
+    }
+    regions
+}
+
+/// Index of the `}` matching the `{` at `open` (sanitized text, so
+/// braces inside strings/comments are already blanked).
+fn match_brace(sanitized: &str, open: usize) -> Option<usize> {
+    let bytes = sanitized.as_bytes();
+    let mut depth = 0usize;
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Blank comments and string/char-literal contents with spaces,
+/// preserving length and newlines, so token search and brace matching
+/// never fire inside them. Handles `//`, nested `/* */`, `"…"` with
+/// escapes, raw strings `r#"…"#`, byte strings, and char literals vs
+/// lifetimes.
+fn sanitize(text: &str) -> String {
+    let b = text.as_bytes();
+    let mut out = vec![b' '; b.len()];
+    let mut i = 0;
+    let n = b.len();
+    let keep_newlines = |out: &mut [u8], from: usize, to: usize, src: &[u8]| {
+        for j in from..to {
+            if src[j] == b'\n' {
+                out[j] = b'\n';
+            }
+        }
+    };
+    while i < n {
+        match b[i] {
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                let end = text[i..].find('\n').map(|o| i + o).unwrap_or(n);
+                keep_newlines(&mut out, i, end, b);
+                i = end;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                let start = i;
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if i + 1 < n && b[i] == b'/' && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if i + 1 < n && b[i] == b'*' && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                keep_newlines(&mut out, start, i, b);
+            }
+            b'r' | b'b'
+                if is_raw_string_start(b, i) =>
+            {
+                // r"…", r#"…"#, br"…", …: copy the opener, blank contents.
+                let mut j = i;
+                out[j] = b[j];
+                j += 1;
+                if b[j] == b'r' {
+                    out[j] = b[j];
+                    j += 1;
+                }
+                let mut hashes = 0;
+                while j < n && b[j] == b'#' {
+                    out[j] = b'#';
+                    hashes += 1;
+                    j += 1;
+                }
+                out[j] = b'"'; // opening quote
+                j += 1;
+                let closer: Vec<u8> =
+                    std::iter::once(b'"').chain(std::iter::repeat(b'#').take(hashes)).collect();
+                while j < n {
+                    if b[j..].starts_with(&closer) {
+                        for (k, &cb) in closer.iter().enumerate() {
+                            out[j + k] = cb;
+                        }
+                        j += closer.len();
+                        break;
+                    }
+                    if b[j] == b'\n' {
+                        out[j] = b'\n';
+                    }
+                    j += 1;
+                }
+                i = j;
+            }
+            b'"' => {
+                out[i] = b'"';
+                i += 1;
+                while i < n {
+                    if b[i] == b'\\' {
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == b'"' {
+                        out[i] = b'"';
+                        i += 1;
+                        break;
+                    }
+                    if b[i] == b'\n' {
+                        out[i] = b'\n';
+                    }
+                    i += 1;
+                }
+            }
+            b'\'' => {
+                // Char literal vs lifetime: 'x' / '\n' close with a quote;
+                // 'a (lifetime) does not.
+                if i + 1 < n && b[i + 1] == b'\\' {
+                    out[i] = b'\'';
+                    i += 2; // skip the backslash + escaped char
+                    while i < n && b[i] != b'\'' {
+                        i += 1;
+                    }
+                    if i < n {
+                        out[i] = b'\'';
+                        i += 1;
+                    }
+                } else if i + 2 < n && b[i + 2] == b'\'' {
+                    out[i] = b'\'';
+                    out[i + 2] = b'\'';
+                    i += 3;
+                } else {
+                    out[i] = b'\'';
+                    i += 1; // lifetime: keep scanning normally
+                }
+            }
+            c => {
+                out[i] = c;
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).unwrap_or_default()
+}
+
+/// True at `r"`, `r#`-quote, `br"`, `br#`-quote (raw string openers).
+fn is_raw_string_start(b: &[u8], i: usize) -> bool {
+    let rest = &b[i..];
+    let after_prefix = if rest.starts_with(b"br") || rest.starts_with(b"rb") {
+        &rest[2..]
+    } else if rest.starts_with(b"r") || rest.starts_with(b"b") {
+        if rest.starts_with(b"b") && !rest[1..].starts_with(b"\"") {
+            // b"…" is a plain byte string — handled by the '"' arm; `b`
+            // followed by anything else is an identifier.
+            return false;
+        }
+        if rest.starts_with(b"b") {
+            return false; // plain byte string, not raw
+        }
+        &rest[1..]
+    } else {
+        return false;
+    };
+    // Must be a real raw opener: optional #s then a quote — and the `r`
+    // must not be the tail of an identifier (e.g. `for`, `ptr`).
+    let mut j = 0;
+    while j < after_prefix.len() && after_prefix[j] == b'#' {
+        j += 1;
+    }
+    let opener_ok = after_prefix.get(j) == Some(&b'"');
+    let boundary_ok = i == 0 || !(b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_');
+    opener_ok && boundary_ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_blanks_comments_and_strings() {
+        let src = "let a = \"panic!\"; // panic!\nlet b = 1; /* .unwrap() */\n";
+        let s = sanitize(src);
+        assert_eq!(s.len(), src.len());
+        assert!(!s.contains("panic!"), "got {s:?}");
+        assert!(!s.contains(".unwrap()"));
+        assert!(s.contains("let a"));
+        assert_eq!(s.matches('\n').count(), 2);
+    }
+
+    #[test]
+    fn sanitize_handles_char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { '{' }";
+        let s = sanitize(src);
+        assert!(!s.contains("'{'"), "brace inside char literal must be blanked: {s:?}");
+        assert!(s.contains("fn f<'a>"));
+        assert_eq!(match_brace(&s, s.find('{').unwrap()), Some(src.len() - 1));
+    }
+
+    #[test]
+    fn cfg_test_region_covers_the_mod() {
+        let src = "fn live() { x.unwrap() }\n#[cfg(test)]\nmod tests {\n fn t() { y.unwrap() }\n}\n";
+        let s = sanitize(src);
+        let regions = cfg_test_regions(&s);
+        assert_eq!(regions.len(), 1);
+        let hits = find_all(&s, ".unwrap()");
+        assert_eq!(hits.len(), 2);
+        assert!(!regions[0].contains(&hits[0]), "live code is outside the region");
+        assert!(regions[0].contains(&hits[1]), "test code is inside the region");
+    }
+
+    #[test]
+    fn hot_path_marker_binds_to_next_fn() {
+        let src = "// lint: hot-path\n#[inline]\nfn hot(v: &mut Vec<u32>) { v.push(1) }\nfn cold() { let _ = vec![1]; }\n";
+        let s = sanitize(src);
+        let body = next_fn_body(&s, 0).unwrap();
+        assert!(s[body.clone()].contains(".push("));
+        assert!(!s[body].contains("vec!"), "the next fn only, not the one after");
+    }
+}
