@@ -16,16 +16,21 @@
 //! `{"kind":"overload",...,"shed_rate":...,"p99_us":...}` rows — the
 //! robustness trajectory: shed rate should rise as the cap tightens while
 //! the served tail latency stays bounded.
+//! The chaos sweep re-runs the same serving stack under seeded hardware
+//! fault injection (`{"kind":"chaos",...}` rows): fault rate × ABFT
+//! detection coverage × goodput. Its zero-rate row is shape-identical to
+//! the plain `farms=1,max_batch=16` row, so diffing their `rps` bounds
+//! the always-on checksum cost of the disabled-injection path.
 #[path = "bench_harness.rs"]
 mod harness;
 use harness::header;
 use std::time::{Duration, Instant};
-use trim_sa::arch::ArchConfig;
+use trim_sa::arch::{ArchConfig, ExecFidelity};
 use trim_sa::coordinator::{
-    AdmissionConfig, BatcherConfig, Coordinator, CoordinatorConfig, InferenceBackend, PjrtBackend,
-    Router, ServeError,
+    AdmissionConfig, BatcherConfig, Coordinator, CoordinatorConfig, FaultConfig, FaultModel,
+    InferenceBackend, PjrtBackend, Router, ServeError,
 };
-use trim_sa::scheduler::{ShardMode, SimBackend, SimNetSpec};
+use trim_sa::scheduler::{CanaryConfig, ShardMode, SimBackend, SimNetSpec};
 
 fn sim_backend() -> Box<dyn InferenceBackend> {
     Box::new(SimBackend::with_spec(
@@ -56,7 +61,7 @@ fn overload_config(
 ) -> anyhow::Result<()> {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
-        admission: AdmissionConfig { queue_cap, budget_cycles: None },
+        admission: AdmissionConfig { queue_cap, budget_cycles: None, client_rps: None },
     };
     let c = Coordinator::start_with(|| Ok(sim_backend()), cfg)?;
     let router = Router::new(vec![c])?;
@@ -98,6 +103,76 @@ fn overload_config(
         m.shed,
         m.p99_latency.as_micros(),
         m.queue_wait.quantile(0.99)
+    ));
+    Ok(())
+}
+
+/// One chaos-sweep point: the `sim_backend()` shape under seeded fault
+/// injection at `rate`. Detected faults re-execute (bit-exact); the rare
+/// shard whose draw fires on every engine exhausts its retries into a
+/// typed failure — counted, never a wrong answer. `rate == 0` is the
+/// disabled-injection path on the always-on ABFT checksums.
+fn chaos_config(rate: f64, json_lines: &mut Vec<String>) -> anyhow::Result<()> {
+    let chaos = FaultConfig::new(rate, 0xFA17_5EED, FaultModel::Pe);
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) },
+        ..Default::default()
+    };
+    let c = Coordinator::start_with(
+        move || {
+            Ok(Box::new(SimBackend::with_chaos(
+                2,
+                ArchConfig::small(3, 2, 1),
+                SimNetSpec::tiny(),
+                ShardMode::FilterShards,
+                ExecFidelity::Fast,
+                CanaryConfig::default(),
+                chaos,
+            )) as Box<dyn InferenceBackend>)
+        },
+        cfg,
+    )?;
+    let router = Router::new(vec![c])?;
+    let len = router.input_len();
+    let n_req = 48usize;
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..n_req)
+        .map(|i| {
+            let img: Vec<i32> = (0..len).map(|j| ((i * 31 + j) % 256) as i32).collect();
+            router.submit(img)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let mut served = 0usize;
+    let mut failed = 0usize;
+    for mut r in pending {
+        match r.recv() {
+            Ok(_) => served += 1,
+            Err(e) if e.downcast_ref::<ServeError>().is_some() => failed += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    let wall = t0.elapsed();
+    let m = router.drain(Duration::from_secs(5));
+    let rps = served as f64 / wall.as_secs_f64();
+    let f = m.fault;
+    let detection = if f.injected > 0 { f.detected as f64 / f.injected as f64 } else { 1.0 };
+    println!(
+        "chaos rate={rate:<5} {rps:>7.1} req/s   served {served:>3}  failed {failed:>2}   injected {:>3}  detected {:>3}  corrected {:>3}  reexecuted {:>3}  quarantined {:>2}   p95 {:>9.3?}",
+        f.injected, f.detected, f.corrected, f.reexecuted, f.quarantined, m.p95_latency
+    );
+    json_lines.push(format!(
+        "JSON {{\"bench\":\"e2e_serving\",\"kind\":\"chaos\",\"rate\":{rate},\
+         \"requests\":{n_req},\"served\":{served},\"failed\":{failed},\"rps\":{rps:.2},\
+         \"injected\":{},\"detected\":{},\"corrected\":{},\"reexecuted\":{},\
+         \"quarantined\":{},\"detection_rate\":{detection:.4},\
+         \"p50_us\":{},\"p95_us\":{}}}",
+        f.injected,
+        f.detected,
+        f.corrected,
+        f.reexecuted,
+        f.quarantined,
+        m.p50_latency.as_micros(),
+        m.p95_latency.as_micros()
     ));
     Ok(())
 }
@@ -160,6 +235,14 @@ fn main() -> anyhow::Result<()> {
     // shed (nonzero shed_rate) while the served tail stays bounded.
     for (queue_cap, offered) in [(4usize, 96usize), (16, 96), (64, 96)] {
         overload_config(queue_cap, offered, &mut json_lines)?;
+    }
+
+    // Chaos sweep: seeded hardware fault injection at rising rates. The
+    // zero-rate row bounds the disabled-injection ABFT cost against the
+    // plain farms=1,max_batch=16 row above; the nonzero rows trace
+    // detection coverage (should stay 1.0) and goodput under self-healing.
+    for rate in [0.0, 0.02, 0.1] {
+        chaos_config(rate, &mut json_lines)?;
     }
 
     // Optional PJRT sweep (the original e2e path) — skipped without

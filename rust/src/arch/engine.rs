@@ -22,6 +22,7 @@ use super::core::CoreSim;
 use super::fastsim::{self, ConvScratch};
 use super::slice::{InputView, SliceSim};
 use super::stats::SimStats;
+use crate::fault::FaultInjector;
 use crate::golden::Tensor3;
 use crate::model::{ConvLayer, KernelTiling};
 use std::cell::RefCell;
@@ -47,6 +48,10 @@ pub struct EngineSim {
     /// materialisation per batch input (see [`ConvScratch`]). `RefCell`:
     /// an engine is owned by exactly one farm worker thread.
     scratch: RefCell<ConvScratch>,
+    /// Seeded chaos-testing hook ([`crate::fault`]). `None` in normal
+    /// operation: the per-run cost of the disabled path is one `Option`
+    /// branch per terminal result site.
+    fault: Option<FaultInjector>,
 }
 
 impl EngineSim {
@@ -61,7 +66,26 @@ impl EngineSim {
     }
 
     pub fn with_fidelity(cfg: ArchConfig, fidelity: ExecFidelity) -> Self {
-        Self { cfg, fidelity, scratch: RefCell::new(ConvScratch::new()) }
+        Self { cfg, fidelity, scratch: RefCell::new(ConvScratch::new()), fault: None }
+    }
+
+    /// Attach a seeded fault injector: every execution's ofmaps pass
+    /// through [`FaultInjector::maybe_corrupt`] keyed on the *effective*
+    /// layer (sub-layer / row-band names included), so each (engine,
+    /// shard) pair draws independently and deterministically.
+    pub fn with_fault(mut self, fault: FaultInjector) -> Self {
+        self.fault = Some(fault);
+        self
+    }
+
+    /// Corrupt `ofmaps` in place if the chaos plan says this (engine,
+    /// effective layer) execution suffers an upset. No-op when no
+    /// injector is attached.
+    #[inline]
+    fn apply_fault(&self, layer: &ConvLayer, ofmaps: &mut Tensor3) {
+        if let Some(f) = &self.fault {
+            f.maybe_corrupt(layer, ofmaps);
+        }
     }
 
     /// `(fills, hits, padded-buffer address)` of the fast tier's
@@ -245,10 +269,12 @@ impl EngineSim {
                 let plan = plan_layer(&self.cfg, &band);
                 let stats = fastsim::analytic_stats(&self.cfg, &band, &plan);
                 let mut scratch = self.scratch.borrow_mut();
-                let ofmaps = match shared {
+                let mut ofmaps = match shared {
                     Some(a) => scratch.conv_rows_shared(layer, a, weights, rows),
                     None => scratch.conv_rows(layer, input, weights, rows),
                 };
+                drop(scratch);
+                self.apply_fault(&band, &mut ofmaps);
                 EngineRunResult { ofmaps, stats, plan }
             }
             ExecFidelity::Register => {
@@ -323,11 +349,13 @@ impl EngineSim {
         let plan = plan_layer(&self.cfg, layer);
         let rows = 0..layer.h_o();
         let mut scratch = self.scratch.borrow_mut();
-        let ofmaps = match shared {
+        let mut ofmaps = match shared {
             Some(a) => scratch.conv_rows_shared(layer, a, weights, rows),
             None => scratch.conv_rows(layer, input, weights, rows),
         };
+        drop(scratch);
         let stats = fastsim::analytic_stats(&self.cfg, layer, &plan);
+        self.apply_fault(layer, &mut ofmaps);
         EngineRunResult { ofmaps, stats, plan }
     }
 
@@ -398,6 +426,7 @@ impl EngineSim {
             }
         }
         stats.cycles += cfg.pipeline_latency();
+        self.apply_fault(layer, &mut ofmaps);
         EngineRunResult { ofmaps, stats, plan }
     }
 
@@ -479,6 +508,7 @@ impl EngineSim {
         // Timing comes from the control plan (the per-task sims above run
         // logically in parallel across slices/cores).
         stats.cycles = plan.total_cycles;
+        self.apply_fault(layer, &mut ofmaps);
         EngineRunResult { ofmaps, stats, plan }
     }
 }

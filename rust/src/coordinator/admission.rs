@@ -30,6 +30,7 @@ use super::error::ServeError;
 use crate::util::sync::{
     lock_unpoisoned, AtomicBool, AtomicU64, AtomicUsize, Mutex, Ordering,
 };
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 /// EWMA smoothing factor (`new = old + α·(x − old)`) shared by the
@@ -72,7 +73,8 @@ impl Ewma {
     }
 }
 
-/// Admission policy knobs (`trim serve --queue-cap N --budget-cycles X`).
+/// Admission policy knobs (`trim serve --queue-cap N --budget-cycles X
+/// --client-rps R`).
 #[derive(Debug, Clone, Copy)]
 pub struct AdmissionConfig {
     /// Maximum admitted-but-not-executing requests — the bounded ingress
@@ -84,11 +86,63 @@ pub struct AdmissionConfig {
     /// cost-reporting backends (the sim farm) feed the EWMA; against
     /// PJRT/mock backends the term never triggers.
     pub budget_cycles: Option<f64>,
+    /// Per-client sustained request rate (requests/second) enforced by a
+    /// token bucket *before* the shared queue-cap/budget checks, so one
+    /// chatty client cannot starve the others out of the bounded
+    /// ingress. Requests carrying no client id share one anonymous
+    /// bucket. `None` (the default) disables per-client quotas.
+    pub client_rps: Option<f64>,
 }
 
 impl Default for AdmissionConfig {
     fn default() -> Self {
-        Self { queue_cap: 256, budget_cycles: None }
+        Self { queue_cap: 256, budget_cycles: None, client_rps: None }
+    }
+}
+
+/// Per-client token buckets: each client id accrues `rps` tokens per
+/// second up to a burst of `rps.max(1)` (a one-second window), and each
+/// admitted request spends one. Over-quota requests shed with a
+/// `retry_after` hint of the time until the next token accrues.
+///
+/// One `Mutex<HashMap>` guards all buckets — the critical section is a
+/// couple of float ops, and admission already takes atomics, so this is
+/// far off the engine hot path.
+#[derive(Debug, Default)]
+pub struct ClientQuota {
+    buckets: Mutex<HashMap<String, TokenBucket>>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct TokenBucket {
+    tokens: f64,
+    refilled_at: Instant,
+}
+
+impl ClientQuota {
+    /// Spend one token from `client`'s bucket at rate `rps`. `Err` is
+    /// the duration until the bucket next holds a full token.
+    pub fn try_take(&self, client: &str, rps: f64) -> Result<(), Duration> {
+        let burst = rps.max(1.0);
+        let now = Instant::now();
+        let mut g = lock_unpoisoned(&self.buckets);
+        let b = g
+            .entry(client.to_owned())
+            .or_insert(TokenBucket { tokens: burst, refilled_at: now });
+        let elapsed = now.saturating_duration_since(b.refilled_at).as_secs_f64();
+        b.tokens = (b.tokens + elapsed * rps).min(burst);
+        b.refilled_at = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(Duration::from_secs_f64((1.0 - b.tokens) / rps))
+        }
+    }
+
+    /// Number of clients currently tracked (test/introspection hook).
+    pub fn clients(&self) -> usize {
+        lock_unpoisoned(&self.buckets).len()
     }
 }
 
@@ -108,6 +162,8 @@ pub struct AdmissionControl {
     /// Instant after which the engine loop stops executing queued work
     /// and rejects it with `Shutdown` instead.
     drain_deadline: Mutex<Option<Instant>>,
+    /// Per-client token buckets (active when `cfg.client_rps` is set).
+    quota: ClientQuota,
 }
 
 impl AdmissionControl {
@@ -122,6 +178,24 @@ impl AdmissionControl {
     /// Currently admitted-but-not-executing requests.
     pub fn depth(&self) -> usize {
         self.depth.load(Ordering::Acquire)
+    }
+
+    /// [`AdmissionControl::try_admit`] with the per-client quota check in
+    /// front: when `cfg.client_rps` is set, the request first spends a
+    /// token from `client`'s bucket (`None` shares the anonymous
+    /// bucket), shedding with `Overloaded` and a token-accrual
+    /// `retry_after` when the client is over quota. The quota check runs
+    /// *before* the shared depth/budget checks so an over-quota client
+    /// never consumes a queue slot.
+    pub fn try_admit_for(&self, client: Option<&str>) -> Result<(), ServeError> {
+        if let Some(rps) = self.cfg.client_rps {
+            if !self.draining.load(Ordering::Acquire) {
+                if let Err(wait) = self.quota.try_take(client.unwrap_or(""), rps) {
+                    return Err(ServeError::Overloaded { retry_after: wait });
+                }
+            }
+        }
+        self.try_admit()
     }
 
     /// Admit one request or shed it. On `Ok` the queue depth slot is
@@ -243,7 +317,7 @@ mod tests {
 
     #[test]
     fn queue_cap_bounds_admission() {
-        let a = AdmissionControl::new(AdmissionConfig { queue_cap: 2, budget_cycles: None });
+        let a = AdmissionControl::new(AdmissionConfig { queue_cap: 2, budget_cycles: None, client_rps: None });
         assert!(a.try_admit().is_ok());
         assert!(a.try_admit().is_ok());
         let e = a.try_admit().unwrap_err();
@@ -258,6 +332,7 @@ mod tests {
         let a = AdmissionControl::new(AdmissionConfig {
             queue_cap: 1000,
             budget_cycles: Some(250.0),
+            client_rps: None,
         });
         // No cost observed yet: the budget term can't trigger.
         assert!(a.try_admit().is_ok());
@@ -273,7 +348,7 @@ mod tests {
 
     #[test]
     fn retry_after_scales_with_queue_depth() {
-        let a = AdmissionControl::new(AdmissionConfig { queue_cap: 100, budget_cycles: None });
+        let a = AdmissionControl::new(AdmissionConfig { queue_cap: 100, budget_cycles: None, client_rps: None });
         let base = a.retry_after();
         assert!(base >= Duration::from_millis(1), "floor with no estimate");
         a.observe_batch(4, None, Duration::from_millis(10));
@@ -291,6 +366,45 @@ mod tests {
         a.release(100);
         assert_eq!(a.depth(), 0);
         assert!(a.try_admit().is_ok());
+    }
+
+    #[test]
+    fn client_quota_is_per_client_and_refills() {
+        let q = ClientQuota::default();
+        // 2 rps → burst of 2 tokens: two immediate takes, then shed.
+        assert!(q.try_take("alice", 2.0).is_ok());
+        assert!(q.try_take("alice", 2.0).is_ok());
+        let wait = q.try_take("alice", 2.0).unwrap_err();
+        assert!(wait > Duration::ZERO && wait <= Duration::from_millis(500), "got {wait:?}");
+        // Another client has its own bucket.
+        assert!(q.try_take("bob", 2.0).is_ok());
+        assert_eq!(q.clients(), 2);
+        // Tokens accrue with time: after ≥ half a second at 2 rps the
+        // bucket holds a full token again.
+        std::thread::sleep(Duration::from_millis(550));
+        assert!(q.try_take("alice", 2.0).is_ok(), "bucket refills at rps");
+    }
+
+    #[test]
+    fn over_quota_client_sheds_without_consuming_queue_slots() {
+        let a = AdmissionControl::new(AdmissionConfig {
+            queue_cap: 100,
+            budget_cycles: None,
+            client_rps: Some(1.0),
+        });
+        assert!(a.try_admit_for(Some("hog")).is_ok());
+        let e = a.try_admit_for(Some("hog")).unwrap_err();
+        assert!(matches!(e, ServeError::Overloaded { .. }), "over quota sheds, got {e:?}");
+        assert_eq!(a.depth(), 1, "shed request never took a queue slot");
+        // Other clients — and the anonymous bucket — are unaffected.
+        assert!(a.try_admit_for(Some("quiet")).is_ok());
+        assert!(a.try_admit_for(None).is_ok());
+        assert_eq!(a.depth(), 3);
+        // With no quota configured, try_admit_for is plain try_admit.
+        let open = AdmissionControl::new(AdmissionConfig::default());
+        for _ in 0..8 {
+            assert!(open.try_admit_for(Some("hog")).is_ok());
+        }
     }
 
     #[test]

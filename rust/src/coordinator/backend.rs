@@ -10,6 +10,7 @@
 
 use crate::analytics::EnergyModel;
 use crate::arch::SimStats;
+use crate::fault::{FaultConfig, FaultReport};
 use crate::runtime::Runtime;
 use crate::scheduler::CanaryReport;
 use anyhow::Result;
@@ -107,6 +108,11 @@ pub struct BatchCost {
     /// found). All zero when the farm runs no canary — which keeps
     /// canary-off reports byte-identical to pre-canary ones.
     pub canary: CanaryReport,
+    /// Fault-tolerance activity attributable to this batch: faults
+    /// injected (`--chaos`), faults the ABFT checksum detected, shards
+    /// re-executed and corrected, engines quarantined. All zero on a
+    /// fault-free farm, so chaos-off reports stay byte-identical.
+    pub faults: FaultReport,
 }
 
 impl BatchCost {
@@ -116,7 +122,15 @@ impl BatchCost {
         let joules = energy
             .memory_energy_j(stats.off_chip_accesses() as f64, stats.on_chip_accesses() as f64)
             + energy.compute_energy_j(stats.macs as f64);
-        Self { stats, per_layer: Vec::new(), f_clk, gops, joules, canary: CanaryReport::default() }
+        Self {
+            stats,
+            per_layer: Vec::new(),
+            f_clk,
+            gops,
+            joules,
+            canary: CanaryReport::default(),
+            faults: FaultReport::default(),
+        }
     }
 
     /// Attach the per-layer breakdown (builder style).
@@ -128,6 +142,12 @@ impl BatchCost {
     /// Attach the batch's shadow-canary delta (builder style).
     pub fn with_canary(mut self, canary: CanaryReport) -> Self {
         self.canary = canary;
+        self
+    }
+
+    /// Attach the batch's fault-tolerance delta (builder style).
+    pub fn with_faults(mut self, faults: FaultReport) -> Self {
+        self.faults = faults;
         self
     }
 
@@ -304,7 +324,12 @@ impl std::str::FromStr for BackendKind {
 /// shadow-execution sampling rate (`trim serve --canary RATE`): the
 /// fraction of fast-tier shards re-run on a `Register`-fidelity oracle
 /// off the hot path, with divergence surfaced through the metrics
-/// (0 disables the canary thread entirely).
+/// (0 disables the canary thread entirely). `sim_chaos` is the seeded
+/// fault-injection plan (`trim serve --chaos RATE --chaos-seed S
+/// --chaos-model pe|rsrb|mem`): each sim engine deterministically
+/// corrupts that fraction of its shard results, exercising the farm's
+/// ABFT detection and self-healing loop in a live deployment
+/// ([`FaultConfig::disabled`] for a fault-free farm).
 pub fn make_backend(
     kind: BackendKind,
     artifact_dir: impl AsRef<std::path::Path>,
@@ -312,18 +337,20 @@ pub fn make_backend(
     sim_fidelity: crate::arch::ExecFidelity,
     sim_shard: crate::scheduler::ShardMode,
     sim_canary: f64,
+    sim_chaos: FaultConfig,
 ) -> Result<Box<dyn InferenceBackend>> {
     use crate::arch::ArchConfig;
     use crate::scheduler::{CanaryConfig, SimBackend, SimNetSpec};
     let dir = artifact_dir.as_ref();
     let make_sim = || {
-        Box::new(SimBackend::with_canary(
+        Box::new(SimBackend::with_chaos(
             sim_engines,
             ArchConfig::small(3, 2, 1),
             SimNetSpec::tiny(),
             sim_shard,
             sim_fidelity,
             CanaryConfig::sampled(sim_canary),
+            sim_chaos,
         )) as Box<dyn InferenceBackend>
     };
     match kind {
@@ -384,65 +411,6 @@ impl InferenceBackend for MockBackend {
     }
 }
 
-/// Fault-injecting test double: serves [`MockBackend`] logits but fails
-/// (or panics on) every `fail_every`-th `infer_batch` call. Pins the
-/// retry/backoff, error-taxonomy and drain-under-failure behaviour of the
-/// coordinator and router without needing a real flaky backend.
-pub struct FaultInjectingBackend {
-    inner: MockBackend,
-    /// Every `fail_every`-th call (1-based) is faulted; `0` disables
-    /// injection entirely. `1` faults every call.
-    pub fail_every: u64,
-    /// Panic on the faulted calls instead of returning `Err` — exercises
-    /// the engine loop's `catch_unwind` containment.
-    pub panic_instead: bool,
-}
-
-impl FaultInjectingBackend {
-    pub fn new(input_len: usize, classes: usize, fail_every: u64) -> Self {
-        Self { inner: MockBackend::new(input_len, classes), fail_every, panic_instead: false }
-    }
-
-    /// Builder: make the injected faults panics rather than `Err`s.
-    pub fn panicking(mut self) -> Self {
-        self.panic_instead = true;
-        self
-    }
-
-    /// The logits a non-faulted call produces (exposed for assertions).
-    pub fn expected_logits(&self, image: &[i32]) -> Vec<i32> {
-        self.inner.expected_logits(image)
-    }
-}
-
-impl InferenceBackend for FaultInjectingBackend {
-    fn input_len(&self) -> usize {
-        self.inner.input_len
-    }
-
-    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchReport> {
-        self.inner.calls += 1;
-        if self.fail_every > 0 && self.inner.calls % self.fail_every == 0 {
-            if self.panic_instead {
-                // lint: test-double — the injected panic *is* the fixture.
-                panic!("injected panic on call {}", self.inner.calls);
-            }
-            anyhow::bail!("injected fault on call {}", self.inner.calls);
-        }
-        if !self.inner.delay.is_zero() {
-            std::thread::sleep(self.inner.delay * images.len() as u32);
-        }
-        Ok(BatchReport::functional(
-            images.iter().map(|img| self.inner.expected_logits(img)).collect(),
-        ))
-    }
-
-    fn describe(&self) -> String {
-        let mode = if self.panic_instead { "panic" } else { "err" };
-        format!("fault-injecting[every={} mode={mode}]", self.fail_every)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -465,6 +433,7 @@ mod tests {
             crate::arch::ExecFidelity::Fast,
             crate::scheduler::ShardMode::Auto,
             0.0,
+            FaultConfig::disabled(),
         )
         .unwrap();
         let img = vec![7i32; b.input_len()];
@@ -484,6 +453,7 @@ mod tests {
             crate::arch::ExecFidelity::Fast,
             crate::scheduler::ShardMode::FilterShards,
             0.0,
+            FaultConfig::disabled(),
         )
         .unwrap();
         assert!(b.describe().starts_with("sim["), "got {}", b.describe());
@@ -498,6 +468,7 @@ mod tests {
             crate::arch::ExecFidelity::Fast,
             crate::scheduler::ShardMode::FilterShards,
             0.0,
+            FaultConfig::disabled(),
         )
         .is_err());
     }
@@ -512,32 +483,6 @@ mod tests {
         assert_eq!(r.outputs[1], b.expected_logits(&i2));
         assert!(r.cost.is_none(), "mock has no cost model");
         assert_eq!(b.calls, 1);
-    }
-
-    #[test]
-    fn fault_injection_faults_every_nth_call() {
-        let mut b = FaultInjectingBackend::new(4, 3, 2);
-        let img = vec![1, 2, 3, 4];
-        let ok = b.infer_batch(&[&img]).unwrap();
-        assert_eq!(ok.outputs[0], b.expected_logits(&img));
-        let err = b.infer_batch(&[&img]).unwrap_err();
-        assert!(err.to_string().contains("injected fault"), "got {err:#}");
-        assert!(b.infer_batch(&[&img]).is_ok(), "call 3 recovers");
-        assert!(b.infer_batch(&[&img]).is_err(), "call 4 faults again");
-        // fail_every = 0 disables injection
-        let mut never = FaultInjectingBackend::new(4, 3, 0);
-        for _ in 0..8 {
-            assert!(never.infer_batch(&[&img]).is_ok());
-        }
-    }
-
-    #[test]
-    fn fault_injection_can_panic_instead() {
-        let mut b = FaultInjectingBackend::new(4, 3, 1).panicking();
-        assert!(b.describe().contains("panic"));
-        let img = vec![0, 0, 0, 0];
-        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.infer_batch(&[&img])));
-        assert!(r.is_err(), "injected panic must unwind");
     }
 
     #[test]

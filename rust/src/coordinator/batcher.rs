@@ -205,6 +205,7 @@ mod tests {
             image: vec![],
             enqueued_at: Instant::now(),
             deadline,
+            client: None,
             span,
             reply: tx,
         };

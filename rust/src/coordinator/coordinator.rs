@@ -212,10 +212,23 @@ impl Coordinator {
         image: Vec<i32>,
         deadline: Option<Instant>,
     ) -> Result<mpsc::Receiver<ServeResult>> {
+        self.submit_for(image, deadline, None)
+    }
+
+    /// Submit one image with an optional deadline and client identity.
+    /// The client id keys the per-client admission quota
+    /// (`--client-rps`); `None` shares the anonymous bucket.
+    #[must_use = "the receiver resolves the request — dropping it loses the reply"]
+    pub fn submit_for(
+        &self,
+        image: Vec<i32>,
+        deadline: Option<Instant>,
+        client: Option<String>,
+    ) -> Result<mpsc::Receiver<ServeResult>> {
         if image.len() != self.input_len {
             bail!("image length {} != expected {}", image.len(), self.input_len);
         }
-        if let Err(e) = self.admission.try_admit() {
+        if let Err(e) = self.admission.try_admit_for(client.as_deref()) {
             if matches!(e, ServeError::Overloaded { .. }) {
                 self.metrics.record_shed();
             }
@@ -224,7 +237,15 @@ impl Coordinator {
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let span = obs::tracer().begin("serve.request", 0);
-        let req = InferenceRequest { id, image, enqueued_at: Instant::now(), deadline, span, reply };
+        let req = InferenceRequest {
+            id,
+            image,
+            enqueued_at: Instant::now(),
+            deadline,
+            client,
+            span,
+            reply,
+        };
         let send_result = {
             let guard = lock_unpoisoned(&self.tx);
             match guard.as_ref() {
@@ -336,7 +357,8 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::{FaultInjectingBackend, MockBackend};
+    use crate::coordinator::backend::MockBackend;
+    use crate::coordinator::testing::FaultInjectingBackend;
     use std::time::Duration;
 
     fn mock_coordinator(max_batch: usize, max_wait_ms: u64) -> (Coordinator, MockBackend) {
@@ -407,7 +429,7 @@ mod tests {
         // Overloaded while admitted requests still resolve with logits.
         let cfg = CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
-            admission: AdmissionConfig { queue_cap: 1, budget_cycles: None },
+            admission: AdmissionConfig { queue_cap: 1, budget_cycles: None, client_rps: None },
         };
         let c = Coordinator::start_with(
             || {
@@ -440,6 +462,38 @@ mod tests {
             assert!(rx.recv().unwrap().is_ok(), "admitted requests resolve with logits");
         }
         assert_eq!(c.metrics().shed, shed, "shed counter matches observed rejections");
+    }
+
+    #[test]
+    fn per_client_quota_sheds_the_chatty_client_only() {
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            admission: AdmissionConfig {
+                queue_cap: 256,
+                budget_cycles: None,
+                client_rps: Some(2.0),
+            },
+        };
+        let c = Coordinator::start_with(|| Ok(Box::new(MockBackend::new(4, 3)) as _), cfg).unwrap();
+        // Burst of 2 (= the 1-second bucket) admits; the 3rd sheds typed.
+        let mut oks = Vec::new();
+        for _ in 0..2 {
+            oks.push(c.submit_for(vec![0, 0, 0, 0], None, Some("hog".into())).unwrap());
+        }
+        let err = c.submit_for(vec![0, 0, 0, 0], None, Some("hog".into())).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::Overloaded { retry_after }) => {
+                assert!(*retry_after > Duration::ZERO, "quota shed carries a token-accrual hint")
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // A different client is untouched by the hog's empty bucket.
+        let quiet = c.submit_for(vec![0, 0, 0, 0], None, Some("quiet".into())).unwrap();
+        oks.push(quiet);
+        for rx in oks {
+            assert!(rx.recv().unwrap().is_ok(), "admitted requests still resolve");
+        }
+        assert_eq!(c.metrics().shed, 1, "the quota shed is counted like any other shed");
     }
 
     #[test]

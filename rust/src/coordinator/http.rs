@@ -4,8 +4,10 @@
 //!
 //! Endpoints (`trim serve --http PORT`):
 //!
-//! * `POST /infer` — body `{"image":[i32,…],"deadline_ms":N}`
-//!   (`deadline_ms` optional). Replies `200` with
+//! * `POST /infer` — body `{"image":[i32,…],"deadline_ms":N,"client":"id"}`
+//!   (`deadline_ms` and `client` optional; `client` keys the per-client
+//!   quota bucket when the server runs with `--client-rps`). Replies
+//!   `200` with
 //!   `{"id","class","logits","latency_us","batch_size","deadline_slack_us"}`,
 //!   or the typed [`ServeError`] mapped onto HTTP: `429 Too Many
 //!   Requests` + `Retry-After` for `Overloaded`, `504` for
@@ -14,7 +16,10 @@
 //!   [`MetricsSnapshot`](super::MetricsSnapshot).
 //! * `GET /healthz` — `200 ok` while admitting, `503 draining` once a
 //!   drain has begun (load balancers stop sending traffic before the
-//!   drain deadline rejects it).
+//!   drain deadline rejects it). A fleet serving at degraded capacity —
+//!   quarantined engines after ABFT-detected faults — stays `200` (it
+//!   still answers correctly) but reports `degraded` with the quarantine
+//!   count so operators see the lost capacity.
 //!
 //! Deliberately minimal: HTTP/1.1 with `Connection: close`, one request
 //! per connection, a detached thread per connection (connections are
@@ -146,7 +151,14 @@ fn route(router: &Router, req: &Request) -> (u16, &'static str, Option<String>, 
             if router.is_draining() {
                 (503, "text/plain", None, "draining\n".into())
             } else {
-                (200, "text/plain", None, "ok\n".into())
+                let quarantined = router.metrics().fault.quarantined;
+                if quarantined > 0 {
+                    // Degraded ≠ down: quarantined engines cost capacity,
+                    // never correctness, so the fleet keeps taking traffic.
+                    (200, "text/plain", None, format!("degraded quarantined={quarantined}\n"))
+                } else {
+                    (200, "text/plain", None, "ok\n".into())
+                }
             }
         }
         ("GET", "/metrics") => {
@@ -166,12 +178,12 @@ fn route(router: &Router, req: &Request) -> (u16, &'static str, Option<String>, 
 fn infer(router: &Router, body: &[u8]) -> (u16, &'static str, Option<String>, String) {
     let bad = |detail: &str| (400, "application/json", None, json_error("bad_request", detail));
     let Ok(text) = std::str::from_utf8(body) else { return bad("body is not UTF-8") };
-    let (image, deadline_ms) = match parse_infer_body(text) {
+    let (image, deadline_ms, client) = match parse_infer_body(text) {
         Ok(p) => p,
         Err(e) => return bad(&format!("{e:#}")),
     };
     let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
-    match router.submit_with(image, deadline).and_then(|mut r| r.recv()) {
+    match router.submit_for(image, deadline, client).and_then(|mut r| r.recv()) {
         Ok(resp) => {
             let logits =
                 resp.logits.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",");
@@ -217,9 +229,10 @@ fn infer(router: &Router, body: &[u8]) -> (u16, &'static str, Option<String>, St
     }
 }
 
-/// Scan the two fields the ingress accepts out of a JSON body:
-/// `"image":[i32,…]` (required) and `"deadline_ms":N` (optional).
-fn parse_infer_body(s: &str) -> Result<(Vec<i32>, Option<u64>)> {
+/// Scan the fields the ingress accepts out of a JSON body:
+/// `"image":[i32,…]` (required), `"deadline_ms":N` and `"client":"id"`
+/// (optional).
+fn parse_infer_body(s: &str) -> Result<(Vec<i32>, Option<u64>, Option<String>)> {
     let key = "\"image\"";
     let at = s.find(key).context("missing \"image\" field")?;
     let rest = &s[at + key.len()..];
@@ -247,7 +260,18 @@ fn parse_infer_body(s: &str) -> Result<(Vec<i32>, Option<u64>)> {
             Some(num.parse::<u64>().context("\"deadline_ms\" out of range")?)
         }
     };
-    Ok((image, deadline_ms))
+    let client = match s.find("\"client\"") {
+        None => None,
+        Some(at) => {
+            let rest = &s[at + "\"client\"".len()..];
+            let colon = rest.find(':').context("malformed \"client\"")?;
+            let rest = rest[colon + 1..].trim_start();
+            let inner = rest.strip_prefix('"').context("\"client\" is not a string")?;
+            let end = inner.find('"').context("unterminated \"client\" string")?;
+            Some(inner[..end].to_string())
+        }
+    };
+    Ok((image, deadline_ms, client))
 }
 
 fn json_error(kind: &str, detail: &str) -> String {
@@ -412,6 +436,175 @@ mod tests {
     }
 
     #[test]
+    fn per_client_quota_maps_to_429_with_retry_after() {
+        use crate::coordinator::admission::AdmissionConfig;
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            admission: AdmissionConfig {
+                // burst of one token, slow refill: the second request from
+                // the same client inside the window must shed
+                client_rps: Some(0.5),
+                ..Default::default()
+            },
+        };
+        let c = Coordinator::start_with(
+            || Ok(Box::new(MockBackend::new(4, 3)) as Box<dyn InferenceBackend>),
+            cfg,
+        )
+        .unwrap();
+        let router = Arc::new(Router::new(vec![c]).unwrap());
+        let server = HttpServer::start(0, router).unwrap();
+        let addr = server.local_addr();
+
+        let ok = post_infer(addr, "{\"image\":[1,2,3,4],\"client\":\"hog\"}");
+        assert_eq!(status_of(&ok), 200, "first request spends the burst token: {ok}");
+        let shed = post_infer(addr, "{\"image\":[1,2,3,4],\"client\":\"hog\"}");
+        assert_eq!(status_of(&shed), 429, "over-quota client sheds: {shed}");
+        assert!(shed.contains("Retry-After:"), "hints when to come back: {shed}");
+        let other = post_infer(addr, "{\"image\":[1,2,3,4],\"client\":\"quiet\"}");
+        assert_eq!(status_of(&other), 200, "quotas are per client: {other}");
+    }
+
+    #[test]
+    fn degraded_fleet_reports_quarantine_but_keeps_serving() {
+        use crate::analytics::EnergyModel;
+        use crate::arch::SimStats;
+        use crate::coordinator::backend::{BatchCost, BatchReport};
+        use crate::fault::FaultReport;
+
+        /// Answers like the mock but reports one quarantined engine per
+        /// batch — the shape a self-healed chaos farm presents.
+        struct DegradedBackend(MockBackend);
+        impl InferenceBackend for DegradedBackend {
+            fn input_len(&self) -> usize {
+                self.0.input_len()
+            }
+            fn infer_batch(&mut self, images: &[&[i32]]) -> anyhow::Result<BatchReport> {
+                let outputs =
+                    images.iter().map(|img| self.0.expected_logits(img)).collect();
+                let stats = SimStats { cycles: 100, macs: 100, ..Default::default() };
+                let cost = BatchCost::from_stats(stats, 150.0e6, &EnergyModel::paper())
+                    .with_faults(FaultReport {
+                        injected: 2,
+                        detected: 2,
+                        corrected: 1,
+                        reexecuted: 2,
+                        quarantined: 1,
+                    });
+                Ok(BatchReport::with_cost(outputs, cost))
+            }
+            fn describe(&self) -> String {
+                "degraded-mock".into()
+            }
+        }
+
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ..Default::default()
+        };
+        let c = Coordinator::start_with(
+            || Ok(Box::new(DegradedBackend(MockBackend::new(4, 3))) as Box<dyn InferenceBackend>),
+            cfg,
+        )
+        .unwrap();
+        let router = Arc::new(Router::new(vec![c]).unwrap());
+        let server = HttpServer::start(0, router.clone()).unwrap();
+        let addr = server.local_addr();
+
+        let fresh = send(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status_of(&fresh), 200);
+        assert!(fresh.contains("ok"), "nothing quarantined yet: {fresh}");
+
+        let infer = post_infer(addr, "{\"image\":[1,2,3,4]}");
+        assert_eq!(status_of(&infer), 200, "degraded farm still answers: {infer}");
+
+        let health = send(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status_of(&health), 200, "degraded is not down: {health}");
+        assert!(health.contains("degraded quarantined=1"), "got {health}");
+
+        let metrics = send(addr, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(metrics.contains("trim_fault_quarantined_total 1"), "got {metrics}");
+    }
+
+    #[test]
+    fn concurrent_infers_during_drain_see_only_typed_statuses() {
+        /// Mock answers delayed by `delay` — holds the engine busy long
+        /// enough for the drain to be observably in flight.
+        struct SlowBackend(MockBackend, Duration);
+        impl InferenceBackend for SlowBackend {
+            fn input_len(&self) -> usize {
+                self.0.input_len()
+            }
+            fn infer_batch(
+                &mut self,
+                images: &[&[i32]],
+            ) -> anyhow::Result<crate::coordinator::backend::BatchReport> {
+                std::thread::sleep(self.1);
+                self.0.infer_batch(images)
+            }
+            fn describe(&self) -> String {
+                "slow-mock".into()
+            }
+        }
+
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            ..Default::default()
+        };
+        let delay = Duration::from_millis(400);
+        let c = Coordinator::start_with(
+            move || {
+                Ok(Box::new(SlowBackend(MockBackend::new(4, 3), delay))
+                    as Box<dyn InferenceBackend>)
+            },
+            cfg,
+        )
+        .unwrap();
+        let router = Arc::new(Router::new(vec![c]).unwrap());
+        let server = HttpServer::start(0, router.clone()).unwrap();
+        let addr = server.local_addr();
+
+        // One admitted-and-executing request keeps the engine (and thus
+        // the drain) busy for ~400 ms.
+        let pre_drain = std::thread::spawn(move || post_infer(addr, "{\"image\":[1,2,3,4]}"));
+        std::thread::sleep(Duration::from_millis(100));
+        let r = router.clone();
+        let drainer = std::thread::spawn(move || r.drain(Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(50));
+
+        // The drain has begun but the farm has not finished joining:
+        // /healthz must already steer load balancers away.
+        assert!(router.is_draining());
+        let health = send(addr, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status_of(&health), 503, "draining before the last farm joins: {health}");
+        assert!(health.contains("draining"), "got {health}");
+
+        // Requests racing the drain must resolve as typed rejections —
+        // never hang, never return a bogus 200.
+        let racers: Vec<_> = (0..4)
+            .map(|_| std::thread::spawn(move || post_infer(addr, "{\"image\":[1,2,3,4]}")))
+            .collect();
+        for t in racers {
+            let resp = t.join().unwrap();
+            let status = status_of(&resp);
+            assert!(
+                matches!(status, 429 | 503 | 504),
+                "in-drain requests see typed shed statuses only, got {status}: {resp}"
+            );
+        }
+
+        drainer.join().unwrap();
+        // The pre-drain request was admitted before the drain began: it
+        // either completed (200) or was flushed into a typed rejection —
+        // under CI scheduling it may also have lost the admission race.
+        let first = pre_drain.join().unwrap();
+        assert!(
+            matches!(status_of(&first), 200 | 503 | 504),
+            "pre-drain request resolves, never hangs: {first}"
+        );
+    }
+
+    #[test]
     fn stop_is_idempotent_and_drops_cleanly() {
         let router = mock_router();
         let mut server = HttpServer::start(0, router).unwrap();
@@ -422,14 +615,20 @@ mod tests {
 
     #[test]
     fn body_scanner_parses_and_rejects() {
-        let (img, dl) = parse_infer_body("{\"image\":[1, -2,3],\"deadline_ms\": 250}").unwrap();
+        let (img, dl, cl) = parse_infer_body("{\"image\":[1, -2,3],\"deadline_ms\": 250}").unwrap();
         assert_eq!(img, vec![1, -2, 3]);
         assert_eq!(dl, Some(250));
-        let (img, dl) = parse_infer_body("{\"image\":[]}").unwrap();
-        assert!(img.is_empty() && dl.is_none());
+        assert_eq!(cl, None);
+        let (img, dl, cl) = parse_infer_body("{\"image\":[]}").unwrap();
+        assert!(img.is_empty() && dl.is_none() && cl.is_none());
+        let (_, _, cl) =
+            parse_infer_body("{\"client\": \"tenant-a\", \"image\":[7]}").unwrap();
+        assert_eq!(cl.as_deref(), Some("tenant-a"));
         assert!(parse_infer_body("{}").is_err(), "missing image");
         assert!(parse_infer_body("{\"image\":[1,x]}").is_err(), "non-integer element");
         assert!(parse_infer_body("{\"image\":[1],\"deadline_ms\":-5}").is_err(), "negative ms");
         assert!(parse_infer_body("{\"image\":[1").is_err(), "unterminated array");
+        assert!(parse_infer_body("{\"image\":[1],\"client\":7}").is_err(), "non-string client");
+        assert!(parse_infer_body("{\"image\":[1],\"client\":\"x").is_err(), "unterminated client");
     }
 }

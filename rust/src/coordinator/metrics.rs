@@ -13,13 +13,15 @@
 //! wrapping or panicking in debug builds), and queue-wait vs service time
 //! are log₂-bucketed [`Histogram`]s recorded lock-free from the engine
 //! thread. [`MetricsSnapshot`] carries [`HistogramSnapshot`] copies plus
-//! the farm's shadow-canary [`CanaryReport`], merges across farms at the
+//! the farm's shadow-canary [`CanaryReport`] and fault-tolerance
+//! [`FaultReport`], merges across farms at the
 //! Router, and renders itself as Prometheus exposition text
 //! ([`MetricsSnapshot::render_prometheus`], `trim serve --metrics-out`)
 //! or a single JSON line for the bench trajectory
 //! ([`MetricsSnapshot::render_json`]).
 
 use super::backend::{BatchCost, LayerCost};
+use crate::fault::FaultReport;
 use crate::obs::{self, Counter, Histogram, HistogramSnapshot};
 use crate::scheduler::CanaryReport;
 use crate::util::sync::{lock_unpoisoned, Mutex};
@@ -102,6 +104,11 @@ pub struct MetricsSnapshot {
     /// Shadow-execution canary totals reported by cost-carrying batches
     /// (all zero when no farm runs a canary).
     pub canary: CanaryReport,
+    /// Fault-tolerance totals reported by cost-carrying batches: faults
+    /// injected (`--chaos`), ABFT-detected, corrected via re-execution,
+    /// shards re-executed, engines quarantined (all zero on fault-free
+    /// farms).
+    pub fault: FaultReport,
     /// Per-request admission→batch-start wait (µs), log₂-bucketed.
     pub queue_wait: HistogramSnapshot,
     /// Per-batch backend service time (µs), log₂-bucketed.
@@ -147,6 +154,7 @@ impl MetricsSnapshot {
             LayerCost::fold_into(&mut self.sim_per_layer, l);
         }
         self.canary.merge(&other.canary);
+        self.fault.merge(&other.fault);
         self.queue_wait.merge(&other.queue_wait);
         self.service.merge(&other.service);
         self.sim_gops = achieved_gops(self.sim_macs, self.sim_seconds);
@@ -177,6 +185,11 @@ impl MetricsSnapshot {
         counter("trim_canary_sampled_total", self.canary.sampled);
         counter("trim_canary_bit_divergence_total", self.canary.bit_divergence);
         counter("trim_canary_counter_divergence_total", self.canary.counter_divergence);
+        counter("trim_fault_injected_total", self.fault.injected);
+        counter("trim_fault_detected_total", self.fault.detected);
+        counter("trim_fault_corrected_total", self.fault.corrected);
+        counter("trim_fault_reexecuted_total", self.fault.reexecuted);
+        counter("trim_fault_quarantined_total", self.fault.quarantined);
         let mut gauge = |name: &str, v: f64| {
             let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
         };
@@ -242,6 +255,8 @@ impl MetricsSnapshot {
              \"sim_off_chip\":{},\"sim_on_chip\":{},\"sim_macs\":{},\
              \"sim_joules\":{:.6e},\"sim_gops\":{:.2},\
              \"canary_sampled\":{},\"canary_bit_div\":{},\"canary_counter_div\":{},\
+             \"fault_injected\":{},\"fault_detected\":{},\"fault_corrected\":{},\
+             \"fault_reexecuted\":{},\"fault_quarantined\":{},\
              \"queue_wait\":{{\"count\":{},\"mean_us\":{:.1},\"p99_us_est\":{}}},\
              \"service\":{{\"count\":{},\"mean_us\":{:.1},\"p99_us_est\":{}}},\
              \"layers\":{}}}",
@@ -268,6 +283,11 @@ impl MetricsSnapshot {
             self.canary.sampled,
             self.canary.bit_divergence,
             self.canary.counter_divergence,
+            self.fault.injected,
+            self.fault.detected,
+            self.fault.corrected,
+            self.fault.reexecuted,
+            self.fault.quarantined,
             self.queue_wait.count,
             self.queue_wait.mean(),
             self.queue_wait.quantile(0.99),
@@ -367,6 +387,11 @@ pub struct ServeMetrics {
     canary_sampled: Counter,
     canary_bit_divergence: Counter,
     canary_counter_divergence: Counter,
+    fault_injected: Counter,
+    fault_detected: Counter,
+    fault_corrected: Counter,
+    fault_reexecuted: Counter,
+    fault_quarantined: Counter,
     queue_wait_us: Histogram,
     service_us: Histogram,
     inner: Mutex<Inner>,
@@ -397,6 +422,11 @@ impl ServeMetrics {
             self.canary_sampled.add(c.canary.sampled);
             self.canary_bit_divergence.add(c.canary.bit_divergence);
             self.canary_counter_divergence.add(c.canary.counter_divergence);
+            self.fault_injected.add(c.faults.injected);
+            self.fault_detected.add(c.faults.detected);
+            self.fault_corrected.add(c.faults.corrected);
+            self.fault_reexecuted.add(c.faults.reexecuted);
+            self.fault_quarantined.add(c.faults.quarantined);
             g.sim_joules += c.joules;
             if c.f_clk > 0.0 {
                 g.sim_seconds += c.stats.cycles as f64 / c.f_clk;
@@ -489,6 +519,13 @@ impl ServeMetrics {
                 bit_divergence: self.canary_bit_divergence.get(),
                 counter_divergence: self.canary_counter_divergence.get(),
             },
+            fault: FaultReport {
+                injected: self.fault_injected.get(),
+                detected: self.fault_detected.get(),
+                corrected: self.fault_corrected.get(),
+                reexecuted: self.fault_reexecuted.get(),
+                quarantined: self.fault_quarantined.get(),
+            },
             queue_wait: self.queue_wait_us.snapshot(),
             service: self.service_us.snapshot(),
         }
@@ -523,6 +560,7 @@ mod tests {
         assert_eq!(s.p99_latency, Duration::ZERO);
         assert_eq!(s.sim_cycles, 0);
         assert_eq!(s.canary, CanaryReport::default());
+        assert_eq!(s.fault, FaultReport::default());
         assert_eq!(s.queue_wait.count, 0);
     }
 
@@ -790,6 +828,29 @@ mod tests {
     }
 
     #[test]
+    fn fault_totals_flow_through_record_and_merge() {
+        let m = ServeMetrics::new();
+        let mut c = cost(10, 40);
+        c.faults =
+            FaultReport { injected: 5, detected: 5, corrected: 4, reexecuted: 6, quarantined: 1 };
+        m.record_batch(&[Duration::from_micros(1)], Some(&c));
+        m.record_batch(&[Duration::from_micros(1)], Some(&c));
+        let s = m.snapshot();
+        assert_eq!(s.fault.injected, 10);
+        assert_eq!(s.fault.detected, 10);
+        assert_eq!(s.fault.corrected, 8);
+        assert_eq!(s.fault.reexecuted, 12);
+        assert_eq!(s.fault.quarantined, 2);
+        let mut merged = s.clone();
+        merged.merge(&s);
+        assert_eq!(merged.fault.detected, 20, "fault totals merge across farms");
+        // fault-free batches leave everything zero
+        let clean = ServeMetrics::new();
+        clean.record_batch(&[Duration::from_micros(1)], Some(&cost(10, 40)));
+        assert_eq!(clean.snapshot().fault, FaultReport::default());
+    }
+
+    #[test]
     fn queue_and_service_histograms_record_and_snapshot() {
         let m = ServeMetrics::new();
         m.record_queue_service(
@@ -814,6 +875,8 @@ mod tests {
             macs: 400,
         }]);
         c.canary = CanaryReport { sampled: 2, bit_divergence: 0, counter_divergence: 0 };
+        c.faults =
+            FaultReport { injected: 3, detected: 3, corrected: 3, reexecuted: 3, quarantined: 0 };
         m.record_batch(&[Duration::from_micros(100)], Some(&c));
         m.record_queue_service(&[Duration::from_micros(5)], Duration::from_micros(80));
         let text = m.snapshot().render_prometheus();
@@ -821,6 +884,8 @@ mod tests {
         assert!(text.contains("trim_requests_total 1"));
         assert!(text.contains("trim_sim_cycles_total 100"));
         assert!(text.contains("trim_canary_sampled_total 2"));
+        assert!(text.contains("trim_fault_detected_total 3"));
+        assert!(text.contains("trim_fault_quarantined_total 0"));
         assert!(text.contains("trim_latency_seconds{quantile=\"0.99\"}"));
         assert!(text.contains("trim_queue_wait_us_count 1"));
         assert!(text.contains("trim_service_us_bucket{le=\"+Inf\"} 1"));
@@ -828,6 +893,7 @@ mod tests {
         let json = m.snapshot().render_json();
         assert!(json.starts_with('{') && json.ends_with('}'));
         assert!(json.contains("\"canary_sampled\":2"));
+        assert!(json.contains("\"fault_injected\":3"));
         assert!(json.contains("\"sim_cycles\":100"));
         assert!(!json.contains('\n'), "one line for the trajectory grep");
     }

@@ -37,7 +37,12 @@
 //! admission closes, in-flight work flushes, the post-deadline backlog
 //! rejects as [`ServeError::Shutdown`], engine threads join. The
 //! [`http::HttpServer`] puts a std-only HTTP/JSON face (`/infer`,
-//! `/metrics`, `/healthz`) on all of it.
+//! `/metrics`, `/healthz`) on all of it. Per-client fairness is a
+//! token-bucket [`ClientQuota`] in front of admission (`--client-rps`),
+//! and hardware-level fault tolerance ([`crate::fault`]) surfaces here
+//! too: each batch's [`BatchCost::faults`] carries the farm's
+//! detected/corrected/quarantined counters into [`ServeMetrics`], the
+//! Prometheus export and the router-merged snapshot.
 //!
 //! Observability rides on [`crate::obs`]: every admission opens a
 //! `serve.request` span (finished when the reply is sent), each executed
@@ -62,14 +67,17 @@ pub mod http;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod testing;
 
-pub use admission::{AdmissionConfig, AdmissionControl, Ewma, EWMA_ALPHA};
+pub use admission::{AdmissionConfig, AdmissionControl, ClientQuota, Ewma, EWMA_ALPHA};
 pub use backend::{
-    make_backend, BackendKind, BatchCost, BatchReport, FaultInjectingBackend, InferenceBackend,
-    LayerCost, MockBackend, PjrtBackend, SimCost,
+    make_backend, BackendKind, BatchCost, BatchReport, InferenceBackend, LayerCost, MockBackend,
+    PjrtBackend, SimCost,
 };
+pub use crate::fault::{FaultConfig, FaultModel, FaultReport};
 pub use crate::obs::HistogramSnapshot;
 pub use crate::scheduler::{CanaryConfig, CanaryReport, SimBackend};
+pub use testing::FaultInjectingBackend;
 pub use batcher::{Batcher, BatcherConfig};
 pub use coordinator::{Coordinator, CoordinatorConfig};
 pub use error::{ServeError, ServeResult};

@@ -20,6 +20,11 @@ pub struct InferenceRequest {
     /// closes batches early enough that the members it keeps still make
     /// theirs.
     pub deadline: Option<Instant>,
+    /// Client identity for per-client quotas (`"client"` in the HTTP
+    /// body, `--client-rps` on the CLI); `None` shares the anonymous
+    /// quota bucket. Carried on the request so retries and metrics can
+    /// attribute by client.
+    pub client: Option<String>,
     /// The request's `serve.request` trace span, opened at admission and
     /// finished when the reply (or typed rejection) is sent — its
     /// duration is the request's end-to-end time inside the coordinator.
@@ -135,6 +140,7 @@ mod tests {
             image: vec![],
             enqueued_at: now,
             deadline: Some(now + Duration::from_millis(5)),
+            client: None,
             span: obs::tracer().begin("serve.request", 0),
             reply: tx,
         };

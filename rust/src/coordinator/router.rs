@@ -60,6 +60,14 @@ pub struct RetryConfig {
     /// at `max_backoff`.
     pub base_backoff: Duration,
     pub max_backoff: Duration,
+    /// Consecutive failed batches after which a farm is treated as
+    /// quarantined by dispatch: it stops receiving submits — including
+    /// retries of other farms' failures — as long as at least one farm
+    /// in the fleet is below the threshold. A single-farm fleet (or a
+    /// fleet where *everything* crossed it) still dispatches, so retries
+    /// in place keep working and transient faults recover. Cleared by
+    /// the farm's first successful reply.
+    pub quarantine_after: usize,
 }
 
 impl Default for RetryConfig {
@@ -68,6 +76,7 @@ impl Default for RetryConfig {
             max_attempts: 3,
             base_backoff: Duration::from_millis(1),
             max_backoff: Duration::from_millis(20),
+            quarantine_after: 3,
         }
     }
 }
@@ -120,6 +129,7 @@ pub struct RouterReply {
     /// Kept for resubmission on retry.
     image: Vec<i32>,
     deadline: Option<Instant>,
+    client: Option<String>,
     /// Submission attempts made so far (≥ 1).
     attempts: u32,
     settled: bool,
@@ -199,7 +209,12 @@ impl RouterReply {
             // Exclude the failed farm when the fleet has alternatives; a
             // single farm retries in place (transient faults recover).
             let exclude = (self.inner.farms.len() > 1).then_some(failed);
-            match self.inner.submit_at(self.image.clone(), self.deadline, exclude) {
+            match self.inner.submit_at(
+                self.image.clone(),
+                self.deadline,
+                self.client.clone(),
+                exclude,
+            ) {
                 Ok((idx, rx)) => {
                     self.farm = idx;
                     self.rx = rx;
@@ -242,8 +257,18 @@ impl RouterInner {
     /// degenerates to plain least-outstanding (failure count breaking
     /// ties). First farm wins remaining ties. `None` when every farm is
     /// excluded.
+    ///
+    /// Farms whose consecutive-failure count reached
+    /// [`RetryConfig::quarantine_after`] are dropped from the candidate
+    /// set entirely — not just penalised — whenever at least one
+    /// below-threshold candidate remains, so a permanently failing farm
+    /// stops receiving traffic (and retries) instead of soaking up one
+    /// doomed attempt per request. When *every* candidate crossed the
+    /// threshold (including the single-farm fleet) the filter is a
+    /// no-op: in-place retries still reach the farm and its first
+    /// success clears the count.
     fn pick_farm(&self, excluded: &[bool]) -> Option<usize> {
-        let snaps: Vec<(usize, usize, Option<f64>, usize)> = self
+        let mut snaps: Vec<(usize, usize, Option<f64>, usize)> = self
             .farms
             .iter()
             .enumerate()
@@ -259,6 +284,16 @@ impl RouterInner {
             .collect();
         if snaps.is_empty() {
             return None;
+        }
+        let threshold = self.retry.quarantine_after.max(1);
+        if snaps.iter().any(|(_, _, _, fails)| *fails < threshold) {
+            snaps.retain(|(i, _, _, fails)| {
+                let keep = *fails < threshold;
+                if !keep {
+                    obs::tracer().event("router.dispatch", 0, format!("farm={i} skipped=quarantined"));
+                }
+                keep
+            });
         }
         let min_ewma = snaps.iter().filter_map(|(_, _, e, _)| *e).fold(f64::INFINITY, f64::min);
         let idx = if min_ewma.is_infinite() {
@@ -307,6 +342,7 @@ impl RouterInner {
         &self,
         image: Vec<i32>,
         deadline: Option<Instant>,
+        client: Option<String>,
         exclude: Option<usize>,
     ) -> Result<(usize, mpsc::Receiver<ServeResult>)> {
         let mut excluded = vec![false; self.farms.len()];
@@ -317,7 +353,7 @@ impl RouterInner {
         while let Some(idx) = self.pick_farm(&excluded) {
             let farm = &self.farms[idx];
             farm.outstanding.fetch_add(1, Ordering::AcqRel);
-            match farm.coordinator.submit_with(image.clone(), deadline) {
+            match farm.coordinator.submit_for(image.clone(), deadline, client.clone()) {
                 Ok(rx) => return Ok((idx, rx)),
                 Err(e) => {
                     farm.outstanding.fetch_sub(1, Ordering::AcqRel);
@@ -419,13 +455,27 @@ impl Router {
     /// rejections fall through to the next-best farm; the returned error
     /// is typed (`downcast_ref::<ServeError>()`) when every farm rejects.
     pub fn submit_with(&self, image: Vec<i32>, deadline: Option<Instant>) -> Result<RouterReply> {
-        let (farm, rx) = self.inner.submit_at(image.clone(), deadline, None)?;
+        self.submit_for(image, deadline, None)
+    }
+
+    /// [`Router::submit_with`] carrying a client identity for per-client
+    /// quotas (`--client-rps`); the identity sticks to the request across
+    /// cross-farm retries so a shed client cannot launder load through
+    /// the retry path.
+    pub fn submit_for(
+        &self,
+        image: Vec<i32>,
+        deadline: Option<Instant>,
+        client: Option<String>,
+    ) -> Result<RouterReply> {
+        let (farm, rx) = self.inner.submit_at(image.clone(), deadline, client.clone(), None)?;
         Ok(RouterReply {
             inner: Arc::clone(&self.inner),
             rx,
             farm,
             image,
             deadline,
+            client,
             attempts: 1,
             settled: false,
         })
@@ -480,9 +530,8 @@ mod tests {
     use super::*;
     use crate::analytics::EnergyModel;
     use crate::arch::SimStats;
-    use crate::coordinator::backend::{
-        BatchCost, BatchReport, FaultInjectingBackend, InferenceBackend, MockBackend,
-    };
+    use crate::coordinator::backend::{BatchCost, BatchReport, InferenceBackend, MockBackend};
+    use crate::coordinator::testing::FaultInjectingBackend;
     use crate::coordinator::batcher::BatcherConfig;
     use crate::coordinator::coordinator::CoordinatorConfig;
     use std::time::Duration;
@@ -763,11 +812,61 @@ mod tests {
     }
 
     #[test]
+    fn permanently_failing_farm_is_quarantined_from_dispatch_and_retries() {
+        // Regression: before the quarantine filter, a permanently failing
+        // farm was only *penalised* — under queue depth the
+        // least-outstanding fallback kept feeding it one doomed attempt
+        // (plus a retry) per request forever. Past `quarantine_after`
+        // consecutive failures it must drop out of the candidate set
+        // entirely while a healthy farm exists.
+        let retry = RetryConfig {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(100),
+            max_backoff: Duration::from_millis(1),
+            quarantine_after: 2,
+        };
+        let router = Router::with_retry(
+            vec![faulty_coordinator(1, false), mock_coordinator(4)],
+            retry,
+        )
+        .unwrap();
+        // Concurrent submits alternate on outstanding counts, so the
+        // failing farm 0 takes half; each of its replies fails, retries
+        // onto farm 1, and bumps the consecutive-failure count past 2.
+        let pending: Vec<_> = (0..4).map(|i| router.submit(vec![i, 0, 0, 0]).unwrap()).collect();
+        for mut p in pending {
+            p.recv().expect("every request recovers via retry on the healthy farm");
+        }
+        let retries_before = router.metrics().retries;
+        let failing_farm_requests = router.farm_metrics()[0].requests;
+        assert!(retries_before >= 2, "the failing farm's share was retried across");
+        // Quarantined: even with depth piling up on farm 1, nothing may
+        // be dispatched to farm 0 any more — the old penalty-only scoring
+        // would alternate here.
+        let pending: Vec<_> = (0..6).map(|i| router.submit(vec![i, 0, 0, 0]).unwrap()).collect();
+        assert!(
+            pending.iter().all(|r| r.farm() == 1),
+            "quarantined farm must not receive new dispatch even under depth"
+        );
+        for mut p in pending {
+            p.recv().unwrap();
+        }
+        let m = router.metrics();
+        assert_eq!(m.retries, retries_before, "no further retries: nothing reached the dead farm");
+        assert_eq!(
+            router.farm_metrics()[0].requests,
+            failing_farm_requests,
+            "the quarantined farm stopped receiving requests"
+        );
+    }
+
+    #[test]
     fn retries_exhaust_into_a_typed_engine_error() {
         let retry = RetryConfig {
             max_attempts: 3,
             base_backoff: Duration::from_micros(100),
             max_backoff: Duration::from_millis(1),
+            quarantine_after: 3,
         };
         let router = Router::with_retry(vec![faulty_coordinator(1, false)], retry).unwrap();
         let err = router.infer(vec![0; 4]).unwrap_err();
@@ -790,6 +889,7 @@ mod tests {
             max_attempts: 2,
             base_backoff: Duration::from_micros(100),
             max_backoff: Duration::from_millis(1),
+            quarantine_after: 3,
         };
         let router = Router::with_retry(
             vec![mock_coordinator(4), faulty_coordinator(1, true)],

@@ -1,0 +1,153 @@
+//! Shared test doubles for the serving stack.
+//!
+//! [`FaultInjectingBackend`] started life as private test scaffolding in
+//! the router tests; it is promoted here because every layer of the
+//! stack (coordinator engine loop, router retry path, drain logic, the
+//! chaos acceptance suite) wants the same deterministic flaky backend.
+//! It serves [`MockBackend`] logits but fails (or panics on) chosen
+//! `infer_batch` calls — either on a fixed `fail_every` modulus or on a
+//! seeded [`FaultConfig`] plan keyed by call index, so failure schedules
+//! are reproducible across runs and shareable with the farm-level fault
+//! injection (`--chaos`).
+
+use super::backend::{BatchReport, InferenceBackend, MockBackend};
+use crate::fault::FaultConfig;
+use anyhow::Result;
+
+/// Fault-injecting test double: serves [`MockBackend`] logits but fails
+/// (or panics on) selected `infer_batch` calls. Pins the retry/backoff,
+/// error-taxonomy and drain-under-failure behaviour of the coordinator
+/// and router without needing a real flaky backend.
+pub struct FaultInjectingBackend {
+    inner: MockBackend,
+    /// Every `fail_every`-th call (1-based) is faulted; `0` disables
+    /// modulus injection entirely. `1` faults every call.
+    pub fail_every: u64,
+    /// Panic on the faulted calls instead of returning `Err` — exercises
+    /// the engine loop's `catch_unwind` containment.
+    pub panic_instead: bool,
+    /// Seeded fault plan keyed by call index. When enabled it decides
+    /// faults *instead of* `fail_every` — the same [`FaultConfig`] the
+    /// farm-level chaos path takes, so a test can drive both layers from
+    /// one plan.
+    pub plan: FaultConfig,
+}
+
+impl FaultInjectingBackend {
+    pub fn new(input_len: usize, classes: usize, fail_every: u64) -> Self {
+        Self {
+            inner: MockBackend::new(input_len, classes),
+            fail_every,
+            panic_instead: false,
+            plan: FaultConfig::disabled(),
+        }
+    }
+
+    /// A double whose failure schedule is a seeded [`FaultConfig`] draw
+    /// keyed by the (1-based) call index.
+    pub fn with_plan(input_len: usize, classes: usize, plan: FaultConfig) -> Self {
+        Self { inner: MockBackend::new(input_len, classes), fail_every: 0, panic_instead: false, plan }
+    }
+
+    /// Builder: make the injected faults panics rather than `Err`s.
+    pub fn panicking(mut self) -> Self {
+        self.panic_instead = true;
+        self
+    }
+
+    /// The logits a non-faulted call produces (exposed for assertions).
+    pub fn expected_logits(&self, image: &[i32]) -> Vec<i32> {
+        self.inner.expected_logits(image)
+    }
+
+    fn faulted(&self, call: u64) -> bool {
+        if self.plan.enabled() {
+            self.plan.draw(call)
+        } else {
+            self.fail_every > 0 && call % self.fail_every == 0
+        }
+    }
+}
+
+impl InferenceBackend for FaultInjectingBackend {
+    fn input_len(&self) -> usize {
+        self.inner.input_len
+    }
+
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchReport> {
+        self.inner.calls += 1;
+        if self.faulted(self.inner.calls) {
+            if self.panic_instead {
+                // lint: test-double — the injected panic *is* the fixture.
+                panic!("injected panic on call {}", self.inner.calls);
+            }
+            anyhow::bail!("injected fault on call {}", self.inner.calls);
+        }
+        if !self.inner.delay.is_zero() {
+            std::thread::sleep(self.inner.delay * images.len() as u32);
+        }
+        Ok(BatchReport::functional(
+            images.iter().map(|img| self.inner.expected_logits(img)).collect(),
+        ))
+    }
+
+    fn describe(&self) -> String {
+        let mode = if self.panic_instead { "panic" } else { "err" };
+        if self.plan.enabled() {
+            format!("fault-injecting[rate={} seed={} mode={mode}]", self.plan.rate, self.plan.seed)
+        } else {
+            format!("fault-injecting[every={} mode={mode}]", self.fail_every)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::FaultModel;
+
+    #[test]
+    fn fault_injection_faults_every_nth_call() {
+        let mut b = FaultInjectingBackend::new(4, 3, 2);
+        let img = vec![1, 2, 3, 4];
+        let ok = b.infer_batch(&[&img]).unwrap();
+        assert_eq!(ok.outputs[0], b.expected_logits(&img));
+        let err = b.infer_batch(&[&img]).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "got {err:#}");
+        assert!(b.infer_batch(&[&img]).is_ok(), "call 3 recovers");
+        assert!(b.infer_batch(&[&img]).is_err(), "call 4 faults again");
+        // fail_every = 0 disables injection
+        let mut never = FaultInjectingBackend::new(4, 3, 0);
+        for _ in 0..8 {
+            assert!(never.infer_batch(&[&img]).is_ok());
+        }
+    }
+
+    #[test]
+    fn fault_injection_can_panic_instead() {
+        let mut b = FaultInjectingBackend::new(4, 3, 1).panicking();
+        assert!(b.describe().contains("panic"));
+        let img = vec![0, 0, 0, 0];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.infer_batch(&[&img])));
+        assert!(r.is_err(), "injected panic must unwind");
+    }
+
+    #[test]
+    fn seeded_plan_schedule_is_reproducible() {
+        let plan = FaultConfig::new(0.5, 0x7E57, FaultModel::Pe);
+        let img = vec![1, 1, 1, 1];
+        let run = |mut b: FaultInjectingBackend| -> Vec<bool> {
+            (0..32).map(|_| b.infer_batch(&[&img]).is_ok()).collect()
+        };
+        let a = run(FaultInjectingBackend::with_plan(4, 3, plan));
+        let b = run(FaultInjectingBackend::with_plan(4, 3, plan));
+        assert_eq!(a, b, "same plan → same failure schedule");
+        assert!(a.iter().any(|&ok| ok) && a.iter().any(|&ok| !ok), "rate 0.5 mixes outcomes");
+        // the plan overrides the modulus path and names itself
+        let c = FaultInjectingBackend::with_plan(4, 3, plan);
+        assert!(c.describe().contains("rate=0.5"));
+        // a different seed gives a different schedule somewhere
+        let d = run(FaultInjectingBackend::with_plan(4, 3, FaultConfig::new(0.5, 1, FaultModel::Pe)));
+        assert_ne!(a, d, "independent seeds disagree on 32 draws");
+    }
+}

@@ -1,0 +1,648 @@
+//! Hardware fault injection and ABFT (algorithm-based fault tolerance)
+//! checksum detection.
+//!
+//! Deployed FPGAs suffer transient upsets — bit flips in PE MAC
+//! results, shift-register (RSRB) corruption, and bad ifmap/weight
+//! reads — that a functional simulator would otherwise serve as wrong
+//! logits. This module provides both halves of the defence:
+//!
+//! * [`FaultConfig`] / [`FaultInjector`]: a deterministic, seeded fault
+//!   plan. Whether a given (engine, shard) execution is corrupted is a
+//!   pure function of `(seed, engine, effective layer signature)`, so a
+//!   re-execution of the same shard on a *different* engine gets an
+//!   independent draw while a retry on the same engine deterministically
+//!   reproduces the fault. Zero-cost when disabled: the engine hook is a
+//!   single `Option` test.
+//! * [`AbftChecker`]: per-shard output checksums. For each filter the
+//!   true output sum equals `Σ_{c,r,q} w[f,c,r,q] · T[c,r,q]` where
+//!   `T[c,r,q]` is the sum of the input samples that tap `(r,q)` touches
+//!   over the shard's output rows — the classic ABFT column-checksum
+//!   identity specialised to strided, padded convolution. `T` is an O(1)
+//!   rectangle query on stride-phase-decimated summed-area tables, so
+//!   the whole check costs O(input) to build once per layer plus
+//!   O(output + N·M·K²) per shard: noise next to the O(N·M·K²·H_o·W_o)
+//!   convolution itself. The identity is exact in wrapping `i64`
+//!   arithmetic, so every merged shard is verified, not sampled, with no
+//!   false positives.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::golden::Tensor3;
+use crate::model::ConvLayer;
+use crate::obs::Counter;
+
+/// Which hardware structure the injected upsets model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultModel {
+    /// Transient single-bit flip in one PE MAC result.
+    Pe,
+    /// Stuck-at-1 upset in a shift-register buffer: an OR mask smeared
+    /// across one output row (the RSRB feeds a whole row of PEs).
+    Rsrb,
+    /// Corrupted ifmap/weight read: a constant additive error folded
+    /// into every output of one filter.
+    Mem,
+}
+
+impl FaultModel {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultModel::Pe => "pe",
+            FaultModel::Rsrb => "rsrb",
+            FaultModel::Mem => "mem",
+        }
+    }
+}
+
+impl std::fmt::Display for FaultModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for FaultModel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "pe" => Ok(FaultModel::Pe),
+            "rsrb" => Ok(FaultModel::Rsrb),
+            "mem" => Ok(FaultModel::Mem),
+            other => Err(format!("unknown fault model '{other}' (expected pe|rsrb|mem)")),
+        }
+    }
+}
+
+/// Seeded fault-injection plan. `rate` is the per-(engine, shard)
+/// probability that the shard's output is corrupted; `0.0` disables
+/// injection entirely.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    pub rate: f64,
+    pub seed: u64,
+    pub model: FaultModel,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self { rate: 0.0, seed: 0xFA17_5EED, model: FaultModel::Pe }
+    }
+}
+
+impl FaultConfig {
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    pub fn new(rate: f64, seed: u64, model: FaultModel) -> Self {
+        Self { rate, seed, model }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// Deterministic Bernoulli draw keyed by `key`: fires with
+    /// probability `rate` under this plan's seed. The farm keys its
+    /// draws by (engine, shard signature); coarser harnesses — e.g. the
+    /// [`crate::coordinator::testing`] backend double — key by call
+    /// index. Same plan + same key → same verdict, always.
+    pub fn draw(&self, key: u64) -> bool {
+        self.enabled() && unit_f64(mix(mix(self.seed, key), 0x5EED_CA11)) < self.rate
+    }
+}
+
+/// SplitMix64-finalizer mixing step (same constants as
+/// [`crate::util::SplitMix64`]), used to key fault draws.
+#[inline]
+fn mix(mut h: u64, v: u64) -> u64 {
+    h ^= v;
+    h = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= h >> 29;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 32;
+    h
+}
+
+/// Deterministic key for one (engine, effective-layer) execution. The
+/// effective layer name already encodes the shard (`run_shard_shared`
+/// names sub-layers `"{name}[f{a}..{b}]"` / `"{name}[r{a}..{b}]"`), so
+/// the key uniquely identifies a shard regardless of work-stealing
+/// order.
+fn fault_key(seed: u64, engine: usize, layer: &ConvLayer) -> u64 {
+    let mut h = mix(seed, engine as u64);
+    for b in layer.name.as_bytes() {
+        h = mix(h, *b as u64);
+    }
+    h = mix(h, layer.h_i as u64);
+    h = mix(h, layer.w_i as u64);
+    h = mix(h, ((layer.k as u64) << 32) | layer.stride as u64);
+    h = mix(h, ((layer.pad as u64) << 32) | layer.m as u64);
+    mix(h, layer.n as u64)
+}
+
+#[inline]
+fn unit_f64(x: u64) -> f64 {
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Per-engine fault injector, attached to an `EngineSim` when chaos
+/// testing is enabled. Each call site passes the effective layer it just
+/// executed plus the produced ofmaps; corruption is applied in place.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    engine: usize,
+    injected: Arc<Counter>,
+}
+
+impl FaultInjector {
+    pub fn new(cfg: FaultConfig, engine: usize, injected: Arc<Counter>) -> Self {
+        Self { cfg, engine, injected }
+    }
+
+    pub fn config(&self) -> FaultConfig {
+        self.cfg
+    }
+
+    pub fn engine(&self) -> usize {
+        self.engine
+    }
+
+    /// Number of fault events that actually corrupted output so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.get()
+    }
+
+    /// Corrupt `ofmaps` in place iff this (engine, layer) execution
+    /// draws a fault. Returns `true` when at least one output element
+    /// actually changed (a stuck-at-1 mask over already-set bits is
+    /// benign and is not counted as injected).
+    pub fn maybe_corrupt(&self, layer: &ConvLayer, ofmaps: &mut Tensor3) -> bool {
+        if !self.cfg.enabled() || ofmaps.data.is_empty() {
+            return false;
+        }
+        let key = fault_key(self.cfg.seed, self.engine, layer);
+        if unit_f64(key) >= self.cfg.rate {
+            return false;
+        }
+        // Derive the corruption parameters from an independent stream so
+        // changing the rate never changes *which* corruption fires.
+        let mut rng = crate::util::SplitMix64::new(mix(key, 0xC0DE_D00D));
+        let changed = match self.cfg.model {
+            FaultModel::Pe => corrupt_pe(&mut rng, ofmaps),
+            FaultModel::Rsrb => corrupt_rsrb(&mut rng, ofmaps),
+            FaultModel::Mem => corrupt_mem(&mut rng, ofmaps),
+        };
+        if changed > 0 {
+            self.injected.inc();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Single-bit flip in one output element (one PE's MAC result).
+fn corrupt_pe(rng: &mut crate::util::SplitMix64, ofmaps: &mut Tensor3) -> u64 {
+    let idx = (rng.next_u64() % ofmaps.data.len() as u64) as usize;
+    let bit = (rng.next_u64() % 32) as u32;
+    ofmaps.data[idx] ^= 1i32 << bit;
+    1
+}
+
+/// Stuck-at-1 OR mask across one output row of one filter. Only bits
+/// below the sign bit are stuck so every flipped element strictly
+/// increases — the per-filter sum delta can never cancel to zero.
+fn corrupt_rsrb(rng: &mut crate::util::SplitMix64, ofmaps: &mut Tensor3) -> u64 {
+    let f = (rng.next_u64() % ofmaps.c as u64) as usize;
+    let y = (rng.next_u64() % ofmaps.h as u64) as usize;
+    let mask = 1i32 << (rng.next_u64() % 31) as u32;
+    let start = (f * ofmaps.h + y) * ofmaps.w;
+    let mut changed = 0u64;
+    for v in &mut ofmaps.data[start..start + ofmaps.w] {
+        if *v & mask == 0 {
+            *v |= mask;
+            changed += 1;
+        }
+    }
+    changed
+}
+
+/// Constant additive error over one filter's whole output channel,
+/// modelling a corrupted weight/ifmap read folded into every MAC that
+/// consumed it. The delta is non-zero so every element changes.
+fn corrupt_mem(rng: &mut crate::util::SplitMix64, ofmaps: &mut Tensor3) -> u64 {
+    let f = (rng.next_u64() % ofmaps.c as u64) as usize;
+    let mut delta = (rng.next_u64() % 255) as i32 - 127;
+    if delta == 0 {
+        delta = 1;
+    }
+    let plane = ofmaps.h * ofmaps.w;
+    let start = f * plane;
+    for v in &mut ofmaps.data[start..start + plane] {
+        *v = v.wrapping_add(delta);
+    }
+    plane as u64
+}
+
+/// Aggregated fault-tolerance counters, shaped like `CanaryReport` so
+/// they flow through the same snapshot/merge/delta plumbing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Fault events that actually corrupted engine output.
+    pub injected: u64,
+    /// ABFT checksum mismatches (or worker failures) observed at merge.
+    pub detected: u64,
+    /// Shards healed to a bit-exact result via re-execution.
+    pub corrected: u64,
+    /// Re-execution attempts dispatched.
+    pub reexecuted: u64,
+    /// Engines quarantined after crossing the failure threshold.
+    pub quarantined: u64,
+}
+
+impl FaultReport {
+    pub fn merge(&mut self, other: &FaultReport) {
+        self.injected = self.injected.saturating_add(other.injected);
+        self.detected = self.detected.saturating_add(other.detected);
+        self.corrected = self.corrected.saturating_add(other.corrected);
+        self.reexecuted = self.reexecuted.saturating_add(other.reexecuted);
+        self.quarantined = self.quarantined.saturating_add(other.quarantined);
+    }
+
+    /// Counters accrued since `prev` (both must be cumulative totals).
+    pub fn delta_since(&self, prev: &FaultReport) -> FaultReport {
+        FaultReport {
+            injected: self.injected.saturating_sub(prev.injected),
+            detected: self.detected.saturating_sub(prev.detected),
+            corrected: self.corrected.saturating_sub(prev.corrected),
+            reexecuted: self.reexecuted.saturating_sub(prev.reexecuted),
+            quarantined: self.quarantined.saturating_sub(prev.quarantined),
+        }
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.detected == 0 && self.quarantined == 0
+    }
+}
+
+/// Engine health as tracked by the self-healing farm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineHealth {
+    Healthy,
+    /// At least one fault attributed, below the quarantine threshold.
+    Suspect,
+    /// Crossed the threshold; receives no further work.
+    Quarantined,
+}
+
+impl EngineHealth {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineHealth::Healthy => "healthy",
+            EngineHealth::Suspect => "suspect",
+            EngineHealth::Quarantined => "quarantined",
+        }
+    }
+}
+
+/// One detected checksum violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AbftMismatch {
+    /// Absolute filter index (in the full layer's filter space).
+    pub filter: usize,
+    pub expected: i64,
+    pub actual: i64,
+}
+
+/// Summed-area table over one stride-phase decimation of one input
+/// channel: entry `(a, b)` covers input sample `(py + a·s, px + b·s)`.
+struct PhaseSat {
+    rows: usize,
+    cols: usize,
+    /// `(rows+1) × (cols+1)` inclusive prefix, wrapping `i64`.
+    sat: Vec<i64>,
+}
+
+impl PhaseSat {
+    fn build(input: &Tensor3, c: usize, py: usize, px: usize, s: usize) -> Self {
+        let rows = if py < input.h { (input.h - py).div_ceil(s) } else { 0 };
+        let cols = if px < input.w { (input.w - px).div_ceil(s) } else { 0 };
+        let mut sat = vec![0i64; (rows + 1) * (cols + 1)];
+        let pitch = cols + 1;
+        for a in 0..rows {
+            let mut row_acc = 0i64;
+            for b in 0..cols {
+                row_acc = row_acc.wrapping_add(input.get(c, py + a * s, px + b * s) as i64);
+                sat[(a + 1) * pitch + (b + 1)] = sat[a * pitch + (b + 1)].wrapping_add(row_acc);
+            }
+        }
+        Self { rows, cols, sat }
+    }
+
+    /// Sum over `a ∈ [a0, a1) × b ∈ [b0, b1)` (clamped to the table).
+    fn rect(&self, a0: isize, a1: isize, b0: isize, b1: isize) -> i64 {
+        let a0 = a0.clamp(0, self.rows as isize) as usize;
+        let a1 = a1.clamp(0, self.rows as isize) as usize;
+        let b0 = b0.clamp(0, self.cols as isize) as usize;
+        let b1 = b1.clamp(0, self.cols as isize) as usize;
+        if a0 >= a1 || b0 >= b1 {
+            return 0;
+        }
+        let p = self.cols + 1;
+        self.sat[a1 * p + b1]
+            .wrapping_sub(self.sat[a0 * p + b1])
+            .wrapping_sub(self.sat[a1 * p + b0])
+            .wrapping_add(self.sat[a0 * p + b0])
+    }
+}
+
+/// Per-layer ABFT checker. Built once per `(layer, input)` at the
+/// farm's shard-merge point; `check` then verifies each merged shard
+/// against the filter-sum identity in O(output + N·M·K²).
+pub struct AbftChecker {
+    k: usize,
+    stride: usize,
+    pad: usize,
+    m: usize,
+    h_o: usize,
+    w_o: usize,
+    /// `m × stride × stride` phase tables, indexed `(c·s + py)·s + px`.
+    sats: Vec<PhaseSat>,
+}
+
+impl AbftChecker {
+    pub fn new(layer: &ConvLayer, input: &Tensor3) -> Self {
+        assert_eq!(
+            (input.c, input.h, input.w),
+            (layer.m, layer.h_i, layer.w_i),
+            "ABFT checker input does not match layer {}",
+            layer.name
+        );
+        let s = layer.stride;
+        let mut sats = Vec::with_capacity(layer.m * s * s);
+        for c in 0..layer.m {
+            for py in 0..s {
+                for px in 0..s {
+                    sats.push(PhaseSat::build(input, c, py, px, s));
+                }
+            }
+        }
+        Self {
+            k: layer.k,
+            stride: s,
+            pad: layer.pad,
+            m: layer.m,
+            h_o: layer.h_o(),
+            w_o: layer.w_o(),
+            sats,
+        }
+    }
+
+    /// Tap sums `T[c, r, q]` for output rows `[rows)` over the full
+    /// output width: the sum of every input sample that kernel tap
+    /// `(r, q)` multiplies across those output positions.
+    fn tap_sums(&self, rows: &Range<usize>) -> Vec<i64> {
+        let s = self.stride as isize;
+        let k = self.k;
+        let mut taps = vec![0i64; self.m * k * k];
+        for r in 0..k {
+            let dy = r as isize - self.pad as isize;
+            let py = dy.rem_euclid(s) as usize;
+            let off_y = (dy - py as isize) / s;
+            let a0 = rows.start as isize + off_y;
+            let a1 = rows.end as isize + off_y;
+            for q in 0..k {
+                let dx = q as isize - self.pad as isize;
+                let px = dx.rem_euclid(s) as usize;
+                let off_x = (dx - px as isize) / s;
+                let b0 = off_x;
+                let b1 = self.w_o as isize + off_x;
+                for c in 0..self.m {
+                    let sat = &self.sats[(c * self.stride + py) * self.stride + px];
+                    taps[(c * k + r) * k + q] = sat.rect(a0, a1, b0, b1);
+                }
+            }
+        }
+        taps
+    }
+
+    /// Verify a shard's ofmap block (filters `filters`, output rows
+    /// `rows`, full width) against the checksum identity. `weights` is
+    /// the full layer's `[N][M][K][K]` tensor. Returns the first
+    /// mismatching filter, or `None` when every checksum holds.
+    pub fn check(
+        &self,
+        weights: &[i32],
+        filters: &Range<usize>,
+        rows: &Range<usize>,
+        ofmaps: &Tensor3,
+    ) -> Option<AbftMismatch> {
+        debug_assert_eq!(ofmaps.c, filters.len());
+        debug_assert_eq!(ofmaps.h, rows.len());
+        debug_assert_eq!(ofmaps.w, self.w_o);
+        let taps = self.tap_sums(rows);
+        let kk = self.k * self.k;
+        let plane = ofmaps.h * ofmaps.w;
+        for (i, f) in filters.clone().enumerate() {
+            let mut expected = 0i64;
+            let w_f = &weights[f * self.m * kk..(f + 1) * self.m * kk];
+            for (w, t) in w_f.iter().zip(taps.iter()) {
+                expected = expected.wrapping_add((*w as i64).wrapping_mul(*t));
+            }
+            let mut actual = 0i64;
+            for v in &ofmaps.data[i * plane..(i + 1) * plane] {
+                actual = actual.wrapping_add(*v as i64);
+            }
+            if actual != expected {
+                return Some(AbftMismatch { filter: f, expected, actual });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden::conv3d_i32;
+    use crate::util::SplitMix64;
+
+    fn random_input(m: usize, h: usize, w: usize, seed: u64) -> Tensor3 {
+        let mut rng = SplitMix64::new(seed);
+        Tensor3::from_fn(m, h, w, |_, _, _| rng.range_i32(-9, 9))
+    }
+
+    fn random_weights(n: usize, m: usize, k: usize, seed: u64) -> Vec<i32> {
+        SplitMix64::new(seed).vec_i32(n * m * k * k, -4, 8)
+    }
+
+    /// Extract the `[filters) × [rows) × full-width` block of a full
+    /// ofmap tensor, exactly as a farm shard would produce it.
+    fn shard_block(full: &Tensor3, filters: &Range<usize>, rows: &Range<usize>) -> Tensor3 {
+        Tensor3::from_fn(filters.len(), rows.len(), full.w, |f, y, x| {
+            full.get(filters.start + f, rows.start + y, x)
+        })
+    }
+
+    fn geometries() -> Vec<ConvLayer> {
+        vec![
+            ConvLayer::new("g-s1", 8, 3, 3, 4, 1, 0),
+            ConvLayer::new("g-s1-pad", 9, 3, 2, 5, 1, 1),
+            ConvLayer::new("g-s2-pad", 11, 3, 3, 4, 2, 1),
+            ConvLayer::new("g-s2", 10, 3, 2, 3, 2, 0),
+            ConvLayer::new("g-k5", 12, 5, 2, 3, 1, 2),
+            ConvLayer::new("g-s3", 13, 3, 2, 4, 3, 1),
+        ]
+    }
+
+    #[test]
+    fn abft_accepts_golden_output_across_geometries() {
+        for layer in geometries() {
+            let input = random_input(layer.m, layer.h_i, layer.w_i, 7);
+            let weights = random_weights(layer.n, layer.m, layer.k, 11);
+            let full = conv3d_i32(&input, &weights, layer.n, layer.k, layer.stride, layer.pad);
+            let checker = AbftChecker::new(&layer, &input);
+            let all_f = 0..layer.n;
+            let all_r = 0..layer.h_o();
+            assert_eq!(
+                checker.check(&weights, &all_f, &all_r, &full),
+                None,
+                "false positive on {}",
+                layer.name
+            );
+        }
+    }
+
+    #[test]
+    fn abft_accepts_golden_shard_blocks() {
+        for layer in geometries() {
+            let input = random_input(layer.m, layer.h_i, layer.w_i, 23);
+            let weights = random_weights(layer.n, layer.m, layer.k, 29);
+            let full = conv3d_i32(&input, &weights, layer.n, layer.k, layer.stride, layer.pad);
+            let checker = AbftChecker::new(&layer, &input);
+            let h_o = layer.h_o();
+            // Filter shard, row shard, and a joint (hybrid-style) block.
+            let cases = vec![
+                (1..layer.n, 0..h_o),
+                (0..layer.n, h_o / 2..h_o),
+                (0..1, 1..h_o.max(2) - 1),
+            ];
+            for (filters, rows) in cases {
+                if filters.is_empty() || rows.is_empty() {
+                    continue;
+                }
+                let block = shard_block(&full, &filters, &rows);
+                assert_eq!(
+                    checker.check(&weights, &filters, &rows, &block),
+                    None,
+                    "false positive on {} shard f{filters:?} r{rows:?}",
+                    layer.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn abft_detects_every_fault_model() {
+        let layer = ConvLayer::new("chaos", 11, 3, 3, 4, 2, 1);
+        let input = random_input(layer.m, layer.h_i, layer.w_i, 41);
+        let weights = random_weights(layer.n, layer.m, layer.k, 43);
+        let full = conv3d_i32(&input, &weights, layer.n, layer.k, layer.stride, layer.pad);
+        let checker = AbftChecker::new(&layer, &input);
+        let filters = 0..layer.n;
+        let rows = 0..layer.h_o();
+        for model in [FaultModel::Pe, FaultModel::Rsrb, FaultModel::Mem] {
+            let inj = FaultInjector::new(
+                FaultConfig::new(1.0, 77, model),
+                0,
+                Arc::new(Counter::new()),
+            );
+            let mut block = shard_block(&full, &filters, &rows);
+            assert!(inj.maybe_corrupt(&layer, &mut block), "{model} did not fire at rate 1");
+            assert_eq!(inj.injected(), 1);
+            let miss = checker.check(&weights, &filters, &rows, &block);
+            assert!(miss.is_some(), "{model} corruption escaped the checksum");
+        }
+    }
+
+    #[test]
+    fn fault_draws_are_deterministic_and_engine_keyed() {
+        let layer = ConvLayer::new("det", 9, 3, 2, 3, 1, 1);
+        let input = random_input(layer.m, layer.h_i, layer.w_i, 5);
+        let weights = random_weights(layer.n, layer.m, layer.k, 6);
+        let full = conv3d_i32(&input, &weights, layer.n, layer.k, layer.stride, layer.pad);
+        let cfg = FaultConfig::new(1.0, 99, FaultModel::Pe);
+        let corrupt_on = |engine: usize| {
+            let inj = FaultInjector::new(cfg, engine, Arc::new(Counter::new()));
+            let mut t = full.clone();
+            inj.maybe_corrupt(&layer, &mut t);
+            t
+        };
+        // Same engine → identical corruption; different engine →
+        // an independent draw (at rate 1 both fire, differently).
+        assert_eq!(corrupt_on(0), corrupt_on(0));
+        assert_ne!(corrupt_on(0), corrupt_on(1));
+        // Rate 0 is a no-op and counts nothing.
+        let off = FaultInjector::new(FaultConfig::disabled(), 0, Arc::new(Counter::new()));
+        let mut t = full.clone();
+        assert!(!off.maybe_corrupt(&layer, &mut t));
+        assert_eq!(t, full);
+        assert_eq!(off.injected(), 0);
+    }
+
+    #[test]
+    fn fault_rate_is_respected_in_aggregate() {
+        let cfg = FaultConfig::new(0.25, 1234, FaultModel::Mem);
+        let mut fired = 0usize;
+        let total = 400usize;
+        for i in 0..total {
+            let layer = ConvLayer::new(&format!("agg{i}"), 8, 3, 2, 2, 1, 1);
+            let inj = FaultInjector::new(cfg, i % 4, Arc::new(Counter::new()));
+            // Zero tensor: the mem model always changes every element.
+            let mut t = Tensor3::zeros(2, 6, 4);
+            if inj.maybe_corrupt(&layer, &mut t) {
+                fired += 1;
+            }
+        }
+        let frac = fired as f64 / total as f64;
+        assert!(
+            (0.15..=0.35).contains(&frac),
+            "rate 0.25 produced empirical rate {frac} ({fired}/{total})"
+        );
+    }
+
+    #[test]
+    fn report_merge_and_delta() {
+        let mut a = FaultReport { injected: 3, detected: 2, corrected: 2, reexecuted: 4, quarantined: 0 };
+        let b = FaultReport { injected: 1, detected: 1, corrected: 0, reexecuted: 1, quarantined: 1 };
+        a.merge(&b);
+        assert_eq!(a, FaultReport { injected: 4, detected: 3, corrected: 2, reexecuted: 5, quarantined: 1 });
+        let prev = FaultReport { injected: 2, detected: 1, corrected: 1, reexecuted: 2, quarantined: 0 };
+        let d = a.delta_since(&prev);
+        assert_eq!(d, FaultReport { injected: 2, detected: 2, corrected: 1, reexecuted: 3, quarantined: 1 });
+        assert!(!a.is_clean());
+        assert!(FaultReport::default().is_clean());
+    }
+
+    #[test]
+    fn fault_model_round_trips_from_str() {
+        for m in [FaultModel::Pe, FaultModel::Rsrb, FaultModel::Mem] {
+            assert_eq!(m.as_str().parse::<FaultModel>(), Ok(m));
+        }
+        assert!("cosmic".parse::<FaultModel>().is_err());
+    }
+
+    #[test]
+    fn config_draw_is_deterministic_and_rate_bounded() {
+        let cfg = FaultConfig::new(0.25, 99, FaultModel::Pe);
+        let fired = (0..4000u64).filter(|&k| cfg.draw(k)).count();
+        assert_eq!(fired, (0..4000u64).filter(|&k| cfg.draw(k)).count(), "same key → same verdict");
+        let frac = fired as f64 / 4000.0;
+        assert!((0.15..=0.35).contains(&frac), "empirical rate {frac} too far from 0.25");
+        assert!(!FaultConfig::disabled().draw(7), "disabled plans never fire");
+        assert!((0..64u64).all(|k| FaultConfig::new(1.0, 3, FaultModel::Mem).draw(k)));
+    }
+}

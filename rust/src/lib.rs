@@ -45,6 +45,11 @@
 //!   scratch telemetry through it, and the farm's shadow-execution
 //!   canary (re-running sampled shards on a `Register`-fidelity engine)
 //!   publishes bit/counter divergence through the same pipeline.
+//! * [`fault`] — hardware fault injection (seeded per-engine upset
+//!   plans: PE bit flips, RSRB stuck-at masks, corrupted memory reads)
+//!   and the ABFT filter-checksum identity the farm verifies on *every*
+//!   merged shard, powering the self-healing re-execute / quarantine /
+//!   replan loop (`--chaos`).
 //! * [`runtime`] — PJRT wrapper (load HLO text → compile → execute); the
 //!   numeric path produced by the Python build layer (`python/compile/`).
 //!   Gated behind the `pjrt` cargo feature (needs the `xla` crate); the
@@ -61,6 +66,7 @@
 pub mod analytics;
 pub mod arch;
 pub mod coordinator;
+pub mod fault;
 pub mod golden;
 pub mod model;
 pub mod obs;

@@ -17,6 +17,8 @@
 //!            [--canary RATE] [--metrics-out PATH]
 //!            [--queue-cap N] [--budget-cycles C] [--deadline-ms D]
 //!            [--drain-ms G] [--http PORT] [--http-secs S]
+//!            [--client-rps R] [--chaos RATE] [--chaos-seed S]
+//!            [--chaos-model pe|rsrb|mem]
 //!                               e2e batched inference. Backends:
 //!                                 pjrt — compiled XLA artifacts (needs
 //!                                        `make artifacts` + the `pjrt`
@@ -71,9 +73,28 @@
 //!                               timer is the stand-in for SIGINT — when
 //!                               it fires the server stops accepting and
 //!                               the fleet drains gracefully)
+//!                               Fault tolerance: --client-rps R sheds
+//!                               each client past R requests/s with 429 +
+//!                               Retry-After (the "client" body field keys
+//!                               the bucket; anonymous requests share
+//!                               one), --chaos RATE injects seeded
+//!                               hardware faults into that fraction of
+//!                               (engine, shard) executions —
+//!                               --chaos-model picks PE MAC bit flips
+//!                               (default), stuck-at RSRB rows or
+//!                               corrupted memory reads, --chaos-seed
+//!                               makes the plan reproducible. Every
+//!                               merged shard is ABFT-checksum-verified;
+//!                               detected faults re-execute on another
+//!                               engine, repeat offenders quarantine and
+//!                               the farm replans at degraded capacity —
+//!                               logits stay bit-exact, and the fault
+//!                               counters land in /metrics and the final
+//!                               summary
 //! trim farm [--engines N] [--net vgg16|alexnet] [--batch B]
 //!           [--shard filter|pipeline|spatial|hybrid|auto]
 //!           [--fidelity fast|register]
+//!           [--chaos RATE] [--chaos-seed S] [--chaos-model pe|rsrb|mem]
 //!                               shard real network layers across a farm
 //!                               of simulated engines: per-layer speedup
 //!                               table (chosen axis + speedup bound) +
@@ -118,7 +139,8 @@ use trim_sa::arch::control::plan_layer;
 use trim_sa::arch::{ArchConfig, EngineSim, ExecFidelity, SimStats, SliceSim};
 use trim_sa::coordinator::{
     make_backend, AdmissionConfig, BackendKind, BatchCost, BatcherConfig, Coordinator,
-    CoordinatorConfig, HttpServer, LayerCost, Router, ServeError,
+    CoordinatorConfig, FaultConfig, FaultModel, FaultReport, HttpServer, LayerCost, Router,
+    ServeError,
 };
 use trim_sa::golden::{conv3d_i32, Tensor3};
 use trim_sa::model::{alexnet::alexnet, vgg16::vgg16, ConvLayer, Network};
@@ -145,6 +167,24 @@ fn net_by_name(name: &str) -> Network {
         "alexnet" => alexnet(),
         _ => vgg16(),
     }
+}
+
+/// `--chaos RATE [--chaos-seed S] [--chaos-model pe|rsrb|mem]` → the
+/// fault-injection plan (disabled when `--chaos` is absent or 0).
+fn chaos_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<FaultConfig> {
+    let rate: f64 = flags.get("chaos").and_then(|v| v.parse().ok()).unwrap_or(0.0);
+    if rate <= 0.0 {
+        return Ok(FaultConfig::disabled());
+    }
+    let seed: u64 = flags
+        .get("chaos-seed")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| FaultConfig::default().seed);
+    let model: FaultModel = match flags.get("chaos-model") {
+        Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+        None => FaultModel::Pe,
+    };
+    Ok(FaultConfig::new(rate, seed, model))
 }
 
 fn cmd_analyze(net: &Network) {
@@ -264,23 +304,32 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         None => ShardMode::Auto,
     };
     let canary: f64 = flags.get("canary").and_then(|v| v.parse().ok()).unwrap_or(0.0);
+    let chaos = chaos_from_flags(flags)?;
     let queue_cap: usize = flags.get("queue-cap").and_then(|v| v.parse().ok()).unwrap_or(256);
     let budget_cycles: Option<f64> = flags.get("budget-cycles").and_then(|v| v.parse().ok());
+    let client_rps: Option<f64> = flags.get("client-rps").and_then(|v| v.parse().ok());
     let deadline_ms: Option<u64> = flags.get("deadline-ms").and_then(|v| v.parse().ok());
     let drain_ms: u64 = flags.get("drain-ms").and_then(|v| v.parse().ok()).unwrap_or(2000);
     let http_port: Option<u16> = flags.get("http").and_then(|v| v.parse().ok());
     let http_secs: u64 = flags.get("http-secs").and_then(|v| v.parse().ok()).unwrap_or(30);
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
-        admission: AdmissionConfig { queue_cap, budget_cycles },
+        admission: AdmissionConfig { queue_cap, budget_cycles, client_rps },
     };
+    if chaos.enabled() {
+        println!(
+            "chaos: injecting {} faults at rate {} (seed {:#x}) — ABFT checksums verify \
+             every shard, faulty engines re-execute and quarantine",
+            chaos.model, chaos.rate, chaos.seed
+        );
+    }
     // One ingress, `farms` farms: a single-farm router degenerates to the
     // plain coordinator, so serve always goes through the front door.
     let coordinators: Vec<Coordinator> = (0..farms)
         .map(|_| {
             let d = dir.clone();
             Coordinator::start_with(
-                move || make_backend(kind, &d, engines, fidelity, shard, canary),
+                move || make_backend(kind, &d, engines, fidelity, shard, canary, chaos),
                 cfg,
             )
         })
@@ -366,6 +415,23 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "robustness: shed {}  deadline-expired {}  engine-failed {}  drain-rejected {}  retries {}",
         m.shed, m.deadline_expired, m.engine_failed, m.drain_rejected, m.retries
     );
+    if chaos.enabled() || m.fault != FaultReport::default() {
+        println!(
+            "faults    : injected {}  detected {}  corrected {}  reexecuted {}  quarantined {}{}",
+            m.fault.injected,
+            m.fault.detected,
+            m.fault.corrected,
+            m.fault.reexecuted,
+            m.fault.quarantined,
+            if m.fault.is_clean() {
+                "  (clean)"
+            } else if m.fault.corrected == m.fault.detected {
+                "  (all detected faults healed)"
+            } else {
+                ""
+            }
+        );
+    }
     if m.sim_batches > 0 {
         println!(
             "sim cost  : {} cycles  {} off-chip + {} on-chip accesses  {:.3} mJ  {:.2} GOPs/s @ {:.0} MHz",
@@ -436,6 +502,7 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         None => ExecFidelity::Fast,
     };
     let canary: f64 = flags.get("canary").and_then(|v| v.parse().ok()).unwrap_or(0.0);
+    let chaos = chaos_from_flags(flags)?;
     let arch = ArchConfig::small(3, 2, 2);
     match mode {
         ShardMode::FilterShards | ShardMode::Spatial | ShardMode::Hybrid | ShardMode::Auto => {
@@ -444,9 +511,17 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 "engine farm: {engines} engines of P_N={} x P_M={} (scaled-down {} layers, {mode} shard mode, {fidelity} fidelity)",
                 arch.p_n, arch.p_m, net.name
             );
+            if chaos.enabled() {
+                println!(
+                    "chaos: injecting {} faults at rate {} (seed {:#x}) — the bit-exactness \
+                     column now also proves ABFT detection + re-execution heal every fault",
+                    chaos.model, chaos.rate, chaos.seed
+                );
+            }
             let farm = EngineFarm::new(
                 FarmConfig::with_fidelity(engines, arch, fidelity)
-                    .with_canary(CanaryConfig::sampled(canary)),
+                    .with_canary(CanaryConfig::sampled(canary))
+                    .with_chaos(chaos),
             );
             let single = EngineSim::with_fidelity(arch, fidelity);
             let mut rng = SplitMix64::new(2024);
@@ -533,6 +608,18 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                     if c.is_clean() { "  (clean)" } else { "  (DIVERGED)" }
                 );
             }
+            if farm.chaos_enabled() {
+                let fr = farm.fault_report();
+                println!(
+                    "chaos     : injected {}  detected {}  corrected {}  reexecuted {}  quarantined {}  live engines {}/{engines}",
+                    fr.injected,
+                    fr.detected,
+                    fr.corrected,
+                    fr.reexecuted,
+                    fr.quarantined,
+                    farm.live_engines()
+                );
+            }
             if let Some(path) = flags.get("metrics-out") {
                 write_metrics_out(path, &farm.registry().render_prometheus())?;
             }
@@ -545,6 +632,9 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             use trim_sa::scheduler::SimNetSpec;
             if flags.contains_key("net") {
                 println!("note: --net is ignored in pipeline mode; streaming the serving chain instead");
+            }
+            if chaos.enabled() {
+                println!("note: --chaos applies to sharded layer runs; pipeline mode ignores it");
             }
             let batch: usize = flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(8);
             let spec = SimNetSpec::tiny();
@@ -621,6 +711,7 @@ fn cmd_trace(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 ExecFidelity::Fast,
                 ShardMode::Auto,
                 canary,
+                FaultConfig::disabled(),
             )
         },
         cfg,

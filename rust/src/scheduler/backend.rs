@@ -23,6 +23,7 @@ use super::shard::ShardMode;
 use crate::analytics::EnergyModel;
 use crate::arch::{ArchConfig, ExecFidelity, SimStats};
 use crate::coordinator::{BatchCost, BatchReport, InferenceBackend, LayerCost};
+use crate::fault::{FaultConfig, FaultReport};
 use crate::golden::{conv3d_i32, Tensor3};
 use crate::model::quant::Requant;
 use crate::model::ConvLayer;
@@ -115,6 +116,9 @@ pub struct SimBackend {
     /// `infer_batch` reports per-batch *deltas* so the serving metrics
     /// (which sum batch costs) end up with the true totals.
     last_canary: CanaryReport,
+    /// Cumulative fault totals already attributed to earlier batches
+    /// (same delta scheme as `last_canary`).
+    last_fault: FaultReport,
     /// infer_batch calls observed (exposed for batching assertions).
     pub calls: u64,
 }
@@ -160,8 +164,29 @@ impl SimBackend {
         fidelity: ExecFidelity,
         canary: CanaryConfig,
     ) -> Self {
+        Self::with_chaos(engines, arch, spec, mode, fidelity, canary, FaultConfig::disabled())
+    }
+
+    /// Full control including the farm's fault-injection plan. When
+    /// `chaos.enabled()`, each engine deterministically corrupts a
+    /// `chaos.rate` fraction of its shard results; the farm's ABFT
+    /// checksum catches them at merge time and the self-healing loop
+    /// re-executes / quarantines, so the *served* logits stay bit-exact.
+    /// Each batch's [`BatchCost::faults`] carries the fault activity
+    /// observed since the previous batch.
+    pub fn with_chaos(
+        engines: usize,
+        arch: ArchConfig,
+        spec: SimNetSpec,
+        mode: ShardMode,
+        fidelity: ExecFidelity,
+        canary: CanaryConfig,
+        chaos: FaultConfig,
+    ) -> Self {
         spec.validate();
-        let farm = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity).with_canary(canary));
+        let farm = EngineFarm::new(
+            FarmConfig::with_fidelity(engines, arch, fidelity).with_canary(canary).with_chaos(chaos),
+        );
         let weights = (0..spec.layers.len()).map(|i| Arc::new(spec.layer_weights(i))).collect();
         let requant = Requant::new(spec.requant_shift, 8);
         Self {
@@ -172,6 +197,7 @@ impl SimBackend {
             requant,
             energy: EnergyModel::paper(),
             last_canary: CanaryReport::default(),
+            last_fault: FaultReport::default(),
             calls: 0,
         }
     }
@@ -329,11 +355,20 @@ impl InferenceBackend for SimBackend {
         } else {
             CanaryReport::default()
         };
+        // Fault counters are updated synchronously at shard-merge time, so
+        // no drain is needed: everything this batch merged is in the totals.
+        let faults = {
+            let total = self.farm.fault_report();
+            let delta = total.delta_since(&self.last_fault);
+            self.last_fault = total;
+            delta
+        };
         Ok(BatchReport::with_cost(
             outputs,
             BatchCost::from_stats(stats, f_clk, &self.energy)
                 .with_per_layer(per_layer)
-                .with_canary(canary),
+                .with_canary(canary)
+                .with_faults(faults),
         ))
     }
 
@@ -516,6 +551,62 @@ mod tests {
         let cost = b.infer_batch(&[&img]).unwrap().cost.unwrap();
         assert_eq!(cost.canary, CanaryReport::default());
         assert!(!b.farm().canary_enabled());
+        // Likewise chaos-off: all-zero FaultReport, chaos disabled.
+        assert_eq!(cost.faults, FaultReport::default());
+        assert!(!b.farm().chaos_enabled());
+    }
+
+    #[test]
+    fn chaos_backend_serves_golden_logits_and_reports_fault_deltas() {
+        // Faults injected into the farm are detected, healed and
+        // attributed per batch — while the *served* logits stay golden.
+        // Fault draws are keyed on (seed, engine, shard signature), so a
+        // shard whose draw fires on *every* engine deterministically
+        // exhausts its retries (a typed error, never a wrong answer).
+        // Which engine first runs a shard is a work-stealing race, so per
+        // batch only the invariants hold, not an exact count — the test
+        // scans seeds until one yields a fully healed batch (rate 0.3 on
+        // 4 engines ≈ 90% of seeds).
+        use crate::fault::{FaultConfig, FaultModel};
+        let mut healed = false;
+        for seed in 0..16u64 {
+            let mut b = SimBackend::with_chaos(
+                4,
+                ArchConfig::small(3, 2, 1),
+                SimNetSpec::tiny(),
+                ShardMode::FilterShards,
+                ExecFidelity::Fast,
+                CanaryConfig::default(),
+                FaultConfig::new(0.3, seed, FaultModel::Pe),
+            );
+            let len = b.input_len();
+            let imgs: Vec<Vec<i32>> = (0..2).map(|i| image(3100 + i, len)).collect();
+            let refs: Vec<&[i32]> = imgs.iter().map(|v| v.as_slice()).collect();
+            let expect: Vec<Vec<i32>> = imgs.iter().map(|v| b.reference_logits(v)).collect();
+            match b.infer_batch(&refs) {
+                Ok(r) => {
+                    assert_eq!(r.outputs, expect, "healed chaos batch must serve golden logits");
+                    let f = r.cost.unwrap().faults;
+                    assert_eq!(f.detected, f.injected, "ABFT catches every injected corruption");
+                    assert_eq!(f.reexecuted, f.detected);
+                    // Per-batch deltas sum to the farm-level totals.
+                    assert_eq!(b.farm().fault_report(), f);
+                    if f.injected > 0 {
+                        assert!(f.corrected > 0, "a healed faulty batch corrected something");
+                        healed = true;
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    assert!(
+                        msg.contains("ABFT checksum mismatch") && msg.contains("attempts"),
+                        "chaos failures must be typed: {msg}"
+                    );
+                }
+            }
+        }
+        assert!(healed, "no seed in 0..16 produced a healed faulty batch");
     }
 
     #[test]

@@ -63,6 +63,7 @@
 use super::shard::{plan_shards, ShardMode, ShardPlan};
 use crate::arch::engine::EngineRunResult;
 use crate::arch::{ArchConfig, EngineSim, ExecFidelity, SimStats};
+use crate::fault::{AbftChecker, EngineHealth, FaultConfig, FaultInjector, FaultReport};
 use crate::golden::Tensor3;
 use crate::model::quant::Requant;
 use crate::model::ConvLayer;
@@ -165,20 +166,54 @@ pub struct FarmConfig {
     pub fidelity: ExecFidelity,
     /// Shadow-execution canary (off by default).
     pub canary: CanaryConfig,
+    /// Seeded hardware fault injection ([`crate::fault`], disabled by
+    /// default). Non-zero rates attach a [`FaultInjector`] to every
+    /// worker engine — the chaos-testing mode behind `--chaos`.
+    pub chaos: FaultConfig,
+    /// Self-healing: maximum re-executions of one shard after a
+    /// detected fault (ABFT checksum mismatch or worker panic) before
+    /// the layer run fails with a typed error.
+    pub max_retries: u32,
+    /// Self-healing: an engine with this many attributed faults is
+    /// quarantined — banned from all future jobs, with subsequent
+    /// layers replanned over the surviving engines. The last live
+    /// engine is never quarantined.
+    pub quarantine_after: u32,
 }
 
 impl FarmConfig {
     pub fn new(engines: usize, arch: ArchConfig) -> Self {
-        Self { engines, arch, fidelity: ExecFidelity::Fast, canary: CanaryConfig::default() }
+        Self {
+            engines,
+            arch,
+            fidelity: ExecFidelity::Fast,
+            canary: CanaryConfig::default(),
+            chaos: FaultConfig::default(),
+            max_retries: 3,
+            quarantine_after: 3,
+        }
     }
 
     pub fn with_fidelity(engines: usize, arch: ArchConfig, fidelity: ExecFidelity) -> Self {
-        Self { engines, arch, fidelity, canary: CanaryConfig::default() }
+        Self { fidelity, ..Self::new(engines, arch) }
     }
 
     /// Builder: enable the shadow-execution canary.
     pub fn with_canary(mut self, canary: CanaryConfig) -> Self {
         self.canary = canary;
+        self
+    }
+
+    /// Builder: enable seeded fault injection (chaos testing).
+    pub fn with_chaos(mut self, chaos: FaultConfig) -> Self {
+        self.chaos = chaos;
+        self
+    }
+
+    /// Builder: tune the self-healing policy.
+    pub fn with_heal(mut self, max_retries: u32, quarantine_after: u32) -> Self {
+        self.max_retries = max_retries;
+        self.quarantine_after = quarantine_after.max(1);
         self
     }
 }
@@ -205,7 +240,25 @@ struct Job {
     /// Span id of the dispatching layer/pipeline run (0 = root), so the
     /// worker's per-shard span links back across the thread boundary.
     trace_parent: u64,
+    /// Bit mask of engines that must not run this job: quarantined
+    /// engines plus — on a re-execution — every engine that already
+    /// produced a faulty result for this shard. A banned worker hands
+    /// the job back to the injector. Engine ids ≥ 64 are never banned
+    /// (see [`engine_bit`]).
+    banned: u64,
     reply: Sender<JobDone>,
+}
+
+/// The `banned`-mask bit of one engine. Ids past the mask width can
+/// never be banned — the mask degrades to "retry anywhere", which is
+/// safe (a re-execution merely loses the different-engine guarantee).
+#[inline]
+fn engine_bit(id: usize) -> u64 {
+    if id < 64 {
+        1u64 << id
+    } else {
+        0
+    }
 }
 
 struct JobDone {
@@ -302,6 +355,15 @@ impl<T> Injector<T> {
         self.lock().shutdown = true;
         self.ready.notify_all();
     }
+
+    /// Whether shutdown has been flagged. A worker holding a job it is
+    /// banned from re-runs the decision on this: once the farm is
+    /// draining no caller is waiting, so the job is discarded instead of
+    /// re-pushed (re-pushing from the last surviving worker would
+    /// otherwise cycle forever and wedge the join).
+    pub fn is_shutdown(&self) -> bool {
+        self.lock().shutdown
+    }
 }
 
 /// Best-effort rendering of a caught panic payload.
@@ -339,6 +401,18 @@ fn worker_loop(id: usize, engine: EngineSim, injector: Arc<Injector<Job>>, tel: 
     loop {
         let parked = Instant::now();
         let Some((job, stolen)) = injector.next_job() else { break };
+        if job.banned & engine_bit(id) != 0 {
+            // Quarantined for this job (or it already faulted here):
+            // hand it back for another engine and yield briefly so the
+            // re-push doesn't spin against an otherwise-idle pool. If
+            // the farm is draining instead, discard — no caller waits,
+            // and re-pushing could cycle against the shutdown join.
+            if !injector.is_shutdown() {
+                injector.push([job]);
+                std::thread::sleep(Duration::from_micros(50));
+            }
+            continue;
+        }
         tel.idle_us.add(parked.elapsed().as_micros() as u64);
         if stolen {
             tel.steals.inc();
@@ -563,6 +637,28 @@ pub struct EngineFarm {
     workers: Vec<JoinHandle<()>>,
     registry: Arc<Registry>,
     canary: Option<Canary>,
+    /// Self-healing state: per-engine attributed fault counts plus the
+    /// quarantine mask. One mutex — health transitions happen only on
+    /// detected faults, never on the fault-free hot path.
+    health: Mutex<HealthState>,
+    /// Self-healing counters, resolved once (the registry map is not on
+    /// the merge hot path).
+    heal: HealCounters,
+}
+
+struct HealthState {
+    /// Detected faults attributed per engine (checksum mismatches and
+    /// worker panics observed at the merge point).
+    faults: Vec<u32>,
+    /// Bit mask of quarantined engines.
+    quarantined: u64,
+}
+
+struct HealCounters {
+    detected: Arc<Counter>,
+    corrected: Arc<Counter>,
+    reexecuted: Arc<Counter>,
+    quarantined: Arc<Counter>,
 }
 
 impl EngineFarm {
@@ -576,7 +672,11 @@ impl EngineFarm {
         let injector = Arc::new(Injector::new(registry.gauge("injector.depth")));
         let mut workers = Vec::with_capacity(cfg.engines);
         for i in 0..cfg.engines {
-            let engine = EngineSim::with_fidelity(cfg.arch, cfg.fidelity);
+            let mut engine = EngineSim::with_fidelity(cfg.arch, cfg.fidelity);
+            if cfg.chaos.enabled() {
+                engine = engine
+                    .with_fault(FaultInjector::new(cfg.chaos, i, registry.counter("fault.injected")));
+            }
             let inj = Arc::clone(&injector);
             let tel = WorkerTelemetry {
                 jobs: registry.counter(&format!("engine{i}.jobs")),
@@ -619,7 +719,14 @@ impl EngineFarm {
         } else {
             None
         };
-        Self { cfg, injector, workers, registry, canary }
+        let health = Mutex::new(HealthState { faults: vec![0; cfg.engines], quarantined: 0 });
+        let heal = HealCounters {
+            detected: registry.counter("fault.detected"),
+            corrected: registry.counter("fault.corrected"),
+            reexecuted: registry.counter("fault.reexecuted"),
+            quarantined: registry.counter("fault.quarantined"),
+        };
+        Self { cfg, injector, workers, registry, canary, health, heal }
     }
 
     pub fn engines(&self) -> usize {
@@ -673,6 +780,80 @@ impl EngineFarm {
         }
     }
 
+    /// Whether seeded fault injection is active on the worker engines.
+    pub fn chaos_enabled(&self) -> bool {
+        self.cfg.chaos.enabled()
+    }
+
+    /// Cumulative fault-tolerance totals: faults injected (chaos mode),
+    /// detected at merge (ABFT mismatch or worker panic), shards healed
+    /// by re-execution, re-execution attempts, and engines quarantined.
+    /// All zero on a farm that has never seen a fault.
+    pub fn fault_report(&self) -> FaultReport {
+        FaultReport {
+            injected: self.registry.counter_value("fault.injected"),
+            detected: self.registry.counter_value("fault.detected"),
+            corrected: self.registry.counter_value("fault.corrected"),
+            reexecuted: self.registry.counter_value("fault.reexecuted"),
+            quarantined: self.registry.counter_value("fault.quarantined"),
+        }
+    }
+
+    /// Health of every engine: `Healthy` (no attributed faults),
+    /// `Suspect` (some, below the quarantine threshold), `Quarantined`.
+    pub fn engine_health(&self) -> Vec<EngineHealth> {
+        let h = lock_unpoisoned(&self.health);
+        (0..self.cfg.engines)
+            .map(|i| {
+                if h.quarantined & engine_bit(i) != 0 {
+                    EngineHealth::Quarantined
+                } else if h.faults[i] > 0 {
+                    EngineHealth::Suspect
+                } else {
+                    EngineHealth::Healthy
+                }
+            })
+            .collect()
+    }
+
+    /// Engines still receiving work (total minus quarantined, never
+    /// below one). Shard plans for subsequent layers are drawn over this
+    /// count — the degraded-capacity replan.
+    pub fn live_engines(&self) -> usize {
+        let h = lock_unpoisoned(&self.health);
+        (self.cfg.engines - h.quarantined.count_ones() as usize).max(1)
+    }
+
+    /// Current quarantine mask (for job banning).
+    fn quarantine_mask(&self) -> u64 {
+        lock_unpoisoned(&self.health).quarantined
+    }
+
+    /// Attribute one detected fault to `engine`; quarantine it when it
+    /// crosses the threshold (unless it is the last live engine).
+    /// Returns true when this call quarantined the engine.
+    fn note_engine_fault(&self, engine: usize) -> bool {
+        self.heal.detected.inc();
+        let mut h = lock_unpoisoned(&self.health);
+        if let Some(f) = h.faults.get_mut(engine) {
+            *f += 1;
+            let crossed = *f >= self.cfg.quarantine_after;
+            let bit = engine_bit(engine);
+            let already = h.quarantined & bit != 0;
+            let survivors = self.cfg.engines - (h.quarantined | bit).count_ones() as usize;
+            if crossed && !already && bit != 0 && survivors >= 1 {
+                h.quarantined |= bit;
+                drop(h);
+                self.heal.quarantined.inc();
+                self.registry.counter(&format!("engine{engine}.faults")).inc();
+                return true;
+            }
+        }
+        drop(h);
+        self.registry.counter(&format!("engine{engine}.faults")).inc();
+        false
+    }
+
     /// Run one layer sharded across the farm in filter-shard mode and
     /// merge the results (the PR-1 entry point, kept for the existing
     /// callers/tests). See [`EngineFarm::run_layer_mode`].
@@ -716,10 +897,15 @@ impl EngineFarm {
         mode: ShardMode,
     ) -> Result<FarmRunResult> {
         assert!(mode != ShardMode::LayerPipeline, "pipeline mode goes through run_pipeline");
-        let plan = plan_shards(&self.cfg.arch, layer, self.engines(), mode);
+        // Degraded-capacity replanning: quarantined engines no longer
+        // count — the plan (and its speedup bound) shrinks to the
+        // survivors instead of leaving shards parked on banned engines.
+        let live = self.live_engines();
+        let plan = plan_shards(&self.cfg.arch, layer, live, mode);
         let span = obs::tracer().begin("farm.layer", 0);
         let trace_parent = span.id();
         let (reply, done_rx) = mpsc::channel::<JobDone>();
+        let quarantined = self.quarantine_mask();
         let jobs: Vec<Job> = plan
             .shards
             .iter()
@@ -732,25 +918,65 @@ impl EngineFarm {
                 requant: None,
                 tag: shard.index as u64,
                 trace_parent,
+                banned: quarantined,
                 reply: reply.clone(),
             })
             .collect();
-        // Drop our sender so the reply channel closes once every job —
-        // completed or failed — has reported; a worker that panics still
-        // reports (catch_unwind in worker_loop), so recv can never hang.
-        drop(reply);
         self.injector.push(jobs);
 
         let (h_o, w_o) = (layer.h_o(), layer.w_o());
         let mut ofmaps = Tensor3::zeros(layer.n, h_o, w_o);
         let mut stats = SimStats::default();
         let mut per_shard = vec![SimStats::default(); plan.shards.len()];
+        // ABFT: every merged shard is checksum-verified — not sampled.
+        // The checker (O(input) summed-area tables) is built on the first
+        // result so a layer that fails outright never pays for it.
+        let mut checker: Option<AbftChecker> = None;
+        let mut attempts: Vec<u32> = vec![0; plan.shards.len()];
+        let mut banned: Vec<u64> = vec![quarantined; plan.shards.len()];
+        let all_engines: u64 = if self.cfg.engines >= 64 { u64::MAX } else { (1u64 << self.cfg.engines) - 1 };
+        let mut completed = 0usize;
         let mut received = 0usize;
         let mut failure: Option<anyhow::Error> = None;
-        while let Ok(done) = done_rx.recv() {
+        // We hold `reply` so re-executions can be dispatched mid-merge;
+        // the loop therefore counts completions instead of waiting for
+        // the channel to close. Every pushed job sends exactly one reply
+        // (catch_unwind in worker_loop), so the timeout is a safety valve
+        // against a worker dying outside the unwind guard.
+        while completed < plan.shards.len() && failure.is_none() {
+            let done = match done_rx.recv_timeout(Duration::from_secs(300)) {
+                Ok(done) => done,
+                Err(_) => {
+                    failure = Some(anyhow!(
+                        "farm worker(s) died mid-layer on {}: {completed} of {} shards completed",
+                        layer.name,
+                        plan.shards.len()
+                    ));
+                    break;
+                }
+            };
             received += 1;
-            match done.result {
+            let tag = done.tag as usize;
+            // A result only merges if its ABFT filter checksums hold;
+            // a mismatch (or a worker panic) is a detected fault.
+            let verdict = match done.result {
                 Ok(result) => {
+                    let ck = checker.get_or_insert_with(|| AbftChecker::new(layer, &input));
+                    match ck.check(&weights, &done.filters, &done.rows, &result.ofmaps) {
+                        None => Ok(result),
+                        Some(m) => Err(format!(
+                            "ABFT checksum mismatch on filter {} (expected {}, actual {})",
+                            m.filter, m.expected, m.actual
+                        )),
+                    }
+                }
+                Err(msg) => Err(format!("panicked: {msg}")),
+            };
+            match verdict {
+                Ok(result) => {
+                    if attempts[tag] > 0 {
+                        self.heal.corrected.inc();
+                    }
                     // Shadow-execution canary: off the hot path, the only
                     // per-shard cost when sampled is cloning the fast
                     // result for the oracle comparison.
@@ -771,26 +997,59 @@ impl EngineFarm {
                     }
                     stitch(&mut ofmaps.data, &result.ofmaps.data, &done.filters, &done.rows, h_o, w_o);
                     stats.merge(&result.stats); // parallel: cycles max, counters sum
-                    per_shard[done.tag as usize] = result.stats;
+                    per_shard[tag] = result.stats;
+                    completed += 1;
                 }
-                Err(msg) => {
-                    failure.get_or_insert_with(|| {
-                        anyhow!(
-                            "engine trim-farm-{} panicked on shard {} (filters {:?}, rows {:?}) of layer {}: {msg}",
+                Err(why) => {
+                    self.note_engine_fault(done.engine);
+                    if attempts[tag] < self.cfg.max_retries {
+                        // Re-execute on a different engine: ban every
+                        // engine that already faulted on this shard plus
+                        // the current quarantine set — unless that would
+                        // ban the whole pool (single-engine farms retry
+                        // in place and exhaust deterministically).
+                        attempts[tag] += 1;
+                        self.heal.reexecuted.inc();
+                        let mut ban = banned[tag] | engine_bit(done.engine) | self.quarantine_mask();
+                        if ban & all_engines == all_engines {
+                            ban = 0;
+                        }
+                        banned[tag] = ban;
+                        self.injector.push([Job {
+                            layer: layer.clone(),
+                            input: Arc::clone(&input),
+                            weights: Arc::clone(&weights),
+                            filters: done.filters.clone(),
+                            rows: done.rows.clone(),
+                            requant: None,
+                            tag: done.tag,
+                            trace_parent,
+                            banned: ban,
+                            reply: reply.clone(),
+                        }]);
+                    } else {
+                        failure = Some(anyhow!(
+                            "engine trim-farm-{} {why} on shard {} (filters {:?}, rows {:?}) of layer {} \
+                             after {} attempts",
                             done.engine,
                             done.tag,
                             done.filters,
                             done.rows,
-                            layer.name
-                        )
-                    });
+                            layer.name,
+                            attempts[tag] + 1
+                        ));
+                    }
                 }
             }
         }
+        // Dropping our sender lets any straggler replies (a fatal bail
+        // with other shards still in flight) fail harmlessly in the
+        // workers instead of accumulating.
+        drop(reply);
         obs::tracer().finish_with(
             span,
             format!(
-                "layer={} axis={:?} shards={} received={received} ok={}",
+                "layer={} axis={:?} shards={} received={received} completed={completed} ok={}",
                 layer.name,
                 plan.axis,
                 plan.shards.len(),
@@ -801,18 +1060,20 @@ impl EngineFarm {
             return Err(e);
         }
         ensure!(
-            received == plan.shards.len(),
-            "farm worker(s) died mid-layer on {}: {received} of {} shards completed",
+            completed == plan.shards.len(),
+            "farm worker(s) died mid-layer on {}: {completed} of {} shards completed",
             layer.name,
             plan.shards.len()
         );
         // Merge-time conservation checks (debug builds only — release
         // stays free): the plan must partition the layer and the merged
         // per-shard counters must obey the same coverage / halo /
-        // counter-conservation laws `trim check` proves statically.
+        // counter-conservation laws `trim check` proves statically. Only
+        // ABFT-verified results merged, so healed runs satisfy the same
+        // laws as fault-free ones.
         #[cfg(debug_assertions)]
         {
-            let vp = crate::verify::check_plan(&self.cfg.arch, layer, self.engines(), &plan);
+            let vp = crate::verify::check_plan(&self.cfg.arch, layer, live, &plan);
             debug_assert!(
                 vp.is_empty(),
                 "shard plan violates coverage laws at merge: {}",
@@ -858,6 +1119,7 @@ impl EngineFarm {
                 requant: s.requant,
                 tag: (img * n_stage + stage) as u64,
                 trace_parent,
+                banned: self.quarantine_mask(),
                 reply: reply.clone(),
             }]);
         };
@@ -1262,5 +1524,168 @@ mod tests {
         let prom = reg.render_prometheus();
         assert!(prom.contains("# TYPE injector_depth gauge"));
         assert!(prom.contains("engine0_jobs"));
+    }
+
+    #[test]
+    fn chaos_faults_are_detected_and_healed_bit_exact() {
+        // Seeded chaos on a 4-engine farm, all three fault models: every
+        // injected corruption must be caught by the ABFT merge check
+        // (detected == injected — 100% coverage) and every affected
+        // shard re-executed until the final ofmaps equal the fault-free
+        // run bit for bit. A run may legitimately *fail* instead (the
+        // deterministic plan can fault one shard on every engine, which
+        // exhausts the bounded retries) — but it may never serve a wrong
+        // answer.
+        let mut rng = SplitMix64::new(73);
+        let layer = ConvLayer::new("chaos", 12, 3, 3, 8, 1, 1);
+        let input = rand_tensor(&mut rng, 3, 12, 12);
+        let weights = rng.vec_i32(8 * 3 * 9, -8, 8);
+        let arch = ArchConfig::small(3, 2, 2);
+        let clean = EngineFarm::new(FarmConfig::new(4, arch));
+        let want = clean.run_layer_mode(&layer, &input, &weights, ShardMode::Auto).unwrap();
+        use crate::fault::FaultModel;
+        for model in [FaultModel::Pe, FaultModel::Rsrb, FaultModel::Mem] {
+            let mut injected_total = 0u64;
+            let mut healed_runs = 0usize;
+            let mut failed_runs = 0usize;
+            for seed in 1..=8u64 {
+                let farm = EngineFarm::new(
+                    FarmConfig::new(4, arch)
+                        .with_chaos(FaultConfig::new(0.3, seed, model))
+                        .with_heal(8, u32::MAX), // isolate healing from quarantine
+                );
+                assert!(farm.chaos_enabled());
+                match farm.run_layer_mode(&layer, &input, &weights, ShardMode::Auto) {
+                    Ok(r) => {
+                        assert_eq!(
+                            r.ofmaps, want.ofmaps,
+                            "{model} seed {seed}: healed run must be bit-exact"
+                        );
+                        assert_eq!(r.stats, want.stats, "{model} seed {seed}: stats from verified shards only");
+                        let rep = farm.fault_report();
+                        // A completed run received every dispatched job:
+                        // exactly the injected faults were detected, each
+                        // triggered one re-execution, and every faulted
+                        // shard eventually healed.
+                        assert_eq!(rep.detected, rep.injected, "{model} seed {seed}: 100% detection");
+                        assert_eq!(rep.reexecuted, rep.detected, "{model} seed {seed}: every detection retried");
+                        if rep.detected > 0 {
+                            assert!(rep.corrected > 0, "{model} seed {seed}: faulted shards healed");
+                        }
+                        healed_runs += 1;
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        assert!(
+                            msg.contains("ABFT checksum mismatch"),
+                            "{model} seed {seed}: failure must be the typed detection error: {msg}"
+                        );
+                        let rep = farm.fault_report();
+                        // The exhausted shard's final fault retries no
+                        // further; in-flight shards may have injected
+                        // without being merged (the run bailed first).
+                        assert!(rep.detected >= 1, "{model} seed {seed}: failure implies detection");
+                        assert!(rep.injected >= rep.detected, "{model} seed {seed}: no phantom detections");
+                        assert_eq!(rep.reexecuted, rep.detected - 1, "{model} seed {seed}: bounded retries");
+                        failed_runs += 1;
+                    }
+                }
+                injected_total += farm.fault_report().injected;
+            }
+            assert!(
+                injected_total > 0,
+                "{model}: rate 0.3 over 8 seeds × shards must inject at least once"
+            );
+            assert!(
+                healed_runs >= failed_runs,
+                "{model}: bounded-retry exhaustion should be the exception ({healed_runs} ok, {failed_runs} failed)"
+            );
+        }
+    }
+
+    #[test]
+    fn single_engine_chaos_exhausts_retries_into_typed_error() {
+        // One engine, rate 1.0: the fault is deterministic per (engine,
+        // shard), so every re-execution reproduces it and the bounded
+        // retries exhaust into a typed error — never a wrong answer.
+        let mut rng = SplitMix64::new(79);
+        let layer = ConvLayer::new("lonely", 8, 3, 2, 2, 1, 1);
+        let input = rand_tensor(&mut rng, 2, 8, 8);
+        let weights = rng.vec_i32(2 * 2 * 9, -8, 8);
+        let farm = EngineFarm::new(
+            FarmConfig::new(1, ArchConfig::small(3, 2, 2))
+                .with_chaos(FaultConfig::new(1.0, 7, crate::fault::FaultModel::Pe))
+                .with_heal(2, 3),
+        );
+        let err = farm
+            .run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards)
+            .expect_err("a deterministic fault on the only engine cannot heal");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("ABFT checksum mismatch"), "typed detection error: {msg}");
+        assert!(msg.contains("after 3 attempts"), "bounded retries: {msg}");
+        let rep = farm.fault_report();
+        assert_eq!(rep, FaultReport { injected: 3, detected: 3, corrected: 0, reexecuted: 2, quarantined: 0 });
+        // Threshold crossed but the last live engine is protected.
+        assert_eq!(farm.engine_health(), vec![EngineHealth::Suspect]);
+        assert_eq!(farm.live_engines(), 1);
+    }
+
+    #[test]
+    fn quarantine_replans_over_survivors() {
+        // Quarantine is driven through the attribution path directly so
+        // the test is independent of hash luck: two faults cross the
+        // threshold, the engine stops receiving work, and the next layer
+        // is replanned over the three survivors.
+        let mut rng = SplitMix64::new(83);
+        let layer = ConvLayer::new("replan", 10, 3, 2, 16, 1, 1); // 8 filter groups on P_N=2
+        let input = rand_tensor(&mut rng, 2, 10, 10);
+        let weights = rng.vec_i32(16 * 2 * 9, -8, 8);
+        let arch = ArchConfig::small(3, 2, 2);
+        let farm = EngineFarm::new(FarmConfig::new(4, arch).with_heal(3, 2));
+        assert!(!farm.note_engine_fault(3), "first fault: suspect, not quarantined");
+        assert_eq!(farm.engine_health()[3], EngineHealth::Suspect);
+        assert!(farm.note_engine_fault(3), "second fault crosses the threshold");
+        assert_eq!(farm.engine_health()[3], EngineHealth::Quarantined);
+        assert_eq!(farm.live_engines(), 3);
+        assert_eq!(farm.fault_report().quarantined, 1);
+        let r = farm.run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards).unwrap();
+        assert_eq!(r.plan.shards.len(), 3, "plan shrinks to the survivors");
+        assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 16, 3, 1, 1), "degraded, never wrong");
+        assert_eq!(
+            farm.registry().counter_value("engine3.jobs"),
+            0,
+            "a quarantined engine receives no work"
+        );
+        // The last live engine can never be quarantined.
+        for e in 0..3 {
+            farm.note_engine_fault(e);
+            farm.note_engine_fault(e);
+        }
+        assert!(farm.live_engines() >= 1);
+        let health = farm.engine_health();
+        assert_eq!(
+            health.iter().filter(|h| **h == EngineHealth::Quarantined).count(),
+            3,
+            "exactly one engine survives: {health:?}"
+        );
+        let r2 = farm.run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards).unwrap();
+        assert_eq!(r2.plan.shards.len(), 1, "degenerate single-survivor plan");
+        assert_eq!(r2.ofmaps, r.ofmaps);
+    }
+
+    #[test]
+    fn zero_rate_chaos_reports_nothing_and_serves_exactly() {
+        // Injection disabled: no fault counters move, yet the ABFT check
+        // still verified every merged shard (it simply found nothing).
+        let mut rng = SplitMix64::new(89);
+        let layer = ConvLayer::new("calm", 9, 3, 3, 4, 1, 1);
+        let input = rand_tensor(&mut rng, 3, 9, 9);
+        let weights = rng.vec_i32(4 * 3 * 9, -8, 8);
+        let farm = EngineFarm::new(FarmConfig::new(2, ArchConfig::small(3, 2, 2)));
+        assert!(!farm.chaos_enabled());
+        let r = farm.run_layer_mode(&layer, &input, &weights, ShardMode::Auto).unwrap();
+        assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 4, 3, 1, 1));
+        assert_eq!(farm.fault_report(), FaultReport::default());
+        assert!(farm.engine_health().iter().all(|h| *h == EngineHealth::Healthy));
     }
 }

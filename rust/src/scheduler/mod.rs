@@ -20,7 +20,11 @@
 //!   shared injector queue; bit-exact ofmap reassembly, named-engine
 //!   errors for panicked jobs, and [`crate::arch::SimStats`] aggregation
 //!   (cycles = max over parallel shards, accesses = sum) so the
-//!   Tables I–II accounting stays meaningful at farm scale.
+//!   Tables I–II accounting stays meaningful at farm scale. Every
+//!   merged shard is verified against the [`crate::fault`] ABFT
+//!   checksum identity; detected faults re-execute on a different
+//!   engine, repeat offenders are quarantined and later layers replan
+//!   over the survivors.
 //! * [`backend`] — [`SimBackend`]: a [`crate::coordinator::InferenceBackend`]
 //!   that serves batched requests straight from the farm, with zero PJRT
 //!   artifacts (`trim serve --backend sim`).

@@ -110,6 +110,7 @@ fn admission_cap_holds_under_contention() {
     let ac = Arc::new(AdmissionControl::new(AdmissionConfig {
         queue_cap: CAP,
         budget_cycles: None,
+        client_rps: None,
     }));
     let inflight = Arc::new(AtomicUsize::new(0));
 
@@ -176,6 +177,7 @@ fn drain_racing_submitters_closes_admission() {
     let ac = Arc::new(AdmissionControl::new(AdmissionConfig {
         queue_cap: 8,
         budget_cycles: None,
+        client_rps: None,
     }));
     let submitters: Vec<_> = (0..2)
         .map(|_| {

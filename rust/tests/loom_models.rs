@@ -110,6 +110,7 @@ fn admission_never_exceeds_queue_cap() {
         let ac = Arc::new(AdmissionControl::new(AdmissionConfig {
             queue_cap: 1,
             budget_cycles: None,
+            client_rps: None,
         }));
         // Our own tracking of *successful* admissions — `depth()` itself
         // may transiently read cap+1 mid-rollback, which is fine; the
@@ -146,6 +147,7 @@ fn drain_closes_admission_for_later_submits() {
         let ac = Arc::new(AdmissionControl::new(AdmissionConfig {
             queue_cap: 4,
             budget_cycles: None,
+            client_rps: None,
         }));
 
         let submitter = {

@@ -26,7 +26,7 @@ use trim_sa::coordinator::{
 fn bounded_mock_router(queue_cap: usize, delay_us: u64) -> Router {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
-        admission: AdmissionConfig { queue_cap, budget_cycles: None },
+        admission: AdmissionConfig { queue_cap, budget_cycles: None, client_rps: None },
     };
     let c = Coordinator::start_with(
         move || {
@@ -142,7 +142,7 @@ fn cost_budget_sheds_once_the_ewma_is_warm() {
     // later submit breaches `(depth + 1) × cost > budget` immediately.
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
-        admission: AdmissionConfig { queue_cap: 1024, budget_cycles: Some(1.0) },
+        admission: AdmissionConfig { queue_cap: 1024, budget_cycles: Some(1.0), client_rps: None },
     };
     let c = Coordinator::start_with(
         || Ok(Box::new(SimBackend::new(2)) as Box<dyn InferenceBackend>),
