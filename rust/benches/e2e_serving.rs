@@ -21,6 +21,13 @@
 //! detection coverage × goodput. Its zero-rate row is shape-identical to
 //! the plain `farms=1,max_batch=16` row, so diffing their `rps` bounds
 //! the always-on checksum cost of the disabled-injection path.
+//! The straggler sweep (`{"kind":"straggler",...}` rows) runs the
+//! CL1-class workload under seeded *timing* chaos — `slow` delays a
+//! fraction of (engine, shard) executions 2–8 ms, `hang` parks them —
+//! with hedged re-execution on and off at each rate. Every served
+//! response is checked bit-exact against the golden model, and the hang
+//! pair asserts the gray-failure headline: hedged p99 strictly below the
+//! unhedged counterfactual (which must ride the analytic valve + retry).
 #[path = "bench_harness.rs"]
 mod harness;
 use harness::header;
@@ -30,7 +37,7 @@ use trim_sa::coordinator::{
     AdmissionConfig, BatcherConfig, Coordinator, CoordinatorConfig, FaultConfig, FaultModel,
     InferenceBackend, PjrtBackend, Router, ServeError,
 };
-use trim_sa::scheduler::{CanaryConfig, ShardMode, SimBackend, SimNetSpec};
+use trim_sa::scheduler::{CanaryConfig, FarmConfig, ShardMode, SimBackend, SimNetSpec};
 
 fn sim_backend() -> Box<dyn InferenceBackend> {
     Box::new(SimBackend::with_spec(
@@ -177,6 +184,99 @@ fn chaos_config(rate: f64, json_lines: &mut Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One straggler-sweep point: the CL1-class workload under seeded timing
+/// chaos, with hedging on (`hedge_factor = 4`) or off (`0`). Unhedged
+/// runs carry a 150 ms valve floor so a hung layer resolves through the
+/// typed analytic valve and the router's in-place retry rather than the
+/// 300 s cold-farm default. Returns `(p99_us, rps)` for the hang-pair
+/// comparison in `main`.
+fn straggler_config(
+    model: FaultModel,
+    rate: f64,
+    hedge: bool,
+    reference: &SimBackend,
+    json_lines: &mut Vec<String>,
+) -> anyhow::Result<(u128, f64)> {
+    let chaos = if rate > 0.0 {
+        FaultConfig::new(rate, 0x57A6_617E, model)
+    } else {
+        FaultConfig::disabled()
+    };
+    let hedge_factor = if hedge { 4.0 } else { 0.0 };
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+        ..Default::default()
+    };
+    let c = Coordinator::start_with(
+        move || {
+            let farm =
+                FarmConfig::with_fidelity(4, ArchConfig::small(3, 2, 1), ExecFidelity::Fast)
+                    .with_chaos(chaos)
+                    .with_hedge(hedge_factor, 3)
+                    .with_valve(Duration::from_millis(150), 8.0);
+            Ok(Box::new(SimBackend::with_farm_config(
+                farm,
+                SimNetSpec::cl1_class(),
+                ShardMode::Auto,
+            )) as Box<dyn InferenceBackend>)
+        },
+        cfg,
+    )?;
+    let router = Router::new(vec![c])?;
+    let len = router.input_len();
+    let n_req = 24usize;
+    let images: Vec<Vec<i32>> = (0..n_req)
+        .map(|i| (0..len).map(|j| ((i * 31 + j) % 256) as i32).collect())
+        .collect();
+    let t0 = Instant::now();
+    let pending: Vec<_> =
+        images.iter().map(|img| router.submit(img.clone())).collect::<anyhow::Result<_>>()?;
+    let mut served = 0usize;
+    let mut failed = 0usize;
+    for (img, mut r) in images.iter().zip(pending) {
+        match r.recv() {
+            Ok(resp) => {
+                anyhow::ensure!(
+                    resp.logits == reference.reference_logits(img),
+                    "served logits diverged from golden under {model} chaos (rate {rate})"
+                );
+                served += 1;
+            }
+            Err(e) if e.downcast_ref::<ServeError>().is_some() => failed += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    let wall = t0.elapsed();
+    let m = router.drain(Duration::from_secs(10));
+    let rps = served as f64 / wall.as_secs_f64();
+    let f = m.fault;
+    let p99_us = m.p99_latency.as_micros();
+    println!(
+        "straggler model={model:<4} rate={rate:<5} hedged={hedged:<5} {rps:>7.1} req/s   served {served:>3}  failed {failed:>2}   stragglers {:>3}  hedged {:>3}  won {:>3}  wasted {:>3}  timing-quarantined {:>2}   p99 {:>9.3?}",
+        f.stragglers_detected,
+        f.hedged,
+        f.hedge_won,
+        f.hedge_wasted,
+        f.timing_quarantined,
+        m.p99_latency,
+        hedged = hedge
+    );
+    json_lines.push(format!(
+        "JSON {{\"bench\":\"e2e_serving\",\"kind\":\"straggler\",\"model\":\"{model}\",\
+         \"rate\":{rate},\"hedged\":{hedge},\"requests\":{n_req},\"served\":{served},\
+         \"failed\":{failed},\"rps\":{rps:.2},\"stragglers\":{},\"hedged_count\":{},\
+         \"hedge_won\":{},\"hedge_wasted\":{},\"timing_quarantined\":{},\
+         \"p50_us\":{},\"p99_us\":{p99_us}}}",
+        f.stragglers_detected,
+        f.hedged,
+        f.hedge_won,
+        f.hedge_wasted,
+        f.timing_quarantined,
+        m.p50_latency.as_micros(),
+    ));
+    Ok((p99_us, rps))
+}
+
 fn main() -> anyhow::Result<()> {
     header("e2e serving — sim engine farms behind the coordinator/router");
     let n_req = 64usize;
@@ -244,6 +344,34 @@ fn main() -> anyhow::Result<()> {
     for rate in [0.0, 0.02, 0.1] {
         chaos_config(rate, &mut json_lines)?;
     }
+
+    // Straggler sweep: gray failures. Slow chaos at rising rates with
+    // hedging off/on traces how much tail the hedges claw back; the hang
+    // pair is the acceptance gate — hedged p99 must beat the unhedged
+    // counterfactual, which pays the analytic valve + retry per hang.
+    let reference = SimBackend::with_spec(
+        1,
+        ArchConfig::small(3, 2, 1),
+        SimNetSpec::cl1_class(),
+        ShardMode::Auto,
+    );
+    for rate in [0.0, 0.05, 0.2] {
+        for hedge in [false, true] {
+            straggler_config(FaultModel::Slow, rate, hedge, &reference, &mut json_lines)?;
+        }
+    }
+    let (p99_unhedged, _) =
+        straggler_config(FaultModel::Hang, 0.05, false, &reference, &mut json_lines)?;
+    let (p99_hedged, _) =
+        straggler_config(FaultModel::Hang, 0.05, true, &reference, &mut json_lines)?;
+    anyhow::ensure!(
+        p99_hedged < p99_unhedged,
+        "hedged p99 ({p99_hedged} µs) must be strictly below the unhedged hang \
+         counterfactual ({p99_unhedged} µs)"
+    );
+    println!(
+        "hang 0.05: hedged p99 {p99_hedged} µs vs unhedged {p99_unhedged} µs — hedging bounds the tail"
+    );
 
     // Optional PJRT sweep (the original e2e path) — skipped without
     // artifacts or with PJRT support compiled out.

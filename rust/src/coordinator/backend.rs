@@ -326,10 +326,17 @@ impl std::str::FromStr for BackendKind {
 /// off the hot path, with divergence surfaced through the metrics
 /// (0 disables the canary thread entirely). `sim_chaos` is the seeded
 /// fault-injection plan (`trim serve --chaos RATE --chaos-seed S
-/// --chaos-model pe|rsrb|mem`): each sim engine deterministically
-/// corrupts that fraction of its shard results, exercising the farm's
+/// --chaos-model pe|rsrb|mem|slow|hang`): each sim engine
+/// deterministically corrupts — or, under the timing models, delays or
+/// hangs — that fraction of its shard results, exercising the farm's
 /// ABFT detection and self-healing loop in a live deployment
-/// ([`FaultConfig::disabled`] for a fault-free farm).
+/// ([`FaultConfig::disabled`] for a fault-free farm). `sim_hedge_factor`
+/// and `sim_straggler_threshold` wire the gray-failure defence
+/// (`trim serve --hedge-factor F --straggler-threshold N`): shards
+/// overdue past `F ×` their analytic service budget are hedged onto
+/// another engine (first bit-exact result wins; `F = 0` disables
+/// hedging), and an engine caught straggling `N` times is quarantined
+/// on probation like a fault-corrupting one.
 pub fn make_backend(
     kind: BackendKind,
     artifact_dir: impl AsRef<std::path::Path>,
@@ -338,20 +345,19 @@ pub fn make_backend(
     sim_shard: crate::scheduler::ShardMode,
     sim_canary: f64,
     sim_chaos: FaultConfig,
+    sim_hedge_factor: f64,
+    sim_straggler_threshold: u32,
 ) -> Result<Box<dyn InferenceBackend>> {
     use crate::arch::ArchConfig;
-    use crate::scheduler::{CanaryConfig, SimBackend, SimNetSpec};
+    use crate::scheduler::{CanaryConfig, FarmConfig, SimBackend, SimNetSpec};
     let dir = artifact_dir.as_ref();
     let make_sim = || {
-        Box::new(SimBackend::with_chaos(
-            sim_engines,
-            ArchConfig::small(3, 2, 1),
-            SimNetSpec::tiny(),
-            sim_shard,
-            sim_fidelity,
-            CanaryConfig::sampled(sim_canary),
-            sim_chaos,
-        )) as Box<dyn InferenceBackend>
+        let cfg = FarmConfig::with_fidelity(sim_engines, ArchConfig::small(3, 2, 1), sim_fidelity)
+            .with_canary(CanaryConfig::sampled(sim_canary))
+            .with_chaos(sim_chaos)
+            .with_hedge(sim_hedge_factor, sim_straggler_threshold);
+        Box::new(SimBackend::with_farm_config(cfg, SimNetSpec::tiny(), sim_shard))
+            as Box<dyn InferenceBackend>
     };
     match kind {
         BackendKind::Pjrt => Ok(Box::new(PjrtBackend::load(dir)?)),
@@ -434,6 +440,8 @@ mod tests {
             crate::scheduler::ShardMode::Auto,
             0.0,
             FaultConfig::disabled(),
+            0.0,
+            8,
         )
         .unwrap();
         let img = vec![7i32; b.input_len()];
@@ -454,6 +462,8 @@ mod tests {
             crate::scheduler::ShardMode::FilterShards,
             0.0,
             FaultConfig::disabled(),
+            0.0,
+            8,
         )
         .unwrap();
         assert!(b.describe().starts_with("sim["), "got {}", b.describe());
@@ -469,6 +479,8 @@ mod tests {
             crate::scheduler::ShardMode::FilterShards,
             0.0,
             FaultConfig::disabled(),
+            0.0,
+            8,
         )
         .is_err());
     }

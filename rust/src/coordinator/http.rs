@@ -26,6 +26,13 @@
 //! short-lived and bounded by a read timeout), and a hand-rolled JSON
 //! field scanner rather than a parser — enough for the serving API and
 //! for `curl`, not a general web server.
+//!
+//! Slowloris guard: every connection carries a read **and** write
+//! timeout, the header block is capped at [`MAX_HEADER_BYTES`] and the
+//! body at [`MAX_BODY_BYTES`] — a client that trickles one byte and
+//! stalls gets a typed `408 Request Timeout`, an oversized request a
+//! `413 Payload Too Large`, and its thread is freed either way instead
+//! of being held open indefinitely.
 
 use super::error::ServeError;
 use super::router::Router;
@@ -39,8 +46,15 @@ use std::time::{Duration, Instant};
 
 /// Largest accepted request body (a flat int32 image as JSON text).
 const MAX_BODY_BYTES: usize = 4 << 20;
+/// Largest accepted header block (request line + all headers): nobody
+/// needs more than this to call `/infer`, and an unbounded header loop
+/// is a slowloris drip-feed target.
+const MAX_HEADER_BYTES: usize = 8 << 10;
 /// Per-connection read timeout: a stalled client frees its thread.
 const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Per-connection write timeout: a client that stops draining its
+/// response cannot pin the connection thread either.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// The running HTTP ingress; dropping it (or calling
 /// [`HttpServer::stop`]) stops accepting. In-flight connection threads
@@ -55,6 +69,17 @@ impl HttpServer {
     /// Bind `127.0.0.1:port` (`port` 0 picks a free port — see
     /// [`HttpServer::local_addr`]) and start the accept thread.
     pub fn start(port: u16, router: Arc<Router>) -> Result<Self> {
+        Self::start_with_read_timeout(port, router, READ_TIMEOUT)
+    }
+
+    /// [`HttpServer::start`] with an explicit per-connection read
+    /// timeout (tests shrink it to exercise the slowloris guard without
+    /// waiting out the production ten seconds).
+    pub fn start_with_read_timeout(
+        port: u16,
+        router: Arc<Router>,
+        read_timeout: Duration,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(("127.0.0.1", port))
             .with_context(|| format!("binding HTTP ingress on 127.0.0.1:{port}"))?;
         let addr = listener.local_addr()?;
@@ -71,7 +96,7 @@ impl HttpServer {
                     let router = router.clone();
                     let _ = std::thread::Builder::new()
                         .name("trim-http-conn".into())
-                        .spawn(move || handle_connection(stream, &router));
+                        .spawn(move || handle_connection(stream, &router, read_timeout));
                 }
             })
             .context("spawning HTTP accept thread")?;
@@ -110,38 +135,98 @@ struct Request {
     body: Vec<u8>,
 }
 
-fn handle_connection(stream: TcpStream, router: &Router) {
-    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+/// Typed ingress read failure, mapped onto HTTP by
+/// [`handle_connection`]: the slowloris guard's verdicts.
+enum ReadError {
+    /// Headers or body exceed the fixed caps → `413 Payload Too Large`.
+    TooLarge(String),
+    /// The client stalled past the read timeout → `408 Request Timeout`.
+    TimedOut(String),
+    /// Anything else unparseable → `400 Bad Request`.
+    Malformed(String),
+}
+
+impl ReadError {
+    /// Classify an I/O failure: timeout kinds (Unix reports a read
+    /// timeout as `WouldBlock`, Windows as `TimedOut`) become the typed
+    /// stall verdict, everything else is a malformed request.
+    fn from_io(e: std::io::Error, what: &str) -> Self {
+        match e.kind() {
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                Self::TimedOut(format!("client stalled while {what}"))
+            }
+            kind => Self::Malformed(format!("{what}: {kind}")),
+        }
+    }
+
+    fn into_response(self) -> (u16, &'static str, Option<String>, String) {
+        let (status, kind, detail) = match self {
+            Self::TimedOut(d) => (408, "request_timeout", d),
+            Self::TooLarge(d) => (413, "payload_too_large", d),
+            Self::Malformed(d) => (400, "bad_request", d),
+        };
+        (status, "application/json", None, json_error(kind, &detail))
+    }
+}
+
+fn handle_connection(stream: TcpStream, router: &Router, read_timeout: Duration) {
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let mut reader = BufReader::new(stream);
     let (status, content_type, extra_header, body) = match read_request(&mut reader) {
         Ok(req) => route(router, &req),
-        Err(e) => (400, "application/json", None, json_error("bad_request", &format!("{e:#}"))),
+        Err(e) => e.into_response(),
     };
     let mut stream = reader.into_inner();
     let _ = write_response(&mut stream, status, content_type, extra_header.as_deref(), &body);
 }
 
-fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request> {
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request, ReadError> {
     let mut line = String::new();
-    reader.read_line(&mut line).context("reading request line")?;
+    reader.read_line(&mut line).map_err(|e| ReadError::from_io(e, "reading request line"))?;
+    if line.len() > MAX_HEADER_BYTES {
+        return Err(ReadError::TooLarge(format!("request line of {} bytes", line.len())));
+    }
     let mut parts = line.split_whitespace();
-    let method = parts.next().context("empty request line")?.to_string();
-    let path = parts.next().context("request line missing path")?.to_string();
+    let method = parts
+        .next()
+        .ok_or_else(|| ReadError::Malformed("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| ReadError::Malformed("request line missing path".into()))?
+        .to_string();
     let mut content_length = 0usize;
+    let mut header_bytes = line.len();
     loop {
         let mut h = String::new();
-        reader.read_line(&mut h).context("reading header")?;
+        reader.read_line(&mut h).map_err(|e| ReadError::from_io(e, "reading header"))?;
+        if h.is_empty() {
+            // EOF before the blank line that ends the header block.
+            return Err(ReadError::Malformed("connection closed mid-headers".into()));
+        }
+        header_bytes += h.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(ReadError::TooLarge(format!(
+                "header block exceeds {MAX_HEADER_BYTES} bytes"
+            )));
+        }
         let h = h.trim();
         if h.is_empty() {
             break;
         }
         if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().context("bad Content-Length")?;
+            content_length =
+                v.trim().parse().map_err(|_| ReadError::Malformed("bad Content-Length".into()))?;
         }
     }
-    anyhow::ensure!(content_length <= MAX_BODY_BYTES, "body too large ({content_length} bytes)");
+    if content_length > MAX_BODY_BYTES {
+        return Err(ReadError::TooLarge(format!(
+            "body of {content_length} bytes (cap {MAX_BODY_BYTES})"
+        )));
+    }
     let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body).context("reading body")?;
+    reader.read_exact(&mut body).map_err(|e| ReadError::from_io(e, "reading body"))?;
     Ok(Request { method, path, body })
 }
 
@@ -151,11 +236,19 @@ fn route(router: &Router, req: &Request) -> (u16, &'static str, Option<String>, 
             if router.is_draining() {
                 (503, "text/plain", None, "draining\n".into())
             } else {
-                let quarantined = router.metrics().fault.quarantined;
-                if quarantined > 0 {
+                let fault = router.metrics().fault;
+                if fault.quarantined > 0 || fault.timing_quarantined > 0 {
                     // Degraded ≠ down: quarantined engines cost capacity,
                     // never correctness, so the fleet keeps taking traffic.
-                    (200, "text/plain", None, format!("degraded quarantined={quarantined}\n"))
+                    let mut line = format!("degraded quarantined={}", fault.quarantined);
+                    if fault.timing_quarantined > 0 {
+                        line.push_str(&format!(
+                            " timing_quarantined={}",
+                            fault.timing_quarantined
+                        ));
+                    }
+                    line.push('\n');
+                    (200, "text/plain", None, line)
                 } else {
                     (200, "text/plain", None, "ok\n".into())
                 }
@@ -306,6 +399,8 @@ fn write_response(
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -490,6 +585,7 @@ mod tests {
                         corrected: 1,
                         reexecuted: 2,
                         quarantined: 1,
+                        ..FaultReport::default()
                     });
                 Ok(BatchReport::with_cost(outputs, cost))
             }
@@ -602,6 +698,46 @@ mod tests {
             matches!(status_of(&first), 200 | 503 | 504),
             "pre-drain request resolves, never hangs: {first}"
         );
+    }
+
+    #[test]
+    fn slowloris_one_byte_then_stall_gets_408() {
+        // The classic drip-feed: open a connection, send a single byte,
+        // then stall. The read timeout must fire, answer with a typed
+        // 408, and free the connection thread — not hold it forever.
+        let router = mock_router();
+        let server =
+            HttpServer::start_with_read_timeout(0, router, Duration::from_millis(200)).unwrap();
+        let addr = server.local_addr();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(b"P").unwrap();
+        let t0 = Instant::now();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert_eq!(status_of(&out), 408, "stalled client gets a typed timeout: {out}");
+        assert!(out.contains("request_timeout"), "got {out}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "the shortened timeout fired");
+    }
+
+    #[test]
+    fn oversized_body_and_header_block_get_413() {
+        let router = mock_router();
+        let server = HttpServer::start(0, router).unwrap();
+        let addr = server.local_addr();
+        // A declared body beyond the cap is rejected before reading it.
+        let huge = MAX_BODY_BYTES + 1;
+        let resp = send(
+            addr,
+            &format!("POST /infer HTTP/1.1\r\nHost: t\r\nContent-Length: {huge}\r\n\r\n"),
+        );
+        assert_eq!(status_of(&resp), 413, "got {resp}");
+        assert!(resp.contains("payload_too_large"), "got {resp}");
+        // So is a header block past its own cap.
+        let padding = "x".repeat(MAX_HEADER_BYTES);
+        let resp = send(addr, &format!("GET /healthz HTTP/1.1\r\nX-Pad: {padding}\r\n\r\n"));
+        assert_eq!(status_of(&resp), 413, "got {resp}");
+        assert!(resp.contains("payload_too_large"), "got {resp}");
     }
 
     #[test]

@@ -106,8 +106,9 @@ pub struct MetricsSnapshot {
     pub canary: CanaryReport,
     /// Fault-tolerance totals reported by cost-carrying batches: faults
     /// injected (`--chaos`), ABFT-detected, corrected via re-execution,
-    /// shards re-executed, engines quarantined (all zero on fault-free
-    /// farms).
+    /// shards re-executed, engines quarantined, plus the gray-failure
+    /// family — hedges dispatched/wasted/won, stragglers detected,
+    /// engines timing-quarantined (all zero on fault-free farms).
     pub fault: FaultReport,
     /// Per-request admission→batch-start wait (µs), log₂-bucketed.
     pub queue_wait: HistogramSnapshot,
@@ -190,6 +191,11 @@ impl MetricsSnapshot {
         counter("trim_fault_corrected_total", self.fault.corrected);
         counter("trim_fault_reexecuted_total", self.fault.reexecuted);
         counter("trim_fault_quarantined_total", self.fault.quarantined);
+        counter("trim_fault_hedged_total", self.fault.hedged);
+        counter("trim_fault_hedge_wasted_total", self.fault.hedge_wasted);
+        counter("trim_fault_hedge_won_total", self.fault.hedge_won);
+        counter("trim_fault_stragglers_total", self.fault.stragglers_detected);
+        counter("trim_fault_timing_quarantined_total", self.fault.timing_quarantined);
         let mut gauge = |name: &str, v: f64| {
             let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
         };
@@ -257,6 +263,8 @@ impl MetricsSnapshot {
              \"canary_sampled\":{},\"canary_bit_div\":{},\"canary_counter_div\":{},\
              \"fault_injected\":{},\"fault_detected\":{},\"fault_corrected\":{},\
              \"fault_reexecuted\":{},\"fault_quarantined\":{},\
+             \"fault_hedged\":{},\"fault_hedge_wasted\":{},\"fault_hedge_won\":{},\
+             \"fault_stragglers\":{},\"fault_timing_quarantined\":{},\
              \"queue_wait\":{{\"count\":{},\"mean_us\":{:.1},\"p99_us_est\":{}}},\
              \"service\":{{\"count\":{},\"mean_us\":{:.1},\"p99_us_est\":{}}},\
              \"layers\":{}}}",
@@ -288,6 +296,11 @@ impl MetricsSnapshot {
             self.fault.corrected,
             self.fault.reexecuted,
             self.fault.quarantined,
+            self.fault.hedged,
+            self.fault.hedge_wasted,
+            self.fault.hedge_won,
+            self.fault.stragglers_detected,
+            self.fault.timing_quarantined,
             self.queue_wait.count,
             self.queue_wait.mean(),
             self.queue_wait.quantile(0.99),
@@ -392,6 +405,11 @@ pub struct ServeMetrics {
     fault_corrected: Counter,
     fault_reexecuted: Counter,
     fault_quarantined: Counter,
+    fault_hedged: Counter,
+    fault_hedge_wasted: Counter,
+    fault_hedge_won: Counter,
+    fault_stragglers: Counter,
+    fault_timing_quarantined: Counter,
     queue_wait_us: Histogram,
     service_us: Histogram,
     inner: Mutex<Inner>,
@@ -427,6 +445,11 @@ impl ServeMetrics {
             self.fault_corrected.add(c.faults.corrected);
             self.fault_reexecuted.add(c.faults.reexecuted);
             self.fault_quarantined.add(c.faults.quarantined);
+            self.fault_hedged.add(c.faults.hedged);
+            self.fault_hedge_wasted.add(c.faults.hedge_wasted);
+            self.fault_hedge_won.add(c.faults.hedge_won);
+            self.fault_stragglers.add(c.faults.stragglers_detected);
+            self.fault_timing_quarantined.add(c.faults.timing_quarantined);
             g.sim_joules += c.joules;
             if c.f_clk > 0.0 {
                 g.sim_seconds += c.stats.cycles as f64 / c.f_clk;
@@ -525,6 +548,11 @@ impl ServeMetrics {
                 corrected: self.fault_corrected.get(),
                 reexecuted: self.fault_reexecuted.get(),
                 quarantined: self.fault_quarantined.get(),
+                hedged: self.fault_hedged.get(),
+                hedge_wasted: self.fault_hedge_wasted.get(),
+                hedge_won: self.fault_hedge_won.get(),
+                stragglers_detected: self.fault_stragglers.get(),
+                timing_quarantined: self.fault_timing_quarantined.get(),
             },
             queue_wait: self.queue_wait_us.snapshot(),
             service: self.service_us.snapshot(),
@@ -831,8 +859,18 @@ mod tests {
     fn fault_totals_flow_through_record_and_merge() {
         let m = ServeMetrics::new();
         let mut c = cost(10, 40);
-        c.faults =
-            FaultReport { injected: 5, detected: 5, corrected: 4, reexecuted: 6, quarantined: 1 };
+        c.faults = FaultReport {
+            injected: 5,
+            detected: 5,
+            corrected: 4,
+            reexecuted: 6,
+            quarantined: 1,
+            hedged: 7,
+            hedge_wasted: 3,
+            hedge_won: 2,
+            stragglers_detected: 4,
+            timing_quarantined: 1,
+        };
         m.record_batch(&[Duration::from_micros(1)], Some(&c));
         m.record_batch(&[Duration::from_micros(1)], Some(&c));
         let s = m.snapshot();
@@ -841,6 +879,11 @@ mod tests {
         assert_eq!(s.fault.corrected, 8);
         assert_eq!(s.fault.reexecuted, 12);
         assert_eq!(s.fault.quarantined, 2);
+        assert_eq!(s.fault.hedged, 14);
+        assert_eq!(s.fault.hedge_wasted, 6);
+        assert_eq!(s.fault.hedge_won, 4);
+        assert_eq!(s.fault.stragglers_detected, 8);
+        assert_eq!(s.fault.timing_quarantined, 2);
         let mut merged = s.clone();
         merged.merge(&s);
         assert_eq!(merged.fault.detected, 20, "fault totals merge across farms");
@@ -875,8 +918,16 @@ mod tests {
             macs: 400,
         }]);
         c.canary = CanaryReport { sampled: 2, bit_divergence: 0, counter_divergence: 0 };
-        c.faults =
-            FaultReport { injected: 3, detected: 3, corrected: 3, reexecuted: 3, quarantined: 0 };
+        c.faults = FaultReport {
+            injected: 3,
+            detected: 3,
+            corrected: 3,
+            reexecuted: 3,
+            hedged: 5,
+            hedge_won: 1,
+            stragglers_detected: 2,
+            ..FaultReport::default()
+        };
         m.record_batch(&[Duration::from_micros(100)], Some(&c));
         m.record_queue_service(&[Duration::from_micros(5)], Duration::from_micros(80));
         let text = m.snapshot().render_prometheus();
@@ -886,6 +937,10 @@ mod tests {
         assert!(text.contains("trim_canary_sampled_total 2"));
         assert!(text.contains("trim_fault_detected_total 3"));
         assert!(text.contains("trim_fault_quarantined_total 0"));
+        assert!(text.contains("trim_fault_hedged_total 5"));
+        assert!(text.contains("trim_fault_hedge_won_total 1"));
+        assert!(text.contains("trim_fault_stragglers_total 2"));
+        assert!(text.contains("trim_fault_timing_quarantined_total 0"));
         assert!(text.contains("trim_latency_seconds{quantile=\"0.99\"}"));
         assert!(text.contains("trim_queue_wait_us_count 1"));
         assert!(text.contains("trim_service_us_bucket{le=\"+Inf\"} 1"));
@@ -894,6 +949,8 @@ mod tests {
         assert!(json.starts_with('{') && json.ends_with('}'));
         assert!(json.contains("\"canary_sampled\":2"));
         assert!(json.contains("\"fault_injected\":3"));
+        assert!(json.contains("\"fault_hedged\":5"));
+        assert!(json.contains("\"fault_stragglers\":2"));
         assert!(json.contains("\"sim_cycles\":100"));
         assert!(!json.contains('\n'), "one line for the trajectory grep");
     }

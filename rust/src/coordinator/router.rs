@@ -45,7 +45,7 @@ use super::error::{ServeError, ServeResult};
 use super::metrics::MetricsSnapshot;
 use super::request::InferenceResponse;
 use crate::obs;
-use crate::util::sync::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{lock_unpoisoned, AtomicU64, AtomicUsize, Mutex, Ordering};
 use anyhow::{bail, Result};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -68,6 +68,13 @@ pub struct RetryConfig {
     /// in place keep working and transient faults recover. Cleared by
     /// the farm's first successful reply.
     pub quarantine_after: usize,
+    /// Probation for quarantined farms: after this cooldown, exactly one
+    /// probe request is routed to the farm — a success restores it to
+    /// full rotation (failure count cleared, cooldown back to base), a
+    /// failure re-quarantines it with the cooldown **doubled** (capped
+    /// at an hour), so a permanent flapper converges to near-zero probe
+    /// traffic instead of oscillating back into dispatch.
+    pub probation_cooldown: Duration,
 }
 
 impl Default for RetryConfig {
@@ -77,6 +84,7 @@ impl Default for RetryConfig {
             base_backoff: Duration::from_millis(1),
             max_backoff: Duration::from_millis(20),
             quarantine_after: 3,
+            probation_cooldown: Duration::from_secs(60),
         }
     }
 }
@@ -100,6 +108,25 @@ struct RoutedFarm {
     /// Consecutive failed batches; scores the failure penalty in
     /// dispatch, cleared by the first successful reply.
     failures: AtomicUsize,
+    /// Probation clock for a quarantined farm (dispatch-path only, so a
+    /// mutex is fine — replies never take it on the success fast path
+    /// unless the farm actually recovered from quarantine).
+    probe: Mutex<ProbeState>,
+}
+
+/// Probation bookkeeping for one quarantined farm (see
+/// [`RetryConfig::probation_cooldown`]).
+#[derive(Debug, Default)]
+struct ProbeState {
+    /// When the current cooldown expires; `None` while the farm is
+    /// healthy (below the quarantine threshold).
+    until: Option<Instant>,
+    /// Current cooldown length; starts at the configured base and
+    /// doubles on every failed probe (capped at an hour).
+    cooldown: Option<Duration>,
+    /// A probe request has been routed and has not resolved yet —
+    /// at most one probe is in flight per quarantined farm.
+    inflight: bool,
 }
 
 /// Shared state behind [`Router`] and its in-flight [`RouterReply`]s
@@ -160,7 +187,7 @@ impl RouterReply {
                         // rather than how full the batcher happened to run.
                         farm.cost.observe(c.batch_cycles as f64 / resp.batch_size.max(1) as f64);
                     }
-                    farm.failures.store(0, Ordering::Release);
+                    self.inner.note_farm_ok(self.farm);
                     self.settle();
                     return Ok(resp);
                 }
@@ -175,9 +202,7 @@ impl RouterReply {
             // budget permitting — resubmit elsewhere after a backoff.
             self.settle();
             let failed = self.farm;
-            let farm = &self.inner.farms[failed];
-            farm.cost.reset();
-            farm.failures.fetch_add(1, Ordering::AcqRel);
+            self.inner.note_farm_failed(failed);
             let err = ServeError::EngineFailed { reason: failed_reason };
             if self.attempts >= self.inner.retry.max_attempts {
                 obs::tracer().event(
@@ -240,6 +265,12 @@ impl RouterReply {
 
 impl Drop for RouterReply {
     fn drop(&mut self) {
+        if !self.settled {
+            // Abandoned without `recv` resolving it: if this was the
+            // probation probe, release the claim so the next request can
+            // re-probe instead of wedging the farm in quarantine forever.
+            self.inner.release_probe(self.farm);
+        }
         self.settle();
     }
 }
@@ -267,7 +298,14 @@ impl RouterInner {
     /// threshold (including the single-farm fleet) the filter is a
     /// no-op: in-place retries still reach the farm and its first
     /// success clears the count.
-    fn pick_farm(&self, excluded: &[bool]) -> Option<usize> {
+    ///
+    /// Quarantine is probation, not a death sentence: once a quarantined
+    /// farm's [`RetryConfig::probation_cooldown`] expires, exactly one
+    /// probe request is force-routed to it (returned with `probe =
+    /// true`). A successful reply restores the farm; a failed probe
+    /// re-quarantines it with the cooldown doubled, so a permanent
+    /// flapper's probe traffic decays geometrically.
+    fn pick_farm(&self, excluded: &[bool]) -> Option<(usize, bool)> {
         let mut snaps: Vec<(usize, usize, Option<f64>, usize)> = self
             .farms
             .iter()
@@ -287,6 +325,16 @@ impl RouterInner {
         }
         let threshold = self.retry.quarantine_after.max(1);
         if snaps.iter().any(|(_, _, _, fails)| *fails < threshold) {
+            // Probation check first: a quarantined candidate whose
+            // cooldown has expired wins dispatch outright — the failure
+            // penalty in the score below would otherwise starve it of
+            // the one probe it needs to prove recovery.
+            for (i, _, _, fails) in &snaps {
+                if *fails >= threshold && self.take_probe(*i) {
+                    obs::tracer().event("router.dispatch", 0, format!("farm={i} probe=probation"));
+                    return Some((*i, true));
+                }
+            }
             snaps.retain(|(i, _, _, fails)| {
                 let keep = *fails < threshold;
                 if !keep {
@@ -331,7 +379,85 @@ impl RouterInner {
                 },
             );
         }
-        Some(idx)
+        Some((idx, false))
+    }
+
+    /// Claim the probation probe for farm `idx`: `true` exactly when the
+    /// cooldown has expired and no probe is already in flight. A farm
+    /// that just crossed the quarantine threshold starts its cooldown
+    /// clock here if the failure path has not already done so.
+    fn take_probe(&self, idx: usize) -> bool {
+        let now = Instant::now();
+        let mut p = lock_unpoisoned(&self.farms[idx].probe);
+        if p.inflight {
+            return false;
+        }
+        match p.until {
+            Some(at) if now >= at => {
+                p.inflight = true;
+                true
+            }
+            Some(_) => false,
+            None => {
+                let cd = p.cooldown.unwrap_or(self.retry.probation_cooldown);
+                p.cooldown = Some(cd);
+                p.until = Some(now + cd);
+                false
+            }
+        }
+    }
+
+    /// Drop an unresolved probe claim (admission rejection, abandoned
+    /// reply) so a later request can re-probe.
+    fn release_probe(&self, idx: usize) {
+        lock_unpoisoned(&self.farms[idx].probe).inflight = false;
+    }
+
+    /// A reply from farm `idx` succeeded: clear the consecutive-failure
+    /// count and all probation state — a recovered farm re-enters full
+    /// rotation and a future quarantine starts from the base cooldown.
+    fn note_farm_ok(&self, idx: usize) {
+        let farm = &self.farms[idx];
+        farm.failures.store(0, Ordering::Release);
+        let mut p = lock_unpoisoned(&farm.probe);
+        if p.until.is_some() || p.inflight {
+            obs::tracer().event("router.dispatch", 0, format!("farm={idx} probe=restored"));
+            *p = ProbeState::default();
+        }
+    }
+
+    /// A reply from farm `idx` failed: mark it cold and bump the failure
+    /// count; at or past the quarantine threshold, manage the probation
+    /// clock — a failed probe re-quarantines with the cooldown doubled
+    /// (capped at an hour), a fresh quarantine starts the base cooldown.
+    fn note_farm_failed(&self, idx: usize) {
+        let farm = &self.farms[idx];
+        farm.cost.reset();
+        let fails = farm.failures.fetch_add(1, Ordering::AcqRel) + 1;
+        if fails < self.retry.quarantine_after.max(1) {
+            return;
+        }
+        let now = Instant::now();
+        let mut p = lock_unpoisoned(&farm.probe);
+        if p.inflight {
+            let doubled = p
+                .cooldown
+                .unwrap_or(self.retry.probation_cooldown)
+                .saturating_mul(2)
+                .min(Duration::from_secs(3600));
+            obs::tracer().event(
+                "router.dispatch",
+                0,
+                format!("farm={idx} probe=failed cooldown_ms={}", doubled.as_millis()),
+            );
+            p.cooldown = Some(doubled);
+            p.until = Some(now + doubled);
+            p.inflight = false;
+        } else if p.until.is_none() {
+            let cd = p.cooldown.unwrap_or(self.retry.probation_cooldown);
+            p.cooldown = Some(cd);
+            p.until = Some(now + cd);
+        }
     }
 
     /// Submit to the best candidate farm, falling through admission
@@ -350,13 +476,18 @@ impl RouterInner {
             excluded[x] = true;
         }
         let mut min_retry_after: Option<Duration> = None;
-        while let Some(idx) = self.pick_farm(&excluded) {
+        while let Some((idx, probe)) = self.pick_farm(&excluded) {
             let farm = &self.farms[idx];
             farm.outstanding.fetch_add(1, Ordering::AcqRel);
             match farm.coordinator.submit_for(image.clone(), deadline, client.clone()) {
                 Ok(rx) => return Ok((idx, rx)),
                 Err(e) => {
                     farm.outstanding.fetch_sub(1, Ordering::AcqRel);
+                    if probe {
+                        // The probe never reached the farm — let a later
+                        // request claim it instead.
+                        self.release_probe(idx);
+                    }
                     match e.downcast::<ServeError>() {
                         Ok(ServeError::Overloaded { retry_after }) => {
                             min_retry_after = Some(match min_retry_after {
@@ -414,6 +545,7 @@ impl Router {
                 outstanding: AtomicUsize::new(0),
                 cost: Ewma::default(),
                 failures: AtomicUsize::new(0),
+                probe: Mutex::new(ProbeState::default()),
             })
             .collect();
         Ok(Self {
@@ -824,6 +956,8 @@ mod tests {
             base_backoff: Duration::from_micros(100),
             max_backoff: Duration::from_millis(1),
             quarantine_after: 2,
+            // Far beyond the test's runtime: no probation probe fires.
+            probation_cooldown: Duration::from_secs(60),
         };
         let router = Router::with_retry(
             vec![faulty_coordinator(1, false), mock_coordinator(4)],
@@ -861,12 +995,62 @@ mod tests {
     }
 
     #[test]
+    fn farm_probation_probes_after_cooldown_and_contains_flappers() {
+        // Quarantine is probation, not a death sentence — but a permanent
+        // flapper must not oscillate back into rotation either. After the
+        // cooldown exactly one probe is routed to the quarantined farm;
+        // when it fails, the farm re-quarantines with the cooldown
+        // DOUBLED, so the base interval elapsing again releases nothing.
+        let retry = RetryConfig {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(100),
+            max_backoff: Duration::from_millis(1),
+            quarantine_after: 2,
+            probation_cooldown: Duration::from_millis(300),
+        };
+        let router = Router::with_retry(
+            vec![faulty_coordinator(1, false), mock_coordinator(4)],
+            retry,
+        )
+        .unwrap();
+        // Drive the always-failing farm 0 past the quarantine threshold.
+        let pending: Vec<_> = (0..4).map(|i| router.submit(vec![i, 0, 0, 0]).unwrap()).collect();
+        for mut p in pending {
+            p.recv().expect("every request recovers via retry on the healthy farm");
+        }
+        let quarantined_requests = router.farm_metrics()[0].requests;
+        // Inside the cooldown: the quarantined farm receives nothing.
+        let mut r = router.submit(vec![0; 4]).unwrap();
+        assert_eq!(r.farm(), 1, "no probe before the cooldown expires");
+        r.recv().unwrap();
+        assert_eq!(router.farm_metrics()[0].requests, quarantined_requests);
+        // Past the cooldown: exactly one probe goes to farm 0. It fails
+        // there, transparently retries onto the healthy farm, and the
+        // flapper re-quarantines with its cooldown doubled to 600 ms.
+        std::thread::sleep(Duration::from_millis(400));
+        let mut probe = router.submit(vec![0; 4]).unwrap();
+        assert_eq!(probe.farm(), 0, "cooldown expiry routes one probe to the flapper");
+        probe.recv().expect("the probe's failure is retried on the healthy farm");
+        assert_eq!(probe.farm(), 1, "reply records the farm that actually answered");
+        let after_probe = router.farm_metrics()[0].requests;
+        assert!(after_probe > quarantined_requests, "the probe reached the flapper");
+        // Containment: the BASE cooldown elapsing again must not release
+        // another probe — the doubled cooldown is still running.
+        std::thread::sleep(Duration::from_millis(400));
+        let mut r = router.submit(vec![0; 4]).unwrap();
+        assert_eq!(r.farm(), 1, "flapper containment: doubled cooldown, no probe yet");
+        r.recv().unwrap();
+        assert_eq!(router.farm_metrics()[0].requests, after_probe);
+    }
+
+    #[test]
     fn retries_exhaust_into_a_typed_engine_error() {
         let retry = RetryConfig {
             max_attempts: 3,
             base_backoff: Duration::from_micros(100),
             max_backoff: Duration::from_millis(1),
             quarantine_after: 3,
+            probation_cooldown: Duration::from_secs(60),
         };
         let router = Router::with_retry(vec![faulty_coordinator(1, false)], retry).unwrap();
         let err = router.infer(vec![0; 4]).unwrap_err();
@@ -890,6 +1074,7 @@ mod tests {
             base_backoff: Duration::from_micros(100),
             max_backoff: Duration::from_millis(1),
             quarantine_after: 3,
+            probation_cooldown: Duration::from_secs(60),
         };
         let router = Router::with_retry(
             vec![mock_coordinator(4), faulty_coordinator(1, true)],

@@ -43,6 +43,13 @@ pub enum FaultModel {
     /// Corrupted ifmap/weight read: a constant additive error folded
     /// into every output of one filter.
     Mem,
+    /// Gray failure: the engine still answers *correctly* but late — a
+    /// seeded deterministic per-(engine, shard) sleep stretches the
+    /// shard's service time past its analytic budget.
+    Slow,
+    /// Gray failure: the shard never completes. The worker parks until
+    /// its hedge duplicate wins (cancel flag) or the farm shuts down.
+    Hang,
 }
 
 impl FaultModel {
@@ -51,7 +58,15 @@ impl FaultModel {
             FaultModel::Pe => "pe",
             FaultModel::Rsrb => "rsrb",
             FaultModel::Mem => "mem",
+            FaultModel::Slow => "slow",
+            FaultModel::Hang => "hang",
         }
+    }
+
+    /// Timing models delay or withhold output; they never corrupt
+    /// values, so ABFT checksums stay clean under them by construction.
+    pub fn is_timing(&self) -> bool {
+        matches!(self, FaultModel::Slow | FaultModel::Hang)
     }
 }
 
@@ -69,7 +84,9 @@ impl std::str::FromStr for FaultModel {
             "pe" => Ok(FaultModel::Pe),
             "rsrb" => Ok(FaultModel::Rsrb),
             "mem" => Ok(FaultModel::Mem),
-            other => Err(format!("unknown fault model '{other}' (expected pe|rsrb|mem)")),
+            "slow" => Ok(FaultModel::Slow),
+            "hang" => Ok(FaultModel::Hang),
+            other => Err(format!("unknown fault model '{other}' (expected pe|rsrb|mem|slow|hang)")),
         }
     }
 }
@@ -111,6 +128,54 @@ impl FaultConfig {
     pub fn draw(&self, key: u64) -> bool {
         self.enabled() && unit_f64(mix(mix(self.seed, key), 0x5EED_CA11)) < self.rate
     }
+
+    /// Timing-chaos draw for one (engine, shard) execution. Returns the
+    /// gray failure to stage, or `None` when the model is a value model,
+    /// the plan is disabled, or the draw does not fire. Deterministic:
+    /// the same (seed, engine, layer, shard) always yields the same
+    /// verdict, so a hedge duplicate picked up by a *different* engine
+    /// gets an independent draw while a retry on the same engine
+    /// reproduces the stall. Zero-cost when disabled (one branch).
+    pub fn timing_fault(
+        &self,
+        engine: usize,
+        layer: &ConvLayer,
+        filters: &Range<usize>,
+        rows: &Range<usize>,
+    ) -> Option<TimingFault> {
+        if !self.enabled() || !self.model.is_timing() {
+            return None;
+        }
+        let mut key = fault_key(self.seed, engine, layer);
+        key = mix(key, ((filters.start as u64) << 32) | filters.end as u64);
+        key = mix(key, ((rows.start as u64) << 32) | rows.end as u64);
+        if unit_f64(key) >= self.rate {
+            return None;
+        }
+        match self.model {
+            FaultModel::Slow => {
+                // Independent stream so changing the rate never changes
+                // *how slow* a firing draw is: 2–8 ms, far past any
+                // tiny-workload shard budget yet cheap in tests.
+                let micros = 2_000 + mix(key, 0x510_DEAD) % 6_000;
+                Some(TimingFault::Slow { micros })
+            }
+            _ => Some(TimingFault::Hang),
+        }
+    }
+}
+
+/// A staged gray failure for one (engine, shard) execution, drawn by
+/// [`FaultConfig::timing_fault`]. The scheduler (not the engine) applies
+/// it: the value pipeline — and therefore the ABFT checksum — is
+/// untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimingFault {
+    /// Sleep `micros` before executing the shard (answer is late but
+    /// correct).
+    Slow { micros: u64 },
+    /// Never complete: park until cancelled or shut down.
+    Hang,
 }
 
 /// SplitMix64-finalizer mixing step (same constants as
@@ -180,7 +245,9 @@ impl FaultInjector {
     /// actually changed (a stuck-at-1 mask over already-set bits is
     /// benign and is not counted as injected).
     pub fn maybe_corrupt(&self, layer: &ConvLayer, ofmaps: &mut Tensor3) -> bool {
-        if !self.cfg.enabled() || ofmaps.data.is_empty() {
+        // Timing models are handled by the scheduler (sleep/park around
+        // the execution) and never touch output values.
+        if !self.cfg.enabled() || self.cfg.model.is_timing() || ofmaps.data.is_empty() {
             return false;
         }
         let key = fault_key(self.cfg.seed, self.engine, layer);
@@ -194,6 +261,8 @@ impl FaultInjector {
             FaultModel::Pe => corrupt_pe(&mut rng, ofmaps),
             FaultModel::Rsrb => corrupt_rsrb(&mut rng, ofmaps),
             FaultModel::Mem => corrupt_mem(&mut rng, ofmaps),
+            // Unreachable (guarded above), but keep the match total.
+            FaultModel::Slow | FaultModel::Hang => 0,
         };
         if changed > 0 {
             self.injected.inc();
@@ -261,6 +330,16 @@ pub struct FaultReport {
     pub reexecuted: u64,
     /// Engines quarantined after crossing the failure threshold.
     pub quarantined: u64,
+    /// Hedge duplicates injected for shards past their service budget.
+    pub hedged: u64,
+    /// Hedge losers: duplicate completions discarded at the merge point.
+    pub hedge_wasted: u64,
+    /// Shards whose *winning* result came from the hedge duplicate.
+    pub hedge_won: u64,
+    /// Distinct shards observed past their analytic service budget.
+    pub stragglers_detected: u64,
+    /// Engines quarantined for persistent straggling (timing, not value).
+    pub timing_quarantined: u64,
 }
 
 impl FaultReport {
@@ -270,6 +349,11 @@ impl FaultReport {
         self.corrected = self.corrected.saturating_add(other.corrected);
         self.reexecuted = self.reexecuted.saturating_add(other.reexecuted);
         self.quarantined = self.quarantined.saturating_add(other.quarantined);
+        self.hedged = self.hedged.saturating_add(other.hedged);
+        self.hedge_wasted = self.hedge_wasted.saturating_add(other.hedge_wasted);
+        self.hedge_won = self.hedge_won.saturating_add(other.hedge_won);
+        self.stragglers_detected = self.stragglers_detected.saturating_add(other.stragglers_detected);
+        self.timing_quarantined = self.timing_quarantined.saturating_add(other.timing_quarantined);
     }
 
     /// Counters accrued since `prev` (both must be cumulative totals).
@@ -280,11 +364,16 @@ impl FaultReport {
             corrected: self.corrected.saturating_sub(prev.corrected),
             reexecuted: self.reexecuted.saturating_sub(prev.reexecuted),
             quarantined: self.quarantined.saturating_sub(prev.quarantined),
+            hedged: self.hedged.saturating_sub(prev.hedged),
+            hedge_wasted: self.hedge_wasted.saturating_sub(prev.hedge_wasted),
+            hedge_won: self.hedge_won.saturating_sub(prev.hedge_won),
+            stragglers_detected: self.stragglers_detected.saturating_sub(prev.stragglers_detected),
+            timing_quarantined: self.timing_quarantined.saturating_sub(prev.timing_quarantined),
         }
     }
 
     pub fn is_clean(&self) -> bool {
-        self.detected == 0 && self.quarantined == 0
+        self.detected == 0 && self.quarantined == 0 && self.timing_quarantined == 0
     }
 }
 
@@ -294,6 +383,9 @@ pub enum EngineHealth {
     Healthy,
     /// At least one fault attributed, below the quarantine threshold.
     Suspect,
+    /// Straggler strikes dominate: the engine answers correctly but
+    /// late relative to the analytic cycle model.
+    Slow,
     /// Crossed the threshold; receives no further work.
     Quarantined,
 }
@@ -303,6 +395,7 @@ impl EngineHealth {
         match self {
             EngineHealth::Healthy => "healthy",
             EngineHealth::Suspect => "suspect",
+            EngineHealth::Slow => "slow",
             EngineHealth::Quarantined => "quarantined",
         }
     }
@@ -616,23 +709,159 @@ mod tests {
 
     #[test]
     fn report_merge_and_delta() {
-        let mut a = FaultReport { injected: 3, detected: 2, corrected: 2, reexecuted: 4, quarantined: 0 };
-        let b = FaultReport { injected: 1, detected: 1, corrected: 0, reexecuted: 1, quarantined: 1 };
+        let mut a = FaultReport {
+            injected: 3,
+            detected: 2,
+            corrected: 2,
+            reexecuted: 4,
+            quarantined: 0,
+            hedged: 2,
+            hedge_wasted: 1,
+            hedge_won: 1,
+            stragglers_detected: 2,
+            timing_quarantined: 0,
+        };
+        let b = FaultReport {
+            injected: 1,
+            detected: 1,
+            corrected: 0,
+            reexecuted: 1,
+            quarantined: 1,
+            hedged: 1,
+            hedge_wasted: 0,
+            hedge_won: 1,
+            stragglers_detected: 1,
+            timing_quarantined: 1,
+        };
         a.merge(&b);
-        assert_eq!(a, FaultReport { injected: 4, detected: 3, corrected: 2, reexecuted: 5, quarantined: 1 });
-        let prev = FaultReport { injected: 2, detected: 1, corrected: 1, reexecuted: 2, quarantined: 0 };
+        assert_eq!(
+            a,
+            FaultReport {
+                injected: 4,
+                detected: 3,
+                corrected: 2,
+                reexecuted: 5,
+                quarantined: 1,
+                hedged: 3,
+                hedge_wasted: 1,
+                hedge_won: 2,
+                stragglers_detected: 3,
+                timing_quarantined: 1,
+            }
+        );
+        let prev = FaultReport {
+            injected: 2,
+            detected: 1,
+            corrected: 1,
+            reexecuted: 2,
+            hedged: 1,
+            stragglers_detected: 1,
+            ..FaultReport::default()
+        };
         let d = a.delta_since(&prev);
-        assert_eq!(d, FaultReport { injected: 2, detected: 2, corrected: 1, reexecuted: 3, quarantined: 1 });
+        assert_eq!(
+            d,
+            FaultReport {
+                injected: 2,
+                detected: 2,
+                corrected: 1,
+                reexecuted: 3,
+                quarantined: 1,
+                hedged: 2,
+                hedge_wasted: 1,
+                hedge_won: 2,
+                stragglers_detected: 2,
+                timing_quarantined: 1,
+            }
+        );
         assert!(!a.is_clean());
         assert!(FaultReport::default().is_clean());
+        // Timing quarantine alone degrades the report.
+        let slow = FaultReport { timing_quarantined: 1, ..FaultReport::default() };
+        assert!(!slow.is_clean());
+        // Hedging without quarantine is still clean: wasted work, not
+        // wrong answers.
+        let hedgy = FaultReport {
+            hedged: 5,
+            hedge_wasted: 3,
+            hedge_won: 2,
+            stragglers_detected: 5,
+            ..FaultReport::default()
+        };
+        assert!(hedgy.is_clean());
     }
 
     #[test]
     fn fault_model_round_trips_from_str() {
-        for m in [FaultModel::Pe, FaultModel::Rsrb, FaultModel::Mem] {
+        for m in [FaultModel::Pe, FaultModel::Rsrb, FaultModel::Mem, FaultModel::Slow, FaultModel::Hang] {
             assert_eq!(m.as_str().parse::<FaultModel>(), Ok(m));
         }
         assert!("cosmic".parse::<FaultModel>().is_err());
+    }
+
+    #[test]
+    fn timing_models_never_corrupt_values() {
+        let layer = ConvLayer::new("timing", 9, 3, 2, 3, 1, 1);
+        let input = random_input(layer.m, layer.h_i, layer.w_i, 5);
+        let weights = random_weights(layer.n, layer.m, layer.k, 6);
+        let full = conv3d_i32(&input, &weights, layer.n, layer.k, layer.stride, layer.pad);
+        for model in [FaultModel::Slow, FaultModel::Hang] {
+            let inj = FaultInjector::new(
+                FaultConfig::new(1.0, 77, model),
+                0,
+                Arc::new(Counter::new()),
+            );
+            let mut t = full.clone();
+            assert!(!inj.maybe_corrupt(&layer, &mut t), "{model} corrupted values");
+            assert_eq!(t, full);
+            assert_eq!(inj.injected(), 0);
+        }
+    }
+
+    #[test]
+    fn timing_fault_draws_are_deterministic_shard_keyed_and_rate_bounded() {
+        let layer = ConvLayer::new("tdraw", 16, 3, 3, 8, 1, 1);
+        let cfg = FaultConfig::new(1.0, 42, FaultModel::Slow);
+        let d0 = cfg.timing_fault(0, &layer, &(0..8), &(0..14));
+        // Same key → same verdict (and the same sleep length).
+        assert_eq!(d0, cfg.timing_fault(0, &layer, &(0..8), &(0..14)));
+        match d0 {
+            Some(TimingFault::Slow { micros }) => {
+                assert!((2_000..8_000).contains(&micros), "sleep {micros}µs out of range")
+            }
+            other => panic!("rate-1 slow draw did not fire: {other:?}"),
+        }
+        // Hang model fires as Hang.
+        let hang = FaultConfig::new(1.0, 42, FaultModel::Hang);
+        assert_eq!(hang.timing_fault(3, &layer, &(0..8), &(0..14)), Some(TimingFault::Hang));
+        // Value models and disabled plans never stage timing faults.
+        let pe = FaultConfig::new(1.0, 42, FaultModel::Pe);
+        assert_eq!(pe.timing_fault(0, &layer, &(0..8), &(0..14)), None);
+        assert_eq!(
+            FaultConfig::new(0.0, 42, FaultModel::Hang).timing_fault(0, &layer, &(0..8), &(0..14)),
+            None
+        );
+        // Aggregate rate over many distinct (engine, shard) keys.
+        let sparse = FaultConfig::new(0.25, 1234, FaultModel::Slow);
+        let mut fired = 0usize;
+        let total = 400usize;
+        for i in 0..total {
+            let l = ConvLayer::new(&format!("tagg{i}"), 8, 3, 2, 2, 1, 1);
+            if sparse.timing_fault(i % 4, &l, &(0..8), &(0..6)).is_some() {
+                fired += 1;
+            }
+        }
+        let frac = fired as f64 / total as f64;
+        assert!(
+            (0.15..=0.35).contains(&frac),
+            "rate 0.25 produced empirical timing rate {frac} ({fired}/{total})"
+        );
+        // Shard-keyed: different filter ranges draw independently (at
+        // rate ~0.5 over 64 shards, at least one pair must differ).
+        let half = FaultConfig::new(0.5, 9, FaultModel::Slow);
+        let verdicts: Vec<bool> =
+            (0..64).map(|f| half.timing_fault(0, &layer, &(f..f + 1), &(0..14)).is_some()).collect();
+        assert!(verdicts.iter().any(|v| *v) && verdicts.iter().any(|v| !*v));
     }
 
     #[test]

@@ -18,7 +18,8 @@
 //!            [--queue-cap N] [--budget-cycles C] [--deadline-ms D]
 //!            [--drain-ms G] [--http PORT] [--http-secs S]
 //!            [--client-rps R] [--chaos RATE] [--chaos-seed S]
-//!            [--chaos-model pe|rsrb|mem]
+//!            [--chaos-model pe|rsrb|mem|slow|hang]
+//!            [--hedge-factor F] [--straggler-threshold N]
 //!                               e2e batched inference. Backends:
 //!                                 pjrt — compiled XLA artifacts (needs
 //!                                        `make artifacts` + the `pjrt`
@@ -81,8 +82,12 @@
 //!                               hardware faults into that fraction of
 //!                               (engine, shard) executions —
 //!                               --chaos-model picks PE MAC bit flips
-//!                               (default), stuck-at RSRB rows or
-//!                               corrupted memory reads, --chaos-seed
+//!                               (default), stuck-at RSRB rows, corrupted
+//!                               memory reads, or the gray-failure timing
+//!                               models: slow (seeded deterministic
+//!                               per-(engine, shard) slowdown — results
+//!                               stay correct, just late) and hang (the
+//!                               execution never completes); --chaos-seed
 //!                               makes the plan reproducible. Every
 //!                               merged shard is ABFT-checksum-verified;
 //!                               detected faults re-execute on another
@@ -90,11 +95,22 @@
 //!                               the farm replans at degraded capacity —
 //!                               logits stay bit-exact, and the fault
 //!                               counters land in /metrics and the final
-//!                               summary
+//!                               summary. --hedge-factor F (default 4)
+//!                               hedges any shard outstanding past F ×
+//!                               its analytic service budget onto another
+//!                               engine — first bit-exact result wins, so
+//!                               stragglers bound tail latency instead of
+//!                               setting it (0 disables hedging);
+//!                               --straggler-threshold N quarantines an
+//!                               engine caught straggling N times
+//!                               (probation applies, like fault
+//!                               quarantine)
 //! trim farm [--engines N] [--net vgg16|alexnet] [--batch B]
 //!           [--shard filter|pipeline|spatial|hybrid|auto]
 //!           [--fidelity fast|register]
-//!           [--chaos RATE] [--chaos-seed S] [--chaos-model pe|rsrb|mem]
+//!           [--chaos RATE] [--chaos-seed S]
+//!           [--chaos-model pe|rsrb|mem|slow|hang]
+//!           [--hedge-factor F] [--straggler-threshold N]
 //!                               shard real network layers across a farm
 //!                               of simulated engines: per-layer speedup
 //!                               table (chosen axis + speedup bound) +
@@ -305,6 +321,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     let canary: f64 = flags.get("canary").and_then(|v| v.parse().ok()).unwrap_or(0.0);
     let chaos = chaos_from_flags(flags)?;
+    let hedge_factor: f64 =
+        flags.get("hedge-factor").and_then(|v| v.parse().ok()).unwrap_or(4.0);
+    let straggler_threshold: u32 =
+        flags.get("straggler-threshold").and_then(|v| v.parse().ok()).unwrap_or(3);
     let queue_cap: usize = flags.get("queue-cap").and_then(|v| v.parse().ok()).unwrap_or(256);
     let budget_cycles: Option<f64> = flags.get("budget-cycles").and_then(|v| v.parse().ok());
     let client_rps: Option<f64> = flags.get("client-rps").and_then(|v| v.parse().ok());
@@ -323,13 +343,32 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             chaos.model, chaos.rate, chaos.seed
         );
     }
+    if hedge_factor > 0.0 {
+        println!(
+            "hedging: shards overdue past {hedge_factor}x their analytic budget re-execute \
+             on another engine (first bit-exact result wins); {straggler_threshold} straggles \
+             quarantine an engine"
+        );
+    }
     // One ingress, `farms` farms: a single-farm router degenerates to the
     // plain coordinator, so serve always goes through the front door.
     let coordinators: Vec<Coordinator> = (0..farms)
         .map(|_| {
             let d = dir.clone();
             Coordinator::start_with(
-                move || make_backend(kind, &d, engines, fidelity, shard, canary, chaos),
+                move || {
+                    make_backend(
+                        kind,
+                        &d,
+                        engines,
+                        fidelity,
+                        shard,
+                        canary,
+                        chaos,
+                        hedge_factor,
+                        straggler_threshold,
+                    )
+                },
                 cfg,
             )
         })
@@ -431,6 +470,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 ""
             }
         );
+        if m.fault.hedged > 0 || m.fault.stragglers_detected > 0 {
+            println!(
+                "gray      : stragglers {}  hedged {}  hedge won {}  hedge wasted {}  timing-quarantined {}",
+                m.fault.stragglers_detected,
+                m.fault.hedged,
+                m.fault.hedge_won,
+                m.fault.hedge_wasted,
+                m.fault.timing_quarantined
+            );
+        }
     }
     if m.sim_batches > 0 {
         println!(
@@ -503,6 +552,10 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     let canary: f64 = flags.get("canary").and_then(|v| v.parse().ok()).unwrap_or(0.0);
     let chaos = chaos_from_flags(flags)?;
+    let hedge_factor: f64 =
+        flags.get("hedge-factor").and_then(|v| v.parse().ok()).unwrap_or(4.0);
+    let straggler_threshold: u32 =
+        flags.get("straggler-threshold").and_then(|v| v.parse().ok()).unwrap_or(3);
     let arch = ArchConfig::small(3, 2, 2);
     match mode {
         ShardMode::FilterShards | ShardMode::Spatial | ShardMode::Hybrid | ShardMode::Auto => {
@@ -521,7 +574,8 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             let farm = EngineFarm::new(
                 FarmConfig::with_fidelity(engines, arch, fidelity)
                     .with_canary(CanaryConfig::sampled(canary))
-                    .with_chaos(chaos),
+                    .with_chaos(chaos)
+                    .with_hedge(hedge_factor, straggler_threshold),
             );
             let single = EngineSim::with_fidelity(arch, fidelity);
             let mut rng = SplitMix64::new(2024);
@@ -619,6 +673,16 @@ fn cmd_farm(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                     fr.quarantined,
                     farm.live_engines()
                 );
+                if fr.hedged > 0 || fr.stragglers_detected > 0 {
+                    println!(
+                        "gray      : stragglers {}  hedged {}  hedge won {}  hedge wasted {}  timing-quarantined {}",
+                        fr.stragglers_detected,
+                        fr.hedged,
+                        fr.hedge_won,
+                        fr.hedge_wasted,
+                        fr.timing_quarantined
+                    );
+                }
             }
             if let Some(path) = flags.get("metrics-out") {
                 write_metrics_out(path, &farm.registry().render_prometheus())?;
@@ -712,6 +776,8 @@ fn cmd_trace(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 ShardMode::Auto,
                 canary,
                 FaultConfig::disabled(),
+                0.0,
+                3,
             )
         },
         cfg,

@@ -183,10 +183,21 @@ impl SimBackend {
         canary: CanaryConfig,
         chaos: FaultConfig,
     ) -> Self {
-        spec.validate();
-        let farm = EngineFarm::new(
+        Self::with_farm_config(
             FarmConfig::with_fidelity(engines, arch, fidelity).with_canary(canary).with_chaos(chaos),
-        );
+            spec,
+            mode,
+        )
+    }
+
+    /// Fullest control: hand the farm configuration over verbatim —
+    /// hedging (`FarmConfig::with_hedge`), the analytic safety valve,
+    /// probation cooldowns, chaos, canary. The other constructors are
+    /// sugar over this; the serving CLI uses it to wire
+    /// `--hedge-factor`/`--straggler-threshold` through.
+    pub fn with_farm_config(cfg: FarmConfig, spec: SimNetSpec, mode: ShardMode) -> Self {
+        spec.validate();
+        let farm = EngineFarm::new(cfg);
         let weights = (0..spec.layers.len()).map(|i| Arc::new(spec.layer_weights(i))).collect();
         let requant = Requant::new(spec.requant_shift, 8);
         Self {

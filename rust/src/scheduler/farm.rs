@@ -59,17 +59,42 @@
 //! *published as a metric* ([`EngineFarm::canary_report`], flowing into
 //! `MetricsSnapshot` and merged across farms by the Router) instead of
 //! failing a test — production canarying of the simulator itself.
+//!
+//! **Gray-failure tolerance.** A shard that answers *late or never*
+//! stalls the merge just as surely as a wrong answer — `cycles = max
+//! over shards` means one gray-failed engine caps farm throughput.
+//! Because execution is deterministic and bit-exact, duplicate
+//! execution carries no correctness risk, so the farm hedges: every
+//! dispatched shard gets a **service budget** from the closed-form
+//! eq. (2) cycle estimate ([`crate::verify::analytic_shard_stats`])
+//! × the fleet's observed wall-µs-per-analytic-cycle EWMA
+//! ([`EngineHealthMap`]); a shard still outstanding past
+//! [`FarmConfig::hedge_factor`] × budget is re-injected through the
+//! same work-stealing injector and the **first** result wins
+//! ([`FirstWins`]: the merge-once claim doubles as the cancel flag the
+//! loser observes — model-checked in tests/loom_models.rs). Late
+//! arrivals are discarded (`hedge_wasted`) and attributed as timing
+//! strikes; engines crossing [`FarmConfig::straggler_threshold`]
+//! quarantine with a [`EngineHealth::Slow`] cause, and quarantined
+//! engines come back on **probation** after a cooldown (one clean shard
+//! restores them, one fault re-quarantines with the cooldown doubled).
+//! The same health map feeds cost-proportional shard sizing: once the
+//! fleet's slowdown skew passes a gate, plans come from
+//! [`plan_shards_weighted`] (slow engines get proportionally smaller
+//! filter-groups/row-bands and are soft-banned from above-median
+//! shards) — the heterogeneous-farm hook.
 
-use super::shard::{plan_shards, ShardMode, ShardPlan};
+use super::shard::{plan_shards, plan_shards_weighted, ShardMode, ShardPlan};
 use crate::arch::engine::EngineRunResult;
 use crate::arch::{ArchConfig, EngineSim, ExecFidelity, SimStats};
-use crate::fault::{AbftChecker, EngineHealth, FaultConfig, FaultInjector, FaultReport};
+use crate::coordinator::ServeError;
+use crate::fault::{AbftChecker, EngineHealth, FaultConfig, FaultInjector, FaultReport, TimingFault};
 use crate::golden::Tensor3;
 use crate::model::quant::Requant;
 use crate::model::ConvLayer;
 use crate::obs::{self, Counter, Gauge, Registry};
 use crate::util::sync::{
-    lock_unpoisoned, AtomicU64, Condvar, Mutex, MutexGuard, Ordering, PoisonError,
+    lock_unpoisoned, AtomicBool, AtomicU64, Condvar, Mutex, MutexGuard, Ordering, PoisonError,
 };
 use crate::util::SplitMix64;
 use anyhow::{anyhow, bail, ensure, Result};
@@ -179,6 +204,30 @@ pub struct FarmConfig {
     /// layers replanned over the surviving engines. The last live
     /// engine is never quarantined.
     pub quarantine_after: u32,
+    /// Hedged re-execution: a shard outstanding past `hedge_factor ×`
+    /// its analytic service budget is re-injected for another engine
+    /// and the first bit-exact result wins. `0.0` disables hedging
+    /// (the library default — serving paths opt in via
+    /// `--hedge-factor`); single-engine farms never hedge.
+    pub hedge_factor: f64,
+    /// Timing strikes (late arrivals past budget) before an engine is
+    /// quarantined with the [`EngineHealth::Slow`] cause.
+    pub straggler_threshold: u32,
+    /// Floor of the whole-layer safety valve: a layer run that has not
+    /// completed by `max(valve_floor, valve_multiplier × analytic
+    /// estimate)` fails with a typed [`ServeError::EngineFailed`]
+    /// instead of blocking forever. The default floor keeps the old
+    /// 300 s ceiling for cold farms (no µs-per-cycle EWMA yet to scale
+    /// the analytic estimate); tests and benches tighten it via
+    /// [`FarmConfig::with_valve`].
+    pub valve_floor: Duration,
+    /// Multiplier of the valve's analytic component (see `valve_floor`).
+    pub valve_multiplier: f64,
+    /// Cooldown before a quarantined engine is released on probation
+    /// (one clean shard restores it; one fault re-quarantines it with
+    /// the cooldown doubled). Long by default so short-lived test farms
+    /// keep PR 9's never-returns semantics.
+    pub probation_cooldown: Duration,
 }
 
 impl FarmConfig {
@@ -191,6 +240,11 @@ impl FarmConfig {
             chaos: FaultConfig::default(),
             max_retries: 3,
             quarantine_after: 3,
+            hedge_factor: 0.0,
+            straggler_threshold: 3,
+            valve_floor: Duration::from_secs(300),
+            valve_multiplier: 8.0,
+            probation_cooldown: Duration::from_secs(60),
         }
     }
 
@@ -216,11 +270,62 @@ impl FarmConfig {
         self.quarantine_after = quarantine_after.max(1);
         self
     }
+
+    /// Builder: enable hedged re-execution of stragglers.
+    pub fn with_hedge(mut self, hedge_factor: f64, straggler_threshold: u32) -> Self {
+        self.hedge_factor = hedge_factor.max(0.0);
+        self.straggler_threshold = straggler_threshold.max(1);
+        self
+    }
+
+    /// Builder: tune the layer-run safety valve.
+    pub fn with_valve(mut self, floor: Duration, multiplier: f64) -> Self {
+        self.valve_floor = floor;
+        self.valve_multiplier = multiplier.max(1.0);
+        self
+    }
+
+    /// Builder: tune the quarantine-probation cooldown.
+    pub fn with_probation(mut self, cooldown: Duration) -> Self {
+        self.probation_cooldown = cooldown;
+        self
+    }
 }
 
 impl Default for FarmConfig {
     fn default() -> Self {
         Self::new(4, ArchConfig::paper_engine())
+    }
+}
+
+/// The first-result-wins rendezvous of one hedged shard: a single
+/// atomic flag whose `claim()` both guards the merge (exactly one
+/// caller wins) **and** is the cancel signal losers observe — there is
+/// no window where a result has merged but a duplicate still believes
+/// it is wanted, because they are the same bit. Workers poll
+/// [`FirstWins::is_cancelled`] at pickup (drop the duplicate unrun) and
+/// inside timing-chaos stalls (abandon the straggle). Model-checked in
+/// tests/loom_models.rs: no lost result, no double-merge, the loser
+/// always observes the winner's claim.
+#[derive(Debug, Default)]
+pub struct FirstWins {
+    won: AtomicBool,
+}
+
+impl FirstWins {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Claim the merge. Returns true for exactly one caller across all
+    /// twins of the shard; every subsequent `is_cancelled` observes it.
+    pub fn claim(&self) -> bool {
+        !self.won.swap(true, Ordering::AcqRel)
+    }
+
+    /// Whether some twin already claimed the merge (the loser's view).
+    pub fn is_cancelled(&self) -> bool {
+        self.won.load(Ordering::Acquire)
     }
 }
 
@@ -246,6 +351,14 @@ struct Job {
     /// the job back to the injector. Engine ids ≥ 64 are never banned
     /// (see [`engine_bit`]).
     banned: u64,
+    /// Shared first-result-wins flag of this shard (all twins of one
+    /// tag clone the same `Arc`). Claimed by the merge loop; observed
+    /// by workers as the cancel signal.
+    cancel: Arc<FirstWins>,
+    /// Whether this job is a hedged duplicate (latency accounting: its
+    /// service time is measured from the hedge push, not the layer
+    /// start).
+    hedge: bool,
     reply: Sender<JobDone>,
 }
 
@@ -267,6 +380,8 @@ struct JobDone {
     engine: usize,
     filters: Range<usize>,
     rows: Range<usize>,
+    /// Whether this reply came from a hedged duplicate.
+    hedged: bool,
     /// `Err(panic message)` when the job panicked inside the worker.
     result: std::result::Result<EngineRunResult, String>,
 }
@@ -393,7 +508,13 @@ struct WorkerTelemetry {
     mk_strided: Arc<Counter>,
 }
 
-fn worker_loop(id: usize, engine: EngineSim, injector: Arc<Injector<Job>>, tel: WorkerTelemetry) {
+fn worker_loop(
+    id: usize,
+    engine: EngineSim,
+    injector: Arc<Injector<Job>>,
+    tel: WorkerTelemetry,
+    chaos: FaultConfig,
+) {
     // The engine's scratch/microkernel counters are cumulative over its
     // lifetime; publish per-job deltas into the farm-wide counters.
     let (mut prev_fills, mut prev_hits, _) = engine.scratch_stats();
@@ -412,6 +533,55 @@ fn worker_loop(id: usize, engine: EngineSim, injector: Arc<Injector<Job>>, tel: 
                 std::thread::sleep(Duration::from_micros(50));
             }
             continue;
+        }
+        if job.cancel.is_cancelled() {
+            // A twin of this shard already merged — drop the duplicate
+            // unrun (no reply: the merge loop stopped waiting on this
+            // tag the moment it claimed the winner).
+            continue;
+        }
+        // Timing chaos (gray failures): deterministically keyed on
+        // (engine, layer, shard), so a hedged duplicate on another
+        // engine draws independently. `Slow` straggles in cancellable
+        // 200 µs steps; `Hang` never executes — it parks until the
+        // hedge winner cancels it or the farm drains.
+        if let Some(tf) = chaos.timing_fault(id, &job.layer, &job.filters, &job.rows) {
+            let abandoned = match tf {
+                TimingFault::Slow { micros } => {
+                    let wake = Instant::now() + Duration::from_micros(micros);
+                    let mut cancelled = false;
+                    while Instant::now() < wake {
+                        if job.cancel.is_cancelled() || injector.is_shutdown() {
+                            cancelled = true;
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    cancelled
+                }
+                TimingFault::Hang => {
+                    while !job.cancel.is_cancelled() && !injector.is_shutdown() {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    true
+                }
+            };
+            if abandoned {
+                // The straggle was cancelled (or the farm is draining):
+                // reply with a typed marker so the merge loop can
+                // attribute the timing strike to this engine. A merged
+                // tag never retries on this Err — the claim happened
+                // first.
+                let _ = job.reply.send(JobDone {
+                    tag: job.tag,
+                    engine: id,
+                    filters: job.filters.clone(),
+                    rows: job.rows.clone(),
+                    hedged: job.hedge,
+                    result: Err("straggling under timing chaos; cancelled".to_string()),
+                });
+                continue;
+            }
         }
         tel.idle_us.add(parked.elapsed().as_micros() as u64);
         if stolen {
@@ -465,6 +635,7 @@ fn worker_loop(id: usize, engine: EngineSim, injector: Arc<Injector<Job>>, tel: 
             engine: id,
             filters: job.filters.clone(),
             rows: job.rows.clone(),
+            hedged: job.hedge,
             result,
         });
     }
@@ -629,6 +800,113 @@ pub struct PipelineRunResult {
     pub per_stage: Vec<SimStats>,
 }
 
+/// EWMA smoothing factor of the health map (matches the coordinator's
+/// admission EWMA).
+const HEALTH_ALPHA: f64 = 0.25;
+
+/// Slowdown ratio past which the planner switches from equal-split to
+/// cost-proportional ([`plan_shards_weighted`]) shard sizing, and past
+/// which an engine is soft-banned from above-median shards. Below the
+/// gate, plans are byte-identical to the unweighted planner — organic
+/// scheduling noise on a homogeneous farm never perturbs them.
+const SKEW_GATE: f64 = 1.5;
+
+/// Floor of the per-shard hedge budget (µs): protects a cold farm (no
+/// fleet EWMA yet) and tiny shards from hedging on scheduler jitter.
+const HEDGE_FLOOR_US: f64 = 500.0;
+
+/// Hedge attempts per shard before the valve is the only recourse
+/// (each successive hedge doubles the wait first).
+const MAX_HEDGES_PER_SHARD: u32 = 6;
+
+/// Per-engine latency-vs-analytic health: an EWMA of observed
+/// wall-µs-per-analytic-cycle, per engine and fleet-wide, fed at every
+/// shard completion. The fleet ratio prices service budgets (hedging
+/// and the safety valve); per-engine ÷ fleet is an engine's *slowdown*,
+/// which drives cost-proportional shard sizing once the skew passes
+/// [`SKEW_GATE`] — the heterogeneous-farm hook: a 2×-slower engine gets
+/// a 2×-smaller filter-group/row-band share.
+pub struct EngineHealthMap {
+    state: Mutex<HealthEwma>,
+}
+
+struct HealthEwma {
+    per_engine: Vec<Option<f64>>,
+    fleet: Option<f64>,
+}
+
+impl EngineHealthMap {
+    fn new(engines: usize) -> Self {
+        Self { state: Mutex::new(HealthEwma { per_engine: vec![None; engines], fleet: None }) }
+    }
+
+    /// Feed one shard completion: `analytic_cycles` from the closed-form
+    /// model, `elapsed` as observed at the merge point.
+    pub fn observe(&self, engine: usize, analytic_cycles: u64, elapsed: Duration) {
+        let ratio = (elapsed.as_micros() as f64 / analytic_cycles.max(1) as f64).max(1e-9);
+        let mut st = lock_unpoisoned(&self.state);
+        st.fleet = Some(match st.fleet {
+            Some(prev) => prev + HEALTH_ALPHA * (ratio - prev),
+            None => ratio,
+        });
+        if let Some(slot) = st.per_engine.get_mut(engine) {
+            *slot = Some(match *slot {
+                Some(prev) => prev + HEALTH_ALPHA * (ratio - prev),
+                None => ratio,
+            });
+        }
+    }
+
+    /// Fleet-wide wall-µs-per-analytic-cycle (None until the first
+    /// observation).
+    pub fn us_per_cycle(&self) -> Option<f64> {
+        lock_unpoisoned(&self.state).fleet
+    }
+
+    /// `engine`'s latency ratio relative to the fleet (1.0 = average or
+    /// unobserved; 2.0 = twice as slow per analytic cycle).
+    pub fn slowdown(&self, engine: usize) -> f64 {
+        let st = lock_unpoisoned(&self.state);
+        match (st.fleet, st.per_engine.get(engine).copied().flatten()) {
+            (Some(fleet), Some(own)) if fleet > 0.0 => own / fleet,
+            _ => 1.0,
+        }
+    }
+
+    /// Probation restore: forget an engine's history so a recovered
+    /// member is not priced on its quarantine-era latencies.
+    fn reset(&self, engine: usize) {
+        if let Some(slot) = lock_unpoisoned(&self.state).per_engine.get_mut(engine) {
+            *slot = None;
+        }
+    }
+
+    /// Cost-proportional plan weights for `live` engines (1/slowdown
+    /// each, clamped), or `None` while the fleet is cold or its
+    /// max/min slowdown skew is below [`SKEW_GATE`] — equal-split plans
+    /// stay byte-identical until heterogeneity is real.
+    pub fn plan_weights(&self, live: &[usize]) -> Option<Vec<f64>> {
+        let st = lock_unpoisoned(&self.state);
+        let fleet = st.fleet?;
+        if fleet <= 0.0 || live.len() < 2 {
+            return None;
+        }
+        let slowdowns: Vec<f64> = live
+            .iter()
+            .map(|&e| match st.per_engine.get(e).copied().flatten() {
+                Some(own) => (own / fleet).clamp(0.05, 20.0),
+                None => 1.0,
+            })
+            .collect();
+        let hi = slowdowns.iter().copied().fold(0.0f64, f64::max);
+        let lo = slowdowns.iter().copied().fold(f64::INFINITY, f64::min);
+        if hi / lo.max(1e-12) < SKEW_GATE {
+            return None;
+        }
+        Some(slowdowns.iter().map(|s| 1.0 / s).collect())
+    }
+}
+
 /// A pool of simulated TrIM engines stealing work from one shared
 /// injector queue.
 pub struct EngineFarm {
@@ -641,6 +919,9 @@ pub struct EngineFarm {
     /// quarantine mask. One mutex — health transitions happen only on
     /// detected faults, never on the fault-free hot path.
     health: Mutex<HealthState>,
+    /// Per-engine latency-vs-analytic EWMAs (hedging budgets +
+    /// cost-proportional planning).
+    health_map: EngineHealthMap,
     /// Self-healing counters, resolved once (the registry map is not on
     /// the merge hot path).
     heal: HealCounters,
@@ -650,8 +931,20 @@ struct HealthState {
     /// Detected faults attributed per engine (checksum mismatches and
     /// worker panics observed at the merge point).
     faults: Vec<u32>,
+    /// Timing strikes attributed per engine (late arrivals past the
+    /// hedge budget) — the gray-failure analogue of `faults`.
+    slow_faults: Vec<u32>,
     /// Bit mask of quarantined engines.
     quarantined: u64,
+    /// Bit mask of engines released from quarantine on probation: one
+    /// clean shard restores them, one fault re-quarantines with the
+    /// cooldown doubled.
+    probation: u64,
+    /// When each quarantined engine's cooldown expires (None = not
+    /// quarantined or pre-probation).
+    cooldown_until: Vec<Option<Instant>>,
+    /// Current cooldown per engine (doubles on every failed probation).
+    cooldown: Vec<Duration>,
 }
 
 struct HealCounters {
@@ -659,6 +952,11 @@ struct HealCounters {
     corrected: Arc<Counter>,
     reexecuted: Arc<Counter>,
     quarantined: Arc<Counter>,
+    hedged: Arc<Counter>,
+    hedge_wasted: Arc<Counter>,
+    hedge_won: Arc<Counter>,
+    stragglers: Arc<Counter>,
+    timing_quarantined: Arc<Counter>,
 }
 
 impl EngineFarm {
@@ -689,12 +987,19 @@ impl EngineFarm {
                 mk_unit: registry.counter("microkernel.unit"),
                 mk_strided: registry.counter("microkernel.strided"),
             };
-            let handle = std::thread::Builder::new()
+            let chaos = cfg.chaos;
+            // Spawn failure (fd/memory exhaustion) degrades the pool
+            // instead of panicking: the farm runs on whatever workers
+            // came up, the same shape quarantine already handles.
+            match std::thread::Builder::new()
                 .name(format!("trim-farm-{i}"))
-                .spawn(move || worker_loop(i, engine, inj, tel))
-                .expect("spawning farm worker");
-            workers.push(handle);
+                .spawn(move || worker_loop(i, engine, inj, tel, chaos))
+            {
+                Ok(handle) => workers.push(handle),
+                Err(_) => registry.counter("farm.spawn_failures").inc(),
+            }
         }
+        assert!(!workers.is_empty(), "farm could not spawn any worker thread");
         let canary = if cfg.canary.enabled() {
             let (tx, rx) = mpsc::channel::<CanaryJob>();
             let counters = CanaryCounters {
@@ -705,28 +1010,48 @@ impl EngineFarm {
             };
             let oracle = EngineSim::with_fidelity(cfg.arch, ExecFidelity::Register);
             let loop_counters = counters.clone();
-            let worker = std::thread::Builder::new()
+            // A canary that fails to spawn disables itself (served
+            // results were never gated on it).
+            match std::thread::Builder::new()
                 .name("trim-canary".to_string())
                 .spawn(move || canary_loop(oracle, rx, loop_counters))
-                .expect("spawning canary worker");
-            Some(Canary {
-                cfg: cfg.canary,
-                tx,
-                rng: Mutex::new(SplitMix64::new(cfg.canary.seed)),
-                counters,
-                worker: Some(worker),
-            })
+            {
+                Ok(worker) => Some(Canary {
+                    cfg: cfg.canary,
+                    tx,
+                    rng: Mutex::new(SplitMix64::new(cfg.canary.seed)),
+                    counters,
+                    worker: Some(worker),
+                }),
+                Err(_) => {
+                    registry.counter("farm.spawn_failures").inc();
+                    None
+                }
+            }
         } else {
             None
         };
-        let health = Mutex::new(HealthState { faults: vec![0; cfg.engines], quarantined: 0 });
+        let health = Mutex::new(HealthState {
+            faults: vec![0; cfg.engines],
+            slow_faults: vec![0; cfg.engines],
+            quarantined: 0,
+            probation: 0,
+            cooldown_until: vec![None; cfg.engines],
+            cooldown: vec![cfg.probation_cooldown; cfg.engines],
+        });
+        let health_map = EngineHealthMap::new(cfg.engines);
         let heal = HealCounters {
             detected: registry.counter("fault.detected"),
             corrected: registry.counter("fault.corrected"),
             reexecuted: registry.counter("fault.reexecuted"),
             quarantined: registry.counter("fault.quarantined"),
+            hedged: registry.counter("fault.hedged"),
+            hedge_wasted: registry.counter("fault.hedge_wasted"),
+            hedge_won: registry.counter("fault.hedge_won"),
+            stragglers: registry.counter("fault.stragglers"),
+            timing_quarantined: registry.counter("fault.timing_quarantined"),
         };
-        Self { cfg, injector, workers, registry, canary, health, heal }
+        Self { cfg, injector, workers, registry, canary, health, health_map, heal }
     }
 
     pub fn engines(&self) -> usize {
@@ -787,8 +1112,11 @@ impl EngineFarm {
 
     /// Cumulative fault-tolerance totals: faults injected (chaos mode),
     /// detected at merge (ABFT mismatch or worker panic), shards healed
-    /// by re-execution, re-execution attempts, and engines quarantined.
-    /// All zero on a farm that has never seen a fault.
+    /// by re-execution, re-execution attempts, engines quarantined, and
+    /// the gray-failure side — shards hedged, duplicate completions
+    /// discarded, hedges that won, distinct stragglers detected, and
+    /// engines quarantined for straggling. All zero on a farm that has
+    /// never seen a fault.
     pub fn fault_report(&self) -> FaultReport {
         FaultReport {
             injected: self.registry.counter_value("fault.injected"),
@@ -796,17 +1124,32 @@ impl EngineFarm {
             corrected: self.registry.counter_value("fault.corrected"),
             reexecuted: self.registry.counter_value("fault.reexecuted"),
             quarantined: self.registry.counter_value("fault.quarantined"),
+            hedged: self.registry.counter_value("fault.hedged"),
+            hedge_wasted: self.registry.counter_value("fault.hedge_wasted"),
+            hedge_won: self.registry.counter_value("fault.hedge_won"),
+            stragglers_detected: self.registry.counter_value("fault.stragglers"),
+            timing_quarantined: self.registry.counter_value("fault.timing_quarantined"),
         }
     }
 
+    /// The farm's latency-vs-analytic health map (hedge budgets,
+    /// cost-proportional planning). Exposed so serving layers and tests
+    /// can read — or pre-seed — engine slowdowns.
+    pub fn health_map(&self) -> &EngineHealthMap {
+        &self.health_map
+    }
+
     /// Health of every engine: `Healthy` (no attributed faults),
-    /// `Suspect` (some, below the quarantine threshold), `Quarantined`.
+    /// `Suspect` (value faults below the quarantine threshold), `Slow`
+    /// (timing strikes dominate), `Quarantined`.
     pub fn engine_health(&self) -> Vec<EngineHealth> {
         let h = lock_unpoisoned(&self.health);
         (0..self.cfg.engines)
             .map(|i| {
                 if h.quarantined & engine_bit(i) != 0 {
                     EngineHealth::Quarantined
+                } else if h.slow_faults[i] > 0 && h.slow_faults[i] >= h.faults[i] {
+                    EngineHealth::Slow
                 } else if h.faults[i] > 0 {
                     EngineHealth::Suspect
                 } else {
@@ -829,29 +1172,112 @@ impl EngineFarm {
         lock_unpoisoned(&self.health).quarantined
     }
 
-    /// Attribute one detected fault to `engine`; quarantine it when it
-    /// crosses the threshold (unless it is the last live engine).
-    /// Returns true when this call quarantined the engine.
+    /// Attribute one detected *value* fault (ABFT mismatch or panic) to
+    /// `engine`; quarantine it when it crosses the threshold (unless it
+    /// is the last live engine). Returns true when this call
+    /// quarantined the engine.
     fn note_engine_fault(&self, engine: usize) -> bool {
         self.heal.detected.inc();
+        let q = self.strike(engine, false);
+        self.registry.counter(&format!("engine{engine}.faults")).inc();
+        q
+    }
+
+    /// Attribute one *timing* strike (arrival past the hedge budget) to
+    /// `engine`; quarantine with the [`EngineHealth::Slow`] cause at
+    /// [`FarmConfig::straggler_threshold`]. Returns true when this call
+    /// quarantined the engine.
+    fn note_timing_fault(&self, engine: usize) -> bool {
+        let q = self.strike(engine, true);
+        self.registry.counter(&format!("engine{engine}.slow_faults")).inc();
+        q
+    }
+
+    /// Shared quarantine transition of both fault families. An engine
+    /// on probation re-quarantines on its first strike of either kind,
+    /// with its cooldown doubled (flapper containment); otherwise the
+    /// per-family threshold applies. The last live engine is never
+    /// quarantined.
+    fn strike(&self, engine: usize, timing: bool) -> bool {
         let mut h = lock_unpoisoned(&self.health);
-        if let Some(f) = h.faults.get_mut(engine) {
-            *f += 1;
-            let crossed = *f >= self.cfg.quarantine_after;
-            let bit = engine_bit(engine);
-            let already = h.quarantined & bit != 0;
-            let survivors = self.cfg.engines - (h.quarantined | bit).count_ones() as usize;
-            if crossed && !already && bit != 0 && survivors >= 1 {
-                h.quarantined |= bit;
-                drop(h);
+        if engine >= h.faults.len() {
+            return false;
+        }
+        if timing {
+            h.slow_faults[engine] += 1;
+        } else {
+            h.faults[engine] += 1;
+        }
+        let count = if timing { h.slow_faults[engine] } else { h.faults[engine] };
+        let threshold = if timing { self.cfg.straggler_threshold } else { self.cfg.quarantine_after };
+        let bit = engine_bit(engine);
+        let on_probation = h.probation & bit != 0;
+        let crossed = count >= threshold.max(1) || on_probation;
+        let already = h.quarantined & bit != 0;
+        let survivors = self.cfg.engines - (h.quarantined | bit).count_ones() as usize;
+        if crossed && !already && bit != 0 && survivors >= 1 {
+            h.quarantined |= bit;
+            h.probation &= !bit;
+            if on_probation {
+                // Failed probe: double the cooldown (capped) before the
+                // next probation so a permanent flapper converges to
+                // near-zero probe traffic.
+                h.cooldown[engine] =
+                    (h.cooldown[engine] * 2).min(Duration::from_secs(3600));
+            }
+            h.cooldown_until[engine] = Some(Instant::now() + h.cooldown[engine]);
+            drop(h);
+            if timing {
+                self.heal.timing_quarantined.inc();
+            } else {
                 self.heal.quarantined.inc();
-                self.registry.counter(&format!("engine{engine}.faults")).inc();
-                return true;
+            }
+            return true;
+        }
+        false
+    }
+
+    /// Release quarantined engines whose cooldown expired onto
+    /// probation: they re-enter planning and receive shards again; the
+    /// first clean completion restores them fully
+    /// ([`EngineFarm::note_engine_recovered`]), the first fault
+    /// re-quarantines with the cooldown doubled. Called at the top of
+    /// every layer run.
+    fn probation_tick(&self) {
+        let now = Instant::now();
+        let mut h = lock_unpoisoned(&self.health);
+        for e in 0..self.cfg.engines.min(h.cooldown_until.len()) {
+            let bit = engine_bit(e);
+            if h.quarantined & bit == 0 {
+                continue;
+            }
+            if let Some(at) = h.cooldown_until[e] {
+                if now >= at {
+                    h.quarantined &= !bit;
+                    h.probation |= bit;
+                    h.cooldown_until[e] = None;
+                }
             }
         }
-        drop(h);
-        self.registry.counter(&format!("engine{engine}.faults")).inc();
-        false
+    }
+
+    /// A probation engine completed a shard cleanly: restore it — fault
+    /// counters cleared, cooldown back to base, stale latency history
+    /// forgotten.
+    fn note_engine_recovered(&self, engine: usize) {
+        let bit = engine_bit(engine);
+        if bit == 0 {
+            return;
+        }
+        let mut h = lock_unpoisoned(&self.health);
+        if h.probation & bit != 0 && engine < h.faults.len() {
+            h.probation &= !bit;
+            h.faults[engine] = 0;
+            h.slow_faults[engine] = 0;
+            h.cooldown[engine] = self.cfg.probation_cooldown;
+            drop(h);
+            self.health_map.reset(engine);
+        }
     }
 
     /// Run one layer sharded across the farm in filter-shard mode and
@@ -897,15 +1323,64 @@ impl EngineFarm {
         mode: ShardMode,
     ) -> Result<FarmRunResult> {
         assert!(mode != ShardMode::LayerPipeline, "pipeline mode goes through run_pipeline");
+        // Probation: release quarantined engines whose cooldown expired
+        // before planning — they rejoin the live set, and the next shard
+        // they complete (or fault) decides their fate.
+        self.probation_tick();
         // Degraded-capacity replanning: quarantined engines no longer
         // count — the plan (and its speedup bound) shrinks to the
         // survivors instead of leaving shards parked on banned engines.
-        let live = self.live_engines();
-        let plan = plan_shards(&self.cfg.arch, layer, live, mode);
+        let quarantined = self.quarantine_mask();
+        let live_ids: Vec<usize> = (0..self.cfg.engines)
+            .filter(|&i| quarantined & engine_bit(i) == 0)
+            .collect();
+        let live = live_ids.len().max(1);
+        // Cost-proportional sizing (the heterogeneous-farm hook): once
+        // the health map shows real slowdown skew, shares go 1/slowdown
+        // (sorted descending so the shard-index → share mapping is
+        // deterministic) and engines past the gate are soft-banned from
+        // above-median shards, so slow engines only steal small work.
+        let plan_weights = self.health_map.plan_weights(&live_ids);
+        let plan = match &plan_weights {
+            Some(w) => {
+                let mut w = w.clone();
+                w.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+                plan_shards_weighted(&self.cfg.arch, layer, &w, mode)
+            }
+            None => plan_shards(&self.cfg.arch, layer, live, mode),
+        };
+        let soft_ban: u64 = if plan_weights.is_some() {
+            let mask: u64 = live_ids
+                .iter()
+                .filter(|&&e| self.health_map.slowdown(e) >= SKEW_GATE)
+                .fold(0u64, |m, &e| m | engine_bit(e));
+            let live_mask: u64 = live_ids.iter().fold(0u64, |m, &e| m | engine_bit(e));
+            // Never ban the whole live set — someone must run the shard.
+            if mask != 0 && mask & live_mask != live_mask {
+                mask
+            } else {
+                0
+            }
+        } else {
+            0
+        };
+        // Per-shard a-priori service estimate from the closed-form
+        // eq. (2) model — the denominator of every budget below.
+        let analytic: Vec<u64> = plan
+            .shards
+            .iter()
+            .map(|s| crate::verify::analytic_shard_stats(&self.cfg.arch, layer, s).cycles.max(1))
+            .collect();
+        let median_cycles = {
+            let mut sorted = analytic.clone();
+            sorted.sort_unstable();
+            sorted.get(sorted.len() / 2).copied().unwrap_or(1)
+        };
         let span = obs::tracer().begin("farm.layer", 0);
         let trace_parent = span.id();
         let (reply, done_rx) = mpsc::channel::<JobDone>();
-        let quarantined = self.quarantine_mask();
+        let cancels: Vec<Arc<FirstWins>> =
+            (0..plan.shards.len()).map(|_| Arc::new(FirstWins::new())).collect();
         let jobs: Vec<Job> = plan
             .shards
             .iter()
@@ -918,7 +1393,10 @@ impl EngineFarm {
                 requant: None,
                 tag: shard.index as u64,
                 trace_parent,
-                banned: quarantined,
+                banned: quarantined
+                    | if analytic[shard.index] > median_cycles { soft_ban } else { 0 },
+                cancel: Arc::clone(&cancels[shard.index]),
+                hedge: false,
                 reply: reply.clone(),
             })
             .collect();
@@ -927,36 +1405,151 @@ impl EngineFarm {
         let (h_o, w_o) = (layer.h_o(), layer.w_o());
         let mut ofmaps = Tensor3::zeros(layer.n, h_o, w_o);
         let mut stats = SimStats::default();
-        let mut per_shard = vec![SimStats::default(); plan.shards.len()];
+        let n_shards = plan.shards.len();
+        let mut per_shard = vec![SimStats::default(); n_shards];
         // ABFT: every merged shard is checksum-verified — not sampled.
         // The checker (O(input) summed-area tables) is built on the first
         // result so a layer that fails outright never pays for it.
         let mut checker: Option<AbftChecker> = None;
-        let mut attempts: Vec<u32> = vec![0; plan.shards.len()];
-        let mut banned: Vec<u64> = vec![quarantined; plan.shards.len()];
+        let mut attempts: Vec<u32> = vec![0; n_shards];
+        let mut banned: Vec<u64> = vec![quarantined; n_shards];
         let all_engines: u64 = if self.cfg.engines >= 64 { u64::MAX } else { (1u64 << self.cfg.engines) - 1 };
         let mut completed = 0usize;
         let mut received = 0usize;
         let mut failure: Option<anyhow::Error> = None;
-        // We hold `reply` so re-executions can be dispatched mid-merge;
-        // the loop therefore counts completions instead of waiting for
-        // the channel to close. Every pushed job sends exactly one reply
-        // (catch_unwind in worker_loop), so the timeout is a safety valve
-        // against a worker dying outside the unwind guard.
-        while completed < plan.shards.len() && failure.is_none() {
-            let done = match done_rx.recv_timeout(Duration::from_secs(300)) {
+        // Service budgets: analytic cycles × the fleet's observed
+        // µs-per-cycle EWMA, floored while the fleet is cold. A shard
+        // outstanding past hedge_factor × budget is re-injected (first
+        // result wins); the whole layer is bounded by the valve —
+        // valve_multiplier × the summed budget (with valve_floor), fired
+        // as a typed ServeError::EngineFailed. This replaces the old
+        // hard-coded 300 s recv_timeout with an analytically derived
+        // budget.
+        let started = Instant::now();
+        let upc = self.health_map.us_per_cycle();
+        let budget: Vec<Duration> = analytic
+            .iter()
+            .map(|&c| {
+                let us = upc.map(|r| c as f64 * r).unwrap_or(0.0).max(HEDGE_FLOOR_US);
+                Duration::from_micros(us.min(3.6e9) as u64)
+            })
+            .collect();
+        let hedge_on = self.cfg.hedge_factor > 0.0 && live > 1;
+        let factor = if self.cfg.hedge_factor > 0.0 { self.cfg.hedge_factor } else { 1.0 };
+        let hedge_wait: Vec<Duration> = budget
+            .iter()
+            .map(|b| Duration::from_micros((b.as_micros() as f64 * factor).min(3.6e9) as u64))
+            .collect();
+        let total_budget_us: f64 = budget.iter().map(|b| b.as_micros() as f64).sum();
+        let valve_at = started
+            + self.cfg.valve_floor.max(Duration::from_micros(
+                (total_budget_us * self.cfg.valve_multiplier.max(1.0)).min(3.6e9) as u64,
+            ));
+        let mut next_hedge: Vec<Instant> = hedge_wait.iter().map(|w| started + *w).collect();
+        let mut hedges: Vec<u32> = vec![0; n_shards];
+        let mut hedged_at: Vec<Option<Instant>> = vec![None; n_shards];
+        // We hold `reply` so re-executions and hedges can be dispatched
+        // mid-merge; the loop therefore counts completions instead of
+        // waiting for the channel to close, waking at the earliest
+        // pending hedge deadline (or the valve).
+        while completed < n_shards && failure.is_none() {
+            let now = Instant::now();
+            if now >= valve_at {
+                failure = Some(
+                    ServeError::EngineFailed {
+                        reason: format!(
+                            "farm service budget exhausted on {}: {completed} of {n_shards} shards \
+                             completed after {:?} (analytic budget {:.0} µs, valve ×{})",
+                            layer.name,
+                            started.elapsed(),
+                            total_budget_us,
+                            self.cfg.valve_multiplier,
+                        ),
+                    }
+                    .into(),
+                );
+                break;
+            }
+            let mut wake = valve_at;
+            if hedge_on {
+                for t in 0..n_shards {
+                    if !cancels[t].is_cancelled() && hedges[t] < MAX_HEDGES_PER_SHARD {
+                        wake = wake.min(next_hedge[t]);
+                    }
+                }
+            }
+            let done = match done_rx.recv_timeout(wake.saturating_duration_since(now)) {
                 Ok(done) => done,
-                Err(_) => {
-                    failure = Some(anyhow!(
-                        "farm worker(s) died mid-layer on {}: {completed} of {} shards completed",
-                        layer.name,
-                        plan.shards.len()
-                    ));
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // Hedge pass: every unresolved shard past its
+                    // deadline is re-injected for the pool; each
+                    // successive hedge of one shard doubles its wait so
+                    // a pathological layer cannot flood the queue.
+                    if hedge_on {
+                        let now = Instant::now();
+                        for (t, shard) in plan.shards.iter().enumerate() {
+                            if cancels[t].is_cancelled()
+                                || hedges[t] >= MAX_HEDGES_PER_SHARD
+                                || now < next_hedge[t]
+                            {
+                                continue;
+                            }
+                            if hedges[t] == 0 {
+                                self.heal.stragglers.inc();
+                            }
+                            hedges[t] += 1;
+                            self.heal.hedged.inc();
+                            hedged_at[t] = Some(now);
+                            next_hedge[t] = now + hedge_wait[t] * 2u32.saturating_pow(hedges[t].min(16));
+                            self.injector.push([Job {
+                                layer: layer.clone(),
+                                input: Arc::clone(&input),
+                                weights: Arc::clone(&weights),
+                                filters: shard.filters.clone(),
+                                rows: shard.rows.clone(),
+                                requant: None,
+                                tag: t as u64,
+                                trace_parent,
+                                banned: self.quarantine_mask(),
+                                cancel: Arc::clone(&cancels[t]),
+                                hedge: true,
+                                reply: reply.clone(),
+                            }]);
+                        }
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    failure = Some(
+                        ServeError::EngineFailed {
+                            reason: format!("farm workers gone mid-layer on {}", layer.name),
+                        }
+                        .into(),
+                    );
                     break;
                 }
             };
             received += 1;
             let tag = done.tag as usize;
+            if tag >= n_shards {
+                continue;
+            }
+            // Service time is measured from the submission that produced
+            // this reply: layer start for originals (and retries — close
+            // enough), the hedge push for duplicates.
+            let since = if done.hedged { hedged_at[tag].unwrap_or(started) } else { started };
+            if cancels[tag].is_cancelled() {
+                // A twin of an already-merged shard: discard the
+                // duplicate work, and if this arrival was late past its
+                // own hedge budget, attribute a timing strike to the
+                // engine (threshold-crossing stragglers quarantine with
+                // the Slow cause).
+                self.heal.hedge_wasted.inc();
+                if since.elapsed() > hedge_wait[tag] {
+                    self.note_timing_fault(done.engine);
+                }
+                continue;
+            }
             // A result only merges if its ABFT filter checksums hold;
             // a mismatch (or a worker panic) is a detected fault.
             let verdict = match done.result {
@@ -974,6 +1567,14 @@ impl EngineFarm {
             };
             match verdict {
                 Ok(result) => {
+                    // First result wins: the claim is also the cancel
+                    // signal every remaining twin of this tag observes.
+                    cancels[tag].claim();
+                    if done.hedged {
+                        self.heal.hedge_won.inc();
+                    }
+                    self.health_map.observe(done.engine, analytic[tag], since.elapsed());
+                    self.note_engine_recovered(done.engine);
                     if attempts[tag] > 0 {
                         self.heal.corrected.inc();
                     }
@@ -1015,6 +1616,10 @@ impl EngineFarm {
                             ban = 0;
                         }
                         banned[tag] = ban;
+                        // The retry gets a fresh hedge deadline: hedging
+                        // bounds service time per attempt, not the
+                        // shard's cumulative bad luck.
+                        next_hedge[tag] = Instant::now() + hedge_wait[tag];
                         self.injector.push([Job {
                             layer: layer.clone(),
                             input: Arc::clone(&input),
@@ -1025,6 +1630,8 @@ impl EngineFarm {
                             tag: done.tag,
                             trace_parent,
                             banned: ban,
+                            cancel: Arc::clone(&cancels[tag]),
+                            hedge: done.hedged,
                             reply: reply.clone(),
                         }]);
                     } else {
@@ -1041,6 +1648,13 @@ impl EngineFarm {
                     }
                 }
             }
+        }
+        // Unstick any parked straggler (hung chaos, racing duplicates):
+        // claiming every outstanding tag sets the cancel flag their
+        // workers poll, so a failed layer never leaves a worker wedged.
+        // On the success path every tag is already claimed — a no-op.
+        for c in &cancels {
+            c.claim();
         }
         // Dropping our sender lets any straggler replies (a fatal bail
         // with other shards still in flight) fail harmlessly in the
@@ -1120,6 +1734,8 @@ impl EngineFarm {
                 tag: (img * n_stage + stage) as u64,
                 trace_parent,
                 banned: self.quarantine_mask(),
+                cancel: Arc::new(FirstWins::new()),
+                hedge: false,
                 reply: reply.clone(),
             }]);
         };
@@ -1168,7 +1784,8 @@ impl EngineFarm {
         for e in &virt {
             stats.merge(e); // virtual engines run in parallel: cycles max, counters sum
         }
-        let outputs = outputs.into_iter().map(|o| o.expect("image lost in pipeline")).collect();
+        let outputs: Vec<Tensor3> = outputs.into_iter().flatten().collect();
+        ensure!(outputs.len() == n_img, "pipeline lost {} of {n_img} images", n_img - outputs.len());
         obs::tracer().finish_with(span, format!("images={n_img} stages={n_stage}"));
         Ok(PipelineRunResult { outputs, stats, per_engine, per_stage })
     }
@@ -1624,7 +2241,10 @@ mod tests {
         assert!(msg.contains("ABFT checksum mismatch"), "typed detection error: {msg}");
         assert!(msg.contains("after 3 attempts"), "bounded retries: {msg}");
         let rep = farm.fault_report();
-        assert_eq!(rep, FaultReport { injected: 3, detected: 3, corrected: 0, reexecuted: 2, quarantined: 0 });
+        assert_eq!(
+            rep,
+            FaultReport { injected: 3, detected: 3, corrected: 0, reexecuted: 2, ..FaultReport::default() }
+        );
         // Threshold crossed but the last live engine is protected.
         assert_eq!(farm.engine_health(), vec![EngineHealth::Suspect]);
         assert_eq!(farm.live_engines(), 1);
@@ -1687,5 +2307,179 @@ mod tests {
         assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 4, 3, 1, 1));
         assert_eq!(farm.fault_report(), FaultReport::default());
         assert!(farm.engine_health().iter().all(|h| *h == EngineHealth::Healthy));
+    }
+
+    #[test]
+    fn hedged_slow_chaos_stays_bit_exact() {
+        // Slow chaos delays seeded (engine, shard) pairs by 2–8 ms;
+        // with hedging on, a duplicate dispatched past the budget races
+        // the sleeper and the first result wins the FirstWins
+        // rendezvous — the merge is bit-exact either way, duplicates
+        // are discarded, never double-merged.
+        let mut rng = SplitMix64::new(97);
+        let layer = ConvLayer::new("slowpoke", 10, 3, 2, 16, 1, 1);
+        let input = rand_tensor(&mut rng, 2, 10, 10);
+        let weights = rng.vec_i32(16 * 2 * 9, -8, 8);
+        let arch = ArchConfig::small(3, 2, 2);
+        let want = conv3d_i32(&input, &weights, 16, 3, 1, 1);
+        let mut hedged_total = 0u64;
+        for seed in 1..=6u64 {
+            let farm = EngineFarm::new(
+                FarmConfig::new(4, arch)
+                    .with_chaos(FaultConfig::new(0.5, seed, crate::fault::FaultModel::Slow))
+                    .with_hedge(2.0, u32::MAX), // isolate hedging from quarantine
+            );
+            let r = farm.run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards).unwrap();
+            assert_eq!(r.ofmaps, want, "seed {seed}: hedged slow run must be bit-exact");
+            let rep = farm.fault_report();
+            assert_eq!(rep.injected, 0, "seed {seed}: timing chaos corrupts nothing");
+            assert_eq!(rep.timing_quarantined, 0, "seed {seed}: threshold maxed out");
+            hedged_total += rep.hedged;
+        }
+        assert!(hedged_total > 0, "slow rate 0.5 over 6 seeds must trip the hedge budget");
+    }
+
+    #[test]
+    fn hang_chaos_with_hedging_resolves_or_fails_typed() {
+        // Hang chaos parks the worker until cancelled: the shard only
+        // resolves through a hedge duplicate on another engine. Every
+        // completed run must be bit-exact; a run where every engine
+        // hangs on the same shard may fail — but only through the
+        // typed analytic valve, never a wrong answer or a deadlock.
+        let mut rng = SplitMix64::new(103);
+        let layer = ConvLayer::new("hangover", 10, 3, 2, 16, 1, 1);
+        let input = rand_tensor(&mut rng, 2, 10, 10);
+        let weights = rng.vec_i32(16 * 2 * 9, -8, 8);
+        let arch = ArchConfig::small(3, 2, 2);
+        let want = conv3d_i32(&input, &weights, 16, 3, 1, 1);
+        let mut hedged_total = 0u64;
+        let mut ok_runs = 0usize;
+        for seed in 1..=12u64 {
+            let farm = EngineFarm::new(
+                FarmConfig::new(4, arch)
+                    .with_chaos(FaultConfig::new(0.3, seed, crate::fault::FaultModel::Hang))
+                    .with_hedge(4.0, 3)
+                    .with_valve(Duration::from_secs(5), 8.0),
+            );
+            match farm.run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards) {
+                Ok(r) => {
+                    assert_eq!(r.ofmaps, want, "seed {seed}: hedged hang run must be bit-exact");
+                    ok_runs += 1;
+                }
+                Err(e) => {
+                    assert!(
+                        matches!(e.downcast_ref::<ServeError>(), Some(ServeError::EngineFailed { .. })),
+                        "seed {seed}: the only allowed failure is the typed valve: {e:#}"
+                    );
+                }
+            }
+            hedged_total += farm.fault_report().hedged;
+        }
+        assert!(hedged_total > 0, "hang rate 0.3 over 12 seeds must hedge");
+        assert!(ok_runs >= 9, "an unresolvable hang must be the rare exception ({ok_runs}/12 ok)");
+    }
+
+    #[test]
+    fn hang_on_sole_engine_fires_analytic_valve_typed() {
+        // Single-engine farms cannot hedge; the whole-layer valve
+        // (analytic budget × multiplier, floored) is the backstop and
+        // must fire as a typed, retryable EngineFailed — not block for
+        // the legacy 300 s, not return garbage.
+        let mut rng = SplitMix64::new(107);
+        let layer = ConvLayer::new("stuck", 8, 3, 2, 2, 1, 1);
+        let input = rand_tensor(&mut rng, 2, 8, 8);
+        let weights = rng.vec_i32(2 * 2 * 9, -8, 8);
+        let farm = EngineFarm::new(
+            FarmConfig::new(1, ArchConfig::small(3, 2, 2))
+                .with_chaos(FaultConfig::new(1.0, 11, crate::fault::FaultModel::Hang))
+                .with_valve(Duration::from_millis(200), 1.0),
+        );
+        let started = Instant::now();
+        let err = farm
+            .run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards)
+            .expect_err("a hang on the only engine cannot resolve");
+        assert!(started.elapsed() < Duration::from_secs(30), "valve fires at the floor, not 300 s");
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::EngineFailed { reason }) => {
+                assert!(reason.contains("service budget exhausted"), "valve reason: {reason}");
+            }
+            other => panic!("expected the typed valve cause, got {other:?}: {err:#}"),
+        }
+    }
+
+    #[test]
+    fn probation_restores_engines_and_contains_flappers() {
+        // Quarantine is no longer forever: after the cooldown the
+        // engine re-enters planning on probation. A clean probe
+        // restores it fully; a faulting probe re-quarantines it with
+        // the cooldown doubled, so a permanent flapper converges to
+        // near-zero probe traffic instead of oscillating.
+        let arch = ArchConfig::small(3, 2, 2);
+        let farm = EngineFarm::new(
+            FarmConfig::new(4, arch).with_heal(3, 2).with_probation(Duration::from_millis(200)),
+        );
+        farm.note_engine_fault(2);
+        assert!(farm.note_engine_fault(2), "second fault crosses the threshold");
+        assert_eq!(farm.engine_health()[2], EngineHealth::Quarantined);
+        assert_eq!(farm.live_engines(), 3);
+        farm.probation_tick();
+        assert_eq!(farm.engine_health()[2], EngineHealth::Quarantined, "cooldown not yet expired");
+        std::thread::sleep(Duration::from_millis(250));
+        farm.probation_tick();
+        assert_ne!(farm.engine_health()[2], EngineHealth::Quarantined, "released on probation");
+        assert_eq!(farm.live_engines(), 4, "probation engine is back in the plan");
+        farm.note_engine_recovered(2);
+        assert_eq!(farm.engine_health()[2], EngineHealth::Healthy, "clean probe restores fully");
+        // The flapper: re-quarantine, probe, fault on probation.
+        farm.note_engine_fault(2);
+        assert!(farm.note_engine_fault(2));
+        std::thread::sleep(Duration::from_millis(250));
+        farm.probation_tick();
+        assert_ne!(farm.engine_health()[2], EngineHealth::Quarantined);
+        assert!(farm.note_engine_fault(2), "one strike on probation re-quarantines immediately");
+        assert_eq!(farm.engine_health()[2], EngineHealth::Quarantined);
+        // Doubled cooldown: the base expiry no longer releases it.
+        std::thread::sleep(Duration::from_millis(250));
+        farm.probation_tick();
+        assert_eq!(
+            farm.engine_health()[2],
+            EngineHealth::Quarantined,
+            "flapper containment: cooldown doubled to 400 ms"
+        );
+        std::thread::sleep(Duration::from_millis(200));
+        farm.probation_tick();
+        assert_ne!(farm.engine_health()[2], EngineHealth::Quarantined, "released after the doubled cooldown");
+    }
+
+    #[test]
+    fn health_map_skew_shrinks_slow_engine_share() {
+        // Seed the latency EWMA directly: three engines at 1 µs/cycle,
+        // one at 8 µs/cycle. Past the skew gate the planner goes
+        // cost-proportional — the slow engine's shard gets fewer filter
+        // groups — and the merged output stays exact (the heterogeneity
+        // hook of the ROADMAP item).
+        let mut rng = SplitMix64::new(101);
+        let layer = ConvLayer::new("skewed", 10, 3, 2, 32, 1, 1); // 16 filter groups on P_N=2
+        let input = rand_tensor(&mut rng, 2, 10, 10);
+        let weights = rng.vec_i32(32 * 2 * 9, -8, 8);
+        let arch = ArchConfig::small(3, 2, 2);
+        let farm = EngineFarm::new(FarmConfig::new(4, arch));
+        for _ in 0..32 {
+            for e in 0..3 {
+                farm.health_map().observe(e, 1_000, Duration::from_micros(1_000));
+            }
+            farm.health_map().observe(3, 1_000, Duration::from_micros(8_000));
+        }
+        assert!(farm.health_map().slowdown(3) > 1.0, "EWMA sees the slow engine");
+        assert!(
+            farm.health_map().plan_weights(&[0, 1, 2, 3]).is_some(),
+            "skew past the gate enables weighted planning"
+        );
+        let r = farm.run_layer_mode(&layer, &input, &weights, ShardMode::FilterShards).unwrap();
+        assert_eq!(r.plan.shards.len(), 4, "one shard per live engine");
+        let sizes: Vec<usize> = r.plan.shards.iter().map(|s| s.filters.len()).collect();
+        let (lo, hi) = (sizes.iter().min().copied(), sizes.iter().max().copied());
+        assert!(lo < hi, "cost-proportional sizing: shares must be unequal, got {sizes:?}");
+        assert_eq!(r.ofmaps, conv3d_i32(&input, &weights, 32, 3, 1, 1), "weighted plan merges exactly");
     }
 }

@@ -35,10 +35,11 @@ pub mod shard;
 
 pub use backend::{SimBackend, SimNetSpec};
 pub use farm::{
-    CanaryConfig, CanaryReport, EngineFarm, FarmConfig, FarmRunResult, Injector,
-    PipelineRunResult, PipelineStage,
+    CanaryConfig, CanaryReport, EngineFarm, EngineHealthMap, FarmConfig, FarmRunResult,
+    FirstWins, Injector, PipelineRunResult, PipelineStage,
 };
 pub use shard::{
-    plan_filter_shards, plan_hybrid_shards, plan_row_shards, plan_shards, Shard, ShardAxis,
-    ShardMode, ShardPlan,
+    plan_filter_shards, plan_filter_shards_weighted, plan_hybrid_shards, plan_row_shards,
+    plan_row_shards_weighted, plan_shards, plan_shards_weighted, Shard, ShardAxis, ShardMode,
+    ShardPlan,
 };

@@ -209,6 +209,71 @@ fn balanced_split(n_units: usize, engines: usize) -> Vec<Range<usize>> {
     out
 }
 
+/// Split `n_units` contiguous work units into shares proportional to
+/// `weights` (largest-remainder rounding, ties to the lower index), with
+/// every shard kept non-empty while units allow — the cost-proportional
+/// sizing hook for heterogeneous / gray-degraded farms: an engine
+/// observed at half speed carries half the weight and receives half the
+/// units. Uniform weights reproduce [`balanced_split`] exactly, so every
+/// planner invariant (coverage, contiguity, ≤1 imbalance) degrades to
+/// the equal-split case.
+fn weighted_split(n_units: usize, weights: &[f64]) -> Vec<Range<usize>> {
+    let n_shards = weights.len().min(n_units).max(1);
+    // Sanitize: non-finite or non-positive weights get a small floor so
+    // a pathological health reading can shrink a share, never erase the
+    // engine from the plan.
+    let w: Vec<f64> = weights
+        .iter()
+        .take(n_shards)
+        .map(|x| if x.is_finite() && *x > 0.0 { *x } else { 1e-3 })
+        .collect();
+    let lo = w.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = w.iter().copied().fold(0.0f64, f64::max);
+    if n_shards <= 1 || hi - lo <= 1e-9 * hi {
+        return balanced_split(n_units, n_shards);
+    }
+    let total: f64 = w.iter().sum();
+    let mut share = vec![0usize; n_shards];
+    let mut rem: Vec<(usize, f64)> = Vec::with_capacity(n_shards);
+    let mut assigned = 0usize;
+    for (i, wi) in w.iter().enumerate() {
+        let quota = n_units as f64 * wi / total;
+        let base = (quota.floor() as usize).min(n_units);
+        share[i] = base;
+        assigned += base;
+        rem.push((i, quota - base as f64));
+    }
+    // Largest remainder first; equal remainders go to the lower index
+    // (matching balanced_split's earliest-shards-get-the-extra layout).
+    rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0)));
+    for (i, _) in rem.iter().cycle().take(n_units.saturating_sub(assigned)) {
+        share[*i] += 1;
+    }
+    // Keep every shard non-empty: steal from the largest share (which
+    // must hold > 1 unit because n_units ≥ n_shards here).
+    loop {
+        let Some(empty) = share.iter().position(|&s| s == 0) else { break };
+        let biggest = share
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if share[biggest] <= 1 {
+            break;
+        }
+        share[biggest] -= 1;
+        share[empty] += 1;
+    }
+    let mut out = Vec::with_capacity(n_shards);
+    let mut at = 0usize;
+    for take in share {
+        out.push(at..at + take);
+        at += take;
+    }
+    out
+}
+
 /// Split `layer` into at most `engines` filter shards on `P_N`-group
 /// boundaries, balancing whole groups as evenly as possible.
 ///
@@ -355,6 +420,77 @@ pub fn plan_shards(arch: &ArchConfig, layer: &ConvLayer, engines: usize, mode: S
         ShardMode::LayerPipeline => {
             panic!("LayerPipeline is a cross-layer mode; it has no per-layer shard plan")
         }
+    }
+}
+
+/// [`plan_filter_shards`] with cost-proportional group counts: shard `i`
+/// receives filter groups in proportion to `weights[i]` (one weight per
+/// engine; uniform weights reproduce the equal split exactly). Shard
+/// boundaries stay `P_N`-group aligned and the shards still partition
+/// `0..N` — only the *sizes* change, so ABFT verification and stitching
+/// are untouched.
+pub fn plan_filter_shards_weighted(arch: &ArchConfig, layer: &ConvLayer, weights: &[f64]) -> ShardPlan {
+    assert!(!weights.is_empty(), "need at least one engine weight");
+    assert!(layer.n >= 1, "layer has no filters");
+    let p_n = arch.p_n;
+    let h_o = layer.h_o();
+    let filter_groups = layer.n.div_ceil(p_n);
+    let shards = weighted_split(filter_groups, weights)
+        .into_iter()
+        .enumerate()
+        .map(|(index, g)| Shard {
+            index,
+            filters: g.start * p_n..(g.end * p_n).min(layer.n),
+            groups: g.len(),
+            rows: 0..h_o,
+        })
+        .collect::<Vec<_>>();
+    let grid = (shards.len(), 1);
+    ShardPlan { axis: ShardAxis::Filters, shards, filter_groups, p_n, rows: h_o, grid }
+}
+
+/// [`plan_row_shards`] with cost-proportional band heights: shard `i`
+/// receives output rows in proportion to `weights[i]`.
+pub fn plan_row_shards_weighted(arch: &ArchConfig, layer: &ConvLayer, weights: &[f64]) -> ShardPlan {
+    assert!(!weights.is_empty(), "need at least one engine weight");
+    let h_o = layer.h_o();
+    assert!(h_o >= 1, "layer has no output rows");
+    let filter_groups = layer.n.div_ceil(arch.p_n);
+    let shards = weighted_split(h_o, weights)
+        .into_iter()
+        .enumerate()
+        .map(|(index, rows)| Shard { index, filters: 0..layer.n, groups: filter_groups, rows })
+        .collect::<Vec<_>>();
+    let grid = (1, shards.len());
+    ShardPlan { axis: ShardAxis::Rows, shards, filter_groups, p_n: arch.p_n, rows: h_o, grid }
+}
+
+/// Cost-proportional variant of [`plan_shards`]: one weight per engine
+/// (the farm feeds `EngineHealthMap` speed weights — a slow engine gets
+/// a proportionally smaller filter-group run or row band). The axis
+/// decision is made by the uniform planner first, then the chosen 1-D
+/// axis is re-split by weight; hybrid grids keep the uniform 2-D tiling
+/// (a weighted grid would need a per-engine tile *assignment*, which the
+/// work-stealing injector deliberately leaves emergent). Uniform weights
+/// return exactly the uniform plan.
+pub fn plan_shards_weighted(
+    arch: &ArchConfig,
+    layer: &ConvLayer,
+    weights: &[f64],
+    mode: ShardMode,
+) -> ShardPlan {
+    assert!(!weights.is_empty(), "need at least one engine weight");
+    let engines = weights.len();
+    let uniform = plan_shards(arch, layer, engines, mode);
+    let lo = weights.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = weights.iter().copied().fold(0.0f64, f64::max);
+    if hi - lo <= 1e-9 * hi.max(1e-12) {
+        return uniform;
+    }
+    match uniform.axis {
+        ShardAxis::Filters => plan_filter_shards_weighted(arch, layer, weights),
+        ShardAxis::Rows => plan_row_shards_weighted(arch, layer, weights),
+        ShardAxis::Hybrid => uniform,
     }
 }
 
@@ -532,6 +668,107 @@ mod tests {
             let bf = plan_filter_shards(&cfg, &l, engines).speedup_bound();
             let br = plan_row_shards(&cfg, &l, engines).speedup_bound();
             assert!(plan.speedup_bound() >= bf.max(br) - 1e-9, "n={n} hw={hw} e={engines}");
+        }
+    }
+
+    #[test]
+    fn weighted_split_uniform_weights_reproduce_balanced_split() {
+        for n_units in [1usize, 2, 5, 7, 10, 64, 224] {
+            for engines in [1usize, 2, 3, 4, 8, 16] {
+                let uniform = vec![1.0; engines];
+                assert_eq!(
+                    weighted_split(n_units, &uniform),
+                    balanced_split(n_units, engines),
+                    "n={n_units} e={engines}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_split_is_exact_cover_monotone_and_proportional() {
+        let cases: Vec<(usize, Vec<f64>)> = vec![
+            (10, vec![2.0, 1.0]),
+            (224, vec![4.0, 2.0, 1.0, 1.0]),
+            (9, vec![1.0, 1.0, 0.25]),
+            (16, vec![0.5, 8.0, 2.0, 1.0]),
+            (5, vec![10.0, 0.1, 0.1, 0.1, 0.1]),
+            (3, vec![1.0, 3.0, 1.0, 2.0, 1.0]), // more engines than units
+        ];
+        for (n_units, w) in cases {
+            let spans = weighted_split(n_units, &w);
+            assert_eq!(spans.len(), w.len().min(n_units));
+            let mut next = 0usize;
+            for s in &spans {
+                assert_eq!(s.start, next, "contiguous");
+                assert!(!s.is_empty(), "non-empty: n={n_units} w={w:?}");
+                next = s.end;
+            }
+            assert_eq!(next, n_units, "exact cover: n={n_units} w={w:?}");
+            // Monotone: a strictly larger weight never gets fewer units.
+            for i in 0..spans.len() {
+                for j in 0..spans.len() {
+                    if w[i] > w[j] * (1.0 + 1e-9) {
+                        assert!(
+                            spans[i].len() >= spans[j].len(),
+                            "weight {} got {} units, weight {} got {}: n={n_units} w={w:?}",
+                            w[i],
+                            spans[i].len(),
+                            w[j],
+                            spans[j].len()
+                        );
+                    }
+                }
+            }
+            // Proportional within rounding: each share is within one unit
+            // of its real-valued quota (largest-remainder guarantee),
+            // except where the non-empty floor interferes.
+            let total: f64 = w[..spans.len()].iter().sum();
+            for (i, s) in spans.iter().enumerate() {
+                let quota = n_units as f64 * w[i] / total;
+                assert!(
+                    (s.len() as f64 - quota).abs() <= 1.0 + 1e-9 || s.len() == 1,
+                    "share {} vs quota {quota}: n={n_units} w={w:?}",
+                    s.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_planners_shrink_the_slow_engines_share() {
+        let cfg = ArchConfig::paper_engine(); // P_N = 7
+        let l = ConvLayer::new("CL2w", 224, 3, 64, 64, 1, 1); // 10 groups
+        // Engine 3 observed 4× slow → quarter weight → smaller share.
+        let w = vec![1.0, 1.0, 1.0, 0.25];
+        let plan = plan_filter_shards_weighted(&cfg, &l, &w);
+        assert_eq!(plan.shards.iter().map(|s| s.groups).sum::<usize>(), 10);
+        assert!(
+            plan.shards[3].groups < plan.shards[0].groups,
+            "slow engine kept an equal share: {:?}",
+            plan.shards.iter().map(|s| s.groups).collect::<Vec<_>>()
+        );
+        // Boundaries stay group-aligned and cover 0..N.
+        let mut next = 0usize;
+        for s in &plan.shards {
+            assert_eq!(s.filters.start, next);
+            if s.filters.end != l.n {
+                assert_eq!(s.filters.end % plan.p_n, 0);
+            }
+            next = s.filters.end;
+        }
+        assert_eq!(next, l.n);
+        // Row planner: same story on the spatial axis.
+        let rplan = plan_row_shards_weighted(&cfg, &l, &w);
+        assert_eq!(rplan.shards.iter().map(|s| s.rows.len()).sum::<usize>(), l.h_o());
+        assert!(rplan.shards[3].rows.len() < rplan.shards[0].rows.len());
+        // plan_shards_weighted with uniform weights is byte-identical to
+        // the uniform planner across modes.
+        for mode in [ShardMode::FilterShards, ShardMode::Spatial, ShardMode::Hybrid, ShardMode::Auto] {
+            let a = plan_shards_weighted(&cfg, &l, &[1.0; 4], mode);
+            let b = plan_shards(&cfg, &l, 4, mode);
+            assert_eq!(a.shards, b.shards, "mode {mode:?}");
+            assert_eq!(a.axis, b.axis);
         }
     }
 

@@ -44,6 +44,37 @@ fn chaos_router(chaos: FaultConfig, engines: usize) -> Router {
     Router::new(vec![c]).unwrap()
 }
 
+/// Serving stack over a farm with *timing* chaos (gray failures) and
+/// hedged re-execution. The valve floor is pulled down from its 300 s
+/// production default so an unresolvable hang types out within the test
+/// budget instead of stalling CI.
+fn timing_router(chaos: FaultConfig, engines: usize, hedge_factor: f64, threshold: u32) -> Router {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        ..Default::default()
+    };
+    let c = Coordinator::start_with(
+        move || {
+            let farm = FarmConfig::with_fidelity(
+                engines,
+                ArchConfig::small(3, 2, 1),
+                ExecFidelity::Fast,
+            )
+            .with_chaos(chaos)
+            .with_hedge(hedge_factor, threshold)
+            .with_valve(Duration::from_secs(5), 8.0);
+            Ok(Box::new(SimBackend::with_farm_config(
+                farm,
+                SimNetSpec::tiny(),
+                ShardMode::FilterShards,
+            )) as Box<dyn InferenceBackend>)
+        },
+        cfg,
+    )
+    .unwrap();
+    Router::new(vec![c]).unwrap()
+}
+
 fn image(i: usize, len: usize) -> Vec<i32> {
     (0..len).map(|j| ((i * 7919 + j * 31) % 256) as i32).collect()
 }
@@ -123,6 +154,110 @@ fn zero_rate_chaos_reports_zero_counters_and_serves_clean() {
     let m = router.drain(Duration::from_secs(5));
     assert_eq!(m.fault, FaultReport::default(), "disabled injection leaves every counter zero");
     assert!(m.fault.is_clean());
+}
+
+#[test]
+fn hedged_hang_chaos_serves_bit_exact_through_the_stack() {
+    // Gray-failure acceptance: hang chaos parks seeded (engine, shard)
+    // executions forever. With hedging on, the shard is re-injected past
+    // its analytic service budget and the duplicate resolves it on
+    // another engine — first result wins, so every served answer is
+    // bit-exact. A shard unlucky enough to hang everywhere may only fail
+    // through the typed valve, never a wrong answer or a 300 s stall.
+    let t0 = Instant::now();
+    let n_req = 6usize;
+    let reference = reference_logits(n_req);
+    let mut hedged_total = 0u64;
+    let mut clean_run_seen = false;
+    for seed in 0..12u64 {
+        let chaos = FaultConfig::new(0.2, seed, FaultModel::Hang);
+        let router = timing_router(chaos, 4, 4.0, 3);
+        let len = router.input_len();
+        let mut all_ok = true;
+        for i in 0..n_req {
+            match router.infer(image(i, len)) {
+                Ok(resp) => assert_eq!(
+                    resp.logits, reference[i],
+                    "seed {seed} req {i}: a hedged answer must be bit-exact"
+                ),
+                Err(e) => {
+                    assert!(
+                        e.downcast_ref::<ServeError>().is_some(),
+                        "seed {seed} req {i}: untyped failure under hang chaos: {e:#}"
+                    );
+                    all_ok = false;
+                }
+            }
+        }
+        let m = router.drain(Duration::from_secs(10));
+        assert_eq!(m.fault.injected, 0, "seed {seed}: timing chaos corrupts no outputs");
+        hedged_total += m.fault.hedged;
+        if all_ok && m.fault.hedged > 0 {
+            assert!(
+                m.fault.stragglers_detected > 0,
+                "seed {seed}: a hedge implies a detected straggler"
+            );
+            clean_run_seen = true;
+            break;
+        }
+    }
+    assert!(hedged_total > 0, "hang rate 0.2 over 12 seeds must hedge at least once");
+    assert!(
+        clean_run_seen,
+        "no seed in 0..12 produced a fully-served hedged run — \
+         the hedging path never resolved a hang end-to-end"
+    );
+    assert!(t0.elapsed() < Duration::from_secs(300), "straggler acceptance must stay bounded");
+}
+
+#[test]
+fn persistent_slow_engines_trip_timing_quarantine_and_serving_stays_exact() {
+    // Slow chaos sleeps seeded (engine, shard) pairs 2–8 ms — far past
+    // the cold-farm hedge budget — so losers of the first-wins race are
+    // discarded late and attributed as timing strikes. An engine that
+    // keeps straggling crosses `straggler_threshold` and is quarantined
+    // as `Slow`; the request stream stays bit-exact throughout.
+    let t0 = Instant::now();
+    let n_req = 10usize;
+    let reference = reference_logits(n_req);
+    let mut quarantine_seen = false;
+    for seed in 0..8u64 {
+        let chaos = FaultConfig::new(0.5, seed, FaultModel::Slow);
+        let router = timing_router(chaos, 4, 2.0, 2);
+        let len = router.input_len();
+        for i in 0..n_req {
+            match router.infer(image(i, len)) {
+                Ok(resp) => assert_eq!(
+                    resp.logits, reference[i],
+                    "seed {seed} req {i}: slow chaos must never change an answer"
+                ),
+                Err(e) => assert!(
+                    e.downcast_ref::<ServeError>().is_some(),
+                    "seed {seed} req {i}: untyped failure under slow chaos: {e:#}"
+                ),
+            }
+        }
+        let m = router.drain(Duration::from_secs(10));
+        assert_eq!(m.fault.injected, 0, "seed {seed}: slow chaos corrupts nothing");
+        assert!(
+            m.fault.hedge_won <= m.fault.hedged,
+            "seed {seed}: a hedge can only win if it was dispatched"
+        );
+        if m.fault.timing_quarantined > 0 {
+            assert!(
+                m.fault.stragglers_detected > 0,
+                "seed {seed}: timing quarantine implies detected stragglers"
+            );
+            quarantine_seen = true;
+            break;
+        }
+    }
+    assert!(
+        quarantine_seen,
+        "no seed in 0..8 pushed a persistently slow engine over the timing \
+         threshold — health-aware scheduling never exercised"
+    );
+    assert!(t0.elapsed() < Duration::from_secs(300), "slow-chaos scan must stay bounded");
 }
 
 #[test]

@@ -20,7 +20,10 @@
 //!   `queue_cap` requests concurrently despite the fetch-add/rollback
 //!   window, and release never underflows;
 //! * drain vs submit: once `begin_drain` has returned, every later
-//!   `try_admit` observes the drain flag and sheds with `Shutdown`.
+//!   `try_admit` observes the drain flag and sheds with `Shutdown`;
+//! * the [`FirstWins`] hedge rendezvous: across every interleaving of
+//!   racing twins exactly one claims the merge (no lost result, no
+//!   double-merge) and every loser subsequently observes the cancel.
 
 #![cfg(loom)]
 
@@ -30,7 +33,7 @@ use std::time::Instant;
 
 use trim_sa::coordinator::{AdmissionConfig, AdmissionControl, ServeError};
 use trim_sa::obs::Registry;
-use trim_sa::scheduler::Injector;
+use trim_sa::scheduler::{FirstWins, Injector};
 
 /// Build an injector wired to a fresh registry gauge (same construction
 /// the farm uses — the gauge is a plain std atomic the models don't
@@ -169,5 +172,59 @@ fn drain_closes_admission_for_later_submits() {
             Err(ServeError::Shutdown) => {}
             other => panic!("post-drain admit must shed with Shutdown, got {other:?}"),
         }
+    });
+}
+
+/// What each twin of a hedged shard did with the rendezvous.
+#[derive(Debug, PartialEq)]
+enum TwinOutcome {
+    /// Observed the cancel at pickup and dropped the duplicate unrun.
+    Dropped,
+    /// Won the claim and merged its result.
+    Merged,
+    /// Ran to completion but lost the claim; its result was discarded.
+    Wasted,
+}
+
+/// Three twins of one hedged shard race the [`FirstWins`] rendezvous —
+/// the original, a hedge, and a re-hedge. In every interleaving exactly
+/// one twin merges (no lost result when at least one twin runs, no
+/// double-merge ever), and after the winner's claim every other twin
+/// either dropped unrun or observed the cancel on its failed claim.
+#[test]
+fn first_wins_rendezvous_no_lost_result_no_double_merge() {
+    let mut model = loom::model::Builder::new();
+    // Three threads over one atomic: bounded like the injector model.
+    model.preemption_bound = Some(3);
+    model.check(|| {
+        let fw = Arc::new(FirstWins::new());
+        let twins: Vec<_> = (0..3)
+            .map(|_| {
+                let fw = Arc::clone(&fw);
+                thread::spawn(move || {
+                    // Pickup check: a cancelled duplicate is dropped
+                    // before any work happens (the worker-loop path).
+                    if fw.is_cancelled() {
+                        return TwinOutcome::Dropped;
+                    }
+                    // ... deterministic shard execution here ...
+                    if fw.claim() {
+                        TwinOutcome::Merged
+                    } else {
+                        // The loser's failed claim IS its cancel
+                        // observation — same bit, no window.
+                        assert!(fw.is_cancelled(), "loser must observe the winner's claim");
+                        TwinOutcome::Wasted
+                    }
+                })
+            })
+            .collect();
+
+        let outcomes: Vec<TwinOutcome> =
+            twins.into_iter().map(|t| t.join().expect("twin panicked")).collect();
+        let merged = outcomes.iter().filter(|o| **o == TwinOutcome::Merged).count();
+        assert_eq!(merged, 1, "exactly one twin merges: {outcomes:?}");
+        assert!(fw.is_cancelled(), "a settled rendezvous reads cancelled forever");
+        assert!(!fw.claim(), "late twins can never re-claim a settled shard");
     });
 }

@@ -509,6 +509,61 @@ fn prop_work_stealing_bit_identical_to_static_baseline() {
     }
 }
 
+/// Property (PR 10): hedged re-execution is a pure latency mechanism — a
+/// farm with an aggressive hedge budget (2.0× analytic, quarantine
+/// disabled so organic hedges can't shrink the fleet) produces ofmaps,
+/// merged stats and per-shard stats **bit-identical** to the unhedged
+/// baseline farm, across every shard mode and both fidelity tiers. The
+/// first-wins rendezvous guarantees duplicates are either dropped unrun
+/// or discarded at merge; either way nothing double-merges. On the Fast
+/// tier shards beat the budget floor so hedges rarely fire; the Register
+/// tier is orders of magnitude slower per shard, which makes organic
+/// hedges likely and exercises the duplicate-discard path for real.
+#[test]
+fn prop_hedged_farm_bit_identical_to_baseline() {
+    let mut rng = SplitMix64::new(0x8ED6ED);
+    for seed in 0..4u64 {
+        let k = 3usize;
+        let hw = rng.range(k + 3, k + 9);
+        let m = rng.range(1, 3);
+        let n = rng.range(2, 7);
+        let stride = rng.range(1, 3);
+        let pad = rng.range(0, 2);
+        let layer = ConvLayer::new("hedge", hw, k, m, n, stride, pad);
+        let input = rand_tensor(&mut rng, m, hw, hw);
+        let weights = rng.vec_i32(n * m * k * k, -9, 9);
+        let engines = rng.range(2, 6);
+        let arch = ArchConfig::small(3, 2, rng.range(1, 3));
+        let golden = conv3d_i32(&input, &weights, n, k, stride, pad);
+
+        for fidelity in [ExecFidelity::Fast, ExecFidelity::Register] {
+            let baseline = EngineFarm::new(FarmConfig::with_fidelity(engines, arch, fidelity));
+            let hedged = EngineFarm::new(
+                FarmConfig::with_fidelity(engines, arch, fidelity).with_hedge(2.0, u32::MAX),
+            );
+            for mode in
+                [ShardMode::FilterShards, ShardMode::Spatial, ShardMode::Hybrid, ShardMode::Auto]
+            {
+                let ctx = format!(
+                    "seed {seed} {fidelity} {mode}: hw={hw} m={m} n={n} s={stride} e={engines}"
+                );
+                let b = baseline.run_layer_mode(&layer, &input, &weights, mode).unwrap();
+                let h = hedged.run_layer_mode(&layer, &input, &weights, mode).unwrap();
+                assert_eq!(h.ofmaps, b.ofmaps, "{ctx}: hedged ofmaps == baseline");
+                assert_eq!(h.ofmaps, golden, "{ctx}: vs golden");
+                assert_eq!(
+                    h.stats, b.stats,
+                    "{ctx}: merged stats identical — a won hedge must not double-merge"
+                );
+                assert_eq!(h.per_shard, b.per_shard, "{ctx}: per-shard stats identical");
+            }
+            let rep = hedged.fault_report();
+            assert_eq!(rep.injected, 0, "hedging injects no faults");
+            assert_eq!(rep.timing_quarantined, 0, "quarantine disabled: threshold is maxed");
+        }
+    }
+}
+
 /// Acceptance (PR 5): at 16 engines the CL1-class serving layer
 /// (10 filter groups × 120 output rows on narrow `P_N = 1` engines)
 /// out-scales both single axes only on the 2-D grid — filters bound 10×,

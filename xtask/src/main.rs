@@ -5,9 +5,10 @@
 //! dependencies, so it runs in the offline container — enforcing three
 //! repo-specific invariants that clippy cannot express:
 //!
-//! 1. **No panics on serving paths.** Files under `coordinator/` (and
+//! 1. **No panics on serving paths.** Files under `coordinator/` (plus
 //!    `fault.rs`, whose ABFT/self-healing machinery runs inside every
-//!    shard merge) must not
+//!    shard merge, and `farm.rs`, whose merge loop, hedging rendezvous
+//!    and health accounting sit under every served request) must not
 //!    call `.unwrap()` / `.expect(` / `panic!` / `unreachable!` / `todo!`
 //!    outside `#[cfg(test)]` regions: every request must resolve with a
 //!    typed [`ServeError`] instead of tearing the engine thread down. A
@@ -141,9 +142,11 @@ fn lint_file(path: &Path, src_root: &Path, text: &str, out: &mut Vec<Violation>)
     let rel = path.strip_prefix(src_root).unwrap_or(path);
     // Serving paths must stay panic-free; fault.rs joins them because the
     // ABFT/self-healing machinery runs inside every shard merge — a panic
-    // there would turn a detected hardware fault into a dead engine.
+    // there would turn a detected hardware fault into a dead engine — and
+    // farm.rs because its merge loop, hedging rendezvous and health
+    // accounting sit under every served request.
     let serving_path = rel.components().any(|c| c.as_os_str() == "coordinator")
-        || rel.file_name().is_some_and(|f| f == "fault.rs");
+        || rel.file_name().is_some_and(|f| f == "fault.rs" || f == "farm.rs");
 
     // Rule 1: no panic-capable calls on serving paths.
     if serving_path {
